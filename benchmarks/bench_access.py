@@ -1,0 +1,147 @@
+"""Fig. 6: ingestion-aware data access vs naive full-scan access.
+
+Projection (columnar/cpax vs row), selection (post-filter vs sorted index
+access vs partition pruning), aggregation + join over co-partitioned data,
+and a 2-table TPC-H-like pipeline (Q3 shape: join + group-by).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import DataAccess, IngestPlan, create_stage, format_, ingest, select
+from repro.core import store as store_stmt
+from repro.data.generators import as_file_items, gen_lineitem
+
+from .common import Row, cleanup, fresh_store, lineitem_shards, timed
+
+
+def _ingest_layouts(n):
+    """One store holding the same data in row / columnar / cpax / sorted /
+    range-partitioned variants (distinct label signatures)."""
+    ds = fresh_store()
+    from repro.core import chain_stage
+    p = IngestPlan("acc")
+    s1 = select(p, replicate=5, replicate_tag="rep")
+    variants = {
+        1: dict(chunk={"target_rows": 16384}, serialize="row"),
+        2: dict(chunk={"target_rows": 16384}, serialize="columnar"),
+        3: dict(chunk={"target_rows": 16384}, serialize="cpax"),
+        4: dict(chunk={"target_rows": 16384}, order={"key": "orderkey"},
+                serialize="sorted", serialize_args={"key": "orderkey"}),
+        5: dict(partition={"scheme": "range", "key": "orderkey",
+                           "num_partitions": 8},
+                chunk={"target_rows": 16384}, serialize="columnar"),
+    }
+    create_stage(p, using=[s1], name="a")
+    for i, kw in variants.items():
+        f = format_(p, s1, **kw)
+        st = store_stmt(p, f, upload=ds)
+        chain_stage(p, to=["a"], using=[f, st], where={"rep": i}, name=f"v{i}")
+    ingest(p, lineitem_shards(n), ds)
+    return ds
+
+
+def run(n: int = 200_000) -> List[Row]:
+    ds = _ingest_layouts(n)
+    acc = DataAccess(ds)
+    rows: List[Row] = []
+
+    # ---- projection: 2 of 8 columns
+    proj = ["quantity", "discount"]
+    t_row = timed(lambda: acc.filter_replica("rep", 1).read_all(projection=proj))
+    t_col = timed(lambda: acc.filter_replica("rep", 2).read_all(projection=proj))
+    t_cpax = timed(lambda: acc.filter_replica("rep", 3).read_all(projection=proj))
+    rows += [("access/projection/row_naive", t_row, "1.00x"),
+             ("access/projection/columnar", t_col, f"{t_row / t_col:.1f}x faster"),
+             ("access/projection/cpax", t_cpax, f"{t_row / t_cpax:.1f}x faster")]
+
+    # ---- selection: 1% range predicate
+    hi = int(0.01 * n // 4)
+    sel = ("orderkey", "<", hi)
+    t_post = timed(lambda: acc.filter_replica("rep", 1).read_all(selection=sel))
+    t_idx = timed(lambda: acc.filter_replica("rep", 4).read_all(selection=sel))
+
+    def pruned():
+        a = acc.filter_replica("rep", 5)
+        a = a.filter_block_by_label("partition", 0)  # range partition 0
+        return a.read_all(selection=sel)
+
+    t_prune = timed(pruned)
+    rows += [("access/selection/post_filter", t_post, "1.00x"),
+             ("access/selection/index_sorted", t_idx, f"{t_post / t_idx:.1f}x faster"),
+             ("access/selection/partition_prune", t_prune,
+              f"{t_post / t_prune:.1f}x faster")]
+
+    # ---- aggregation: sum(extendedprice) by suppkey.  The naive path pays
+    # the MapReduce shuffle: hash-partition + DFS round-trip before reducing
+    # (HDFS-Naive in Fig. 6 shuffles on the group-by key).
+    import os, pickle
+
+    def _shuffle_roundtrip(c, key, parts=8):
+        buckets = {}
+        pids = c[key] % parts
+        for pid in range(parts):
+            idx = np.nonzero(pids == pid)[0]
+            buckets[pid] = {k: v[idx] for k, v in c.items()}
+        sdir = os.path.join(ds.dfs_dir, "bench_shuffle")
+        os.makedirs(sdir, exist_ok=True)
+        for pid, cols in buckets.items():
+            with open(os.path.join(sdir, f"p{pid}"), "wb") as f:
+                pickle.dump(cols, f)
+        out = []
+        for pid in range(parts):
+            with open(os.path.join(sdir, f"p{pid}"), "rb") as f:
+                out.append(pickle.load(f))
+        return out
+
+    def agg_naive():
+        c = acc.filter_replica("rep", 1).read_all()
+        res = []
+        for cols in _shuffle_roundtrip(c, "suppkey"):
+            keys, inv = np.unique(cols["suppkey"], return_inverse=True)
+            res.append(np.bincount(inv, weights=cols["extendedprice"]))
+        return res
+
+    def agg_aware():
+        out = []
+        a = acc.filter_replica("rep", 5)
+        for split in a.split_by_key("partition"):
+            c = a.read_split(split, projection=["suppkey", "extendedprice"])
+            keys, inv = np.unique(c["suppkey"], return_inverse=True)
+            out.append(np.bincount(inv, weights=c["extendedprice"]))
+        return out
+
+    t_an = timed(agg_naive)
+    t_aa = timed(agg_aware)
+    rows += [("access/aggregation/naive", t_an, "1.00x"),
+             ("access/aggregation/co_grouped", t_aa, f"{t_an / t_aa:.1f}x")]
+
+    # ---- join: lineitem x orders-like (self-join on orderkey partitions)
+    def join_naive():
+        a = acc.filter_replica("rep", 1).read_all(projection=["orderkey", "quantity"])
+        b = acc.filter_replica("rep", 1).read_all(projection=["orderkey", "extendedprice"])
+        # both relations shuffle on the join key (DFS round-trip), then join
+        total = 0
+        for pa, pb in zip(_shuffle_roundtrip(a, "orderkey"),
+                          _shuffle_roundtrip(b, "orderkey")):
+            total += np.intersect1d(pa["orderkey"], pb["orderkey"]).size
+        return total
+
+    def join_aware():
+        a5 = acc.filter_replica("rep", 5)
+        total = 0
+        for row in a5.co_split_by_key("partition", (a5, "partition")):
+            la = a5.read_split(row[0], projection=["orderkey", "quantity"])
+            lb = a5.read_split(row[1], projection=["orderkey", "extendedprice"])
+            total += np.intersect1d(la["orderkey"], lb["orderkey"]).size
+        return total
+
+    t_jn = timed(join_naive)
+    t_ja = timed(join_aware)
+    rows += [("access/join/naive_shuffle", t_jn, "1.00x"),
+             ("access/join/co_partitioned", t_ja, f"{t_jn / t_ja:.1f}x")]
+
+    cleanup(ds)
+    return rows

@@ -1,0 +1,61 @@
+"""Fig. 5(a): data-cleaning ingest overhead vs plain upload.
+
+FD check (shipdate -> linestatus, global: shuffle on lhs), DC check
+(quantity < 3 => discount <= 9%), DC check + single-pass repair.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import create_stage, format_, select
+from repro.core import store as store_stmt
+from repro.core.operators import resolve_op
+
+from .common import Row, plain_upload_seconds, run_plan_seconds
+
+
+def _fmt_store(p, ds, src):
+    s2 = format_(p, src, chunk={"target_rows": 16384}, serialize="row")
+    s3 = store_stmt(p, s2, upload=ds)
+    return [s2, s3]
+
+
+def run(n: int = 200_000) -> List[Row]:
+    base = plain_upload_seconds(n)
+    rows: List[Row] = [("cleaning/plain_upload", base, "1.00x")]
+
+    def fd(p, ds):
+        s1 = select(p)
+        chk = p.add_statement([resolve_op("partition", scheme="hash",
+                                          key="shipdate", num_partitions=8),
+                               resolve_op("fd_check", lhs="shipdate",
+                                          rhs="linestatus",
+                                          shuffle_by="partition")],
+                              kind="format", inputs=[s1])
+        create_stage(p, using=[s1, chk] + _fmt_store(p, ds, chk), name="main")
+
+    def dc(p, ds):
+        s1 = select(p)
+        chk = p.add_statement([resolve_op(
+            "dc_check", violation_predicate=lambda c: (c["quantity"] < 3)
+            & (c["discount"] > 0.09))], kind="format", inputs=[s1])
+        create_stage(p, using=[s1, chk] + _fmt_store(p, ds, chk), name="main")
+
+    def dc_repair(p, ds):
+        s1 = select(p)
+
+        def fix(viol):
+            out = dict(viol)
+            out["discount"] = viol["discount"].clip(max=0.09)
+            return out
+
+        chk = p.add_statement([resolve_op(
+            "dc_check", violation_predicate=lambda c: (c["quantity"] < 3)
+            & (c["discount"] > 0.09), repair=fix)], kind="format", inputs=[s1])
+        create_stage(p, using=[s1, chk] + _fmt_store(p, ds, chk), name="main")
+
+    for name, build in (("fd_check_global", fd), ("dc_check", dc),
+                        ("dc_check_repair", dc_repair)):
+        secs, _ = run_plan_seconds(build, n)
+        rows.append((f"cleaning/{name}", secs, f"{secs / base:.2f}x"))
+    return rows

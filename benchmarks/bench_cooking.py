@@ -1,0 +1,90 @@
+"""Table I: transform-at-ingest (INGESTBASE) vs cooking jobs after upload.
+
+The cooking baseline is implemented faithfully to the paper's critique: the
+data is first uploaded raw, then a separate "query processor" job RE-READS the
+whole stored dataset, applies the same transformation, and writes the result
+back — the extra pass the paper measures Hive doing.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import (DataAccess, IngestPlan, create_stage, format_, ingest,
+                        select)
+from repro.core import store as store_stmt
+from repro.core.operators import resolve_op
+from repro.core.items import IngestItem, Granularity
+
+from .common import (Row, cleanup, fresh_store, lineitem_shards,
+                     plain_upload_seconds, run_plan_seconds, timed)
+
+
+def _ingest_with(ops_builder, n):
+    def build(p, ds):
+        s1 = select(p)
+        mid = p.add_statement(ops_builder(), kind="format", inputs=[s1])
+        s2 = format_(p, mid, chunk={"target_rows": 16384}, serialize="row")
+        s3 = store_stmt(p, s2, upload=ds)
+        create_stage(p, using=[s1, mid, s2, s3], name="main")
+    return run_plan_seconds(build, n)
+
+
+def _cook_after(ops_builder, n):
+    """Upload raw first, then run the cooking job: re-read the WHOLE stored
+    dataset, apply the same transformation through the engine, and write the
+    result back — the second full pass the paper charges to Hive."""
+    ds = fresh_store()
+    p = IngestPlan("raw")
+    s1 = select(p)
+    s2 = format_(p, s1, chunk={"target_rows": 16384}, serialize="row")
+    s3 = store_stmt(p, s2, upload=ds)
+    create_stage(p, using=[s1, s2, s3], name="main")
+    t_upload = timed(lambda: ingest(p, lineitem_shards(n), ds))
+
+    def cook():
+        # full re-read of the ingested dataset ...
+        cols = DataAccess(ds).read_all()
+        from repro.data.generators import as_file_items
+        items = as_file_items(cols, shards=8)
+        # ... then a second full engine pass: transform + re-serialize + store
+        p2 = IngestPlan("cook")
+        c1 = select(p2)
+        mid = p2.add_statement(ops_builder(), kind="format", inputs=[c1])
+        c2 = format_(p2, mid, chunk={"target_rows": 16384}, serialize="row")
+        c3 = store_stmt(p2, c2, upload=ds)
+        create_stage(p2, using=[c1, mid, c2, c3], name="main")
+        ingest(p2, items, ds)
+
+    t_cook = timed(cook)
+    cleanup(ds)
+    return t_upload, t_cook
+
+
+CASES = {
+    "fd_check": lambda: [resolve_op("fd_check", lhs="shipdate",
+                                    rhs="linestatus")],
+    "dc_check": lambda: [resolve_op(
+        "dc_check", violation_predicate=lambda c: (c["quantity"] < 3)
+        & (c["discount"] > 0.09))],
+    "random_sampling": lambda: [resolve_op("bernoulli_sample", p=0.01)],
+}
+
+
+def run(n: int = 200_000) -> List[Row]:
+    base = plain_upload_seconds(n)
+    rows: List[Row] = []
+    for name, ops_builder in CASES.items():
+        t_ingest, _ = _ingest_with(ops_builder, n)
+        t_upload, t_cook = _cook_after(ops_builder, n)
+        # Table I reports the transformation overhead ABOVE plain upload;
+        # floor at 1% of the upload time (piggy-backed ops can vanish in noise
+        # — which is the paper's point)
+        over_ingest = max(t_ingest - base, 0.01 * base)
+        over_cook = t_cook                          # the whole extra job
+        rows.append((f"cooking/{name}/ingestbase", over_ingest,
+                     f"total={t_ingest:.3f}s"))
+        rows.append((f"cooking/{name}/cook_after", over_cook,
+                     f"{over_cook / over_ingest:.1f}x slower"))
+    return rows

@@ -1,0 +1,71 @@
+"""Fig. 5(c): analytics-oriented layouts at ingest time vs plain upload.
+
+Per-replica layouts (row / columnar / compressed columnar — the Trojan-Layout
+scheme), hybrid replicas (different layouts across a replica's blocks),
+content-based partitioning, content-based placement.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import chain_stage, create_stage, format_, select
+from repro.core import store as store_stmt
+from repro.core.operators import resolve_op
+
+from .common import Row, plain_upload_seconds, run_plan_seconds
+
+
+def per_replica_layouts(p, ds):
+    s1 = select(p, replicate=3, replicate_tag="rep")
+    chains = []
+    for i, layout in enumerate(("row", "columnar", "cpax"), start=1):
+        f = format_(p, s1, chunk={"target_rows": 16384}, serialize=layout)
+        st = store_stmt(p, f, upload=ds)
+        chains.append((i, [f, st]))
+    create_stage(p, using=[s1], name="a")
+    for i, stmts in chains:
+        chain_stage(p, to=["a"], using=stmts, where={"rep": i}, name=f"r{i}")
+
+
+def hybrid_replicas(p, ds):
+    """One replica, alternating block layouts (hybrid: queries likely find
+    some blocks in a favorable layout)."""
+    s1 = select(p)
+    f = p.add_statement(
+        [resolve_op("chunk", target_rows=16384),
+         resolve_op("serialize", layout="hybrid",
+                    layouts=("row", "columnar", "cpax"))],
+        kind="format", inputs=[s1])
+    st = store_stmt(p, f, upload=ds)
+    create_stage(p, using=[s1, f, st], name="main")
+
+
+def content_partitioning(p, ds):
+    s1 = select(p)
+    f = format_(p, s1, partition={"scheme": "range", "key": "orderkey",
+                                  "num_partitions": 10},
+                chunk={"target_rows": 16384}, serialize="columnar")
+    st = store_stmt(p, f, upload=ds)
+    create_stage(p, using=[s1, f, st], name="main")
+
+
+def content_placement(p, ds):
+    s1 = select(p)
+    f = format_(p, s1, partition={"scheme": "range", "key": "orderkey",
+                                  "num_partitions": 10},
+                chunk={"target_rows": 16384}, serialize="columnar")
+    st = store_stmt(p, f, locate="content", locate_args={"by": "partition"},
+                    upload=ds)
+    create_stage(p, using=[s1, f, st], name="main")
+
+
+def run(n: int = 200_000) -> List[Row]:
+    base = plain_upload_seconds(n)
+    rows: List[Row] = [("layouts/plain_upload", base, "1.00x")]
+    for name, build in (("per_replica_layouts", per_replica_layouts),
+                        ("hybrid_replicas", hybrid_replicas),
+                        ("content_partitioning", content_partitioning),
+                        ("content_placement", content_placement)):
+        secs, _ = run_plan_seconds(build, n)
+        rows.append((f"layouts/{name}", secs, f"{secs / base:.2f}x"))
+    return rows

@@ -1,0 +1,74 @@
+"""Table II: per-block post-ingestion recovery latency.
+
+Replication-based, transformation-based (re-encode a differently-serialized
+replica), erasure-based (RS stripe decode).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import (ErasureRecovery, FaultToleranceDaemon, IngestPlan,
+                        ReplicationRecovery, TransformationRecovery,
+                        chain_stage, create_stage, format_, ingest, select)
+from repro.core import store as store_stmt
+from repro.core.operators import resolve_op
+
+from .common import Row, cleanup, fresh_store, lineitem_shards
+
+
+def _ingest_replicated(ds, n, layouts=("row", "row")):
+    p = IngestPlan("r")
+    s1 = select(p, replicate=len(layouts), replicate_tag="rep")
+    create_stage(p, using=[s1], name="a")
+    sts = []
+    for i, layout in enumerate(layouts, start=1):
+        f = format_(p, s1, chunk={"target_rows": 16384}, serialize=layout)
+        st = store_stmt(p, f, upload=ds)
+        chain_stage(p, to=["a"], using=[f, st], where={"rep": i}, name=f"v{i}")
+    ingest(p, lineitem_shards(n), ds)
+
+
+def _ingest_erasure(ds, n, k=4, m=2):
+    p = IngestPlan("e")
+    s1 = select(p)
+    f = p.add_statement([resolve_op("chunk", target_rows=8192),
+                         resolve_op("serialize", layout="row"),
+                         resolve_op("erasure", k=k, m=m)],
+                        kind="format", inputs=[s1])
+    st = store_stmt(p, f, upload=ds)
+    create_stage(p, using=[s1, f, st], name="main")
+    ingest(p, lineitem_shards(n), ds)
+
+
+def _recover_once(ds, udf, victim_pred) -> float:
+    victim = next(e for e in ds.blocks() if victim_pred(e))
+    ds.corrupt_block(victim.block_id)
+    daemon = FaultToleranceDaemon(ds, [udf])
+    rep = daemon.sweep()
+    assert rep.recovered, f"{udf.name} failed to recover"
+    return rep.per_block_seconds[victim.block_id]
+
+
+def run(n: int = 200_000) -> List[Row]:
+    rows: List[Row] = []
+
+    ds = fresh_store()
+    _ingest_replicated(ds, n, ("row", "row"))
+    t = _recover_once(ds, ReplicationRecovery(), lambda e: e.replica_index == 0)
+    rows.append(("recovery/replication_based", t, "per 64MB-block analogue"))
+    cleanup(ds)
+
+    ds = fresh_store()
+    _ingest_replicated(ds, n, ("columnar", "row"))
+    t = _recover_once(ds, TransformationRecovery(),
+                      lambda e: e.layout == "columnar")
+    rows.append(("recovery/transformation_based", t, "re-encodes layout"))
+    cleanup(ds)
+
+    ds = fresh_store()
+    _ingest_erasure(ds, n)
+    t = _recover_once(ds, ErasureRecovery(), lambda e: bool(e.stripe_id))
+    rows.append(("recovery/erasure_based", t, "RS(4,2) stripe decode"))
+    cleanup(ds)
+    return rows

@@ -1,0 +1,44 @@
+"""Roofline report: reads the dry-run artifacts and prints the three-term
+roofline per (arch x shape x mesh) — the §Roofline deliverable's data source.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from .common import Row
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_artifacts(mesh: str = None):
+    out = []
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        a = json.load(open(f))
+        if a.get("skipped"):
+            continue
+        if mesh and a["mesh"] != mesh:
+            continue
+        out.append(a)
+    return out
+
+
+def run(n: int = 0) -> List[Row]:
+    rows: List[Row] = []
+    for a in load_artifacts():
+        r = a["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / bound if bound else 0.0
+        rows.append((
+            f"roofline/{a['arch']}/{a['shape']}/{a['mesh']}",
+            bound,
+            f"dom={r['dominant']};comp={r['compute_s']:.3f}s;"
+            f"mem={r['memory_s']:.3f}s;coll={r['collective_s']:.3f}s;"
+            f"useful={r['useful_ratio']:.2f};roofline_frac={frac:.2f}",
+        ))
+    if not rows:
+        rows.append(("roofline/NO_ARTIFACTS", 0.0,
+                     "run python -m repro.launch.dryrun --all first"))
+    return rows

@@ -1,0 +1,48 @@
+"""Fig. 5(b): sampling-during-ingest overhead vs plain upload.
+
+Bernoulli, simple random (reservoir-per-node), systematic, local stratified,
+global stratified (shuffle).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import create_stage, format_, select
+from repro.core import store as store_stmt
+from repro.core.operators import resolve_op
+
+from .common import Row, plain_upload_seconds, run_plan_seconds
+
+
+def _build(sampler_key, sampler_kw, partition_first=False):
+    def build(p, ds):
+        s1 = select(p)
+        ops = []
+        if partition_first:
+            ops.append(resolve_op("partition", scheme="field", key="linestatus"))
+        ops.append(resolve_op(sampler_key, **sampler_kw))
+        samp = p.add_statement(ops, kind="format", inputs=[s1])
+        s2 = format_(p, samp, chunk={"target_rows": 16384}, serialize="row")
+        s3 = store_stmt(p, s2, upload=ds)
+        create_stage(p, using=[s1, samp, s2, s3], name="main")
+    return build
+
+
+def run(n: int = 200_000) -> List[Row]:
+    base = plain_upload_seconds(n)
+    rows: List[Row] = [("sampling/plain_upload", base, "1.00x")]
+    cases = [
+        ("bernoulli", "bernoulli_sample", {"p": 0.01}, False),
+        ("simple_random", "uniform_sample", {"k": 1024}, False),
+        ("systematic", "systematic_sample", {"step": 100}, False),
+        ("reservoir", "reservoir_sample", {"capacity": 1024}, False),
+        ("stratified_local", "stratified_sample",
+         {"key": "linestatus", "fraction": 0.01}, False),
+        ("stratified_global", "stratified_sample",
+         {"key": "linestatus", "fraction": 0.01, "shuffle_by": "partition"},
+         True),
+    ]
+    for name, key, kw, part in cases:
+        secs, _ = run_plan_seconds(_build(key, kw, part), n)
+        rows.append((f"sampling/{name}", secs, f"{secs / base:.2f}x"))
+    return rows

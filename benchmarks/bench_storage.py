@@ -1,0 +1,99 @@
+"""Fig. 5(d): storage-space optimization at ingest time vs plain upload.
+
+Flexible replication (hot 10x / cold 2x), erasure coding RS(10,3), flexible
+erasure (RS(5,3) hot / RS(10,3) cold), mixed replication+erasure.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import chain_stage, create_stage, format_, select
+from repro.core import store as store_stmt
+from repro.core.operators import resolve_op
+
+from .common import Row, plain_upload_seconds, run_plan_seconds
+
+
+def _partitioned(p, num=10):
+    s1 = select(p)
+    part = p.add_statement([resolve_op("partition", scheme="range",
+                                       key="shipdate", num_partitions=num),
+                            resolve_op("chunk", target_rows=8192)],
+                           kind="format", inputs=[s1])
+    return s1, part
+
+
+def flexible_replication(p, ds):
+    s1, part = _partitioned(p)
+    hot = p.add_statement([resolve_op("replicate", copies=10),
+                           resolve_op("serialize", layout="row")],
+                          kind="format", inputs=[part])
+    cold = p.add_statement([resolve_op("replicate", copies=2),
+                            resolve_op("serialize", layout="row")],
+                           kind="format", inputs=[part])
+    st = store_stmt(p, hot, cold, upload=ds)
+    create_stage(p, using=[s1, part], name="a")
+    chain_stage(p, to=["a"], using=[hot], where={"partition": 0}, name="hot")
+    chain_stage(p, to=["a"], using=[cold],
+                where={"partition": lambda v: v is not None and v > 0},
+                name="cold")
+    chain_stage(p, to=["hot", "cold"], using=[st], name="up")
+
+
+def erasure_10_3(p, ds):
+    s1, part = _partitioned(p)
+    enc = p.add_statement([resolve_op("serialize", layout="row"),
+                           resolve_op("erasure", k=10, m=3)],
+                          kind="format", inputs=[part])
+    st = store_stmt(p, enc, upload=ds)
+    create_stage(p, using=[s1, part, enc, st], name="main")
+
+
+def flexible_erasure(p, ds):
+    s1, part = _partitioned(p)
+    hot = p.add_statement([resolve_op("serialize", layout="row"),
+                           resolve_op("erasure", k=5, m=3)],
+                          kind="format", inputs=[part])
+    cold = p.add_statement([resolve_op("serialize", layout="row"),
+                            resolve_op("erasure", k=10, m=3)],
+                           kind="format", inputs=[part])
+    st = store_stmt(p, hot, cold, upload=ds)
+    create_stage(p, using=[s1, part], name="a")
+    chain_stage(p, to=["a"], using=[hot], where={"partition": 0}, name="hot")
+    chain_stage(p, to=["a"], using=[cold],
+                where={"partition": lambda v: v is not None and v > 0},
+                name="cold")
+    chain_stage(p, to=["hot", "cold"], using=[st], name="up")
+
+
+def mixed_replication_erasure(p, ds):
+    s1, part = _partitioned(p)
+    hot = p.add_statement([resolve_op("replicate", copies=10),
+                           resolve_op("serialize", layout="row")],
+                          kind="format", inputs=[part])
+    cold = p.add_statement([resolve_op("serialize", layout="row"),
+                            resolve_op("erasure", k=10, m=3)],
+                           kind="format", inputs=[part])
+    st = store_stmt(p, hot, cold, upload=ds)
+    create_stage(p, using=[s1, part], name="a")
+    chain_stage(p, to=["a"], using=[hot], where={"partition": 0}, name="hot")
+    chain_stage(p, to=["a"], using=[cold],
+                where={"partition": lambda v: v is not None and v > 0},
+                name="cold")
+    chain_stage(p, to=["hot", "cold"], using=[st], name="up")
+
+
+def run(n: int = 200_000) -> List[Row]:
+    base = plain_upload_seconds(n)
+    rows: List[Row] = [("storage/plain_upload", base, "1.00x")]
+    for name, build in (("flexible_replication", flexible_replication),
+                        ("erasure_rs10_3", erasure_10_3),
+                        ("flexible_erasure", flexible_erasure),
+                        ("mixed_repl_erasure", mixed_replication_erasure)):
+        secs, ds = run_plan_seconds(build, n, keep_store=True)
+        stored = ds.total_bytes() / 1e6
+        from .common import cleanup
+        cleanup(ds)
+        rows.append((f"storage/{name}", secs,
+                     f"{secs / base:.2f}x;{stored:.1f}MB"))
+    return rows

@@ -1,0 +1,53 @@
+"""Render the dry-run artifacts as the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--mesh pod16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def fmt_flops(x: float) -> str:
+    return f"{x/1e12:.2f}T" if x >= 1e10 else f"{x/1e9:.1f}G"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--dir", default=ART)
+    args = ap.parse_args()
+
+    rows = []
+    for f in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        a = json.load(open(f))
+        if a.get("skipped") or a["mesh"] != args.mesh:
+            continue
+        r = a["roofline"]
+        m = a["memory_analysis"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append({
+            "arch": a["arch"], "shape": a["shape"],
+            "comp": r["compute_s"], "mem": r["memory_s"],
+            "coll": r["collective_s"], "dom": r["dominant"],
+            "useful": r["useful_ratio"],
+            "frac": r["compute_s"] / bound if bound else 0.0,
+            "gib": (m["argument_bytes"] + m["temp_bytes"]) / 2**30,
+            "mf": r["model_flops"], "hf": r["hlo_flops_global"],
+        })
+
+    print("| arch | shape | compute s | memory s | collective s | dominant |"
+          " MODEL/HLO FLOPs | roofline frac | GiB/dev |")
+    print("|---|---|---:|---:|---:|---|---:|---:|---:|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['comp']:.3f} | {r['mem']:.3f} "
+              f"| {r['coll']:.3f} | {r['dom']} | {r['useful']:.2f} "
+              f"| {r['frac']:.2f} | {r['gib']:.1f} |")
+
+
+if __name__ == "__main__":
+    main()

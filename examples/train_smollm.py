@@ -1,0 +1,40 @@
+"""End-to-end driver: ingest a corpus with INGESTBASE, then train a smollm-
+family model on it for a few hundred steps (CPU-scaled config).
+
+    PYTHONPATH=src python examples/train_smollm.py [--steps 200]
+
+This is the thin wrapper over the production entry point
+(repro.launch.train); the same flow runs the full smollm-135m on a 16x16 pod
+by swapping --smoke/--mesh.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import tempfile
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    args = ap.parse_args()
+
+    work = tempfile.mkdtemp(prefix="ingestbase_train_")
+    sys.argv = [
+        "train", "--arch", "smollm-135m", "--smoke",
+        "--steps", str(args.steps), "--batch", str(args.batch),
+        "--seq-len", str(args.seq_len),
+        "--data-dir", os.path.join(work, "corpus"),
+        "--ckpt-dir", os.path.join(work, "ckpt"),
+        "--ckpt-every", "50", "--log-every", "20",
+    ]
+    from repro.launch.train import main as train_main
+    raise SystemExit(train_main())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Ingest-time data cleaning operators (paper Sec. II-A, IX-A1).
+
+* FDCheckOp       — functional-dependency violation detection (lhs -> rhs);
+                    requires grouping on lhs (pair with a shuffle for the
+                    global FD of the paper's experiment).
+* DCCheckOp       — denial-constraint detection (vectorized predicate over
+                    rows; violating rows routed to a violations file).
+* DictRepairOp    — single-pass dictionary repair of invalid codes.
+"""
+from .ops import DCCheckOp, DictRepairOp, FDCheckOp
+
+__all__ = ["DCCheckOp", "DictRepairOp", "FDCheckOp"]

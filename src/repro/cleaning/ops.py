@@ -1,0 +1,127 @@
+"""Data-cleaning ingestion operators."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import numpy as np
+
+from ..core.items import Columns, Granularity, IngestItem, num_rows, take_rows
+from ..core.operators import IngestOp, register_op
+
+
+@register_op("fd_check")
+class FDCheckOp(IngestOp):
+    """Functional dependency ``lhs -> rhs``: tuples sharing lhs must share rhs.
+
+    Within each item, groups rows by lhs; any group with >1 distinct rhs is a
+    violation — all its rows are routed to a violations item (label
+    ``violation=1``); clean rows keep ``violation=0``.  The paper's global FD
+    (Sec. IX-A1) partitions on lhs with a shuffle first so groups are global;
+    pass ``shuffle_by=<partition label>`` to request the runtime barrier.
+    """
+
+    name = "fd_check"
+    granularity_in = Granularity.CHUNK
+    granularity_out = Granularity.CHUNK
+
+    def __init__(self, lhs: str, rhs: str, drop_violations: bool = False,
+                 shuffle_by: Optional[str] = None, **kw: Any) -> None:
+        super().__init__(lhs=lhs, rhs=rhs, drop_violations=drop_violations, **kw)
+        if shuffle_by is not None:
+            self.params["shuffle_by"] = shuffle_by
+        self.lhs, self.rhs, self.drop_violations = lhs, rhs, drop_violations
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        cols = item.data
+        lhs, rhs = cols[self.lhs], cols[self.rhs]
+        # vectorized: a group violates iff its rhs min != rhs max under lhs key
+        uniq, inv = np.unique(lhs, return_inverse=True)
+        order = np.argsort(inv, kind="stable")
+        sorted_rhs = rhs[order]
+        starts = np.searchsorted(inv[order], np.arange(len(uniq)))
+        ends = np.append(starts[1:], len(inv))
+        bad_groups = np.zeros(len(uniq), dtype=bool)
+        for g in range(len(uniq)):  # rhs may be non-numeric: per-group unique
+            seg = sorted_rhs[starts[g] : ends[g]]
+            if len(seg) > 1 and len(np.unique(seg)) > 1:
+                bad_groups[g] = True
+        viol_mask = bad_groups[inv]
+        clean = take_rows(cols, np.nonzero(~viol_mask)[0])
+        viol = take_rows(cols, np.nonzero(viol_mask)[0])
+        yield IngestItem(clean, item.granularity, item.labels, dict(item.meta)) \
+            .with_label(self.name, 0)
+        if not self.drop_violations:
+            yield IngestItem(viol, item.granularity, item.labels, dict(item.meta)) \
+                .with_label(self.name, 1)
+
+
+@register_op("dc_check")
+class DCCheckOp(IngestOp):
+    """Denial constraint: rows where ``violation_predicate`` holds are
+    violations (paper example: quantity < 3 AND discount > 9%).  Stores both
+    the violating tuples and the original data (label-routed)."""
+
+    name = "dc_check"
+    granularity_in = Granularity.CHUNK
+    granularity_out = Granularity.CHUNK
+
+    def __init__(self, violation_predicate: Callable[[Columns], np.ndarray],
+                 repair: Optional[Callable[[Columns], Columns]] = None,
+                 **kw: Any) -> None:
+        super().__init__(violation_predicate=violation_predicate, repair=repair, **kw)
+        self.violation_predicate = violation_predicate
+        self.repair = repair
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        cols = item.data
+        bad = np.asarray(self.violation_predicate(cols), dtype=bool)
+        viol = take_rows(cols, np.nonzero(bad)[0])
+        if self.repair is not None and num_rows(viol):
+            repaired = self.repair(viol)
+            base = {k: v.copy() for k, v in cols.items()}
+            bidx = np.nonzero(bad)[0]
+            for k in base:
+                base[k][bidx] = repaired[k]
+            yield IngestItem(base, item.granularity, item.labels,
+                             dict(item.meta)).with_label(self.name, 0)
+        else:
+            yield item.with_label(self.name, 0)
+        yield IngestItem(viol, item.granularity, item.labels,
+                         dict(item.meta)).with_label(self.name, 1)
+
+
+@register_op("dict_repair")
+class DictRepairOp(IngestOp):
+    """Single-pass dictionary repair (paper: country 'mexico' -> 'MX').
+
+    Values of ``field`` not in ``valid`` are replaced via ``mapping`` when
+    possible; rows that cannot be repaired are routed to label 1.  Only the
+    corrected values are stored (label 0)."""
+
+    name = "dict_repair"
+    granularity_in = Granularity.CHUNK
+    granularity_out = Granularity.CHUNK
+
+    def __init__(self, field: str, mapping: Dict[Any, Any], **kw: Any) -> None:
+        super().__init__(field=field, mapping=mapping, **kw)
+        self.field, self.mapping = field, mapping
+        self.valid = set(mapping.values())
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        cols = {k: v.copy() for k, v in item.data.items()}
+        vals = cols[self.field]
+        invalid = np.array([v not in self.valid for v in vals])
+        unrepairable = np.zeros(len(vals), dtype=bool)
+        for i in np.nonzero(invalid)[0]:
+            fix = self.mapping.get(vals[i])
+            if fix is None:
+                unrepairable[i] = True
+            else:
+                vals[i] = fix
+        ok = take_rows(cols, np.nonzero(~unrepairable)[0])
+        bad = take_rows(item.data, np.nonzero(unrepairable)[0])
+        yield IngestItem(ok, item.granularity, item.labels,
+                         dict(item.meta)).with_label(self.name, 0)
+        if unrepairable.any():
+            yield IngestItem(bad, item.granularity, item.labels,
+                             dict(item.meta)).with_label(self.name, 1)

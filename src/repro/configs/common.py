@@ -1,0 +1,8 @@
+"""Shared config helpers."""
+from __future__ import annotations
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    """Pad vocab to a multiple of 256 so the TP-sharded unembed tiles the MXU
+    (128-lane alignment per 16-way shard).  Deviations recorded per config."""
+    return ((v + multiple - 1) // multiple) * multiple

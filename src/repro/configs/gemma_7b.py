@@ -1,0 +1,26 @@
+"""gemma-7b [dense] — GeGLU, head_dim 256, arXiv:2403.08295.
+
+28 layers, d_model 3072, 16 heads (kv=16 — full MHA on 7b), d_ff 24576,
+vocab 256000, tied embeddings with sqrt(d_model) embedding scale.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    num_layers=28,
+    d_model=3072,
+    n_heads=16, n_kv_heads=16, head_dim=256,
+    d_ff=24576,
+    vocab_size=256000,
+    pattern=("attn",),
+    mlp_kind="geglu",
+    tied_embeddings=True,
+    embed_scale=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="gemma-smoke", num_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=4, head_dim=32, d_ff=128, vocab_size=256,
+    dtype="float32", param_dtype="float32",
+)

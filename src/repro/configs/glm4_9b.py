@@ -1,0 +1,23 @@
+"""glm4-9b [dense] — RoPE, aggressive GQA (kv=2), hf:THUDM/glm-4-9b.
+
+40 layers, d_model 4096, 32 heads (GQA kv=2), d_ff 13696, vocab 151552.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    family="dense",
+    num_layers=40,
+    d_model=4096,
+    n_heads=32, n_kv_heads=2, head_dim=128,
+    d_ff=13696,
+    vocab_size=151552,
+    pattern=("attn",),
+    mlp_kind="swiglu",
+)
+
+SMOKE = CONFIG.replace(
+    name="glm4-smoke", num_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+    dtype="float32", param_dtype="float32",
+)

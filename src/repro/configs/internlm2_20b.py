@@ -1,0 +1,25 @@
+"""internlm2-20b [dense] — GQA, arXiv:2403.17297.
+
+48 layers, d_model 6144, 48 heads (GQA kv=8), d_ff 16384, vocab 92544
+(padded to 92672 for 16-way TP of the unembed — recorded deviation).
+"""
+from ..models.config import ModelConfig
+from .common import pad_vocab
+
+CONFIG = ModelConfig(
+    name="internlm2-20b",
+    family="dense",
+    num_layers=48,
+    d_model=6144,
+    n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=16384,
+    vocab_size=pad_vocab(92544),
+    pattern=("attn",),
+    mlp_kind="swiglu",
+)
+
+SMOKE = CONFIG.replace(
+    name="internlm2-smoke", num_layers=2, d_model=64,
+    n_heads=6, n_kv_heads=1, head_dim=16, d_ff=128, vocab_size=256,
+    dtype="float32", param_dtype="float32",
+)

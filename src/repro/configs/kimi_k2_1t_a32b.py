@@ -1,0 +1,36 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE, 384 experts top-8.
+
+61 layers, d_model 7168, 64 heads (GQA kv=8), expert d_ff 2048, +1 shared
+expert, vocab 163840.  head_dim set to 128 explicitly (decoupled from
+d_model, as Kimi-K2 itself does) for MXU 128-alignment — recorded deviation:
+the first dense layer of the real model is folded into the uniform MoE stack.
+
+At ~1.04 T total / ~33 B active params this is the arch that forces the
+1000+-node posture: Adafactor (factored optimizer state), 16-way expert
+parallelism (384/16 = 24 experts per shard), FSDP over the data axis.
+"""
+from ..models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=2048,                      # = expert hidden dim
+    vocab_size=163840,
+    pattern=("attn",),
+    mlp_kind="moe",
+    moe=MoEConfig(num_experts=384, top_k=8, d_ff_expert=2048,
+                  capacity_factor=1.25, num_shared_experts=1),
+    optimizer="adafactor",
+    remat_policy="save_layer_inputs",
+)
+
+SMOKE = CONFIG.replace(
+    name="kimi-smoke", num_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=32, vocab_size=256,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32,
+                  num_shared_experts=1),
+    dtype="float32", param_dtype="float32",
+)

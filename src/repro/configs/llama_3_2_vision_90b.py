@@ -1,0 +1,28 @@
+"""llama-3.2-vision-90b [vlm] — cross-attn image layers (hf:meta-llama).
+
+100 layers = 20 super-blocks of (4 self-attn + 1 cross-attn), d_model 8192,
+64 heads (GQA kv=8), d_ff 28672, vocab 128256.  The vision frontend is a STUB
+per the assignment: ``input_specs`` provides precomputed patch embeddings
+(B, 1024, d_model) consumed by the cross-attention layers.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    num_layers=100,
+    d_model=8192,
+    n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    pattern=("attn", "attn", "attn", "attn", "cross"),
+    mlp_kind="swiglu",
+    cross_attn_kv_len=1024,     # stubbed vision tokens
+    rope_theta=500000.0,
+)
+
+SMOKE = CONFIG.replace(
+    name="llama-vision-smoke", num_layers=5, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+    cross_attn_kv_len=16, dtype="float32", param_dtype="float32",
+)

@@ -1,0 +1,30 @@
+"""mamba2-2.7b [ssm] — SSD (state-space duality), arXiv:2405.21060.
+
+64 layers, d_model 2560, attention-free, no MLP (the Mamba-2 block *is* the
+layer), vocab 50280 (padded to 50432 for 16-way TP of the unembed — recorded
+deviation), ssm_state 128.  d_inner = 2×2560 = 5120, head_dim 64 -> 80 heads.
+"""
+from ..models.config import ModelConfig, SSMConfig
+from .common import pad_vocab
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    n_heads=0, n_kv_heads=0, d_ff=0,
+    vocab_size=pad_vocab(50280),
+    pattern=("ssd",),
+    mlp_kind="none",
+    ssm=SSMConfig(state_dim=128, head_dim=64, num_groups=1, expand=2,
+                  conv_width=4, chunk_size=256),
+    remat_policy="save_layer_inputs",
+)
+
+SMOKE = CONFIG.replace(
+    name="mamba2-smoke", num_layers=2, d_model=64,
+    vocab_size=256,
+    ssm=SSMConfig(state_dim=16, head_dim=16, num_groups=1, expand=2,
+                  conv_width=4, chunk_size=16),
+    dtype="float32", param_dtype="float32",
+)

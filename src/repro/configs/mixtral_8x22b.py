@@ -1,0 +1,34 @@
+"""mixtral-8x22b [moe] — 8 experts top-2 + sliding-window attention,
+arXiv:2401.04088.
+
+56 layers, d_model 6144, 48 heads (GQA kv=8), expert d_ff 16384, vocab 32768,
+SWA window 4096 (as assigned).  8 experts don't divide the 16-way model axis,
+so experts are replicated and the expert hidden dim is tensor-parallel
+instead (DESIGN.md §5) — the launch layer picks this automatically.
+The 500k decode cell runs here: the SWA ring cache is bounded by the window.
+"""
+from ..models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    pattern=("swa",),
+    window=4096,
+    mlp_kind="moe",
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=16384,
+                  capacity_factor=1.25),
+    remat_policy="save_layer_inputs",
+)
+
+SMOKE = CONFIG.replace(
+    name="mixtral-smoke", num_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=64, vocab_size=256,
+    window=16,
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64),
+    dtype="float32", param_dtype="float32",
+)

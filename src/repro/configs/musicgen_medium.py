@@ -1,0 +1,26 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens, arXiv:2306.05284.
+
+48 layers, d_model 1536, 24 heads (MHA kv=24), d_ff 6144 (GELU), vocab 2048
+(EnCodec codebook).  The assignment specifies the transformer BACKBONE only:
+the EnCodec frontend is a stub — the ingestion plan performs the delay-pattern
+flattening and the model consumes precomputed code tokens directly.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    n_heads=24, n_kv_heads=24, head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    pattern=("attn",),
+    mlp_kind="gelu",
+)
+
+SMOKE = CONFIG.replace(
+    name="musicgen-smoke", num_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=128,
+    dtype="float32", param_dtype="float32",
+)

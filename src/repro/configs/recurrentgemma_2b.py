@@ -1,0 +1,33 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention 1:2, arXiv:2402.19427.
+
+26 layers in (rec, rec, attn) blocks: 8 scanned super-blocks + 2 trailing
+recurrent layers unrolled.  d_model 2560, 10 heads (MQA kv=1, head_dim 256),
+d_ff 7680 (GeGLU), local-attention window 2048, vocab 256000.
+The 500k-context decode cell runs here: RG-LRU state + 2048-token ring cache.
+"""
+from ..models.config import ModelConfig, RGLRUConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    pattern=("rec", "rec", "local"),
+    remainder=("rec", "rec"),
+    window=2048,
+    mlp_kind="geglu",
+    rglru=RGLRUConfig(lru_width=2560, conv_width=4, c_exponent=8.0),
+    tied_embeddings=True,
+    embed_scale=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="recurrentgemma-smoke", num_layers=5, d_model=64,
+    n_heads=4, n_kv_heads=1, head_dim=16, d_ff=128, vocab_size=256,
+    window=16, rglru=RGLRUConfig(lru_width=64),
+    pattern=("rec", "rec", "local"), remainder=("rec", "rec"),
+    dtype="float32", param_dtype="float32",
+)

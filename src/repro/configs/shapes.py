@@ -1,0 +1,84 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Four shapes per arch (LM-family assignment):
+  train_4k     seq 4096,    global_batch 256   -> train_step
+  prefill_32k  seq 32768,   global_batch 32    -> prefill (serve)
+  decode_32k   seq 32768,   global_batch 128   -> serve_step (1 token, KV=32k)
+  long_500k    seq 524288,  global_batch 1     -> serve_step; sub-quadratic
+                                                 archs only (SSM/hybrid/SWA)
+
+``long_500k`` applicability (DESIGN.md §4): runs where decode state is O(1)
+or attention is windowed — mamba2 (SSM), recurrentgemma (RG-LRU + local),
+mixtral (4096-token SWA ring cache).  Pure full-attention archs are skipped
+(a 500k dense KV cache is the *definition* of the quadratic wall).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# archs that can run the 500k-context decode cell
+LONG_CONTEXT_OK = ("mamba2-2.7b", "recurrentgemma-2b", "mixtral-8x22b")
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.name in LONG_CONTEXT_OK or _sub_quadratic(cfg)
+    return True
+
+
+def _sub_quadratic(cfg: ModelConfig) -> bool:
+    kinds = set(cfg.pattern) | set(cfg.remainder)
+    attn_kinds = kinds & {"attn", "cross"}
+    return not attn_kinds  # ssd/rec/swa/local only
+
+
+def _i32(*shape: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, no device allocation."""
+    s = SHAPES[shape]
+    B, S = s.global_batch, s.seq_len
+    if s.kind == "train":
+        specs = {"tokens": _i32(B, S), "labels": _i32(B, S),
+                 "segments": _i32(B, S), "positions": _i32(B, S)}
+    elif s.kind == "prefill":
+        specs = {"tokens": _i32(B, S), "segments": _i32(B, S),
+                 "positions": _i32(B, S)}
+    else:  # decode: one new token against a seq_len-deep cache
+        specs = {"tokens": _i32(B, 1)}
+    if "cross" in cfg.pattern + cfg.remainder and s.kind != "decode":
+        specs["encoder_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.cross_attn_kv_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def cache_len_for(cfg: ModelConfig, shape: str) -> int:
+    """Decode cache depth: seq_len past tokens + a 128-step decode margin
+    (full-attention caches); windowed/recurrent caches clamp internally."""
+    s = SHAPES[shape]
+    return s.seq_len + 128 if s.kind == "decode" else s.seq_len

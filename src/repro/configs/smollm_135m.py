@@ -1,0 +1,25 @@
+"""smollm-135m [dense] — llama-arch small, hf:HuggingFaceTB/SmolLM-135M.
+
+30 layers, d_model 576, 9 heads (GQA kv=3), d_ff 1536, vocab 49152, tied.
+Also the end-to-end training example arch (examples/train_smollm.py).
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    family="dense",
+    num_layers=30,
+    d_model=576,
+    n_heads=9, n_kv_heads=3, head_dim=64,
+    d_ff=1536,
+    vocab_size=49152,
+    pattern=("attn",),
+    mlp_kind="swiglu",
+    tied_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="smollm-smoke", num_layers=3, d_model=48,
+    n_heads=3, n_kv_heads=1, head_dim=16, d_ff=96, vocab_size=256,
+    dtype="float32", param_dtype="float32",
+)

@@ -1,0 +1,48 @@
+"""IngestBase core: the paper's contribution as a composable library.
+
+Typical flow::
+
+    plan  = IngestPlan("logs")
+    s1    = select(plan, parser="parser", replicate=3)
+    s2    = format_(plan, s1, chunk={"target_rows": 4096}, serialize="columnar")
+    s3    = store(plan, s2, locate="roundrobin", upload=data_store)
+    create_stage(plan, using=[s1, s2, s3])
+    report = ingest(plan, items, data_store)
+    cols   = DataAccess(data_store).filter_replica("serialize", "columnar") \
+                 .read_all(projection=["tokens"])
+"""
+from .access import DataAccess, Split
+from .catalog import Catalog
+from .fault import (ErasureRecovery, FaultToleranceDaemon, RecoveryUDF,
+                    ReplicationRecovery, TransformationRecovery)
+from .items import Granularity, IngestItem, Label
+from .language import (LanguageSession, chain_stage, create_stage, format_,
+                       parse_ingestion_script, select, store)
+from .operators import (IngestOp, MaterializeOp, OperatorFailure, OpMode,
+                        PassThroughOp, register_op, registered_ops, resolve_op)
+from .optimizer import (FilterFusionRule, IngestionOptimizer, IngestOpExpr,
+                        ParallelModeRule, PipelineRule, ReorderRule, Rule)
+from .plan import IngestPlan, Stage, StagePlan, Statement
+from .runtime import FaultInjection, NodeFailure, RunReport, RuntimeEngine, ingest
+from .store import BlockEntry, DataStore
+
+# operator implementations register themselves on import
+from . import ops_select as _ops_select  # noqa: F401
+from . import ops_format as _ops_format  # noqa: F401
+from . import ops_store as _ops_store    # noqa: F401
+
+__all__ = [
+    "DataAccess", "Split", "Catalog",
+    "ErasureRecovery", "FaultToleranceDaemon", "RecoveryUDF",
+    "ReplicationRecovery", "TransformationRecovery",
+    "Granularity", "IngestItem", "Label",
+    "LanguageSession", "chain_stage", "create_stage", "format_",
+    "parse_ingestion_script", "select", "store",
+    "IngestOp", "MaterializeOp", "OperatorFailure", "OpMode", "PassThroughOp",
+    "register_op", "registered_ops", "resolve_op",
+    "FilterFusionRule", "IngestionOptimizer", "IngestOpExpr", "ParallelModeRule",
+    "PipelineRule", "ReorderRule", "Rule",
+    "IngestPlan", "Stage", "StagePlan", "Statement",
+    "FaultInjection", "NodeFailure", "RunReport", "RuntimeEngine", "ingest",
+    "BlockEntry", "DataStore",
+]

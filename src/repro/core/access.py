@@ -1,0 +1,158 @@
+"""Ingestion-aware data access (paper Sec. VII).
+
+*What* to access — ``filter_replica`` / ``filter_block`` over the lineage
+labels persisted in block names/manifest.  *Where* — ``split_by_key`` /
+``co_split_by_key`` assign blocks to computation tasks (here: mesh data-axis
+slots / host feeders).  *How* — ``deserialize(projection, selection)``
+pushdown through the layout library.
+
+``DataAccess`` is the InputFormat analogue: the training/serving feeders and
+the benchmark "query processor" both consume it.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..layouts import SerializedBlock, deserialize_block
+from .items import Columns, concat_columns
+from .store import BlockEntry, DataStore
+
+
+@dataclass
+class Split:
+    """One computation task's input: an ordered set of blocks (+ key)."""
+
+    key: Any
+    blocks: List[BlockEntry] = field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.blocks)
+
+
+class DataAccess:
+    """A lazily-filtered view over a DataStore's blocks."""
+
+    def __init__(self, store: DataStore,
+                 entries: Optional[List[BlockEntry]] = None) -> None:
+        self.store = store
+        self.entries: List[BlockEntry] = (
+            list(entries) if entries is not None
+            else [e for e in store.blocks() if not e.is_parity])
+
+    # ------------------------------------------------------------ what (Sec VII)
+    def filter_replica(self, op: str, value: Any = None) -> "DataAccess":
+        """Keep blocks whose lineage carries label l_op(=value): e.g. pick the
+        replica serialized as 'sorted', or the sample replica (label 1)."""
+        kept = []
+        for e in self.entries:
+            for lop, lval in e.labels:
+                if lop == op and (value is None or lval == value):
+                    kept.append(e)
+                    break
+        return DataAccess(self.store, kept)
+
+    # paper helper variants (Sec. VIII-A)
+    def filter_replica_by_layout(self, layout: str) -> "DataAccess":
+        return DataAccess(self.store, [e for e in self.entries if e.layout == layout])
+
+    def filter_replica_by_id(self, replica_index: int) -> "DataAccess":
+        return DataAccess(self.store,
+                          [e for e in self.entries if e.replica_index == replica_index])
+
+    def filter_replica_by_partitioning(self, partition_op: str) -> "DataAccess":
+        return self.filter_replica(partition_op)
+
+    def filter_block(self, predicate: Callable[[BlockEntry], bool]) -> "DataAccess":
+        """Block-level filter within the chosen replica (e.g. keep partition
+        ids overlapping a queried key range — partition pruning)."""
+        return DataAccess(self.store, [e for e in self.entries if predicate(e)])
+
+    def filter_block_by_label(self, op: str, value: Any) -> "DataAccess":
+        return self.filter_block(
+            lambda e: any(lop == op and lval == value for lop, lval in e.labels))
+
+    def distinct_replicas(self) -> "DataAccess":
+        """At most one physical block per logical id (avoid double reads when a
+        plan created several copies)."""
+        seen: Dict[str, BlockEntry] = {}
+        for e in self.entries:
+            seen.setdefault(e.logical_id + f"#{self._label_dict(e).get('chunk', 0)}", e)
+        return DataAccess(self.store, list(seen.values()))
+
+    @staticmethod
+    def _label_dict(e: BlockEntry) -> Dict[str, Any]:
+        return {op: val for op, val in e.labels}
+
+    # ----------------------------------------------------------- where (Sec VII)
+    def split_by_key(self, key_op: str, max_split_size: Optional[int] = None,
+                     num_tasks: Optional[int] = None) -> List[Split]:
+        """Group blocks by an ingest label (e.g. the partition id) into splits —
+        one split per computation task.  ``num_tasks`` folds keys onto a fixed
+        task count (the mesh data-axis size for training feeders)."""
+        groups: Dict[Any, List[BlockEntry]] = defaultdict(list)
+        for e in self.entries:
+            groups[self._label_dict(e).get(key_op)].append(e)
+        splits: List[Split] = []
+        for k in sorted(groups, key=lambda x: (x is None, x)):
+            blocks = groups[k]
+            if max_split_size:
+                for i in range(0, len(blocks), max_split_size):
+                    splits.append(Split(k, blocks[i : i + max_split_size]))
+            else:
+                splits.append(Split(k, blocks))
+        if num_tasks is not None:
+            folded = [Split(t, []) for t in range(num_tasks)]
+            for i, s in enumerate(splits):
+                folded[i % num_tasks].blocks.extend(s.blocks)
+            return folded
+        return splits
+
+    def co_split_by_key(self, key_op: str, *others: Tuple["DataAccess", str]
+                        ) -> List[List[Split]]:
+        """Align splits of several datasets on their keys (paper coSplitByKey:
+        co-partitioned joins without repartitioning)."""
+        mine = {s.key: s for s in self.split_by_key(key_op)}
+        theirs = [{s.key: s for s in o.split_by_key(kop)} for o, kop in others]
+        keys = sorted(set(mine) | set().union(*[set(t) for t in theirs]) if theirs
+                      else set(mine), key=lambda x: (x is None, x))
+        out: List[List[Split]] = []
+        for k in keys:
+            row = [mine.get(k, Split(k))]
+            for t in theirs:
+                row.append(t.get(k, Split(k)))
+            out.append(row)
+        return out
+
+    # ------------------------------------------------------------- how (Sec VII)
+    def deserialize(self, projection: Optional[Sequence[str]] = None,
+                    selection: Optional[Tuple[str, str, Any]] = None
+                    ) -> Iterable[Tuple[BlockEntry, Columns]]:
+        """Layout-aware read of every selected block with pushdown."""
+        for e in self.entries:
+            block = self.store.read_block(e.block_id)
+            yield e, deserialize_block(block, projection, selection)
+
+    def read_all(self, projection: Optional[Sequence[str]] = None,
+                 selection: Optional[Tuple[str, str, Any]] = None) -> Columns:
+        parts = [cols for _, cols in self.deserialize(projection, selection)]
+        return concat_columns(parts)
+
+    def read_split(self, split: Split,
+                   projection: Optional[Sequence[str]] = None,
+                   selection: Optional[Tuple[str, str, Any]] = None) -> Columns:
+        parts = []
+        for e in split.blocks:
+            block = self.store.read_block(e.block_id)
+            parts.append(deserialize_block(block, projection, selection))
+        return concat_columns(parts)
+
+    # -------------------------------------------------------------------- misc
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def total_bytes(self) -> int:
+        return sum(e.nbytes for e in self.entries)

@@ -1,0 +1,48 @@
+"""Plan + UDF catalog (paper Sec. VII): serialized ingestion plans (operator
+params, not instances) and the per-plan recovery-UDF registry, persisted next
+to the store so ingestion-aware access can re-instantiate what it needs."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+from .fault import ErasureRecovery, RecoveryUDF, ReplicationRecovery, TransformationRecovery
+from .plan import IngestPlan
+from .store import DataStore
+
+_UDFS = {
+    "replication": ReplicationRecovery,
+    "transformation": TransformationRecovery,
+    "erasure": ErasureRecovery,
+}
+
+
+class Catalog:
+    def __init__(self, store: DataStore) -> None:
+        self.store = store
+        self.path = os.path.join(store.root, "catalog.json")
+        self.data: Dict[str, Any] = {"plans": {}, "udfs": {}}
+        if os.path.exists(self.path):
+            with open(self.path) as f:
+                self.data = json.load(f)
+
+    def register_plan(self, plan: IngestPlan,
+                      recovery_udfs: Sequence[str] = ("replication",
+                                                      "transformation",
+                                                      "erasure")) -> None:
+        self.data["plans"][plan.name] = plan.signature()
+        self.data["udfs"][plan.name] = list(recovery_udfs)
+        self.flush()
+
+    def recovery_chain(self, plan_name: str) -> List[RecoveryUDF]:
+        names = self.data["udfs"].get(
+            plan_name, ["replication", "transformation", "erasure"])
+        return [_UDFS[n]() for n in names if n in _UDFS]
+
+    def plan_signature(self, plan_name: str) -> Optional[Dict[str, Any]]:
+        return self.data["plans"].get(plan_name)
+
+    def flush(self) -> None:
+        with open(self.path, "w") as f:
+            json.dump(self.data, f, indent=1)

@@ -1,0 +1,220 @@
+"""Post-ingestion fault tolerance (paper Sec. VI-C2, Fig. 3).
+
+Users control how *their* data recovers via two UDFs:
+
+    detect:  f -> {r1, r2, .., rn}     # which blocks can recover block f
+    recover: {B_r1, .., B_rn} -> B_f   # rebuild the failed block
+
+A fault-tolerance daemon polls the store for failing blocks and invokes the
+registered recovery UDFs.  Three built-ins (paper):
+
+  ReplicationRecovery    — point at an identical replica, bump its replication
+  TransformationRecovery — copy a differently-serialized replica and re-encode
+                           it into the failed block's layout
+  ErasureRecovery        — fetch surviving stripe members, Reed-Solomon decode
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..erasure import ReedSolomon
+from ..layouts import SerializedBlock, deserialize_block, serialize_block
+from .store import BlockEntry, DataStore
+
+
+class RecoveryError(RuntimeError):
+    pass
+
+
+class RecoveryUDF:
+    """detect/recover pair bound to a store."""
+
+    name = "recovery"
+
+    def detect(self, store: DataStore, failed: BlockEntry) -> List[str]:
+        """Which block ids are needed to recover ``failed``?"""
+        raise NotImplementedError
+
+    def recover(self, store: DataStore, failed: BlockEntry,
+                recovery_ids: List[str]) -> bytes:
+        """Reconstruct the failed block's payload from the recovery blocks."""
+        raise NotImplementedError
+
+    def applies_to(self, store: DataStore, failed: BlockEntry) -> bool:
+        try:
+            return len(self.detect(store, failed)) > 0
+        except RecoveryError:
+            return False
+
+
+class ReplicationRecovery(RecoveryUDF):
+    """Find a bitwise-identical replica; re-publish its bytes (HDFS would bump
+    the replication factor; here we rewrite the lost file from the replica)."""
+
+    name = "replication"
+
+    def detect(self, store: DataStore, failed: BlockEntry) -> List[str]:
+        sibs = [e for e in store.replicas_of(failed.logical_id)
+                if e.block_id != failed.block_id and e.layout == failed.layout
+                and not e.is_parity and store.verify_block(e.block_id)]
+        return [sibs[0].block_id] if sibs else []
+
+    def recover(self, store: DataStore, failed: BlockEntry,
+                recovery_ids: List[str]) -> bytes:
+        if not recovery_ids:
+            raise RecoveryError(f"no identical replica for {failed.block_id}")
+        return store.read_payload(recovery_ids[0])
+
+
+class TransformationRecovery(RecoveryUDF):
+    """Recover from a replica in a *different* layout: deserialize it and
+    re-serialize into the failed layout (per-replica / Trojan layouts)."""
+
+    name = "transformation"
+
+    def detect(self, store: DataStore, failed: BlockEntry) -> List[str]:
+        sibs = [e for e in store.replicas_of(failed.logical_id)
+                if e.block_id != failed.block_id and not e.is_parity
+                and e.layout not in ("raw",) and store.verify_block(e.block_id)]
+        return [sibs[0].block_id] if sibs else []
+
+    def recover(self, store: DataStore, failed: BlockEntry,
+                recovery_ids: List[str]) -> bytes:
+        if not recovery_ids:
+            raise RecoveryError(f"no transformable replica for {failed.block_id}")
+        src = store.read_block(recovery_ids[0])
+        cols = deserialize_block(src)
+        layout_kw: Dict[str, Any] = {}
+        if failed.layout == "sorted":
+            layout_kw["key"] = failed.meta.get("sort_key")
+        out = serialize_block(cols, failed.layout, **layout_kw)
+        return out.tobytes()
+
+
+class ErasureRecovery(RecoveryUDF):
+    """Reed-Solomon stripe decode (paper Sec. VI-C2 erasure-coding based)."""
+
+    name = "erasure"
+
+    def detect(self, store: DataStore, failed: BlockEntry) -> List[str]:
+        if not failed.stripe_id:
+            return []
+        members = [e for e in store.stripe_members(failed.stripe_id)
+                   if e.block_id != failed.block_id and store.verify_block(e.block_id)]
+        k = int(failed.meta.get("stripe_k", 0)) or max(
+            (e.stripe_pos for e in members if not e.is_parity), default=-1) + 1
+        # a partial stripe's trailing data rows are virtual zero blocks — they
+        # count as (implicitly intact) survivors
+        stored = {e.stripe_pos for e in store.stripe_members(failed.stripe_id)}
+        virtual = [p for p in range(k) if p not in stored]
+        if len(members) + len(virtual) < k:
+            raise RecoveryError(
+                f"stripe {failed.stripe_id}: only {len(members)} survivors, need {k}")
+        return [e.block_id for e in members[:k]]
+
+    def recover(self, store: DataStore, failed: BlockEntry,
+                recovery_ids: List[str]) -> bytes:
+        k = int(failed.meta.get("stripe_k"))
+        m = int(failed.meta.get("stripe_m"))
+        rs = ReedSolomon(k, m)
+        L = None
+        shards: Dict[int, np.ndarray] = {}
+        for bid in recovery_ids:
+            e = store.entries[bid]
+            raw = np.frombuffer(store.read_payload(bid), dtype=np.uint8)
+            if L is None:
+                L = max(len(raw), 1)
+                L = -(-L // 128) * 128
+            row = np.zeros(L, dtype=np.uint8)
+            row[: len(raw)] = raw
+            shards[e.stripe_pos] = row
+        if L is None:
+            L = max(1, -(-failed.nbytes // 128) * 128)
+        # virtual zero rows of a partial stripe (never stored, implicitly intact)
+        stored = {e.stripe_pos for e in store.stripe_members(failed.stripe_id)}
+        for p in range(k):
+            if len(shards) >= k:
+                break
+            if p not in shards and p not in stored:
+                shards[p] = np.zeros(L, dtype=np.uint8)
+        out = rs.recover_block(failed.stripe_pos, shards)
+        return out.tobytes()[: failed.nbytes]
+
+
+@dataclass
+class RecoveryReport:
+    recovered: List[Tuple[str, str]] = field(default_factory=list)  # (block, udf)
+    unrecoverable: List[str] = field(default_factory=list)
+    per_block_seconds: Dict[str, float] = field(default_factory=dict)
+
+
+class FaultToleranceDaemon:
+    """Polls the store for failing blocks and applies recovery UDFs.
+
+    The catalog maps ingestion plans to their UDF chain (paper: "INGESTBASE
+    maintains a catalog of detect and recover UDFs for each ingestion plan");
+    ``udfs`` here is that chain, tried in order per failed block.
+    """
+
+    def __init__(self, store: DataStore,
+                 udfs: Optional[Sequence[RecoveryUDF]] = None,
+                 poll_interval_s: float = 0.05) -> None:
+        self.store = store
+        self.udfs = list(udfs) if udfs is not None else [
+            ReplicationRecovery(), TransformationRecovery(), ErasureRecovery()]
+        self.poll_interval_s = poll_interval_s
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.report = RecoveryReport()
+
+    # -------------------------------------------------------------- one sweep
+    def sweep(self) -> RecoveryReport:
+        for bid in self.store.failed_blocks():
+            entry = self.store.entries[bid]
+            t0 = time.time()
+            for udf in self.udfs:
+                try:
+                    rec_ids = udf.detect(self.store, entry)
+                except RecoveryError:
+                    continue
+                if not rec_ids:
+                    continue
+                try:
+                    payload = udf.recover(self.store, entry, rec_ids)
+                except RecoveryError:
+                    continue
+                # place the rebuilt block; if its node died, move to a live one
+                node = entry.node
+                import os
+                if not os.path.isdir(self.store.node_dir(node)):
+                    live = [n for n in self.store.nodes
+                            if os.path.isdir(self.store.node_dir(n))]
+                    node = live[0] if live else node
+                self.store.restore_file(entry, payload, node=node)
+                self.report.recovered.append((bid, udf.name))
+                self.report.per_block_seconds[bid] = time.time() - t0
+                break
+            else:
+                self.report.unrecoverable.append(bid)
+        self.store.flush_manifest()
+        return self.report
+
+    # ------------------------------------------------------------- background
+    def start(self) -> None:
+        def loop() -> None:
+            while not self._stop.is_set():
+                self.sweep()
+                self._stop.wait(self.poll_interval_s)
+
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5)

@@ -1,0 +1,151 @@
+"""Ingest data items — the unit of data flowing through an ingestion plan.
+
+The paper (Sec. III) defines *ingest data items* as raw files that may be broken
+into smaller items (chunks, records, blocks) for fine-grained ingestion logic,
+each carrying a list of *labels* denoting its lineage.
+
+TPU-era adaptation (DESIGN.md §2): an item's payload is columnar — a dict of
+equal-length numpy arrays — so operators are vectorized over whole chunks while
+the item remains the paper's unit of control flow.  A RECORD-granularity item is
+simply a chunk of length 1; a BLOCK is a device-ready, fixed-size packed array.
+"""
+from __future__ import annotations
+
+import enum
+import hashlib
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class Granularity(enum.IntEnum):
+    """Granularity ladder of ingest data items (paper Sec. III)."""
+
+    FILE = 0      # raw input file (bytes, unparsed)
+    CHUNK = 1     # parsed slice of a file: columnar record batch
+    RECORD = 2    # single record (chunk of length 1)
+    BLOCK = 3     # packed, serialized block — the storage/consumption unit
+
+
+# Columnar payload: field name -> equal-length np.ndarray.
+Columns = Dict[str, np.ndarray]
+
+
+def num_rows(columns: Columns) -> int:
+    if not columns:
+        return 0
+    return len(next(iter(columns.values())))
+
+
+def concat_columns(parts: List[Columns]) -> Columns:
+    parts = [p for p in parts if p and num_rows(p) > 0]
+    if not parts:
+        return {}
+    keys = list(parts[0].keys())
+    return {k: np.concatenate([p[k] for p in parts]) for k in keys}
+
+
+def take_rows(columns: Columns, idx: np.ndarray) -> Columns:
+    return {k: v[idx] for k, v in columns.items()}
+
+
+@dataclass(frozen=True)
+class Label:
+    """One lineage entry: the operator that touched the item and the value it assigned."""
+
+    op: str
+    value: Any
+
+    def __str__(self) -> str:  # used in lineage-encoded filenames
+        return f"{self.op}-{self.value}"
+
+
+@dataclass
+class IngestItem:
+    """A labelled ingest data item.
+
+    ``data`` is payload whose type depends on granularity:
+      FILE   -> bytes or str (path-like raw content)
+      CHUNK  -> Columns (dict of equal-length numpy arrays)
+      RECORD -> Columns with a single row
+      BLOCK  -> SerializedBlock (see layouts/) or raw ndarray/bytes
+    ``labels`` is the ordered lineage (paper Sec. VII: filename-encoded).
+    """
+
+    data: Any
+    granularity: Granularity = Granularity.FILE
+    labels: Tuple[Label, ...] = ()
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    # ------------------------------------------------------------------ labels
+    def with_label(self, op: str, value: Any) -> "IngestItem":
+        return replace(self, labels=self.labels + (Label(op, value),))
+
+    def label_value(self, op: str, default: Any = None) -> Any:
+        """Latest label value assigned by operator ``op`` (None if never touched)."""
+        for lab in reversed(self.labels):
+            if lab.op == op:
+                return lab.value
+        return default
+
+    def label_values(self, op: str) -> List[Any]:
+        return [l.value for l in self.labels if l.op == op]
+
+    def lineage_name(self) -> str:
+        """The paper's label-encoded physical file name: label1_label2_..._labeln."""
+        return "_".join(str(l) for l in self.labels) or "raw"
+
+    # ------------------------------------------------------------------- sizes
+    def nbytes(self) -> int:
+        d = self.data
+        if isinstance(d, (bytes, bytearray, str)):
+            return len(d)
+        if isinstance(d, np.ndarray):
+            return int(d.nbytes)
+        if isinstance(d, dict):
+            return int(sum(v.nbytes for v in d.values() if isinstance(v, np.ndarray)))
+        if hasattr(d, "nbytes"):
+            return int(d.nbytes)
+        return 0
+
+    def nrows(self) -> int:
+        if isinstance(self.data, dict):
+            return num_rows(self.data)
+        if isinstance(self.data, np.ndarray):
+            return len(self.data)
+        return 1
+
+    def checksum(self) -> str:
+        h = hashlib.sha256()
+        d = self.data
+        if isinstance(d, (bytes, bytearray)):
+            h.update(d)
+        elif isinstance(d, str):
+            h.update(d.encode())
+        elif isinstance(d, np.ndarray):
+            h.update(np.ascontiguousarray(d).tobytes())
+        elif isinstance(d, dict):
+            for k in sorted(d):
+                h.update(k.encode())
+                h.update(np.ascontiguousarray(d[k]).tobytes())
+        elif hasattr(d, "tobytes"):
+            h.update(d.tobytes())
+        return h.hexdigest()[:16]
+
+
+def matches(item: IngestItem, predicates: Dict[str, Any]) -> bool:
+    """Label-predicate match used by the dataflow stages (paper Sec. IV-B).
+
+    ``predicates`` maps operator name -> required label value; a predicate
+    value may also be a callable for inequality predicates such as the
+    paper's ``l_parser > now-1``.
+    """
+    for op, want in predicates.items():
+        have = item.label_value(op)
+        if callable(want):
+            if not want(have):
+                return False
+        elif have != want:
+            return False
+    return True

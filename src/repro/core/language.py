@@ -1,0 +1,369 @@
+"""The declarative ingestion language (paper Sec. IV).
+
+Two front-ends over the same plan builder:
+
+1. A Python-embedded DSL mirroring the paper's statements::
+
+       p = IngestPlan("logs")
+       s1 = select(p, parser="parser", parser_args={...}, replicate=2)
+       s2 = format_(p, s1, chunk={"target_bytes": 100<<20}, serialize="sorted")
+       s4 = store(p, s2, locate="disjoint", upload=store_target)
+       create_stage(p, using=[s1]); chain_stage(p, to=["a"], using=[s2], where={"replicate": 1})
+
+2. A SQL-ish text front-end parsing the paper's surface syntax::
+
+       s1 = SELECT * FROM input USING parser REPLICATE BY 2;
+       s3 = FORMAT s1 CHUNK BY 100mb;
+       s9 = STORE s3 LOCATE USING roundrobin UPLOAD TO target;
+       CREATE STAGE a USING s1;
+       CHAIN STAGE b TO a USING s3 WHERE l_replicate=1;
+
+   Operator names resolve through the operator registry, so custom operators
+   participate in the textual language too.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from .operators import IngestOp, resolve_op
+from .plan import IngestPlan
+from .store import DataStore
+
+
+# --------------------------------------------------------------------- helpers
+def _as_op(spec: Union[str, IngestOp, None], default_key: str,
+           args: Optional[Dict[str, Any]] = None) -> Optional[IngestOp]:
+    if spec is None:
+        return None
+    if isinstance(spec, IngestOp):
+        return spec
+    return resolve_op(spec if spec != "default" else default_key, **(args or {}))
+
+
+# ------------------------------------------------------------------ Python DSL
+def select(plan: IngestPlan, source: Optional[str] = None, *,
+           parser: Union[str, IngestOp, None] = "identity_parser",
+           parser_args: Optional[Dict[str, Any]] = None,
+           where: Union[IngestOp, Callable, None] = None,
+           where_fields: Sequence[str] = (),
+           projection: Union[Sequence[str], IngestOp, None] = None,
+           replicate: Union[int, IngestOp, None] = None,
+           replicate_tag: Optional[str] = None,
+           sid: Optional[str] = None) -> str:
+    """SELECT projection FROM source USING parser WHERE filter REPLICATE BY r.
+
+    Compiles to the chain parser -> filter -> projection -> replicator
+    (paper Sec. IV-A).
+    """
+    ops: List[IngestOp] = []
+    p = _as_op(parser, "parser", parser_args)
+    if p is not None:
+        ops.append(p)
+    if where is not None:
+        if isinstance(where, IngestOp):
+            ops.append(where)
+        else:
+            ops.append(resolve_op("filter", predicate=where, fields=tuple(where_fields)))
+    if projection is not None:
+        if isinstance(projection, IngestOp):
+            ops.append(projection)
+        else:
+            ops.append(resolve_op("project", fields=tuple(projection)))
+    if replicate is not None:
+        if isinstance(replicate, IngestOp):
+            ops.append(replicate)
+        else:
+            ops.append(resolve_op("replicate", copies=int(replicate),
+                                  tag=replicate_tag))
+    inputs = [source] if source else []
+    return plan.add_statement(ops, kind="select", sid=sid, inputs=inputs)
+
+
+def format_(plan: IngestPlan, source: str, *,
+            steps: Optional[Sequence[Tuple[str, Dict[str, Any]]]] = None,
+            partition: Optional[Dict[str, Any]] = None,
+            chunk: Optional[Dict[str, Any]] = None,
+            order: Optional[Dict[str, Any]] = None,
+            pack: Optional[Dict[str, Any]] = None,
+            erasure: Optional[Dict[str, Any]] = None,
+            serialize: Union[str, IngestOp, None] = None,
+            serialize_args: Optional[Dict[str, Any]] = None,
+            sid: Optional[str] = None) -> str:
+    """FORMAT source PARTITION BY .. CHUNK BY .. ORDER BY .. SERIALIZE AS ..
+
+    Operators chain in keyword order partition->chunk->order->(pack)->serialize
+    unless ``steps`` gives an explicit (possibly repeating) sequence — the
+    paper's multi-level partitioning / global-sort variants (s2 vs s3).
+    """
+    ops: List[IngestOp] = []
+    if steps is not None:
+        for key, kw in steps:
+            ops.append(resolve_op(key, **kw))
+    else:
+        if partition is not None:
+            ops.append(resolve_op("partition", **partition))
+        if chunk is not None:
+            ops.append(resolve_op("chunk", **chunk))
+        if order is not None:
+            ops.append(resolve_op("order", **order))
+        if pack is not None:
+            ops.append(resolve_op("pack", **pack))
+        if serialize is not None:
+            if isinstance(serialize, IngestOp):
+                ops.append(serialize)
+            else:
+                ops.append(resolve_op("serialize", layout=serialize,
+                                      **(serialize_args or {})))
+        if erasure is not None:
+            ops.append(resolve_op("erasure", **erasure))
+    return plan.add_statement(ops, kind="format", sid=sid, inputs=[source])
+
+
+def store(plan: IngestPlan, *sources: str,
+          locate: Union[str, IngestOp, None] = None,
+          locate_args: Optional[Dict[str, Any]] = None,
+          upload: Optional[DataStore] = None,
+          upload_args: Optional[Dict[str, Any]] = None,
+          sid: Optional[str] = None) -> str:
+    """STORE sources LOCATE USING locator UPLOAD TO target."""
+    ops: List[IngestOp] = []
+    if locate is not None:
+        if isinstance(locate, IngestOp):
+            ops.append(locate)
+        else:
+            ops.append(resolve_op("locate", scheme=locate, **(locate_args or {})))
+    if upload is not None:
+        ops.append(resolve_op("upload", store=upload, **(upload_args or {})))
+    return plan.add_statement(ops, kind="store", sid=sid, inputs=list(sources))
+
+
+def create_stage(plan: IngestPlan, using: Sequence[str],
+                 where: Optional[Dict[str, Any]] = None,
+                 name: Optional[str] = None) -> str:
+    return plan.create_stage(using, where, name)
+
+
+def chain_stage(plan: IngestPlan, to: Sequence[str], using: Sequence[str],
+                where: Optional[Dict[str, Any]] = None,
+                name: Optional[str] = None) -> str:
+    return plan.chain_stage(to, using, where, name)
+
+
+# ---------------------------------------------------------------- text parser
+_STMT_RE = re.compile(r"^\s*(?:(\w+)\s*=\s*)?(SELECT|FORMAT|STORE|CREATE\s+STAGE|"
+                      r"CHAIN\s+STAGE)\b(.*)$", re.IGNORECASE | re.DOTALL)
+
+
+class LanguageError(ValueError):
+    pass
+
+
+def _parse_size(tok: str) -> int:
+    m = re.fullmatch(r"(\d+)(kb|mb|gb)?", tok.lower())
+    if not m:
+        raise LanguageError(f"bad size literal {tok!r}")
+    mult = {"kb": 1 << 10, "mb": 1 << 20, "gb": 1 << 30, None: 1}[m.group(2)]
+    return int(m.group(1)) * mult
+
+
+def _parse_value(tok: str) -> Any:
+    tok = tok.strip()
+    for cast in (int, float):
+        try:
+            return cast(tok)
+        except ValueError:
+            pass
+    return tok.strip("'\"")
+
+
+def _parse_where(clause: str) -> Dict[str, Any]:
+    """WHERE l_op=v, l_op2=v2 (label predicates; l_ prefix optional)."""
+    preds: Dict[str, Any] = {}
+    for part in clause.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        m = re.fullmatch(r"(?:l_)?(\w+)\s*(=|==|>|<|>=|<=)\s*(.+)", part)
+        if not m:
+            raise LanguageError(f"bad predicate {part!r}")
+        key, op, val = m.group(1), m.group(2), _parse_value(m.group(3))
+        if op in ("=", "=="):
+            preds[key] = val
+        else:
+            import operator as _o
+            fn = {">": _o.gt, "<": _o.lt, ">=": _o.ge, "<=": _o.le}[op]
+            preds[key] = (lambda have, _fn=fn, _v=val:
+                          have is not None and _fn(have, _v))
+    return preds
+
+
+class LanguageSession:
+    """Parses ingestion-language text into an IngestPlan.
+
+    ``env`` provides named runtime objects referenced from the text:
+    predicates/custom operators (by name), and DataStore targets for
+    ``UPLOAD TO <name>``.
+    """
+
+    def __init__(self, plan: Optional[IngestPlan] = None,
+                 env: Optional[Dict[str, Any]] = None) -> None:
+        self.plan = plan or IngestPlan("scripted")
+        self.env = env or {}
+
+    # ---- operator spec resolution: registry key, env object, or inline args
+    def _resolve(self, key: str, **kw: Any) -> IngestOp:
+        if key in self.env:
+            obj = self.env[key]
+            if isinstance(obj, IngestOp):
+                return obj.clone()
+            return resolve_op("map", fn=obj) if callable(obj) else resolve_op(key, **kw)
+        return resolve_op(key, **kw)
+
+    def execute(self, text: str) -> IngestPlan:
+        for raw in [s for s in text.split(";") if s.strip()]:
+            self._statement(raw.strip())
+        return self.plan
+
+    # ------------------------------------------------------------- statements
+    def _statement(self, text: str) -> None:
+        m = _STMT_RE.match(text)
+        if not m:
+            raise LanguageError(f"cannot parse statement: {text!r}")
+        sid, verb, rest = m.group(1), re.sub(r"\s+", " ", m.group(2).upper()), m.group(3)
+        rest = re.sub(r"\s+", " ", rest).strip()
+        if verb == "SELECT":
+            self._select(sid, rest)
+        elif verb == "FORMAT":
+            self._format(sid, rest)
+        elif verb == "STORE":
+            self._store(sid, rest)
+        elif verb == "CREATE STAGE":
+            self._create_stage(rest)
+        elif verb == "CHAIN STAGE":
+            self._chain_stage(rest)
+
+    def _select(self, sid: Optional[str], rest: str) -> None:
+        m = re.match(r"(?P<proj>.+?)\s+FROM\s+(?P<src>\w+)"
+                     r"(?:\s+USING\s+(?P<parser>\w+))?"
+                     r"(?:\s+WHERE\s+(?P<filter>\w+))?"
+                     r"(?:\s+REPLICATE\s+BY\s+(?P<rep>\w+))?$", rest, re.IGNORECASE)
+        if not m:
+            raise LanguageError(f"bad SELECT: {rest!r}")
+        ops: List[IngestOp] = []
+        parser = m.group("parser")
+        ops.append(self._resolve(parser) if parser else resolve_op("identity_parser"))
+        if m.group("filter"):
+            f = self.env.get(m.group("filter"))
+            if f is None:
+                raise LanguageError(f"unknown filter {m.group('filter')!r}")
+            ops.append(f.clone() if isinstance(f, IngestOp)
+                       else resolve_op("filter", predicate=f))
+        proj = m.group("proj").strip()
+        if proj != "*":
+            fields = tuple(p.strip() for p in proj.split(","))
+            ops.append(resolve_op("project", fields=fields))
+        rep = m.group("rep")
+        if rep:
+            if rep.isdigit():
+                ops.append(resolve_op("replicate", copies=int(rep),
+                                      tag=f"replicate_{sid or 's'}"))
+            else:
+                ops.append(self._resolve(rep))
+        src = m.group("src")
+        inputs = [] if src.lower() == "input" else [src]
+        self.plan.add_statement(ops, kind="select", sid=sid, inputs=inputs)
+
+    _FORMAT_STEP = re.compile(
+        r"(PARTITION\s+BY|CHUNK\s+BY|ORDER\s+BY|PACK\s+BY|SERIALIZE\s+AS|ERASURE\s+BY)\s+"
+        r"(\w+)(?:\((?P<args>[^)]*)\))?", re.IGNORECASE)
+
+    def _format(self, sid: Optional[str], rest: str) -> None:
+        m = re.match(r"(\w+)\s*(.*)$", rest)
+        if not m:
+            raise LanguageError(f"bad FORMAT: {rest!r}")
+        src, clauses = m.group(1), m.group(2)
+        ops: List[IngestOp] = []
+        for sm in self._FORMAT_STEP.finditer(clauses):
+            kind = re.sub(r"\s+", " ", sm.group(1).upper())
+            arg = sm.group(2)
+            kwargs = self._parse_args(sm.group("args"))
+            if kind == "PARTITION BY":
+                if arg in self.env:
+                    ops.append(self._resolve(arg))
+                elif arg.lower() in ("hash", "range", "field", "length"):
+                    ops.append(resolve_op("partition", scheme=arg.lower(), **kwargs))
+                else:
+                    ops.append(resolve_op("partition", key=arg, **kwargs))
+            elif kind == "CHUNK BY":
+                if re.fullmatch(r"\d+(kb|mb|gb)?", arg.lower()):
+                    ops.append(resolve_op("chunk", target_bytes=_parse_size(arg), **kwargs))
+                else:
+                    ops.append(self._resolve(arg, **kwargs))
+            elif kind == "ORDER BY":
+                ops.append(resolve_op("order", key=arg, **kwargs))
+            elif kind == "PACK BY":
+                ops.append(resolve_op("pack", seq_len=int(arg), **kwargs))
+            elif kind == "SERIALIZE AS":
+                ops.append(self._resolve(arg) if arg in self.env
+                           else resolve_op("serialize", layout=arg, **kwargs))
+            elif kind == "ERASURE BY":
+                k, mm = (int(x) for x in arg.split("x")) if "x" in arg else (int(arg), 2)
+                ops.append(resolve_op("erasure", k=k, m=mm, **kwargs))
+        self.plan.add_statement(ops, kind="format", sid=sid, inputs=[src])
+
+    @staticmethod
+    def _parse_args(argstr: Optional[str]) -> Dict[str, Any]:
+        if not argstr:
+            return {}
+        out: Dict[str, Any] = {}
+        for part in argstr.split(","):
+            k, _, v = part.partition("=")
+            out[k.strip()] = _parse_value(v)
+        return out
+
+    def _store(self, sid: Optional[str], rest: str) -> None:
+        m = re.match(r"(?P<srcs>[\w\s,]+?)"
+                     r"(?:\s+LOCATE\s+USING\s+(?P<loc>\w+)(?:\((?P<locargs>[^)]*)\))?)?"
+                     r"(?:\s+UPLOAD\s+TO\s+(?P<target>\w+))?$", rest, re.IGNORECASE)
+        if not m:
+            raise LanguageError(f"bad STORE: {rest!r}")
+        srcs = [s.strip() for s in m.group("srcs").split(",")]
+        ops: List[IngestOp] = []
+        if m.group("loc"):
+            loc = m.group("loc")
+            kwargs = self._parse_args(m.group("locargs"))
+            if loc in self.env:
+                ops.append(self._resolve(loc))
+            else:
+                scheme = {"disjointlocator": "disjoint", "randomlocator": "random"}.get(
+                    loc.lower(), loc.lower())
+                ops.append(resolve_op("locate", scheme=scheme, **kwargs))
+        if m.group("target"):
+            target = self.env.get(m.group("target"))
+            if not isinstance(target, DataStore):
+                raise LanguageError(f"UPLOAD TO {m.group('target')!r}: not a DataStore in env")
+            ops.append(resolve_op("upload", store=target))
+        self.plan.add_statement(ops, kind="store", sid=sid, inputs=srcs)
+
+    def _create_stage(self, rest: str) -> None:
+        m = re.match(r"(\w+)\s+USING\s+([\w\s,]+?)(?:\s+WHERE\s+(.*))?$", rest, re.IGNORECASE)
+        if not m:
+            raise LanguageError(f"bad CREATE STAGE: {rest!r}")
+        using = [s.strip() for s in m.group(2).split(",")]
+        where = _parse_where(m.group(3)) if m.group(3) else {}
+        self.plan.create_stage(using, where, name=m.group(1))
+
+    def _chain_stage(self, rest: str) -> None:
+        m = re.match(r"(\w+)\s+TO\s+([\w\s,]+?)\s+USING\s+([\w\s,]+?)"
+                     r"(?:\s+WHERE\s+(.*))?$", rest, re.IGNORECASE)
+        if not m:
+            raise LanguageError(f"bad CHAIN STAGE: {rest!r}")
+        to = [s.strip() for s in m.group(2).split(",")]
+        using = [s.strip() for s in m.group(3).split(",")]
+        where = _parse_where(m.group(4)) if m.group(4) else {}
+        self.plan.chain_stage(to, using, where, name=m.group(1))
+
+
+def parse_ingestion_script(text: str, env: Optional[Dict[str, Any]] = None) -> IngestPlan:
+    return LanguageSession(env=env).execute(text)

@@ -1,0 +1,215 @@
+"""Ingestion operator base: the paper's iterator model (Sec. III).
+
+    IngestOp: LID -> LID'   with API
+      initialize / setInput / hasNext / next / finalize
+
+Operators are *vectorized* internally (DESIGN.md §2) — ``next()`` yields whole
+labelled items (usually CHUNK/BLOCK granularity) — but the control-plane
+contract is exactly the paper's iterator API so the runtime, optimizer, and
+fault-tolerance machinery reason about operators uniformly.
+
+Each operator also carries:
+  * ``name``        — the label key it writes (``l_<name>`` in the language),
+  * ``mode``        — SERIAL or PARALLEL (paper Sec. VI-A intra-node parallelism),
+  * ``granularity_in/out`` — used by the pipelining rule (materialize only at
+    granularity changes, paper Sec. V) and by plan validation (Sec. IV-A:
+    consecutive operators must match in granularity/schema),
+  * ``expansion``   — data-volume factor estimate used by the reordering rule
+    (push-down reducers / push-up expanders, paper Sec. V).
+"""
+from __future__ import annotations
+
+import enum
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence
+
+from .items import Granularity, IngestItem
+
+
+class OpMode(enum.Enum):
+    SERIAL = "serial"
+    PARALLEL = "parallel"
+
+
+class OperatorFailure(RuntimeError):
+    """Raised by an operator when processing fails (drives in-flight FT)."""
+
+
+class IngestOp:
+    """Base ingestion operator implementing the paper's iterator API."""
+
+    #: label key; subclasses override (e.g. "filter", "serialize")
+    name: str = "op"
+    #: granularity contract; None = any / unchanged
+    granularity_in: Optional[Granularity] = None
+    granularity_out: Optional[Granularity] = None
+    #: estimated output/input volume ratio (<1 reducer, >1 expander)
+    expansion: float = 1.0
+    #: CPU-heavy operators default to parallel mode (paper Sec. VI-A)
+    cpu_heavy: bool = False
+
+    def __init__(self, **params: Any) -> None:
+        self.params: Dict[str, Any] = params
+        self.mode: OpMode = OpMode.PARALLEL if self.cpu_heavy else OpMode.SERIAL
+        self.num_threads: int = params.pop("num_threads", 4) if "num_threads" in params else 4
+        self._inputs: List[IngestItem] = []
+        self._outputs: Iterator[IngestItem] = iter(())
+        self._pending: List[IngestItem] = []
+        self._initialized = False
+        self._finalized_ok = False  # runtime FT tracks finalize success (Sec. VI-C)
+        # test hook: fail the next N process() calls (fault injection)
+        self._fail_next: int = 0
+
+    # ------------------------------------------------------------ iterator API
+    def initialize(self) -> None:
+        """Initialize the operator for the first time."""
+        self._initialized = True
+        self._finalized_ok = False
+
+    def set_input(self, items: Sequence[IngestItem]) -> None:
+        """Assign the set of input ingest data items."""
+        if not self._initialized:
+            self.initialize()
+        self._inputs = list(items)
+        self._outputs = self._make_output_iter()
+
+    # paper naming
+    setInput = set_input
+
+    def has_next(self) -> bool:
+        if self._pending:
+            return True
+        try:
+            self._pending.append(next(self._outputs))
+            return True
+        except StopIteration:
+            return False
+
+    hasNext = has_next
+
+    def next(self) -> IngestItem:
+        if not self.has_next():
+            raise StopIteration
+        return self._pending.pop(0)
+
+    def finalize(self) -> None:
+        """Cleanup; parallel-mode threads are joined here (paper Sec. VI-A)."""
+        self._inputs = []
+        self._pending = []
+        self._outputs = iter(())
+        self._finalized_ok = True
+
+    # --------------------------------------------------------------- execution
+    def _make_output_iter(self) -> Iterator[IngestItem]:
+        if self.mode is OpMode.PARALLEL and len(self._inputs) > 1:
+            return self._parallel_iter()
+        return self._serial_iter()
+
+    def _serial_iter(self) -> Iterator[IngestItem]:
+        for item in self._inputs:
+            yield from self._process_guarded(item)
+
+    def _parallel_iter(self) -> Iterator[IngestItem]:
+        """Thread-pool processing of independent items; order preserved."""
+        with ThreadPoolExecutor(max_workers=self.num_threads) as pool:
+            futures = [pool.submit(lambda it=item: list(self._process_guarded(it)))
+                       for item in self._inputs]
+            for fut in futures:
+                yield from fut.result()
+
+    def _process_guarded(self, item: IngestItem) -> Iterable[IngestItem]:
+        if self._fail_next > 0:
+            self._fail_next -= 1
+            raise OperatorFailure(f"{self.name}: injected failure")
+        return self.process(item)
+
+    # ----------------------------------------------------------- to implement
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        """Transform one labelled ingest data item into zero or more outputs."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------- misc
+    def run(self, items: Sequence[IngestItem]) -> List[IngestItem]:
+        """Convenience: drive the full iterator protocol over ``items``."""
+        self.initialize()
+        self.set_input(items)
+        out: List[IngestItem] = []
+        while self.has_next():
+            out.append(self.next())
+        self.finalize()
+        return out
+
+    def clone(self) -> "IngestOp":
+        """Fresh instance with the same parameters (operators are re-instantiable
+        from their params — the catalog stores params, not instances; Sec. VII)."""
+        op = type(self)(**dict(self.params))
+        op.mode = self.mode
+        return op
+
+    def signature(self) -> Dict[str, Any]:
+        return {"type": type(self).__name__, "name": self.name,
+                "params": {k: repr(v) for k, v in self.params.items()},
+                "mode": self.mode.value}
+
+    def __repr__(self) -> str:
+        ps = ", ".join(f"{k}={v!r}" for k, v in self.params.items())
+        return f"{type(self).__name__}({ps})"
+
+
+class PassThroughOp(IngestOp):
+    """The paper's *dummy pass-through operator* (Sec. VI-C): substituted for an
+    operator that failed repeatedly; labels every item with -1 to mark the failure."""
+
+    name = "dummy"
+
+    def __init__(self, replaces: str = "op", **kw: Any) -> None:
+        super().__init__(replaces=replaces, **kw)
+        self.replaces = replaces
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        yield item.with_label(self.replaces, -1)
+
+
+class MaterializeOp(IngestOp):
+    """Materialization barrier inserted between operators (paper Sec. V).
+
+    By default every operator boundary materializes; the pipelining rule removes
+    barriers between same-granularity operators.  Each surviving barrier is also
+    an in-flight checkpoint (Sec. VI-C1): the runtime snapshots items here.
+    """
+
+    name = "materialize"
+
+    def __init__(self, **kw: Any) -> None:
+        super().__init__(**kw)
+        self.buffer: List[IngestItem] = []
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        self.buffer.append(item)
+        yield item
+
+
+# ----------------------------------------------------------------------------
+# Operator registry: the language front-end resolves names (e.g. SERIALIZE AS
+# "columnar") through this registry; users register custom operators the same
+# way (paper Sec. IV-A: parser/filter/projection/replicator may be custom ops).
+# ----------------------------------------------------------------------------
+_REGISTRY: Dict[str, type] = {}
+
+
+def register_op(key: str):
+    def deco(cls: type) -> type:
+        _REGISTRY[key] = cls
+        return cls
+    return deco
+
+
+def resolve_op(__op_key: str, **params: Any) -> IngestOp:
+    if __op_key not in _REGISTRY:
+        raise KeyError(f"unknown ingestion operator {__op_key!r}; registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[__op_key](**params)
+
+
+def registered_ops() -> List[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,189 @@
+"""SELECT-side ingestion operators: parser / filter / projection / replicator.
+
+Paper Sec. IV-A: ``SELECT projection FROM LID USING parser WHERE filter
+REPLICATE BY replicator`` compiles to the chain
+``LID -> parser -> filter -> projection -> replicator``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from .items import Columns, Granularity, IngestItem, num_rows, take_rows
+from .operators import IngestOp, register_op
+
+
+# --------------------------------------------------------------------- parsers
+@register_op("parser")
+class ParserOp(IngestOp):
+    """FILE -> CHUNK: parse raw content into columnar record batches.
+
+    ``schema`` maps field name -> numpy dtype; ``sep`` splits fields within a
+    line (the TPC-H ``|`` convention).  ``chunk_rows`` bounds output chunk size
+    so downstream operators see bounded working sets.  The parser labels each
+    chunk with its index — the paper's example uses the parser label (e.g. a
+    timestamp) for stage predicates like ``l_parser > now-1``.
+    """
+
+    name = "parser"
+    granularity_in = Granularity.FILE
+    granularity_out = Granularity.CHUNK
+    cpu_heavy = True
+
+    def __init__(self, schema: Optional[Dict[str, str]] = None, sep: str = "|",
+                 chunk_rows: int = 65536, label_fn: Optional[Callable[[Columns], Any]] = None,
+                 **kw: Any) -> None:
+        super().__init__(schema=schema, sep=sep, chunk_rows=chunk_rows, label_fn=label_fn, **kw)
+        self.schema = schema
+        self.sep = sep
+        self.chunk_rows = chunk_rows
+        self.label_fn = label_fn
+        self._counter = 0
+
+    def _parse_text(self, text: str) -> Columns:
+        lines = [l for l in text.splitlines() if l]
+        if self.schema is None:
+            return {"line": np.array(lines, dtype=object)}
+        fields = list(self.schema)
+        rows = [l.split(self.sep) for l in lines]
+        cols: Columns = {}
+        for i, f in enumerate(fields):
+            dt = np.dtype(self.schema[f])
+            vals = [r[i] for r in rows]
+            if dt.kind in "iuf":
+                cols[f] = np.array(vals, dtype=dt)
+            else:
+                cols[f] = np.array(vals, dtype=dt)
+        return cols
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        if isinstance(item.data, dict):
+            cols = item.data  # already columnar (in-memory source)
+        else:
+            text = item.data.decode() if isinstance(item.data, (bytes, bytearray)) else str(item.data)
+            cols = self._parse_text(text)
+        n = num_rows(cols)
+        for start in range(0, max(n, 1), self.chunk_rows):
+            part = take_rows(cols, np.arange(start, min(start + self.chunk_rows, n)))
+            label = self.label_fn(part) if self.label_fn else self._counter
+            self._counter += 1
+            yield IngestItem(part, Granularity.CHUNK, item.labels, dict(item.meta)).with_label(
+                self.name, label)
+
+
+@register_op("identity_parser")
+class IdentityParserOp(ParserOp):
+    """Pass columnar payloads through unchanged (in-memory ingest sources)."""
+
+    name = "parser"
+
+    def __init__(self, **kw: Any) -> None:
+        kw.setdefault("schema", None)
+        super().__init__(**kw)
+
+
+# --------------------------------------------------------------------- filters
+@register_op("filter")
+class FilterOp(IngestOp):
+    """CHUNK -> CHUNK row filter. ``predicate`` is a vectorized Columns -> bool mask.
+
+    A data *reducer* (expansion < 1): the reordering rule pushes it down.
+    """
+
+    name = "filter"
+    granularity_in = Granularity.CHUNK
+    granularity_out = Granularity.CHUNK
+    expansion = 0.5
+
+    def __init__(self, predicate: Callable[[Columns], np.ndarray], fields: Sequence[str] = (),
+                 selectivity: float = 0.5, **kw: Any) -> None:
+        super().__init__(predicate=predicate, fields=tuple(fields), selectivity=selectivity, **kw)
+        if isinstance(predicate, tuple):
+            # layouts-style (field, op, value) selection triple
+            from ..layouts.blocks import _OPS
+            f, o, v = predicate
+            fields = tuple(fields) or (f,)
+            predicate = lambda cols: _OPS[o](cols[f], v)
+        self.predicate = predicate
+        self.fields = tuple(fields)  # fields the predicate reads (for reorder legality)
+        self.expansion = selectivity
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        cols = item.data
+        mask = np.asarray(self.predicate(cols), dtype=bool)
+        kept = take_rows(cols, np.nonzero(mask)[0])
+        yield IngestItem(kept, item.granularity, item.labels, dict(item.meta)).with_label(
+            self.name, int(mask.sum()))
+
+
+@register_op("project")
+class ProjectOp(IngestOp):
+    """CHUNK -> CHUNK column projection (a reducer along the field axis)."""
+
+    name = "project"
+    granularity_in = Granularity.CHUNK
+    granularity_out = Granularity.CHUNK
+    expansion = 0.7
+
+    def __init__(self, fields: Sequence[str], **kw: Any) -> None:
+        super().__init__(fields=tuple(fields), **kw)
+        self.fields = tuple(fields)
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        cols = {k: v for k, v in item.data.items() if k in self.fields}
+        yield IngestItem(cols, item.granularity, item.labels, dict(item.meta)).with_label(
+            self.name, len(cols))
+
+
+@register_op("map")
+class MapOp(IngestOp):
+    """CHUNK -> CHUNK arbitrary vectorized transform (custom ingest operator
+    hook, e.g. ML feature projection per the paper's example)."""
+
+    name = "map"
+    granularity_in = Granularity.CHUNK
+    granularity_out = Granularity.CHUNK
+
+    def __init__(self, fn: Callable[[Columns], Columns], label: Any = 1, **kw: Any) -> None:
+        super().__init__(fn=fn, label=label, **kw)
+        self.fn = fn
+        self.label = label
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        yield IngestItem(self.fn(item.data), item.granularity, item.labels,
+                         dict(item.meta)).with_label(self.name, self.label)
+
+
+# ------------------------------------------------------------------ replicator
+@register_op("replicate")
+class ReplicateOp(IngestOp):
+    """Emit ``copies`` labelled replicas of each item (a data *expander*:
+    the reordering rule pushes it up / as late as possible).
+
+    Labels are 1..copies — the paper's stage predicates (``l_replicate1=2``)
+    route each replica to a different sub-plan.  ``probability`` < 1 gives the
+    probabilistic replication used for Bernoulli sampling.
+    """
+
+    name = "replicate"
+    expansion = 3.0
+
+    def __init__(self, copies: int = 3, probability: float = 1.0, seed: int = 0,
+                 tag: Optional[str] = None, **kw: Any) -> None:
+        super().__init__(copies=copies, probability=probability, seed=seed, tag=tag, **kw)
+        self.copies = copies
+        self.probability = probability
+        self.tag = tag  # distinguishes replicate1 / replicate2 in nested plans
+        self.expansion = float(copies) * probability
+        self._rng = np.random.default_rng(seed)
+
+    @property
+    def label_key(self) -> str:
+        return self.tag or self.name
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        for i in range(1, self.copies + 1):
+            if self.probability < 1.0 and self._rng.random() > self.probability:
+                continue
+            yield item.with_label(self.label_key, i)

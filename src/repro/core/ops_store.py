@@ -1,0 +1,207 @@
+"""STORE-side ingestion operators: locate / upload (+ erasure-coding store ops).
+
+Paper Sec. IV-A: ``STORE s LOCATE USING locator UPLOAD TO target``.  The
+locator maps items to *location IDs* (logical placement, Sec. VI-B); upload
+binds to the registered storage target and publishes physical blocks with
+lineage-encoded names.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from ..erasure import ReedSolomon
+from ..layouts import SerializedBlock, serialize_block
+from .items import Granularity, IngestItem
+from .operators import IngestOp, register_op
+from .store import DataStore
+
+
+# --------------------------------------------------------------------- locate
+@register_op("locate")
+class LocateOp(IngestOp):
+    """Assign a logical location ID to each item (paper Sec. VI-B Placement).
+
+    Schemes:
+      random    — uniform random location
+      roundrobin— cycle locations in order
+      disjoint  — replicas of the same logical item get different locations
+                  (anti-location; the paper's disjointLocator)
+      content   — location = value of an upstream label (content-based placement,
+                  e.g. the range-partition id), ``by=<label op>``
+      colocate  — same as content but hashing the label value into num_locations
+                  (co-location of equal keys across datasets)
+    """
+
+    name = "locate"
+
+    def __init__(self, scheme: str = "roundrobin", num_locations: int = 4,
+                 by: Optional[str] = None, seed: int = 0, **kw: Any) -> None:
+        super().__init__(scheme=scheme, num_locations=num_locations, by=by, seed=seed, **kw)
+        self.scheme, self.num_locations, self.by = scheme, num_locations, by
+        self._rng = np.random.default_rng(seed)
+        self._rr = itertools.count()
+        self._replica_seen: Dict[str, int] = {}
+
+    def _loc(self, item: IngestItem) -> int:
+        if self.scheme == "random":
+            return int(self._rng.integers(self.num_locations))
+        if self.scheme == "roundrobin":
+            return next(self._rr) % self.num_locations
+        if self.scheme == "disjoint":
+            key = DataStore._logical_id(item)
+            idx = self._replica_seen.get(key, 0)
+            self._replica_seen[key] = idx + 1
+            return idx % self.num_locations
+        if self.scheme == "content":
+            return int(item.label_value(self.by, 0)) % self.num_locations
+        if self.scheme == "colocate":
+            return hash(item.label_value(self.by, 0)) % self.num_locations
+        raise ValueError(f"unknown locator scheme {self.scheme!r}")
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        yield item.with_label(self.name, self._loc(item))
+
+
+# --------------------------------------------------------------------- erasure
+@register_op("erasure")
+class ErasureOp(IngestOp):
+    """BLOCK -> BLOCK* Reed-Solomon striping (paper Sec. II-D / VI-C2).
+
+    Collects ``k`` data blocks into a stripe and emits them unchanged plus
+    ``m`` parity blocks (labelled ``erasure=p<i>``); stripe membership is
+    recorded in item.meta for the upload operator.  Different FORMAT stages
+    can use different (k, m) — the paper's *flexible erasure coding*.
+    """
+
+    name = "erasure"
+    granularity_in = Granularity.BLOCK
+    granularity_out = Granularity.BLOCK
+    # NOT parallel-mode despite being CPU-heavy: stripe accumulation is
+    # stateful (self._stripe) — thread-pool processing interleaved items
+    # from different stripes (found by benchmarks/bench_recovery)
+    cpu_heavy = False
+    expansion = 1.3
+
+    def __init__(self, k: int = 10, m: int = 3, use_pallas: bool = False, **kw: Any) -> None:
+        super().__init__(k=k, m=m, use_pallas=use_pallas, **kw)
+        import uuid
+        self.k, self.m = k, m
+        self.rs = ReedSolomon(k, m, use_pallas=use_pallas)
+        self._stripe: List[IngestItem] = []
+        self._stripe_idx = 0
+        # unique per operator instance: every node clones its own instance,
+        # and stripe ids must not collide across nodes in the shared manifest
+        self._nonce = uuid.uuid4().hex[:8]
+        self.expansion = (k + m) / k
+
+    def _payload(self, item: IngestItem) -> bytes:
+        d = item.data
+        if isinstance(d, SerializedBlock):
+            return d.tobytes()
+        if isinstance(d, (bytes, bytearray)):
+            return bytes(d)
+        if isinstance(d, np.ndarray):
+            return d.tobytes()
+        raise TypeError(f"erasure needs BLOCK payloads, got {type(d)}")
+
+    def _emit_stripe(self) -> Iterable[IngestItem]:
+        stripe_id = f"stripe-{self._nonce}-{self._stripe_idx}"
+        self._stripe_idx += 1
+        payloads = [self._payload(it) for it in self._stripe]
+        parity, pad_len = self.rs.encode_payloads(payloads)
+        for pos, it in enumerate(self._stripe):
+            out = it.with_label(self.name, f"d{pos}")
+            out.meta.update(stripe_id=stripe_id, stripe_pos=pos, is_parity=False,
+                            stripe_k=self.k, stripe_m=self.m, stripe_pad=pad_len)
+            yield out
+        for j in range(self.m):
+            pit = IngestItem(parity[j].tobytes(), Granularity.BLOCK,
+                             self._stripe[0].labels, {})
+            pit = pit.with_label(self.name, f"p{j}")
+            pit.meta.update(stripe_id=stripe_id, stripe_pos=self.k + j, is_parity=True,
+                            stripe_k=self.k, stripe_m=self.m, stripe_pad=pad_len)
+            yield pit
+        self._stripe = []
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        self._stripe.append(item)
+        if len(self._stripe) == self.k:
+            yield from self._emit_stripe()
+
+    def finalize(self) -> None:
+        # NOTE: trailing partial stripe is encoded with the same (k, m) by
+        # zero-padding virtual blocks; handled in set_input drain below.
+        super().finalize()
+
+    def set_input(self, items: Sequence[IngestItem]) -> None:  # drain partial stripe
+        super().set_input(items)
+        base = self._outputs
+
+        def drained():
+            yield from base
+            if self._stripe:
+                yield from self._emit_stripe()
+
+        self._outputs = drained()
+
+
+# ---------------------------------------------------------------------- upload
+@register_op("upload")
+class UploadOp(IngestOp):
+    """BLOCK -> BLOCK publish into the DataStore target (paper Sec. VIII-A).
+
+    * maps each physical partition/block to a store file named by its lineage,
+    * honours the replication already present in the plan (replica labels),
+    * maps location IDs to nodes (user map or round-robin over the slaves list),
+    * records stripe metadata for erasure-coded blocks.
+    """
+
+    name = "upload"
+    granularity_in = Granularity.BLOCK
+    granularity_out = Granularity.BLOCK
+
+    def __init__(self, store: Optional[DataStore] = None,
+                 location_map: Optional[Dict[int, str]] = None,
+                 serialize_default: str = "columnar", **kw: Any) -> None:
+        super().__init__(store=store, location_map=location_map,
+                         serialize_default=serialize_default, **kw)
+        self.store = store
+        self.location_map = location_map
+        self.serialize_default = serialize_default
+        self._replica_counter: Dict[str, int] = {}
+
+    def _node_for(self, item: IngestItem) -> str:
+        nodes = self.store.nodes
+        loc = item.label_value("locate")
+        if loc is None:
+            loc = abs(hash(item.lineage_name()))
+        if self.location_map and loc in self.location_map:
+            return self.location_map[loc]
+        return nodes[int(loc) % len(nodes)]  # round-robin over slaves (Sec. VI-B)
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        if self.store is None:
+            raise RuntimeError("UploadOp has no bound DataStore target")
+        if isinstance(item.data, dict):  # un-serialized chunk: apply default layout
+            item = IngestItem(serialize_block(item.data, self.serialize_default),
+                              Granularity.BLOCK, item.labels, dict(item.meta))
+            item = item.with_label("serialize", self.serialize_default)
+        logical = DataStore._logical_id(item)
+        ridx = self._replica_counter.get(logical, 0)
+        self._replica_counter[logical] = ridx + 1
+        entry = self.store.put_block(
+            item, self._node_for(item),
+            logical_id=logical, replica_index=ridx,
+            stripe_id=item.meta.get("stripe_id", ""),
+            stripe_pos=item.meta.get("stripe_pos", -1),
+            is_parity=item.meta.get("is_parity", False),
+        )
+        yield item.with_label(self.name, entry.node)
+
+    def finalize(self) -> None:
+        if self.store is not None:
+            self.store.flush_manifest()
+        super().finalize()

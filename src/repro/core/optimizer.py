@@ -1,0 +1,256 @@
+"""The rule-based ingestion optimizer (paper Sec. V).
+
+Rules operate on *ingestion operator expressions* via ``check``/``apply`` and
+are fired over a preorder traversal of each stage's chain (larger subtrees
+first), iterating the ordered rule set to a fixpoint.
+
+Built-in rules (paper Sec. V + Sec. VI-A):
+  ReorderRule        — push data-reducing operators down, data-expanding up
+  FilterFusionRule   — fuse adjacent filters (AND of predicates)
+  PipelineRule       — merge materialization barriers between same-granularity
+                       operators into pipelined blocks
+  CheckpointRule     — force extra materialization every N operators (user-
+                       controllable recovery-time knob, Sec. VI-C1)
+  ParallelModeRule   — flip CPU-heavy operators to parallel mode
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .items import Granularity
+from .operators import IngestOp, OpMode
+from .ops_select import FilterOp, ProjectOp, ReplicateOp
+from .plan import StagePlan
+
+
+@dataclass
+class IngestOpExpr:
+    """Root operator + descendant chain (recursively), per the paper's Sec. V."""
+
+    op: IngestOp
+    child: Optional["IngestOpExpr"] = None
+
+    @classmethod
+    def from_chain(cls, ops: Sequence[IngestOp]) -> Optional["IngestOpExpr"]:
+        expr: Optional[IngestOpExpr] = None
+        for op in ops:  # first op is the deepest descendant
+            expr = cls(op, expr) if expr is None else cls(op, expr)
+        # build so that root = last op, child chain = earlier ops
+        expr = None
+        for op in ops:
+            expr = cls(op, expr)
+        return expr
+
+    def to_chain(self) -> List[IngestOp]:
+        ops: List[IngestOp] = []
+        node: Optional[IngestOpExpr] = self
+        while node is not None:
+            ops.append(node.op)
+            node = node.child
+        return list(reversed(ops))
+
+    def preorder(self) -> List["IngestOpExpr"]:
+        """Root-first traversal (largest subtree first, per the paper)."""
+        out: List[IngestOpExpr] = []
+        node: Optional[IngestOpExpr] = self
+        while node is not None:
+            out.append(node)
+            node = node.child
+        return out
+
+
+class Rule:
+    """check: IngestOpExpr -> bool ;  apply: IngestOpExpr -> IngestOpExpr'."""
+
+    name = "rule"
+
+    def check(self, expr: IngestOpExpr) -> bool:
+        raise NotImplementedError
+
+    def apply(self, expr: IngestOpExpr) -> IngestOpExpr:
+        raise NotImplementedError
+
+
+# ------------------------------------------------------------------- reordering
+def _commutes(earlier: IngestOp, later: IngestOp) -> bool:
+    """Is it legal to swap ``later`` in front of ``earlier``?
+
+    Conservative legality: both CHUNK->CHUNK, and the op moving earlier must
+    not read fields the other one creates/destroys.  A filter may move before
+    a projection only if the projection keeps every field the filter reads.
+    """
+    chunky = (Granularity.CHUNK, None)
+    if earlier.granularity_in not in chunky or earlier.granularity_out not in chunky:
+        return False
+    if later.granularity_in not in chunky or later.granularity_out not in chunky:
+        return False
+    if isinstance(earlier, ProjectOp) and isinstance(later, FilterOp):
+        return set(later.fields) <= set(earlier.fields) and bool(later.fields)
+    if isinstance(earlier, ReplicateOp):
+        return True  # anything may move before a replicate (dedups work)
+    if isinstance(later, ReplicateOp):
+        return False  # never move replicate earlier
+    if isinstance(earlier, FilterOp) and isinstance(later, FilterOp):
+        return True  # filters commute
+    return False
+
+
+class ReorderRule(Rule):
+    """Adjacent-pair swap: if the later op reduces volume more than the earlier
+    one (expansion ratio), and the swap is legal, move it earlier.  Iterated to
+    fixpoint this bubbles reducers down and expanders (replicate) up — the
+    paper's replicate-as-late-as-possible instance falls out of the expansion
+    ordering."""
+
+    name = "reorder"
+
+    def check(self, expr: IngestOpExpr) -> bool:
+        if expr.child is None:
+            return False
+        earlier, later = expr.child.op, expr.op
+        return _commutes(earlier, later) and later.expansion < earlier.expansion
+
+    def apply(self, expr: IngestOpExpr) -> IngestOpExpr:
+        child = expr.child
+        assert child is not None
+        return IngestOpExpr(child.op, IngestOpExpr(expr.op, child.child))
+
+
+class FilterFusionRule(Rule):
+    """filter(p2) after filter(p1)  ->  filter(p1 AND p2): one pass, one label."""
+
+    name = "filter_fusion"
+
+    def check(self, expr: IngestOpExpr) -> bool:
+        return (expr.child is not None and isinstance(expr.op, FilterOp)
+                and isinstance(expr.child.op, FilterOp))
+
+    def apply(self, expr: IngestOpExpr) -> IngestOpExpr:
+        f2, f1 = expr.op, expr.child.op
+        p1, p2 = f1.predicate, f2.predicate
+        fused = FilterOp(
+            predicate=lambda cols, _p1=p1, _p2=p2: np.logical_and(
+                np.asarray(_p1(cols), bool), np.asarray(_p2(cols), bool)),
+            fields=tuple(set(f1.fields) | set(f2.fields)),
+            selectivity=f1.expansion * f2.expansion,
+        )
+        return IngestOpExpr(fused, expr.child.child)
+
+
+class ParallelModeRule(Rule):
+    """Turn on parallel mode for CPU-heavy operators (paper Sec. VI-A).  Users
+    add custom instances of this rule to control serial/parallel per operator."""
+
+    name = "parallel_mode"
+
+    def __init__(self, predicate: Optional[Callable[[IngestOp], bool]] = None,
+                 mode: OpMode = OpMode.PARALLEL) -> None:
+        self.predicate = predicate or (lambda op: op.cpu_heavy)
+        self.mode = mode
+
+    def check(self, expr: IngestOpExpr) -> bool:
+        return self.predicate(expr.op) and expr.op.mode is not self.mode
+
+    def apply(self, expr: IngestOpExpr) -> IngestOpExpr:
+        expr.op.mode = self.mode
+        return expr
+
+
+# ---------------------------------------------------------------- pipelining
+def compute_pipeline_blocks(ops: Sequence[IngestOp],
+                            force_every: Optional[int] = None) -> List[List[int]]:
+    """Merge consecutive operators into pipelined blocks; materialize only when
+    item granularity changes (detected from the operators' declared types —
+    the paper detects it from the data types).  ``force_every`` caps block
+    length to trade throughput for recovery time (Sec. V / VI-C1)."""
+    blocks: List[List[int]] = []
+    cur: List[int] = []
+    cur_gran: Optional[Granularity] = None
+    for i, op in enumerate(ops):
+        gin = op.granularity_in
+        gout = op.granularity_out
+        changes = gin is not None and gout is not None and gin != gout
+        if cur and ((gin is not None and cur_gran is not None and gin != cur_gran)):
+            blocks.append(cur)
+            cur = []
+        cur.append(i)
+        if gout is not None:
+            cur_gran = gout
+        if changes or (force_every and len(cur) >= force_every):
+            blocks.append(cur)
+            cur = []
+    if cur:
+        blocks.append(cur)
+    return blocks
+
+
+@dataclass
+class PipelineRule:
+    """Not an expression rule: rewrites a StagePlan's materialization layout."""
+
+    force_every: Optional[int] = None
+    name: str = "pipeline"
+
+    def rewrite(self, sp: StagePlan) -> StagePlan:
+        sp.pipeline_blocks = compute_pipeline_blocks(sp.ops, self.force_every)
+        return sp
+
+
+# ------------------------------------------------------------------- optimizer
+class IngestionOptimizer:
+    """Ordered rule set; preorder traversal; fire until fixpoint (paper Sec. V)."""
+
+    MAX_PASSES = 32
+
+    def __init__(self, rules: Optional[Sequence[Rule]] = None,
+                 pipeline: Optional[PipelineRule] = None) -> None:
+        self.rules: List[Rule] = list(rules) if rules is not None else [
+            FilterFusionRule(), ReorderRule(), ParallelModeRule()]
+        self.pipeline = pipeline or PipelineRule()
+
+    def add_rule(self, rule: Rule, front: bool = False) -> None:
+        """Extensibility hook (paper: "users could provide additional rules")."""
+        self.rules.insert(0, rule) if front else self.rules.append(rule)
+
+    def optimize_chain(self, ops: Sequence[IngestOp]) -> List[IngestOp]:
+        expr = IngestOpExpr.from_chain(ops)
+        if expr is None:
+            return []
+        for _ in range(self.MAX_PASSES):
+            fired = False
+            for rule in self.rules:           # ordered rule set
+                node = expr
+                prev: Optional[IngestOpExpr] = None
+                while node is not None:       # preorder: root (largest subtree) first
+                    if rule.check(node):
+                        new = rule.apply(node)
+                        if prev is None:
+                            expr = new
+                        else:
+                            prev.child = new
+                        fired = True
+                        node = new
+                    prev, node = node, node.child
+            if not fired:
+                break
+        return expr.to_chain()
+
+    def optimize(self, stage_plans: Sequence[StagePlan]) -> List[StagePlan]:
+        out: List[StagePlan] = []
+        for sp in stage_plans:
+            ops = self.optimize_chain(sp.ops)
+            nsp = StagePlan(sp.name, ops, sp.upstream, sp.predicates)
+            out.append(self.pipeline.rewrite(nsp))
+        return out
+
+    def explain(self, before: Sequence[StagePlan], after: Sequence[StagePlan]) -> str:
+        lines = []
+        for b, a in zip(before, after):
+            lines.append(f"stage {b.name}:")
+            lines.append("  before: " + " -> ".join(type(o).__name__ for o in b.ops))
+            lines.append("  after : " + " -> ".join(type(o).__name__ for o in a.ops))
+            lines.append(f"  pipeline blocks: {a.pipeline_blocks}")
+        return "\n".join(lines)

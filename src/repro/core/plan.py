@@ -1,0 +1,196 @@
+"""Ingestion plans: statements, dataflow stages, and the compiled stage DAG.
+
+Paper Sec. IV: declarative statements (SELECT/FORMAT/STORE) build operator
+chains; CREATE STAGE / CHAIN STAGE compose them into an operator DAG with
+label-predicate routing ("ingestion data flow").  Sec. V: the optimizer
+rewrites the DAG; Sec. VI: the runtime executes it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .items import IngestItem, matches
+from .operators import IngestOp, MaterializeOp
+
+
+@dataclass
+class Statement:
+    """A named linear chain of ingestion operators (one s<i> in the paper)."""
+
+    sid: str
+    ops: List[IngestOp] = field(default_factory=list)
+    kind: str = "select"  # select | format | store
+    inputs: List[str] = field(default_factory=list)  # upstream statement ids
+
+    def __repr__(self) -> str:
+        return f"Statement({self.sid}: {' -> '.join(type(o).__name__ for o in self.ops)})"
+
+
+@dataclass
+class Stage:
+    """A dataflow stage: a set of statements applied to the label-filtered
+    subset of upstream items (paper Sec. IV-B)."""
+
+    name: str
+    statements: List[str]                      # statement ids, applied in order
+    upstream: List[str] = field(default_factory=list)  # stage names (CHAIN ... TO)
+    predicates: Dict[str, Any] = field(default_factory=dict)  # l_op -> value/callable
+
+    def __repr__(self) -> str:
+        ups = ",".join(self.upstream) or "<source>"
+        return f"Stage({self.name} <- {ups} using {self.statements} where {self.predicates})"
+
+
+@dataclass
+class StagePlan:
+    """A stage with its concrete, optimizer-rewritten operator chain.
+
+    ``pipeline_blocks`` partitions the chain into pipelined groups; a
+    materialization barrier (= in-flight checkpoint) sits after each block
+    (paper Sec. V pipelining, Sec. VI-C1 recovery).
+    """
+
+    name: str
+    ops: List[IngestOp]
+    upstream: List[str]
+    predicates: Dict[str, Any]
+    pipeline_blocks: List[List[int]] = field(default_factory=list)
+
+    def block_of(self, op_idx: int) -> int:
+        for b, idxs in enumerate(self.pipeline_blocks):
+            if op_idx in idxs:
+                return b
+        return 0
+
+
+class IngestPlan:
+    """The full ingestion plan: statements + stages, compiled to a stage DAG."""
+
+    def __init__(self, name: str = "plan") -> None:
+        self.name = name
+        self.statements: Dict[str, Statement] = {}
+        self.stages: Dict[str, Stage] = {}
+        self._auto_sid = 0
+        self._auto_stage = 0
+
+    # ------------------------------------------------------------------ build
+    def add_statement(self, ops: Sequence[IngestOp], kind: str = "select",
+                      sid: Optional[str] = None, inputs: Sequence[str] = ()) -> str:
+        if sid is None:
+            self._auto_sid += 1
+            sid = f"s{self._auto_sid}"
+        self.statements[sid] = Statement(sid, list(ops), kind, list(inputs))
+        return sid
+
+    def create_stage(self, using: Sequence[str], where: Optional[Dict[str, Any]] = None,
+                     name: Optional[str] = None) -> str:
+        """CREATE STAGE name USING s1..sm WHERE l_op=v..."""
+        return self._stage(name, list(using), [], where or {})
+
+    def chain_stage(self, to: Sequence[str], using: Sequence[str],
+                    where: Optional[Dict[str, Any]] = None,
+                    name: Optional[str] = None) -> str:
+        """CHAIN STAGE name TO a1..ak USING s1..sm WHERE ... (union-all of inputs)."""
+        return self._stage(name, list(using), list(to), where or {})
+
+    def _stage(self, name: Optional[str], using: List[str], to: List[str],
+               where: Dict[str, Any]) -> str:
+        if name is None:
+            self._auto_stage += 1
+            name = f"stage{self._auto_stage}"
+        for sid in using:
+            if sid not in self.statements:
+                raise KeyError(f"stage {name}: unknown statement {sid!r}")
+        for up in to:
+            if up not in self.stages:
+                raise KeyError(f"stage {name}: unknown upstream stage {up!r}")
+        self.stages[name] = Stage(name, using, to, where)
+        return name
+
+    # ---------------------------------------------------------------- compile
+    def compile(self) -> List[StagePlan]:
+        """Flatten statements into per-stage operator chains, in topological
+        order, with default materialization barriers marked (one block per op
+        until the pipelining rule merges them)."""
+        if not self.stages:
+            # implicit single stage using all statements in insertion order
+            self.create_stage(list(self.statements), name="main")
+        order = self._topo_order()
+        plans: List[StagePlan] = []
+        for name in order:
+            st = self.stages[name]
+            ops: List[IngestOp] = []
+            for sid in st.statements:
+                ops.extend(self.statements[sid].ops)
+            self._validate_chain(name, ops)
+            blocks = [[i] for i in range(len(ops))]  # default: materialize everywhere
+            plans.append(StagePlan(name, ops, list(st.upstream), dict(st.predicates),
+                                   blocks))
+        return plans
+
+    @staticmethod
+    def _validate_chain(stage: str, ops: Sequence[IngestOp]) -> None:
+        """Paper Sec. IV-A: consecutive operators' ingest-data-item
+        granularities must match (None = polymorphic)."""
+        cur = None
+        for op in ops:
+            gin = op.granularity_in
+            if gin is not None and cur is not None and gin != cur:
+                raise ValueError(
+                    f"stage {stage!r}: {type(op).__name__} consumes "
+                    f"{gin.name} items but upstream produces {cur.name}")
+            if op.granularity_out is not None:
+                cur = op.granularity_out
+            elif gin is not None:
+                cur = gin
+
+    def _topo_order(self) -> List[str]:
+        seen: Dict[str, int] = {}
+        order: List[str] = []
+
+        def visit(n: str) -> None:
+            state = seen.get(n, 0)
+            if state == 1:
+                raise ValueError(f"cycle through stage {n!r}")
+            if state == 2:
+                return
+            seen[n] = 1
+            for up in self.stages[n].upstream:
+                visit(up)
+            seen[n] = 2
+            order.append(n)
+
+        for n in self.stages:
+            visit(n)
+        return order
+
+    # ------------------------------------------------------------------ intro
+    def describe(self) -> str:
+        lines = [f"IngestPlan {self.name!r}"]
+        for sid, s in self.statements.items():
+            lines.append(f"  {s!r}")
+        for st in self.stages.values():
+            lines.append(f"  {st!r}")
+        return "\n".join(lines)
+
+    def signature(self) -> Dict[str, Any]:
+        """Serializable description (catalog stores params, not instances)."""
+        return {
+            "name": self.name,
+            "statements": {
+                sid: {"kind": s.kind, "inputs": s.inputs,
+                      "ops": [o.signature() for o in s.ops]}
+                for sid, s in self.statements.items()
+            },
+            "stages": {
+                st.name: {"using": st.statements, "to": st.upstream,
+                          "where": {k: repr(v) for k, v in st.predicates.items()}}
+                for st in self.stages.values()
+            },
+        }
+
+
+def route_items(items: Iterable[IngestItem], predicates: Dict[str, Any]) -> List[IngestItem]:
+    """Label-predicate routing into a stage (paper Sec. IV-B WHERE clause)."""
+    return [it for it in items if matches(it, predicates)]

@@ -1,0 +1,319 @@
+"""The INGESTBASE runtime engine (paper Sec. VI).
+
+* **Inter-node parallelism** — the client ships the *optimized* plan to every
+  node in the slaves list and runs it over node-local shards ("ship the plan
+  to the data").  Nodes here are worker threads over per-node directories; the
+  remote-shell seam is ``launch_remote`` (DESIGN.md §2).
+* **Intra-node parallelism** — parallel-mode operators fan out over a thread
+  pool (see operators.IngestOp._parallel_iter).
+* **Work stealing** — when sources are given as a shared list, nodes pull
+  shards from a global queue, so stragglers simply take fewer shards.
+* **Distributed I/O** — shuffle via the store's DFS directory (local groups ->
+  DFS -> group-directories read back per node), placement via location IDs,
+  replication decoupled from placement.
+* **In-flight fault tolerance** — pipeline blocks are checkpoints: a failing
+  operator retries its block from the previous materialization; after
+  ``max_retries`` failures it is replaced by a dummy pass-through operator
+  labelling items with -1.  Node failures reassign shards + location IDs to
+  the next node in the slaves order.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import queue
+import threading
+import time
+from collections import defaultdict
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+from .items import IngestItem
+from .operators import IngestOp, OperatorFailure, PassThroughOp
+from .optimizer import IngestionOptimizer
+from .plan import IngestPlan, StagePlan, route_items
+from .store import DataStore
+
+
+class NodeFailure(RuntimeError):
+    """Simulated machine failure during ingestion."""
+
+
+@dataclass
+class RunReport:
+    """What the engine observed while executing a plan."""
+
+    stage_items: Dict[str, int] = field(default_factory=dict)
+    op_failures: Dict[str, int] = field(default_factory=dict)
+    dummy_substitutions: List[str] = field(default_factory=list)
+    node_failures: List[str] = field(default_factory=list)
+    reassigned_shards: int = 0
+    shuffled_items: int = 0
+    wall_time_s: float = 0.0
+    per_node_shards: Dict[str, int] = field(default_factory=dict)
+
+
+@dataclass
+class FaultInjection:
+    """Test hooks: deterministic failures."""
+
+    # (stage_name, op_index) -> number of consecutive failures to inject
+    op_failures: Dict[Tuple[str, int], int] = field(default_factory=dict)
+    # node -> stage name after which the node dies
+    node_death_after_stage: Dict[str, str] = field(default_factory=dict)
+
+
+class RuntimeEngine:
+    def __init__(self, store: DataStore, optimizer: Optional[IngestionOptimizer] = None,
+                 max_retries: int = 3) -> None:
+        self.store = store
+        self.nodes = list(store.nodes)
+        self.optimizer = optimizer or IngestionOptimizer()
+        self.max_retries = max_retries
+
+    # ------------------------------------------------------------------ remote
+    def launch_remote(self, node: str, stage_plans: List[StagePlan]) -> List[StagePlan]:
+        """The remote-shell seam: in a real deployment this SSHes the optimized
+        plan to ``node`` (paper Sec. VI-A).  Here it clones operator instances
+        so every node runs its own state, exactly as separate JVMs would."""
+        return [StagePlan(sp.name, [op.clone() for op in sp.ops], list(sp.upstream),
+                          dict(sp.predicates), [list(b) for b in sp.pipeline_blocks])
+                for sp in stage_plans]
+
+    # --------------------------------------------------------------------- run
+    def run(self, plan: IngestPlan,
+            sources: Union[Dict[str, List[IngestItem]], List[IngestItem]],
+            faults: Optional[FaultInjection] = None,
+            optimize: bool = True) -> RunReport:
+        t0 = time.time()
+        faults = faults or FaultInjection()
+        report = RunReport()
+
+        stage_plans = plan.compile()
+        if optimize:
+            stage_plans = self.optimizer.optimize(stage_plans)
+
+        # ---- distribute source shards: node-local dict, or shared queue
+        # (work stealing / straggler mitigation: slow nodes take fewer shards)
+        node_sources: Dict[str, List[IngestItem]] = {n: [] for n in self.nodes}
+        if isinstance(sources, dict):
+            for n, items in sources.items():
+                node_sources[n].extend(items)
+        else:
+            shared: "queue.Queue[IngestItem]" = queue.Queue()
+            for it in sources:
+                shared.put(it)
+            while True:
+                grabbed = False
+                for n in self.nodes:
+                    try:
+                        node_sources[n].append(shared.get_nowait())
+                        grabbed = True
+                    except queue.Empty:
+                        break
+                if not grabbed:
+                    break
+        report.per_node_shards = {n: len(v) for n, v in node_sources.items()}
+
+        # ---- ship plan to every node
+        node_plans = {n: self.launch_remote(n, stage_plans) for n in self.nodes}
+        # per-node stage outputs
+        outputs: Dict[str, Dict[str, List[IngestItem]]] = {
+            n: defaultdict(list) for n in self.nodes}
+        alive = {n: True for n in self.nodes}
+        failure_counts: Dict[Tuple[str, str, int], int] = defaultdict(int)
+
+        # dedicated lock for report mutation from worker threads
+        rlock = threading.Lock()
+
+        for si, sp in enumerate(stage_plans):
+            # -------------------------------------------------- stage barrier
+            def run_stage_on(node: str, nsp: StagePlan,
+                             input_items: List[IngestItem]) -> List[IngestItem]:
+                return self._run_stage(node, nsp, input_items, faults,
+                                       failure_counts, report, rlock)
+
+            def stage_inputs(node: str, nsp: StagePlan) -> List[IngestItem]:
+                if not nsp.upstream:
+                    base = node_sources[node]
+                else:
+                    base = []
+                    for up in nsp.upstream:  # CHAIN = union all (Sec. IV-B)
+                        base = base + outputs[node][up]
+                return route_items(base, nsp.predicates)
+
+            live_nodes = [n for n in self.nodes if alive[n]]
+            with ThreadPoolExecutor(max_workers=max(1, len(live_nodes))) as pool:
+                futs = {}
+                for n in live_nodes:
+                    nsp = node_plans[n][si]
+                    futs[n] = pool.submit(run_stage_on, n, nsp, stage_inputs(n, nsp))
+                for n, fut in futs.items():
+                    try:
+                        outputs[n][sp.name] = fut.result()
+                    except NodeFailure:
+                        alive[n] = False
+                        report.node_failures.append(n)
+
+            # ---- shuffle barrier: redistribute DFS groups (Sec. VI-B)
+            self._shuffle_barrier(sp, outputs, alive, report)
+
+            # ---- injected node deaths after this stage
+            for n, after in faults.node_death_after_stage.items():
+                if after == sp.name and alive.get(n):
+                    alive[n] = False
+                    report.node_failures.append(n)
+
+            # ---- node-failure recovery: reassign dead nodes' shards to the
+            # next live node in the slaves order and re-run stages 0..si for
+            # them (their in-flight state is lost with the node).
+            dead = [n for n in self.nodes if not alive[n] and node_sources[n]]
+            for n in dead:
+                target = self._next_live(n, alive)
+                if target is None:
+                    raise RuntimeError("all nodes failed")
+                shards = node_sources.pop(n)
+                node_sources[n] = []
+                node_sources[target].extend(shards)
+                report.reassigned_shards += len(shards)
+                # location IDs of the dead node flow to the target (Sec. VI-C1)
+                # re-run all stages so far for the moved shards on the target
+                replay_out: Dict[str, List[IngestItem]] = defaultdict(list)
+                for sj in range(si + 1):
+                    rp = node_plans[target][sj]
+                    if not rp.upstream:
+                        base = shards
+                    else:
+                        base = []
+                        for up in rp.upstream:
+                            base = base + replay_out[up]
+                    routed = route_items(base, rp.predicates)
+                    replay_out[rp.name] = self._run_stage(
+                        target, self.launch_remote(target, [rp])[0], routed, faults,
+                        failure_counts, report, rlock)
+                for k, v in replay_out.items():
+                    outputs[target][k].extend(v)
+
+            total = sum(len(outputs[n][sp.name]) for n in self.nodes if alive[n])
+            report.stage_items[sp.name] = total
+
+        report.wall_time_s = time.time() - t0
+        self.store.flush_manifest()
+        return report
+
+    # ------------------------------------------------------------- stage exec
+    def _run_stage(self, node: str, sp: StagePlan, items: List[IngestItem],
+                   faults: FaultInjection,
+                   failure_counts: Dict[Tuple[str, str, int], int],
+                   report: RunReport, rlock: threading.Lock) -> List[IngestItem]:
+        """Run one stage's pipeline blocks over a node's items.
+
+        Each block boundary is a materialization = checkpoint: on operator
+        failure the block is retried from its checkpointed input; after
+        ``max_retries`` the failing operator is replaced by a dummy
+        pass-through (paper Sec. VI-C1).
+        """
+        current = items
+        for block in sp.pipeline_blocks or [[i] for i in range(len(sp.ops))]:
+            checkpoint = current  # materialized input of this block
+            while True:
+                try:
+                    out = checkpoint
+                    for oi in block:
+                        op = sp.ops[oi]
+                        # injected failures (tests)
+                        key = (sp.name, oi)
+                        if faults.op_failures.get(key, 0) > 0:
+                            faults.op_failures[key] -= 1
+                            raise OperatorFailure(f"injected @ {sp.name}[{oi}]")
+                        out = op.run(out)
+                    current = out
+                    break
+                except OperatorFailure as e:
+                    oi = block[0] if len(block) == 1 else self._failed_op_index(sp, block, e)
+                    fkey = (node, sp.name, oi)
+                    failure_counts[fkey] += 1
+                    with rlock:
+                        report.op_failures[f"{sp.name}[{oi}]"] = failure_counts[fkey]
+                    if failure_counts[fkey] >= self.max_retries:
+                        failing = sp.ops[oi]
+                        sp.ops[oi] = PassThroughOp(replaces=failing.name)
+                        with rlock:
+                            report.dummy_substitutions.append(
+                                f"{sp.name}[{oi}]:{type(failing).__name__}")
+                    # retry block from the checkpoint (resume from previous
+                    # materialization, not from scratch)
+                    continue
+        return current
+
+    @staticmethod
+    def _failed_op_index(sp: StagePlan, block: List[int], exc: Exception) -> int:
+        """Recover which op in a multi-op block failed from the message."""
+        msg = str(exc)
+        for oi in block:
+            if f"[{oi}]" in msg or sp.ops[oi].name in msg:
+                return oi
+        return block[0]
+
+    def _next_live(self, node: str, alive: Dict[str, bool]) -> Optional[str]:
+        """Round-robin successor in the slaves file order (paper Sec. VI-C1)."""
+        if node in self.nodes:
+            start = self.nodes.index(node)
+        else:
+            start = 0
+        for k in range(1, len(self.nodes) + 1):
+            cand = self.nodes[(start + k) % len(self.nodes)]
+            if alive.get(cand):
+                return cand
+        return None
+
+    # ---------------------------------------------------------------- shuffle
+    def _shuffle_barrier(self, sp: StagePlan,
+                         outputs: Dict[str, Dict[str, List[IngestItem]]],
+                         alive: Dict[str, bool], report: RunReport) -> None:
+        """Redistribute a stage's output across nodes by group label.
+
+        If the stage's last operator declared ``shuffle_by`` in its params, the
+        engine (1) writes each node's local groups into the DFS directory, and
+        (2) reassigns each group directory to the node ``group % n_live``
+        (paper Sec. VI-B Shuffling).
+        """
+        if not sp.ops:
+            return
+        shuffle_by = None
+        for op in sp.ops:
+            if "shuffle_by" in op.params:
+                shuffle_by = op.params["shuffle_by"]
+        if shuffle_by is None:
+            return
+        dfs = os.path.join(self.store.dfs_dir, f"shuffle_{sp.name}")
+        os.makedirs(dfs, exist_ok=True)
+        live = [n for n in alive if alive[n]]
+        # phase 1: local groups -> DFS group directories
+        for n in live:
+            for i, it in enumerate(outputs[n][sp.name]):
+                g = it.label_value(shuffle_by, 0)
+                gdir = os.path.join(dfs, f"group{g}")
+                os.makedirs(gdir, exist_ok=True)
+                with open(os.path.join(gdir, f"{n}_{i}.pkl"), "wb") as f:
+                    pickle.dump(it, f)
+                report.shuffled_items += 1
+            outputs[n][sp.name] = []
+        # phase 2: each group directory is read back by one node
+        groups = sorted(os.listdir(dfs))
+        for gi, g in enumerate(groups):
+            target = live[gi % len(live)]
+            gdir = os.path.join(dfs, g)
+            merged: List[IngestItem] = []
+            for fn in sorted(os.listdir(gdir)):
+                with open(os.path.join(gdir, fn), "rb") as f:
+                    merged.append(pickle.load(f))
+            outputs[target][sp.name].extend(merged)
+
+
+def ingest(plan: IngestPlan, sources: Union[Dict[str, List[IngestItem]], List[IngestItem]],
+           store: DataStore, optimize: bool = True,
+           faults: Optional[FaultInjection] = None) -> RunReport:
+    """One-call entry point: optimize + run an ingestion plan against a store."""
+    return RuntimeEngine(store).run(plan, sources, faults=faults, optimize=optimize)

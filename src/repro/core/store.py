@@ -1,0 +1,203 @@
+"""DataStore — the storage substrate under ingestion plans (the HDFS analogue).
+
+Physical blocks live under ``<root>/nodes/<node>/`` with their lineage-encoded
+names (paper Sec. VII: the filename *is* the metadata).  A JSON manifest adds
+what HDFS's namenode would know: node placement, checksums, replica groups and
+erasure stripes — enough for the post-ingestion fault-tolerance daemon to
+detect and recover failures (paper Sec. VI-C2).
+
+A shared ``<root>/dfs/`` directory mediates shuffles (paper Sec. VI-B: local
+groups are copied to the distributed file system, then read back per group).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..layouts import SerializedBlock
+from .items import Granularity, IngestItem, Label
+
+
+@dataclass
+class BlockEntry:
+    """Manifest entry for one stored physical block."""
+
+    block_id: str              # unique id: lineage name + disambiguator
+    node: str                  # placement node
+    path: str                  # path relative to store root
+    checksum: str
+    nbytes: int
+    labels: List[List[Any]]    # [[op, value], ...] lineage
+    layout: str = "raw"
+    logical_id: str = ""       # identifies the logical content (replicas share it)
+    replica_index: int = 0     # which replica of logical_id this is
+    stripe_id: str = ""        # erasure stripe membership ("" = not striped)
+    stripe_pos: int = -1       # position within the stripe (data: 0..k-1, parity: k..k+m-1)
+    is_parity: bool = False
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+class DataStore:
+    def __init__(self, root: str, nodes: Sequence[str] = ("node0",)) -> None:
+        self.root = root
+        self.nodes = list(nodes)
+        self._lock = threading.Lock()
+        self.entries: Dict[str, BlockEntry] = {}
+        os.makedirs(self.dfs_dir, exist_ok=True)
+        for n in self.nodes:
+            os.makedirs(self.node_dir(n), exist_ok=True)
+        self._load_manifest()
+
+    # ----------------------------------------------------------------- layout
+    @property
+    def manifest_path(self) -> str:
+        return os.path.join(self.root, "manifest.json")
+
+    @property
+    def dfs_dir(self) -> str:
+        return os.path.join(self.root, "dfs")
+
+    def node_dir(self, node: str) -> str:
+        return os.path.join(self.root, "nodes", node)
+
+    # --------------------------------------------------------------- manifest
+    def _load_manifest(self) -> None:
+        if os.path.exists(self.manifest_path):
+            with open(self.manifest_path) as f:
+                raw = json.load(f)
+            self.entries = {k: BlockEntry(**v) for k, v in raw.items()}
+
+    def flush_manifest(self) -> None:
+        with self._lock:
+            tmp = self.manifest_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({k: asdict(v) for k, v in self.entries.items()}, f, indent=0)
+            os.replace(tmp, self.manifest_path)
+
+    # ------------------------------------------------------------------- write
+    def put_block(self, item: IngestItem, node: str, *, logical_id: str = "",
+                  replica_index: int = 0, stripe_id: str = "", stripe_pos: int = -1,
+                  is_parity: bool = False) -> BlockEntry:
+        data = item.data
+        if isinstance(data, SerializedBlock):
+            payload, layout = data.tobytes(), data.layout
+        elif isinstance(data, np.ndarray):
+            payload, layout = data.tobytes(), "raw"
+        elif isinstance(data, (bytes, bytearray)):
+            payload, layout = bytes(data), "raw"
+        else:
+            raise TypeError(f"cannot store payload of type {type(data)}")
+
+        base = item.lineage_name()
+        with self._lock:
+            block_id = base
+            k = 0
+            while block_id in self.entries:
+                k += 1
+                block_id = f"{base}_{k}"
+            rel = os.path.join("nodes", node, block_id + ".blk")
+            entry = BlockEntry(
+                block_id=block_id, node=node, path=rel,
+                checksum=item.checksum(), nbytes=len(payload),
+                labels=[[l.op, l.value] for l in item.labels],
+                layout=layout, logical_id=logical_id or self._logical_id(item),
+                replica_index=replica_index, stripe_id=stripe_id,
+                stripe_pos=stripe_pos, is_parity=is_parity,
+                meta=dict(item.meta),
+            )
+            self.entries[block_id] = entry
+        full = os.path.join(self.root, rel)
+        os.makedirs(os.path.dirname(full), exist_ok=True)
+        with open(full, "wb") as f:
+            f.write(payload)
+        return entry
+
+    @staticmethod
+    def _logical_id(item: IngestItem) -> str:
+        """Replica-invariant identity: the lineage minus replicate/locate labels."""
+        keep = [l for l in item.labels if not l.op.startswith(("replicate", "locate", "upload"))]
+        return "_".join(str(l) for l in keep) or "raw"
+
+    # -------------------------------------------------------------------- read
+    def read_payload(self, block_id: str) -> bytes:
+        entry = self.entries[block_id]
+        with open(os.path.join(self.root, entry.path), "rb") as f:
+            return f.read()
+
+    def read_block(self, block_id: str) -> SerializedBlock:
+        entry = self.entries[block_id]
+        raw = self.read_payload(block_id)
+        if entry.layout == "raw":
+            return SerializedBlock(layout="raw", payload=raw)
+        return SerializedBlock.frombytes(raw)
+
+    def read_item(self, block_id: str) -> IngestItem:
+        entry = self.entries[block_id]
+        labels = tuple(Label(op, v) for op, v in entry.labels)
+        return IngestItem(self.read_block(block_id), Granularity.BLOCK, labels,
+                          dict(entry.meta))
+
+    # ------------------------------------------------------------------- query
+    def blocks(self) -> List[BlockEntry]:
+        return list(self.entries.values())
+
+    def blocks_with_label(self, op: str, value: Any = None) -> List[BlockEntry]:
+        out = []
+        for e in self.entries.values():
+            for lop, lval in e.labels:
+                if lop == op and (value is None or lval == value):
+                    out.append(e)
+                    break
+        return out
+
+    def replicas_of(self, logical_id: str) -> List[BlockEntry]:
+        return [e for e in self.entries.values() if e.logical_id == logical_id]
+
+    def stripe_members(self, stripe_id: str) -> List[BlockEntry]:
+        out = [e for e in self.entries.values() if e.stripe_id == stripe_id]
+        return sorted(out, key=lambda e: e.stripe_pos)
+
+    def total_bytes(self) -> int:
+        return sum(e.nbytes for e in self.entries.values())
+
+    # --------------------------------------------------- failure detect/inject
+    def verify_block(self, block_id: str) -> bool:
+        """True if the physical file exists and matches its recorded size."""
+        entry = self.entries.get(block_id)
+        if entry is None:
+            return False
+        full = os.path.join(self.root, entry.path)
+        if not os.path.exists(full):
+            return False
+        return os.path.getsize(full) == entry.nbytes
+
+    def failed_blocks(self) -> List[str]:
+        """The fault daemon's ``detect`` scan source (paper Fig. 3)."""
+        return [bid for bid in self.entries if not self.verify_block(bid)]
+
+    def corrupt_block(self, block_id: str) -> None:
+        entry = self.entries[block_id]
+        full = os.path.join(self.root, entry.path)
+        with open(full, "wb") as f:
+            f.write(b"\x00corrupt")
+
+    def kill_node(self, node: str) -> None:
+        """Simulate a node failure: its local storage disappears."""
+        shutil.rmtree(self.node_dir(node), ignore_errors=True)
+
+    def restore_file(self, entry: BlockEntry, payload: bytes, node: Optional[str] = None) -> None:
+        """Write a recovered payload back (optionally onto a different node)."""
+        if node is not None and node != entry.node:
+            entry.node = node
+            entry.path = os.path.join("nodes", node, entry.block_id + ".blk")
+        full = os.path.join(self.root, entry.path)
+        os.makedirs(os.path.dirname(full), exist_ok=True)
+        with open(full, "wb") as f:
+            f.write(payload)
+        entry.nbytes = len(payload)

@@ -1,0 +1,14 @@
+"""Data substrate: synthetic generators, tokenizer, and the train-time feeder.
+
+The generators stand in for the paper's TPC-H / cloud-log inputs; the feeder
+is the "upstream query processor" integration (paper Sec. VIII) — it consumes
+ingested blocks through the ingestion-aware access layer and yields
+device-ready batches aligned to the mesh data axis.
+"""
+from .generators import (gen_lineitem, gen_log_records, gen_token_documents,
+                         gen_tax_records)
+from .tokenizer import ByteTokenizer
+from .feeder import BlockFeeder, ingest_corpus
+
+__all__ = ["gen_lineitem", "gen_log_records", "gen_token_documents",
+           "gen_tax_records", "ByteTokenizer", "BlockFeeder", "ingest_corpus"]

@@ -1,0 +1,96 @@
+"""EnCodec-token ingest operators for the musicgen backbone (DESIGN.md §4).
+
+The assignment stubs the audio frontend: the model consumes flat EnCodec code
+tokens.  What the INGESTBASE plan owns is the *delay-pattern* transform
+(MusicGen paper §2.1): K codebook streams are offset so codebook k is
+predicted at step t from codebooks < k at step t — then flattened into the
+single (B, S) stream the decoder-only backbone trains on.
+
+    DelayPatternOp: CHUNK{codes (n, K, T)} -> CHUNK{tokens ragged}
+
+Round-trip inverse provided for tests (undelay).
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable
+
+import numpy as np
+
+from ..core.items import Granularity, IngestItem
+from ..core.operators import IngestOp, register_op
+
+
+def apply_delay_pattern(codes: np.ndarray, pad_id: int = 0) -> np.ndarray:
+    """codes (K, T) -> delayed (K, T + K - 1); row k shifted right by k."""
+    K, T = codes.shape
+    out = np.full((K, T + K - 1), pad_id, codes.dtype)
+    for k in range(K):
+        out[k, k : k + T] = codes[k]
+    return out
+
+
+def undo_delay_pattern(delayed: np.ndarray, pad_id: int = 0) -> np.ndarray:
+    """Inverse of apply_delay_pattern."""
+    K, TK = delayed.shape
+    T = TK - K + 1
+    out = np.empty((K, T), delayed.dtype)
+    for k in range(K):
+        out[k] = delayed[k, k : k + T]
+    return out
+
+
+@register_op("delay_pattern")
+class DelayPatternOp(IngestOp):
+    """Delay-pattern + interleave-flatten EnCodec codes into LM token docs.
+
+    Input columns: ``codes`` — object array of (K, T) int arrays (one per
+    clip).  Output columns: ``tokens`` (object array of flattened 1-D docs of
+    length K*(T+K-1)) + ``length`` — exactly what PackOp consumes.
+
+    Codebook identity is preserved by offsetting codebook k's vocabulary by
+    ``k * codebook_size`` (vocab = K * codebook_size), matching the decoder's
+    single softmax over the flattened stream.
+    """
+
+    name = "delay_pattern"
+    granularity_in = Granularity.CHUNK
+    granularity_out = Granularity.CHUNK
+    cpu_heavy = True
+
+    def __init__(self, codebook_size: int = 2048, pad_id: int = 0,
+                 offset_codebooks: bool = False, **kw: Any) -> None:
+        super().__init__(codebook_size=codebook_size, pad_id=pad_id,
+                         offset_codebooks=offset_codebooks, **kw)
+        self.codebook_size = codebook_size
+        self.pad_id = pad_id
+        self.offset_codebooks = offset_codebooks
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        docs = []
+        lens = []
+        for codes in item.data["codes"]:
+            codes = np.asarray(codes)
+            delayed = apply_delay_pattern(codes, self.pad_id)
+            if self.offset_codebooks:
+                delayed = delayed + (np.arange(codes.shape[0])[:, None]
+                                     * self.codebook_size)
+            flat = delayed.T.reshape(-1).astype(np.int32)  # time-major interleave
+            docs.append(flat)
+            lens.append(len(flat))
+        cols = {"tokens": np.array(docs, dtype=object),
+                "length": np.array(lens, np.int32)}
+        yield IngestItem(cols, Granularity.CHUNK, item.labels,
+                         dict(item.meta)).with_label(self.name, len(docs))
+
+
+def gen_encodec_clips(n_clips: int, n_codebooks: int = 4,
+                      codebook_size: int = 2048, min_t: int = 50,
+                      max_t: int = 400, seed: int = 0):
+    """Synthetic EnCodec code clips (the stubbed audio frontend's output)."""
+    rng = np.random.default_rng(seed)
+    clips = np.empty(n_clips, dtype=object)
+    for i in range(n_clips):
+        t = int(rng.integers(min_t, max_t + 1))
+        clips[i] = rng.integers(0, codebook_size,
+                                (n_codebooks, t)).astype(np.int32)
+    return {"codes": clips}

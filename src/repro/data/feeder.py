@@ -1,0 +1,140 @@
+"""Ingestion-aware training feeder (the Spark/MapReduce integration analogue).
+
+``ingest_corpus`` runs the canonical LM ingestion plan — parse, length-
+partition, pack into device-shaped blocks, serialize, store — and
+``BlockFeeder`` replays the ingested blocks as train batches:
+
+* replica/layout choice via ``filterReplica`` (packed blocks for training),
+* block->task assignment via ``splitByKey`` folded to the mesh data-axis size,
+* deserialize with projection pushdown (only tokens/mask reach the host batch),
+* resumable position (checkpoint/restart integration) and a work-stealing
+  queue across feeder tasks (straggler mitigation).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import (DataAccess, DataStore, IngestItem, IngestPlan, create_stage,
+                    format_, ingest, select, store)
+from ..core.items import Columns
+from .generators import as_file_items
+
+
+def build_lm_plan(data_store: DataStore, *, seq_len: int, rows_per_block: int,
+                  pad_id: int = 0, replicas: int = 1,
+                  length_partitions: Optional[Sequence[int]] = None,
+                  name: str = "lm_corpus") -> IngestPlan:
+    """The canonical LM ingestion plan (DESIGN.md §2 table)."""
+    plan = IngestPlan(name)
+    s1 = select(plan, replicate=replicas if replicas > 1 else None)
+    fmt_kw: Dict[str, Any] = {
+        "pack": {"seq_len": seq_len, "rows_per_block": rows_per_block, "pad_id": pad_id},
+        "serialize": "packed",
+    }
+    if length_partitions is not None:
+        fmt_kw["partition"] = {"key": "length", "scheme": "length",
+                               "bounds": list(length_partitions)}
+    s2 = format_(plan, s1, **fmt_kw)
+    s3 = store(plan, s2, locate="roundrobin",
+               locate_args={"num_locations": len(data_store.nodes)},
+               upload=data_store)
+    create_stage(plan, using=[s1, s2, s3], name="main")
+    return plan
+
+
+def ingest_corpus(docs: Columns, data_store: DataStore, *, seq_len: int,
+                  rows_per_block: int, pad_id: int = 0, shards: int = 8,
+                  replicas: int = 1,
+                  length_partitions: Optional[Sequence[int]] = None):
+    """Ingest a ragged-token corpus into packed blocks. Returns the RunReport."""
+    plan = build_lm_plan(data_store, seq_len=seq_len, rows_per_block=rows_per_block,
+                         pad_id=pad_id, replicas=replicas,
+                         length_partitions=length_partitions)
+    items = as_file_items(docs, shards)
+    return ingest(plan, items, data_store)
+
+
+class BlockFeeder:
+    """Yields (tokens, loss_mask, positions, segment_ids) batches from ingested
+    packed blocks, sharded across ``num_tasks`` feeder tasks (one per data-axis
+    slot / host)."""
+
+    FIELDS = ("tokens", "loss_mask", "positions", "segment_ids")
+
+    def __init__(self, data_store: DataStore, *, num_tasks: int = 1, task: int = 0,
+                 batch_rows: Optional[int] = None, seed: int = 0,
+                 fields: Sequence[str] = FIELDS, start_step: int = 0) -> None:
+        self.store = data_store
+        self.num_tasks, self.task = num_tasks, task
+        self.batch_rows = batch_rows
+        self.fields = tuple(fields)
+        self.seed = seed
+        self.step = start_step  # resumable position (checkpoint/restart)
+        access = DataAccess(data_store).filter_replica("serialize", "packed")
+        splits = access.split_by_key("pack", num_tasks=num_tasks)
+        self.access = access
+        self.my_blocks = splits[task].blocks if task < len(splits) else []
+        # deterministic per-epoch order shared by all tasks
+        self._order = np.random.default_rng(seed).permutation(len(self.my_blocks))
+
+    def __len__(self) -> int:
+        return len(self.my_blocks)
+
+    def _read(self, idx: int) -> Columns:
+        e = self.my_blocks[int(self._order[idx % len(self._order)])]
+        block = self.store.read_block(e.block_id)
+        from ..layouts import deserialize_block
+        return deserialize_block(block, projection=list(self.fields))
+
+    def batches(self, num_steps: int) -> Iterator[Dict[str, np.ndarray]]:
+        """Sequential, resumable batch stream."""
+        if not self.my_blocks:
+            return
+        buf: Dict[str, List[np.ndarray]] = {f: [] for f in self.fields}
+        rows = 0
+        produced = 0
+        idx = self.step
+        while produced < num_steps:
+            cols = self._read(idx)
+            idx += 1
+            take = len(cols[self.fields[0]])
+            for f in self.fields:
+                buf[f].append(cols[f])
+            rows += take
+            target = self.batch_rows or take
+            while rows >= target and produced < num_steps:
+                cat = {f: np.concatenate(buf[f]) for f in self.fields}
+                out = {f: cat[f][:target] for f in self.fields}
+                buf = {f: [cat[f][target:]] for f in self.fields}
+                rows -= target
+                produced += 1
+                self.step = idx
+                yield out
+
+    # ------------------------------------------------------------ work stealing
+    @staticmethod
+    def stealing_queue(feeders: Sequence["BlockFeeder"], num_steps: int
+                       ) -> "queue.Queue[Dict[str, np.ndarray]]":
+        """Fan several feeder tasks into one queue; fast tasks pull more work —
+        a straggling feeder merely contributes fewer batches (DESIGN.md §5)."""
+        q: "queue.Queue[Dict[str, np.ndarray]]" = queue.Queue(maxsize=8)
+        remaining = threading.Semaphore(num_steps)
+        done = threading.Event()
+
+        def work(f: "BlockFeeder") -> None:
+            for b in f.batches(num_steps):
+                if not remaining.acquire(blocking=False):
+                    return
+                if done.is_set():
+                    return
+                q.put(b)
+
+        threads = [threading.Thread(target=work, args=(f,), daemon=True)
+                   for f in feeders]
+        for t in threads:
+            t.start()
+        return q

@@ -1,0 +1,103 @@
+"""Synthetic record generators (the paper's TPC-H / log / tax inputs)."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.items import Columns, IngestItem
+from ..core.items import Granularity
+
+
+def gen_lineitem(n: int, seed: int = 0, violation_rate: float = 0.01) -> Columns:
+    """TPC-H lineitem-like columns used by the paper's cleaning experiments:
+    shipdate determines linestatus (FD) except for injected violations; the DC
+    example is quantity < 3 => discount <= 9%."""
+    rng = np.random.default_rng(seed)
+    shipdate = rng.integers(0, 2526, size=n).astype(np.int32)       # days since epoch
+    linestatus = (shipdate % 2).astype(np.int8)                      # FD: date -> status
+    quantity = rng.integers(1, 51, size=n).astype(np.int32)
+    discount = np.round(rng.uniform(0.0, 0.10, size=n), 2).astype(np.float32)
+    extendedprice = np.round(rng.uniform(900, 105000, size=n), 2).astype(np.float32)
+    orderkey = rng.integers(0, max(1, n // 4), size=n).astype(np.int64)
+    partkey = rng.integers(0, 200_000, size=n).astype(np.int64)
+    suppkey = rng.integers(0, 10_000, size=n).astype(np.int64)
+    # inject FD violations: flip linestatus on a few rows
+    nbad = int(n * violation_rate)
+    if nbad:
+        idx = rng.choice(n, size=nbad, replace=False)
+        linestatus[idx] = 1 - linestatus[idx]
+    # inject DC violations: small quantity + big discount
+    if nbad:
+        idx = rng.choice(n, size=nbad, replace=False)
+        quantity[idx] = rng.integers(1, 3, size=nbad)
+        discount[idx] = np.round(rng.uniform(0.091, 0.2, size=nbad), 3)
+    return {"orderkey": orderkey, "partkey": partkey, "suppkey": suppkey,
+            "quantity": quantity, "discount": discount,
+            "extendedprice": extendedprice, "shipdate": shipdate,
+            "linestatus": linestatus}
+
+
+def gen_log_records(n: int, seed: int = 0, num_machines: int = 64) -> Columns:
+    """Cloud-service log lines (paper Sec. IV-C): structured timestamp/machine
+    plus an unstructured error payload (as a fixed-width byte field)."""
+    rng = np.random.default_rng(seed)
+    ts = np.sort(rng.integers(0, 86_400, size=n)).astype(np.int64)
+    machine = rng.integers(0, num_machines, size=n).astype(np.int32)
+    severity = rng.choice(np.array([0, 1, 2, 3], dtype=np.int8),
+                          p=[0.7, 0.2, 0.08, 0.02], size=n)
+    payload = rng.integers(32, 127, size=(n, 64)).astype(np.uint8)
+    return {"ts": ts, "machine": machine, "severity": severity, "payload": payload}
+
+
+def gen_tax_records(n: int, seed: int = 0, invalid_rate: float = 0.05) -> Columns:
+    """Tax dataset with country_code values needing dictionary repair."""
+    rng = np.random.default_rng(seed)
+    valid = np.array(["MX", "US", "CA", "FR", "DE"])
+    names = np.array(["mexico", "usa", "canada", "france", "germany"])
+    idx = rng.integers(0, len(valid), size=n)
+    codes = valid[idx].astype(object)
+    bad = rng.random(n) < invalid_rate
+    codes[bad] = names[idx[bad]]
+    income = rng.uniform(1e4, 2e5, size=n).astype(np.float32)
+    return {"country_code": np.array(codes, dtype=object), "income": income}
+
+
+def gen_token_documents(n_docs: int, vocab: int = 50_000, seed: int = 0,
+                        min_len: int = 32, max_len: int = 2048) -> Columns:
+    """Synthetic LM corpus: documents of ragged token sequences drawn from a
+    2-gram process so a trained model has learnable structure (loss decreases).
+    """
+    rng = np.random.default_rng(seed)
+    # sparse bigram structure: each token prefers a small successor set
+    succ = rng.integers(0, vocab, size=(256, 4))
+    docs: List[np.ndarray] = []
+    lens = rng.integers(min_len, max_len + 1, size=n_docs)
+    for L in lens:
+        t = np.empty(L, dtype=np.int32)
+        t[0] = rng.integers(vocab)
+        for i in range(1, L):
+            prev = t[i - 1] % 256
+            if rng.random() < 0.8:
+                t[i] = succ[prev, rng.integers(4)]
+            else:
+                t[i] = rng.integers(vocab)
+        docs.append(t)
+    return {"tokens": np.array(docs, dtype=object),
+            "length": lens.astype(np.int32),
+            "doc_id": np.arange(n_docs, dtype=np.int64)}
+
+
+def as_file_items(cols: Columns, shards: int, granularity=Granularity.FILE
+                  ) -> List[IngestItem]:
+    """Split a column set into shard items (the raw files arriving per node)."""
+    from ..core.items import num_rows, take_rows
+    n = num_rows(cols)
+    out: List[IngestItem] = []
+    per = -(-n // shards)
+    for s in range(shards):
+        idx = np.arange(s * per, min((s + 1) * per, n))
+        if len(idx) == 0:
+            continue
+        out.append(IngestItem(take_rows(cols, idx), granularity))
+    return out

@@ -1,0 +1,32 @@
+"""Byte-level tokenizer (DESIGN.md §9: ingestion is layout-bound, not
+tokenizer-bound; BPE training is out of scope for a synthetic corpus)."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+class ByteTokenizer:
+    """Bytes <-> token ids with a few special tokens at the top of the range."""
+
+    def __init__(self, vocab_size: int = 512) -> None:
+        assert vocab_size >= 260, "need 256 bytes + specials"
+        self.vocab_size = vocab_size
+        self.pad_id = 256
+        self.bos_id = 257
+        self.eos_id = 258
+
+    def encode(self, text: str | bytes, add_special: bool = True) -> np.ndarray:
+        raw = text.encode() if isinstance(text, str) else bytes(text)
+        ids = np.frombuffer(raw, dtype=np.uint8).astype(np.int32)
+        if add_special:
+            ids = np.concatenate([[self.bos_id], ids, [self.eos_id]]).astype(np.int32)
+        return ids
+
+    def decode(self, ids: Sequence[int]) -> str:
+        body = [i for i in ids if i < 256]
+        return bytes(body).decode(errors="replace")
+
+    def encode_batch(self, texts: List[str]) -> np.ndarray:
+        return np.array([self.encode(t) for t in texts], dtype=object)

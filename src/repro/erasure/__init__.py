@@ -1,0 +1,11 @@
+"""Reed-Solomon erasure coding over GF(2^8) (paper Sec. II-D, VI-C2).
+
+Parity generation is a matrix multiply over GF(2^8): ``parity = C @ data``
+where C is an m×k Cauchy coding matrix.  The numpy path vectorizes the GF
+multiply with log/exp tables; the Pallas path (kernels/gf256_matmul) tiles the
+same computation into VMEM for TPU (DESIGN.md §6).
+"""
+from .gf256 import GF256
+from .reed_solomon import ReedSolomon
+
+__all__ = ["GF256", "ReedSolomon"]

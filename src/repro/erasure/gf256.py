@@ -1,0 +1,108 @@
+"""GF(2^8) arithmetic with the AES polynomial 0x11B, vectorized via log/exp tables."""
+from __future__ import annotations
+
+import numpy as np
+
+_POLY = 0x11B  # x^8 + x^4 + x^3 + x + 1
+_GEN = 3       # generator of the multiplicative group under 0x11B
+
+
+def _build_tables():
+    exp = np.zeros(512, dtype=np.uint8)
+    log = np.zeros(256, dtype=np.int32)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        # multiply x by the generator (3): x*3 = x*2 ^ x
+        x2 = x << 1
+        if x2 & 0x100:
+            x2 ^= _POLY
+        x = x2 ^ x
+    exp[255:510] = exp[:255]  # wraparound so exp[a+b] needs no mod
+    return exp, log
+
+
+EXP_TABLE, LOG_TABLE = _build_tables()
+
+
+class GF256:
+    """Vectorized GF(2^8) field ops on uint8 numpy arrays."""
+
+    exp = EXP_TABLE
+    log = LOG_TABLE
+
+    @staticmethod
+    def add(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        return np.bitwise_xor(a, b)
+
+    sub = add  # characteristic 2
+
+    @staticmethod
+    def mul(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        a = np.asarray(a, dtype=np.uint8)
+        b = np.asarray(b, dtype=np.uint8)
+        out = EXP_TABLE[LOG_TABLE[a] + LOG_TABLE[b]]
+        # anything multiplied by 0 is 0 (log[0] is a bogus 0 entry)
+        zero = (a == 0) | (b == 0)
+        return np.where(zero, np.uint8(0), out).astype(np.uint8)
+
+    @staticmethod
+    def inv(a: np.ndarray) -> np.ndarray:
+        a = np.asarray(a, dtype=np.uint8)
+        if np.any(a == 0):
+            raise ZeroDivisionError("GF(256) inverse of 0")
+        return EXP_TABLE[255 - LOG_TABLE[a]].astype(np.uint8)
+
+    @staticmethod
+    def div(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        return GF256.mul(a, GF256.inv(b))
+
+    # ------------------------------------------------------------- lin-algebra
+    @staticmethod
+    def matmul(A: np.ndarray, B: np.ndarray) -> np.ndarray:
+        """GF(256) matrix product: XOR-accumulated table-lookup products.
+
+        A: (m, k) uint8, B: (k, n) uint8 -> (m, n) uint8.
+        Vectorized over n; loops over k (k is small: stripe width).
+        """
+        A = np.asarray(A, dtype=np.uint8)
+        B = np.asarray(B, dtype=np.uint8)
+        m, k = A.shape
+        out = np.zeros((m, B.shape[1]), dtype=np.uint8)
+        for j in range(k):
+            out ^= GF256.mul(A[:, j : j + 1], B[j : j + 1, :])
+        return out
+
+    @staticmethod
+    def mat_inv(A: np.ndarray) -> np.ndarray:
+        """Gauss-Jordan inverse of a square GF(256) matrix."""
+        A = np.asarray(A, dtype=np.uint8).copy()
+        n = A.shape[0]
+        I = np.eye(n, dtype=np.uint8)
+        aug = np.concatenate([A, I], axis=1)
+        for col in range(n):
+            piv = col + int(np.argmax(aug[col:, col] != 0))
+            if aug[piv, col] == 0:
+                raise np.linalg.LinAlgError("singular GF(256) matrix")
+            if piv != col:
+                aug[[col, piv]] = aug[[piv, col]]
+            aug[col] = GF256.mul(aug[col], GF256.inv(aug[col, col]))
+            for r in range(n):
+                if r != col and aug[r, col] != 0:
+                    aug[r] = GF256.add(aug[r], GF256.mul(aug[r, col], aug[col]))
+        return aug[:, n:]
+
+    @staticmethod
+    def cauchy_matrix(m: int, k: int) -> np.ndarray:
+        """Cauchy coding matrix: C[i, j] = 1 / (x_i + y_j) with distinct x, y.
+
+        Every square submatrix of a Cauchy matrix is invertible, which is what
+        makes it a valid MDS erasure code generator.
+        """
+        if m + k > 256:
+            raise ValueError("m + k must be <= 256 for GF(256) Cauchy codes")
+        x = np.arange(k, k + m, dtype=np.uint8)   # rows
+        y = np.arange(0, k, dtype=np.uint8)       # cols
+        denom = np.bitwise_xor(x[:, None], y[None, :])
+        return GF256.inv(denom)

@@ -1,0 +1,75 @@
+"""Systematic Reed-Solomon (k data + m parity) over GF(2^8).
+
+Encoding:  parity = C @ data        (C: m×k Cauchy matrix, data: k×L bytes)
+Recovery:  any k surviving rows of [I; C] are invertible — solve for the
+           missing data rows, then recompute missing parity rows.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .gf256 import GF256
+
+
+class ReedSolomon:
+    def __init__(self, k: int, m: int, use_pallas: bool = False) -> None:
+        if k < 1 or m < 1:
+            raise ValueError("need k >= 1 data and m >= 1 parity blocks")
+        self.k, self.m = k, m
+        self.C = GF256.cauchy_matrix(m, k)  # (m, k)
+        self.use_pallas = use_pallas
+        self._pallas_matmul = None
+        if use_pallas:
+            from ..kernels import ops as gf_ops  # lazy: jax import
+            self._pallas_matmul = gf_ops.gf256_matmul
+
+    # ------------------------------------------------------------------ encode
+    def _matmul(self, A: np.ndarray, B: np.ndarray) -> np.ndarray:
+        if self._pallas_matmul is not None:
+            return np.asarray(self._pallas_matmul(A, B))
+        return GF256.matmul(A, B)
+
+    def encode(self, data: np.ndarray) -> np.ndarray:
+        """data: (k, L) uint8 -> parity (m, L) uint8."""
+        data = np.asarray(data, dtype=np.uint8)
+        if data.shape[0] != self.k:
+            raise ValueError(f"expected {self.k} data rows, got {data.shape[0]}")
+        return self._matmul(self.C, data)
+
+    def encode_payloads(self, payloads: Sequence[bytes]) -> Tuple[np.ndarray, int]:
+        """Encode variable-length payloads: zero-pad to the max length (and to a
+        multiple of 128 for kernel tile alignment); missing trailing blocks of a
+        partial stripe are virtual zero blocks.  Returns (parity (m, L), L)."""
+        L = max((len(p) for p in payloads), default=1)
+        L = max(1, -(-L // 128) * 128)
+        data = np.zeros((self.k, L), dtype=np.uint8)
+        for i, p in enumerate(payloads):
+            data[i, : len(p)] = np.frombuffer(p, dtype=np.uint8)
+        return self.encode(data), L
+
+    # ------------------------------------------------------------------ decode
+    def reconstruct(self, shards: Dict[int, np.ndarray]) -> np.ndarray:
+        """Rebuild the full (k, L) data matrix from any >= k surviving shards.
+
+        ``shards`` maps stripe position -> row bytes; positions 0..k-1 are data
+        rows, k..k+m-1 are parity rows.
+        """
+        if len(shards) < self.k:
+            raise ValueError(f"need at least {self.k} shards, have {len(shards)}")
+        L = len(next(iter(shards.values())))
+        G = np.concatenate([np.eye(self.k, dtype=np.uint8), self.C], axis=0)  # (k+m, k)
+        pos = sorted(shards)[: self.k]
+        A = G[pos]                                  # (k, k) rows we actually have
+        Y = np.stack([np.frombuffer(np.asarray(shards[p], dtype=np.uint8).tobytes(),
+                                    dtype=np.uint8) for p in pos])  # (k, L)
+        A_inv = GF256.mat_inv(A)
+        return self._matmul(A_inv, Y)               # (k, L) original data rows
+
+    def recover_block(self, missing_pos: int, shards: Dict[int, np.ndarray]) -> np.ndarray:
+        """Recover one missing stripe row (data or parity) from survivors."""
+        data = self.reconstruct(shards)
+        if missing_pos < self.k:
+            return data[missing_pos]
+        return self.encode(data)[missing_pos - self.k]

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the ingest/serve hot spots (DESIGN.md §6).
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec tiling), a pure oracle in
+ref.py, and a jit'd wrapper in ops.py (interpret=True off-TPU).
+"""
+from .ops import flash_attention, gf256_matmul, pack_tokens
+
+__all__ = ["flash_attention", "gf256_matmul", "pack_tokens"]

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: GF(2^8) matrix multiply for Reed-Solomon parity.
+
+The paper's erasure-coding ingest operator is compute-bound: parity =
+code_matrix @ data over GF(2^8), where data is a (K, N) stripe of K data
+blocks of N bytes and code_matrix is (P, K) (P parity blocks).
+
+TPU adaptation (DESIGN.md §6): table-based GF multiply (the CPU idiom) needs
+per-element gathers, which the TPU vector unit hates.  Instead we use the
+carry-less polynomial formulation — 8 shifted XOR steps for the product and
+7 steps of modular reduction by 0x11B — entirely int32 shifts/ands/xors, which
+map directly onto the VPU.  The stripe is tiled over N so each (K, bn) slab
+of data and the (P, bn) accumulator live in VMEM.
+
+Layout: grid = (N // block_n,); per step the kernel sees
+  code (P, K) int32  (whole matrix, tiny)     VMEM
+  data (K, bn) int32 (one byte per lane)      VMEM
+  out  (P, bn) int32                          VMEM
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_POLY = 0x11B
+
+
+def _gf_mul_vec(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Carry-less multiply + modular reduction, elementwise on int32 arrays
+    holding bytes.  a, b broadcast together."""
+    prod = jnp.zeros_like(jnp.broadcast_arrays(a, b)[0])
+    for i in range(8):
+        bit = (a >> i) & 1
+        prod = prod ^ (bit * (b << i))
+    # reduce the 15-bit carry-less product modulo x^8+x^4+x^3+x+1
+    for i in range(14, 7, -1):
+        bit = (prod >> i) & 1
+        prod = prod ^ (bit * (_POLY << (i - 8)))
+    return prod
+
+
+def _kernel(code_ref, data_ref, out_ref, *, K: int):
+    acc = jnp.zeros(out_ref.shape, jnp.int32)
+    code = code_ref[...]                       # (P, K)
+    for k in range(K):                         # K is small (stripe width)
+        a = code[:, k][:, None]                # (P, 1)
+        b = data_ref[k, :][None, :]            # (1, bn)
+        acc = acc ^ _gf_mul_vec(a, b)
+    out_ref[...] = acc
+
+
+def gf256_matmul(code: jax.Array, data: jax.Array, *, block_n: int = 2048,
+                 interpret: bool = False) -> jax.Array:
+    """code (P, K) uint8, data (K, N) uint8 -> parity (P, N) uint8."""
+    P, K = code.shape
+    K2, N = data.shape
+    assert K == K2, (code.shape, data.shape)
+    pad = (-N) % block_n
+    if pad:
+        data = jnp.pad(data, ((0, 0), (0, pad)))
+    Np = N + pad
+    out = pl.pallas_call(
+        functools.partial(_kernel, K=K),
+        grid=(Np // block_n,),
+        in_specs=[
+            pl.BlockSpec((P, K), lambda i: (0, 0)),        # code: replicated
+            pl.BlockSpec((K, block_n), lambda i: (0, i)),  # data: tile over N
+        ],
+        out_specs=pl.BlockSpec((P, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((P, Np), jnp.int32),
+        interpret=interpret,
+    )(code.astype(jnp.int32), data.astype(jnp.int32))
+    return out[:, :N].astype(jnp.uint8)

@@ -1,0 +1,44 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CI;
+on a TPU backend the real kernels run.  The dry-run/roofline path stays pure
+XLA (Pallas custom-calls report no FLOPs to cost_analysis — DESIGN.md §6);
+kernels are opt-in at run time.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .gf256_matmul import gf256_matmul as _gf256
+from .pack_tokens import pack_tokens as _pack
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gf256_matmul(code, data, *, block_n: int = 2048, interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _gf256(code, data, block_n=block_n, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
+                    bk: int = 512, interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _flash(q, k, v, causal=causal, bq=bq, bk=bk, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("seq_len", "pad_id", "interpret"))
+def pack_tokens(flat_tokens, starts, lens, seq_len: int, *, pad_id: int = 0,
+                interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _pack(flat_tokens, starts, lens, seq_len, pad_id=pad_id,
+                 interpret=interpret)

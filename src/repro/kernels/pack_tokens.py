@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: pack ragged documents into fixed-shape training rows.
+
+Serialize/pack is the paper's hottest CPU ingest operator (Sec. VI-A runs it
+multi-threaded).  On TPU the same transform is a tiled gather: given the flat
+token stream and a (row -> [start, len)) table produced by the packer's
+first-fit pass, emit the (R, S) packed token matrix plus the segment-id and
+position planes, with padding masked — all fused in one VMEM pass per row.
+
+Layout: grid = (R,); per step the kernel sees the whole flat stream (HBM ref,
+sliced with pl.ds) and one (S,) output row in VMEM.  ``starts/lens`` arrive
+as scalar-prefetch-style (1,) int32 blocks.
+
+(A row's documents are contiguous in the flat stream by construction — the
+packer writes them that way — so one dynamic slice per row suffices.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(starts_ref, lens_ref, toks_ref, out_ref, seg_ref, pos_ref, *,
+            S: int, pad_id: int):
+    start = starts_ref[0]
+    ln = lens_ref[0]
+    row = pl.load(toks_ref, (pl.ds(start, S),))          # padded stream: safe
+    idx = jax.lax.broadcasted_iota(jnp.int32, (S,), 0)
+    valid = idx < ln
+    out_ref[0, :] = jnp.where(valid, row, pad_id)
+    seg_ref[0, :] = jnp.where(valid, 1, 0)
+    pos_ref[0, :] = jnp.where(valid, idx, 0)
+
+
+def pack_tokens(flat_tokens: jax.Array, starts: jax.Array, lens: jax.Array,
+                seq_len: int, *, pad_id: int = 0, interpret: bool = False):
+    """flat_tokens (T,) int32; starts/lens (R,) int32 -> (tokens, seg, pos)
+    each (R, seq_len) int32."""
+    R = starts.shape[0]
+    toks = jnp.pad(flat_tokens.astype(jnp.int32), (0, seq_len))  # over-read pad
+    out, seg, pos = pl.pallas_call(
+        functools.partial(_kernel, S=seq_len, pad_id=pad_id),
+        grid=(R,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda r: (r,)),
+            pl.BlockSpec((1,), lambda r: (r,)),
+            pl.BlockSpec(toks.shape, lambda r: (0,)),    # whole stream
+        ],
+        out_specs=[
+            pl.BlockSpec((1, seq_len), lambda r: (r, 0)),
+            pl.BlockSpec((1, seq_len), lambda r: (r, 0)),
+            pl.BlockSpec((1, seq_len), lambda r: (r, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((R, seq_len), jnp.int32)] * 3,
+        interpret=interpret,
+    )(starts.astype(jnp.int32), lens.astype(jnp.int32), toks)
+    return out, seg, pos

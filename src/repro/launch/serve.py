@@ -1,0 +1,89 @@
+"""Batched serving driver: prefill a prompt batch, then decode tokens.
+
+Same production code path as the dry-run's prefill/decode cells, runnable on
+CPU with the smoke configs:
+
+  python -m repro.launch.serve --arch smollm-135m --smoke --prompt-len 64 \
+      --decode-steps 32 --batch 4
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--mesh", default="1x1")
+    args = ap.parse_args()
+
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from ..configs import get_config, get_smoke
+    from ..models.model import model_defs
+    from ..models.params import init_params, param_specs
+    from ..training.steps import make_prefill_step, make_serve_step
+    from .mesh import mesh_axis_sizes, sharding_rules
+    from .train import build_mesh
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    mesh = build_mesh(args.mesh)
+    B, S = args.batch, args.prompt_len
+    max_len = S + args.decode_steps + 1
+
+    rules = sharding_rules(cfg, mesh, global_batch=B)
+    sizes = mesh_axis_sizes(mesh)
+    named = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+    pdefs = model_defs(cfg)
+    pshard = named(param_specs(pdefs, rules, sizes))
+    params = jax.tree.map(lambda a, s: jax.device_put(a, s),
+                          init_params(jax.random.PRNGKey(0), pdefs), pshard)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, cfg.vocab_size, (B, S)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(prompts),
+             "segments": jnp.ones((B, S), jnp.int32),
+             "positions": jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)}
+    if "cross" in cfg.pattern + cfg.remainder:
+        batch["encoder_embeds"] = jnp.zeros(
+            (B, cfg.cross_attn_kv_len, cfg.d_model), cfg.activation_dtype)
+
+    prefill = jax.jit(make_prefill_step(cfg, max_len))
+    serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(nxt)
+    t_prefill = time.time() - t0
+
+    out_tokens = [np.asarray(nxt)]
+    t0 = time.time()
+    for i in range(args.decode_steps):
+        pos = jnp.asarray(S + i, jnp.int32)
+        nxt, logits, cache = serve(params, cache, nxt, pos)
+        out_tokens.append(np.asarray(nxt))
+    jax.block_until_ready(nxt)
+    t_decode = (time.time() - t0) / max(1, args.decode_steps)
+
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"[serve] arch={cfg.name} batch={B} prompt={S}")
+    print(f"[serve] prefill {t_prefill*1e3:.1f} ms; "
+          f"decode {t_decode*1e3:.1f} ms/token "
+          f"({B/max(t_decode,1e-9):.1f} tok/s aggregate)")
+    print(f"[serve] sample continuations: {gen[:2, :12].tolist()}")
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,31 @@
+"""Physical block layouts — the serialize/deserialize library (paper Sec. II-C, VII).
+
+The paper ships per-replica layouts (row, PAX/RCFile, compressed) and layout-
+aware deserializers that push projection/selection down into the read path.
+Here a *block layout* is how a columnar record batch is encoded into the bytes
+stored by the DataStore, plus a deserializer that can read back only the
+projected fields / selected rows.
+
+Layouts:
+  row        — array-of-structs: numpy structured array (good for full-record scans)
+  columnar   — struct-of-arrays, one byte-section per field (PAX/RCFile analogue;
+               projection reads only the requested sections)
+  cpax       — columnar + zlib compression per section
+  sorted     — columnar, rows ordered by a key field; selection on that field
+               uses binary search (the paper's index access / GS layout)
+  packed     — device-ready LM block: fixed (rows, seq) int32 token matrix +
+               loss mask + positions, zero host-side work at train time
+"""
+from .blocks import (
+    SerializedBlock,
+    serialize_block,
+    deserialize_block,
+    available_layouts,
+)
+
+__all__ = [
+    "SerializedBlock",
+    "serialize_block",
+    "deserialize_block",
+    "available_layouts",
+]

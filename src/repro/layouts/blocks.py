@@ -1,0 +1,240 @@
+"""Block serializers/deserializers with projection & selection pushdown."""
+from __future__ import annotations
+
+import io
+import json
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.items import Columns, num_rows, take_rows
+
+# A selection predicate: (field, op, value) with op in {"==","<","<=",">",">=","!="}
+Selection = Tuple[str, str, Any]
+
+_OPS: Dict[str, Callable[[np.ndarray, Any], np.ndarray]] = {
+    "==": lambda a, v: a == v,
+    "!=": lambda a, v: a != v,
+    "<": lambda a, v: a < v,
+    "<=": lambda a, v: a <= v,
+    ">": lambda a, v: a > v,
+    ">=": lambda a, v: a >= v,
+}
+
+
+def apply_selection(cols: Columns, selection: Optional[Selection]) -> Columns:
+    if selection is None:
+        return cols
+    f, op, v = selection
+    mask = _OPS[op](cols[f], v)
+    return take_rows(cols, np.nonzero(mask)[0])
+
+
+@dataclass
+class SerializedBlock:
+    """A physical block: layout id + payload bytes + self-describing header."""
+
+    layout: str
+    payload: bytes
+    header: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.payload)
+
+    def tobytes(self) -> bytes:
+        h = json.dumps({"layout": self.layout, **self.header}).encode()
+        return len(h).to_bytes(4, "little") + h + self.payload
+
+    @classmethod
+    def frombytes(cls, raw: bytes) -> "SerializedBlock":
+        hlen = int.from_bytes(raw[:4], "little")
+        header = json.loads(raw[4 : 4 + hlen].decode())
+        layout = header.pop("layout")
+        return cls(layout=layout, payload=raw[4 + hlen :], header=header)
+
+
+# --------------------------------------------------------------------------- util
+def _col_meta(a: np.ndarray) -> Dict[str, Any]:
+    return {"dtype": str(a.dtype), "shape": list(a.shape)}
+
+
+def _col_from(meta: Dict[str, Any], raw: bytes) -> np.ndarray:
+    return np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"]).copy()
+
+
+def _sections(cols: Columns) -> Tuple[Dict[str, Any], bytes]:
+    """Pack columns into one payload with per-field (offset, size) sections."""
+    meta: Dict[str, Any] = {"fields": {}, "rows": num_rows(cols)}
+    buf = io.BytesIO()
+    for k, a in cols.items():
+        raw = np.ascontiguousarray(a).tobytes()
+        meta["fields"][k] = {**_col_meta(a), "off": buf.tell(), "len": len(raw)}
+        buf.write(raw)
+    return meta, buf.getvalue()
+
+
+def _read_sections(
+    header: Dict[str, Any], payload: bytes, projection: Optional[Sequence[str]]
+) -> Columns:
+    fields = header["fields"]
+    keys = list(fields) if projection is None else [k for k in projection if k in fields]
+    out: Columns = {}
+    for k in keys:
+        m = fields[k]
+        out[k] = _col_from(m, payload[m["off"] : m["off"] + m["len"]])
+    return out
+
+
+# ------------------------------------------------------------------------ layouts
+def _ser_row(cols: Columns, **kw: Any) -> SerializedBlock:
+    """Array-of-structs: interleave fields into a numpy structured array."""
+    n = num_rows(cols)
+    dt = np.dtype([(k, a.dtype, a.shape[1:]) for k, a in cols.items()])
+    rec = np.empty(n, dtype=dt)
+    for k, a in cols.items():
+        rec[k] = a
+    return SerializedBlock(
+        layout="row",
+        payload=rec.tobytes(),
+        header={"descr": np.lib.format.dtype_to_descr(dt), "rows": n},
+    )
+
+
+def _de_row(b: SerializedBlock, projection, selection) -> Columns:
+    dt = np.dtype(np.lib.format.descr_to_dtype(b.header["descr"]))
+    rec = np.frombuffer(b.payload, dtype=dt)
+    keys = list(dt.names) if projection is None else [k for k in projection if k in dt.names]
+    # row layout cannot avoid reading whole records: project after decode
+    cols = {k: np.ascontiguousarray(rec[k]) for k in keys}
+    if selection is not None and selection[0] not in cols:
+        cols_sel = {selection[0]: np.ascontiguousarray(rec[selection[0]])}
+        f, op, v = selection
+        idx = np.nonzero(_OPS[op](cols_sel[f], v))[0]
+        return take_rows(cols, idx)
+    return apply_selection(cols, selection)
+
+
+def _ser_columnar(cols: Columns, **kw: Any) -> SerializedBlock:
+    meta, payload = _sections(cols)
+    return SerializedBlock(layout="columnar", payload=payload, header=meta)
+
+
+def _de_columnar(b: SerializedBlock, projection, selection) -> Columns:
+    want = None
+    if projection is not None:
+        want = list(projection)
+        if selection is not None and selection[0] not in want:
+            want = want + [selection[0]]
+    cols = _read_sections(b.header, b.payload, want)
+    cols = apply_selection(cols, selection)
+    if projection is not None:
+        cols = {k: v for k, v in cols.items() if k in projection}
+    return cols
+
+
+def _ser_cpax(cols: Columns, level: int = 3, **kw: Any) -> SerializedBlock:
+    """Compressed PAX: columnar sections, zlib per field section."""
+    meta: Dict[str, Any] = {"fields": {}, "rows": num_rows(cols)}
+    buf = io.BytesIO()
+    for k, a in cols.items():
+        raw = zlib.compress(np.ascontiguousarray(a).tobytes(), level)
+        meta["fields"][k] = {**_col_meta(a), "off": buf.tell(), "len": len(raw)}
+        buf.write(raw)
+    return SerializedBlock(layout="cpax", payload=buf.getvalue(), header=meta)
+
+
+def _de_cpax(b: SerializedBlock, projection, selection) -> Columns:
+    fields = b.header["fields"]
+    want = list(fields) if projection is None else [k for k in projection if k in fields]
+    if selection is not None and selection[0] in fields and selection[0] not in want:
+        want = want + [selection[0]]
+    cols: Columns = {}
+    for k in want:
+        m = fields[k]
+        cols[k] = _col_from(m, zlib.decompress(b.payload[m["off"] : m["off"] + m["len"]]))
+    cols = apply_selection(cols, selection)
+    if projection is not None:
+        cols = {k: v for k, v in cols.items() if k in projection}
+    return cols
+
+
+def _ser_sorted(cols: Columns, key: Optional[str] = None, **kw: Any) -> SerializedBlock:
+    """Columnar layout sorted on ``key``; selection on key is a binary search."""
+    if key is None:
+        key = next(iter(cols))
+    order = np.argsort(cols[key], kind="stable")
+    cols = take_rows(cols, order)
+    meta, payload = _sections(cols)
+    meta["sort_key"] = key
+    return SerializedBlock(layout="sorted", payload=payload, header=meta)
+
+
+def _de_sorted(b: SerializedBlock, projection, selection) -> Columns:
+    key = b.header["sort_key"]
+    if selection is not None and selection[0] == key and selection[1] in ("==", "<", "<=", ">", ">="):
+        # index access: read only the key column, binary-search the row range
+        kcol = _read_sections(b.header, b.payload, [key])[key]
+        f, op, v = selection
+        lo, hi = 0, len(kcol)
+        if op == "==":
+            lo, hi = np.searchsorted(kcol, v, "left"), np.searchsorted(kcol, v, "right")
+        elif op == "<":
+            hi = np.searchsorted(kcol, v, "left")
+        elif op == "<=":
+            hi = np.searchsorted(kcol, v, "right")
+        elif op == ">":
+            lo = np.searchsorted(kcol, v, "right")
+        elif op == ">=":
+            lo = np.searchsorted(kcol, v, "left")
+        cols = _read_sections(b.header, b.payload, projection)
+        return {k: a[lo:hi] for k, a in cols.items()}
+    return _de_columnar(b, projection, selection)
+
+
+def _ser_packed(cols: Columns, **kw: Any) -> SerializedBlock:
+    """Device-ready packed LM block: fields are already fixed-shape 2-D arrays
+    (tokens/mask/positions of shape (rows, seq)); stored as raw sections so the
+    feeder can hand them to jax without any host-side transformation."""
+    meta, payload = _sections(cols)
+    return SerializedBlock(layout="packed", payload=payload, header=meta)
+
+
+_SERIALIZERS: Dict[str, Callable[..., SerializedBlock]] = {
+    "row": _ser_row,
+    "columnar": _ser_columnar,
+    "cpax": _ser_cpax,
+    "sorted": _ser_sorted,
+    "packed": _ser_packed,
+}
+
+_DESERIALIZERS: Dict[str, Callable[[SerializedBlock, Any, Any], Columns]] = {
+    "row": _de_row,
+    "columnar": _de_columnar,
+    "cpax": _de_cpax,
+    "sorted": _de_sorted,
+    "packed": _de_columnar,  # packed uses plain sections
+}
+
+
+def available_layouts() -> List[str]:
+    return sorted(_SERIALIZERS)
+
+
+def serialize_block(cols: Columns, layout: str, **kw: Any) -> SerializedBlock:
+    if layout not in _SERIALIZERS:
+        raise KeyError(f"unknown layout {layout!r}; have {available_layouts()}")
+    return _SERIALIZERS[layout](cols, **kw)
+
+
+def deserialize_block(
+    block: SerializedBlock,
+    projection: Optional[Sequence[str]] = None,
+    selection: Optional[Selection] = None,
+) -> Columns:
+    """Layout-aware read with projection/selection pushdown (paper Sec. VII)."""
+    if block.layout not in _DESERIALIZERS:
+        raise KeyError(f"unknown layout {block.layout!r}")
+    return _DESERIALIZERS[block.layout](block, projection, selection)

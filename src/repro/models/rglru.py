@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence:  r_t = sigmoid(W_a x_t + b_a)        (recurrence gate)
+             i_t = sigmoid(W_x x_t + b_x)        (input gate)
+             log a_t = -c * softplus(Lambda) * r_t
+             h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill runs the diagonal recurrence with an associative scan
+(O(S log S) depth, O(S) work); decode is the O(1) per-token update — the
+recurrent state is (B, W) per layer regardless of context, which is why
+recurrentgemma runs the ``long_500k`` cell.
+
+The full residual block is: conv1d + RG-LRU on one branch, gated by
+GeLU(linear) on the other (the "recurrent block" of the paper).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, RGLRUConfig
+from .params import ParamDef
+from .ssd import causal_conv1d
+
+
+def rglru_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    r = cfg.rglru or RGLRUConfig()
+    D = cfg.d_model
+    W = r.lru_width or D
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "in_x": ParamDef((D, W), ("embed", "ffn"), dt),
+        "in_gate": ParamDef((D, W), ("embed", "ffn"), dt),
+        "conv_w": ParamDef((r.conv_width, W), (None, "ffn"), dt),
+        "conv_b": ParamDef((W,), ("ffn",), dt, "zeros"),
+        "gate_a": ParamDef((W, W), ("ffn", None), dt),
+        "gate_x": ParamDef((W, W), ("ffn", None), dt),
+        "gate_a_b": ParamDef((W,), (None,), jnp.float32, "zeros"),
+        "gate_x_b": ParamDef((W,), (None,), jnp.float32, "zeros"),
+        "a_param": ParamDef((W,), (None,), jnp.float32, "a_param"),
+        "out": ParamDef((W, D), ("ffn", "embed"), dt, "scaled"),
+    }
+
+
+def _rglru_scan(log_a: jax.Array, gx: jax.Array,
+                init: Optional[jax.Array], seg: Optional[jax.Array]
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Associative scan of h_t = a_t h_{t-1} + gx_t over time.
+
+    log_a, gx: (B, S, W) fp32.  Returns (h (B,S,W), final_state (B,W)).
+    """
+    if seg is not None:
+        B, S = seg.shape
+        boundary = jnp.concatenate(
+            [jnp.zeros((B, 1), bool), seg[:, 1:] != seg[:, :-1]], axis=1)
+        log_a = jnp.where(boundary[..., None], -1e9, log_a)
+    if init is not None:
+        # fold the initial state in as a virtual step 0 contribution
+        gx = gx.at[:, 0].add(jnp.exp(log_a[:, 0]) * init.astype(gx.dtype))
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 + a2, jnp.exp(a2) * x1 + x2
+
+    a_cum, h = jax.lax.associative_scan(combine, (log_a, gx), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_mixer(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig, *,
+                seg: Optional[jax.Array] = None,
+                decode_state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full recurrent block.  x (B,S,D) -> (B,S,D).
+
+    decode_state: {"conv": (B,K-1,W), "h": (B,W)} for S==1 decode.
+    """
+    r = cfg.rglru or RGLRUConfig()
+    B, S, D = x.shape
+    W = r.lru_width or D
+
+    branch = x @ p["in_x"]                                     # (B,S,W)
+    gate = jax.nn.gelu((x @ p["in_gate"]).astype(jnp.float32), approximate=True)
+
+    conv_state = decode_state["conv"] if decode_state is not None else None
+    u, new_conv = causal_conv1d(branch, p["conv_w"], p["conv_b"], conv_state)
+
+    uf = u.astype(jnp.float32)
+    rt = jax.nn.sigmoid(uf @ p["gate_a"].astype(jnp.float32) + p["gate_a_b"])
+    it = jax.nn.sigmoid(uf @ p["gate_x"].astype(jnp.float32) + p["gate_x_b"])
+    c = r.c_exponent
+    log_a = -c * jax.nn.softplus(p["a_param"])[None, None, :] * rt  # (B,S,W)
+    gx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (it * uf)
+
+    if decode_state is not None:
+        h1 = (jnp.exp(log_a[:, 0]) * decode_state["h"].astype(jnp.float32)
+              + gx[:, 0])
+        h = h1[:, None]
+        new_state: Optional[Dict[str, jax.Array]] = {"conv": new_conv, "h": h1}
+    else:
+        init = None
+        h, final = _rglru_scan(log_a, gx, init, seg)
+        new_state = {"conv": new_conv, "h": final}
+
+    y = (h * gate).astype(x.dtype)
+    return y @ p["out"], new_state

@@ -1,0 +1,212 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked linear-attention form.
+
+Training/prefill uses the blocked SSD algorithm (paper arXiv:2405.21060):
+within chunks of length L the recurrence is computed as masked attention
+(quadratic in L, MXU-friendly); across chunks the (H, P, N) states are carried
+by a linear scan.  Decode is the O(1)-per-token recurrent update — this is
+what makes ``long_500k`` runnable for mamba2 (state size is independent of
+context length).
+
+Shapes follow the Mamba-2 reference:
+  u:  (B, S, D_in)  split from in_proj   x: (B, S, H, P)
+  B/C:(B, S, G, N)  dt: (B, S, H)        state: (B, H, P, N)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, SSMConfig
+from .params import ParamDef
+
+
+def ssd_dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    s = cfg.ssm or SSMConfig()
+    d_in = s.expand * cfg.d_model
+    nh = s.num_heads or d_in // s.head_dim
+    return d_in, nh, s.head_dim, s.num_groups, s.state_dim
+
+
+def ssd_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    s = cfg.ssm or SSMConfig()
+    D = cfg.d_model
+    d_in, nh, P, G, N = ssd_dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    conv_ch = d_in + 2 * G * N            # conv over [x, B, C]
+    return {
+        # in_proj -> [z (gate), xBC (conv'd), dt]
+        "in_proj": ParamDef((D, 2 * d_in + 2 * G * N + nh), ("embed", "heads"), dt),
+        "conv_w": ParamDef((s.conv_width, conv_ch), (None, "heads"), dt),
+        "conv_b": ParamDef((conv_ch,), ("heads",), dt, "zeros"),
+        "dt_bias": ParamDef((nh,), ("heads",), jnp.float32, "zeros"),
+        "a_log": ParamDef((nh,), ("heads",), jnp.float32, "ones"),
+        "d_skip": ParamDef((nh,), ("heads",), jnp.float32, "ones"),
+        "norm_scale": ParamDef((d_in,), ("heads",), jnp.float32, "zeros"),
+        "out_proj": ParamDef((d_in, D), ("heads", "embed"), dt, "scaled"),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum(a[..., j+1:i+1]) for j <= i.
+
+    a: (..., L) log-decays; returns (..., L, L) lower-triangular log decay
+    matrix with -inf above the diagonal.
+    """
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, *, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                seg: Optional[jax.Array] = None,
+                unroll: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Blocked SSD scan.
+
+    x (B,S,H,P), dt (B,S,H) post-softplus, a (H,) negative decay rates,
+    Bm/Cm (B,S,G,N).  Returns y (B,S,H,P) and final state (B,H,P,N).
+    ``seg`` (B,S) segment ids reset the state at packing boundaries by zeroing
+    the decay across a boundary.
+    """
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = min(chunk, S)
+    if S % L:
+        L = S
+    nc = S // L
+    rep = H // G
+
+    cdt = x.dtype                                     # compute dtype (bf16)
+    dA = dt * a[None, None, :]                       # (B,S,H) fp32 log decay
+    if seg is not None:
+        # zero carry-over across segment boundaries: make decay -inf there
+        boundary = jnp.concatenate(
+            [jnp.zeros((B, 1), bool), seg[:, 1:] != seg[:, :-1]], axis=1)
+        dA = jnp.where(boundary[..., None], -1e9, dA)
+    # fold dt into x (ZOH input); keep intra-chunk math in compute dtype
+    xb = (x * dt[..., None].astype(cdt)).reshape(B, nc, L, H, P)
+    dAb = dA.reshape(B, nc, L, H)
+    Bb = Bm.reshape(B, nc, L, G, N)
+    Cb = Cm.reshape(B, nc, L, G, N)
+    Bh = jnp.repeat(Bb, rep, axis=3)                  # (B,nc,L,H,N)
+    Ch = jnp.repeat(Cb, rep, axis=3)
+
+    # ---- intra-chunk (diagonal blocks): masked attention form
+    Ldec = jnp.exp(_segsum(dAb.transpose(0, 1, 3, 2)))        # (B,nc,H,L,L) fp32
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh)          # (B,nc,H,L,L)
+    y_diag = jnp.einsum("bchls,bchls,bcshp->bclhp",
+                        scores, Ldec.astype(cdt), xb)
+
+    # ---- chunk states: contribution of each chunk to its end-state
+    # (fp32 accumulation: the inter-chunk recurrence compounds over S/L steps)
+    cum = jnp.cumsum(dAb, axis=2)                               # (B,nc,L,H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)             # (B,nc,L,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn",
+                        Bh, decay_to_end.astype(cdt), xb,
+                        preferred_element_type=jnp.float32)     # (B,nc,H,P,N) f32
+
+    # ---- inter-chunk recurrence over nc (linear scan, tiny trip count)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # (B,nc,H) fp32
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                           # f32,(B,H)f32
+        new = carry * dec[..., None, None] + st
+        return new, carry                                       # emit state *entering* chunk
+
+    init = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final, entering = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=nc if unroll else 1)
+    entering = entering.transpose(1, 0, 2, 3, 4)                # (B,nc,H,P,N)
+
+    # ---- inter-chunk output: state entering the chunk read by C with decay
+    decay_from_start = jnp.exp(cum)                             # (B,nc,L,H)
+    y_off = jnp.einsum("bclhn,bclh,bchpn->bclhp",
+                       Ch, decay_from_start.astype(cdt), entering.astype(cdt))
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y.astype(cdt), final
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array, a: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrent update.  state (B,H,P,N); x (B,H,P); dt (B,H);
+    Bm/Cm (B,G,N).  Returns (y (B,H,P), new_state)."""
+    H, G = x.shape[1], Bm.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)                            # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dA = jnp.exp(dt * a[None, :])                               # (B,H)
+    upd = jnp.einsum("bhp,bhn->bhpn", x * dt[..., None], Bh)
+    new_state = state * dA[..., None, None].astype(state.dtype) + upd.astype(state.dtype)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch.astype(state.dtype))
+    return y.astype(x.dtype), new_state
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time.  x (B,S,C), w (K,C), b (C,).
+    ``state`` (B,K-1,C) carries the last K-1 inputs for decode; returns
+    (y, new_state)."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    pad = (jnp.zeros((B, K - 1, C), x.dtype) if state is None
+           else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)                      # (B,S+K-1,C)
+    y = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, S:, :] if K > 1 else jnp.zeros((B, 0, C), x.dtype)
+    return jax.nn.silu(y + b[None, None, :]), new_state
+
+
+def ssd_mixer(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig, *,
+              seg: Optional[jax.Array] = None,
+              decode_state: Optional[Dict[str, jax.Array]] = None
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full Mamba-2 block body (post-norm residual excluded).
+
+    Train/prefill: x (B,S,D) -> (B,S,D); decode (S==1): O(1) update against
+    ``decode_state`` {"conv": (B,K-1,conv_ch), "ssm": (B,H,P,N)}.
+    """
+    s = cfg.ssm or SSMConfig()
+    d_in, nh, P, G, N = ssd_dims(cfg)
+    B, S, D = x.shape
+
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt_raw = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])            # (B,S,nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                 # (nh,)
+
+    conv_state = decode_state["conv"] if decode_state is not None else None
+    xBC, new_conv = causal_conv1d(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    xh = xs.reshape(B, S, nh, P)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+
+    if decode_state is not None:
+        y1, new_ssm = ssd_decode_step(
+            decode_state["ssm"], xh[:, 0], dt[:, 0], a, Bm[:, 0], Cm[:, 0])
+        y = y1[:, None]
+        new_state: Optional[Dict[str, jax.Array]] = {"conv": new_conv, "ssm": new_ssm}
+    else:
+        y, final = ssd_chunked(xh, dt, a, Bm, Cm, chunk=s.chunk_size, seg=seg,
+                               unroll=cfg.unroll_scans)
+        new_state = {"conv": new_conv, "ssm": final}
+
+    y = y + xh * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    # gated RMSNorm (Mamba-2)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = (yf * (1.0 + p["norm_scale"][None, None, :])).astype(x.dtype)
+    return y @ p["out_proj"], new_state

@@ -1,0 +1,13 @@
+"""Ingest-time sampling operators (paper Sec. II-B, IX-A2).
+
+Five techniques evaluated in the paper: Bernoulli, simple random, systematic
+random, local stratified, global stratified.  Each emits the base data
+unchanged (label ``sample=0``) plus sample items (label ``sample=1``) so the
+plan can route them to different physical files — the paper's "in addition to
+collecting all tuples into a base file anyways".
+"""
+from .ops import (BernoulliSampleOp, ReservoirSampleOp, StratifiedSampleOp,
+                  SystematicSampleOp, UniformSampleOp)
+
+__all__ = ["BernoulliSampleOp", "ReservoirSampleOp", "StratifiedSampleOp",
+           "SystematicSampleOp", "UniformSampleOp"]

@@ -1,0 +1,163 @@
+"""Sampling ingestion operators."""
+from __future__ import annotations
+
+from typing import Any, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.items import Columns, Granularity, IngestItem, concat_columns, num_rows, take_rows
+from ..core.operators import IngestOp, register_op
+
+
+class _SamplerBase(IngestOp):
+    """Common shape: pass the base item through with sample=0; emit samples
+    with sample=1.  ``emit_base=False`` keeps only the samples (pure sample
+    extraction for e.g. skew estimation in co-partitioning)."""
+
+    name = "sample"
+    granularity_in = Granularity.CHUNK
+    granularity_out = Granularity.CHUNK
+
+    def __init__(self, emit_base: bool = True, seed: int = 0, **kw: Any) -> None:
+        super().__init__(emit_base=emit_base, seed=seed, **kw)
+        self.emit_base = emit_base
+        self._rng = np.random.default_rng(seed)
+
+    def _emit(self, item: IngestItem, sample_cols: Columns) -> Iterable[IngestItem]:
+        if self.emit_base:
+            yield item.with_label(self.name, 0)
+        yield IngestItem(sample_cols, item.granularity, item.labels,
+                         dict(item.meta)).with_label(self.name, 1)
+
+
+@register_op("bernoulli_sample")
+class BernoulliSampleOp(_SamplerBase):
+    """Independent coin flip per row with probability p (paper: probabilistic
+    replication of tuples into a separate physical file)."""
+
+    def __init__(self, p: float = 0.01, **kw: Any) -> None:
+        super().__init__(**kw)
+        self.params["p"] = p
+        self.p = p
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        cols = item.data
+        mask = self._rng.random(num_rows(cols)) < self.p
+        yield from self._emit(item, take_rows(cols, np.nonzero(mask)[0]))
+
+
+@register_op("uniform_sample")
+class UniformSampleOp(_SamplerBase):
+    """Simple random sample: exactly ``k`` rows without replacement per chunk."""
+
+    def __init__(self, k: int = 256, **kw: Any) -> None:
+        super().__init__(**kw)
+        self.params["k"] = k
+        self.k = k
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        cols = item.data
+        n = num_rows(cols)
+        idx = self._rng.choice(n, size=min(self.k, n), replace=False)
+        yield from self._emit(item, take_rows(cols, np.sort(idx)))
+
+
+@register_op("systematic_sample")
+class SystematicSampleOp(_SamplerBase):
+    """Every ``step``-th row from a random start (systematic random sampling)."""
+
+    def __init__(self, step: int = 100, **kw: Any) -> None:
+        super().__init__(**kw)
+        self.params["step"] = step
+        self.step = step
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        cols = item.data
+        n = num_rows(cols)
+        start = int(self._rng.integers(self.step)) if n >= self.step else 0
+        yield from self._emit(item, take_rows(cols, np.arange(start, n, self.step)))
+
+
+@register_op("reservoir_sample")
+class ReservoirSampleOp(_SamplerBase):
+    """Reservoir sampling across all input items; the reservoir is emitted once
+    at drain time (paper: "finally emitting the reservoir as samples in the
+    end").  Uses the standard single-pass Vitter algorithm vectorized per chunk."""
+
+    def __init__(self, capacity: int = 1024, **kw: Any) -> None:
+        super().__init__(**kw)
+        self.params["capacity"] = capacity
+        self.capacity = capacity
+        self._reservoir: Optional[Columns] = None
+        self._seen = 0
+        self._template: Optional[IngestItem] = None
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        cols = item.data
+        n = num_rows(cols)
+        self._template = item
+        if self._reservoir is None:
+            take = min(n, self.capacity)
+            self._reservoir = take_rows(cols, np.arange(take))
+            rest = take_rows(cols, np.arange(take, n))
+            self._seen = take
+            cols = rest
+            n = num_rows(cols)
+        if n:
+            # each incoming row i (global index seen+i) replaces a random slot
+            # with prob capacity/(seen+i+1)
+            gidx = self._seen + np.arange(n) + 1
+            accept = self._rng.random(n) < (self.capacity / gidx)
+            slots = self._rng.integers(0, self.capacity, size=n)
+            for i in np.nonzero(accept)[0]:
+                for k in self._reservoir:
+                    self._reservoir[k][slots[i]] = cols[k][i]
+            self._seen += n
+        if self.emit_base:
+            yield item.with_label(self.name, 0)
+
+    def set_input(self, items: Sequence[IngestItem]) -> None:
+        super().set_input(items)
+        base = self._outputs
+
+        def drained():
+            yield from base
+            if self._reservoir is not None and self._template is not None:
+                yield IngestItem(self._reservoir, Granularity.CHUNK,
+                                 self._template.labels, {}).with_label(self.name, 1)
+
+        self._outputs = drained()
+
+
+@register_op("stratified_sample")
+class StratifiedSampleOp(_SamplerBase):
+    """Stratified sampling on ``key``: pick ``fraction`` of each stratum
+    (proportional allocation) with at least ``min_per_stratum`` rows, so rare
+    strata are over-represented relative to their size (paper Sec. II-B).
+
+    Local mode samples each node's strata directly.  Global mode is expressed
+    in the *plan*: partition(key, scheme=field) with shuffle, then this op per
+    group — the runtime's shuffle barrier makes the strata global.
+    """
+
+    def __init__(self, key: str = "", fraction: float = 0.01,
+                 min_per_stratum: int = 8, shuffle_by: Optional[str] = None,
+                 **kw: Any) -> None:
+        super().__init__(**kw)
+        self.params.update(key=key, fraction=fraction,
+                           min_per_stratum=min_per_stratum)
+        if shuffle_by is not None:
+            self.params["shuffle_by"] = shuffle_by
+        self.key, self.fraction, self.min_per_stratum = key, fraction, min_per_stratum
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        cols = item.data
+        vals = cols[self.key]
+        picks: List[np.ndarray] = []
+        for v in np.unique(vals):
+            idx = np.nonzero(vals == v)[0]
+            k = max(self.min_per_stratum, int(len(idx) * self.fraction))
+            k = min(k, len(idx))
+            picks.append(np.sort(self._rng.choice(idx, size=k, replace=False)))
+        sel = np.concatenate(picks) if picks else np.array([], dtype=np.int64)
+        yield from self._emit(item, take_rows(cols, sel))

@@ -1,0 +1,138 @@
+"""Continuous batching: iteration-level scheduling over fixed decode slots.
+
+The serving analogue of the ingest runtime's work-stealing (DESIGN.md §5):
+a fixed batch of B decode slots runs one jitted serve step per iteration;
+finished requests free their slot immediately and the next queued request is
+prefilled into it — no waiting for the whole wave to drain (vLLM-style
+iteration-level scheduling, minus paging: slots own fixed-depth caches).
+
+Mechanics:
+  * one (B, ...) cache tree lives on device; per-slot positions are a (B,)
+    vector (decode_step's per-row path: scatter cache writes, per-row rope);
+  * admission prefills a request with batch 1 and writes its cache into the
+    slot via indexed tree update;
+  * empty slots decode a pad token against their own garbage — masked out.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.model import cache_defs, decode_step, prefill
+from ..models.params import init_params
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (T,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the batcher
+    generated: List[int] = field(default_factory=list)
+    slot: int = -1
+    t_enqueue: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ModelConfig, params: Any, *, num_slots: int = 4,
+                 max_len: int = 512) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.B = num_slots
+        self.max_len = max_len
+        self._prefill1 = jax.jit(lambda p, b: prefill(cfg, p, b, max_len))
+        self._step = jax.jit(
+            lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+        # device state: batched cache + per-slot bookkeeping
+        self.cache = init_params(jax.random.PRNGKey(0),
+                                 cache_defs(cfg, num_slots, max_len))
+        self.pos = np.zeros(num_slots, np.int32)
+        self.tokens = np.zeros((num_slots, 1), np.int32)
+        self.active: List[Optional[Request]] = [None] * num_slots
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self.steps = 0
+
+    # ----------------------------------------------------------------- admit
+    def submit(self, req: Request) -> None:
+        req.t_enqueue = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.B):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            T = len(req.prompt)
+            batch = {
+                "tokens": jnp.asarray(req.prompt[None, :]),
+                "segments": jnp.ones((1, T), jnp.int32),
+                "positions": jnp.arange(T, dtype=jnp.int32)[None, :],
+            }
+            if "cross" in self.cfg.pattern + self.cfg.remainder:
+                batch["encoder_embeds"] = jnp.zeros(
+                    (1, self.cfg.cross_attn_kv_len, self.cfg.d_model),
+                    self.cfg.activation_dtype)
+            logits, cache1 = self._prefill1(self.params, batch)
+            first = int(jnp.argmax(logits[0, -1]))
+            # write the single-request cache into this slot.  Scanned pattern
+            # caches carry a leading LAYERS dim — batch is axis 1 there,
+            # axis 0 for the unrolled remainder caches.
+            self.cache = {
+                "pattern": jax.tree.map(
+                    lambda full, one: full.at[:, slot].set(one[:, 0]),
+                    self.cache["pattern"], cache1["pattern"]),
+                "remainder": jax.tree.map(
+                    lambda full, one: full.at[slot].set(one[0]),
+                    self.cache["remainder"], cache1["remainder"]),
+            }
+            req.slot = slot
+            req.generated = [first]
+            req.t_first_token = time.perf_counter()
+            self.active[slot] = req
+            self.pos[slot] = T
+            self.tokens[slot, 0] = first
+
+    # ------------------------------------------------------------------ step
+    def _retire(self, slot: int) -> None:
+        req = self.active[slot]
+        req.t_done = time.perf_counter()
+        self.done.append(req)
+        self.active[slot] = None
+
+    def step(self) -> None:
+        """One decode iteration across all occupied slots."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
+        self.steps += 1
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.generated.append(int(nxt[slot]))
+            self.pos[slot] += 1
+            self.tokens[slot, 0] = nxt[slot]
+            hit_eos = (req.eos_id is not None
+                       and req.generated[-1] == req.eos_id)
+            if len(req.generated) >= req.max_new_tokens or hit_eos:
+                self._retire(slot)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drive until queue + slots drain.  Returns finished requests."""
+        while (self.queue or any(r is not None for r in self.active)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.done

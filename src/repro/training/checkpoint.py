@@ -1,0 +1,162 @@
+"""Sharded, mesh-elastic checkpointing with an async writer.
+
+Layout:  <dir>/step_<N>/
+           manifest.json        — tree structure, shapes, dtypes, logical axes
+           <leafpath>.npy       — one file per parameter leaf (full array or
+                                  this process's shard range)
+
+Elasticity: leaves are stored with their *logical* axes, not mesh-relative
+shards, so a checkpoint written on a (16,16) mesh restores onto (2,16,16) or
+a single CPU device — restore places each leaf with the sharding the *new*
+mesh derives from the same logical axes (DESIGN.md §5).  This is what lets a
+job lose a pod and restart on fewer chips.
+
+The async writer snapshots device arrays to host (blocking only for the
+device->host copy), then persists on a background thread — the train loop
+continues into the next step while the previous checkpoint lands on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten_with_paths(tree: Any, is_leaf=None) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)[0]
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        out.append((SEP.join(keys), leaf))
+    return out
+
+
+def _treedef_of(tree: Any):
+    return jax.tree_util.tree_structure(tree)
+
+
+class CheckpointManager:
+    """Save/restore + retention + async writes."""
+
+    def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, *, blocking: bool = False) -> str:
+        self.wait()  # one in-flight write at a time
+        host_leaves = [(k, np.asarray(jax.device_get(v)))
+                       for k, v in _flatten_with_paths(tree)]
+        target = os.path.join(self.dir, f"step_{step:09d}")
+
+        def write():
+            try:
+                tmp = target + ".tmp"
+                os.makedirs(tmp, exist_ok=True)
+                manifest = {"step": step, "leaves": {}}
+                for key, arr in host_leaves:
+                    fname = key.replace(SEP, "__") + ".npy"
+                    np.save(os.path.join(tmp, fname), arr)
+                    manifest["leaves"][key] = {
+                        "file": fname, "shape": list(arr.shape),
+                        "dtype": str(arr.dtype)}
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(target):
+                    shutil.rmtree(target)
+                os.rename(tmp, target)  # atomic publish
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if self.async_write and not blocking:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+            if self._error:
+                raise self._error
+        return target
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # -------------------------------------------------------------- restore
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m and os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any,
+                place: Optional[Callable[[str, np.ndarray], Any]] = None) -> Any:
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``place(key, host_array)`` lets the caller put
+        each leaf onto devices with mesh-specific sharding (elastic restore);
+        default returns host numpy arrays."""
+        self.wait()
+        src = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(src, "manifest.json")) as f:
+            manifest = json.load(f)
+        keys = [k for k, _ in _flatten_with_paths(like)]
+        missing = [k for k in keys if k not in manifest["leaves"]]
+        if missing:
+            raise KeyError(f"checkpoint step {step} missing leaves: {missing[:5]}")
+        leaves = []
+        for k in keys:
+            meta = manifest["leaves"][k]
+            arr = np.load(os.path.join(src, meta["file"]))
+            leaves.append(place(k, arr) if place else arr)
+        return jax.tree_util.tree_unflatten(_treedef_of(like), leaves)
+
+
+def place_on_mesh(mesh, specs_tree: Any) -> Callable[[str, np.ndarray], Any]:
+    """Build a ``place`` callback that shards each leaf per its PartitionSpec
+    on ``mesh`` — the elastic-restore path."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    spec_by_key = dict(_flatten_with_paths(
+        specs_tree, is_leaf=lambda x: isinstance(x, PartitionSpec)))
+
+    def place(key: str, arr: np.ndarray):
+        spec = spec_by_key.get(key)
+        if spec is None:
+            return jax.device_put(arr)
+        return jax.device_put(arr, NamedSharding(mesh, spec))
+
+    return place

@@ -1,0 +1,67 @@
+"""Int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+On a (pod, data, model) mesh the gradient reduction crosses the DCN once per
+step; at 1 T-parameter scale that link is the bottleneck.  Standard remedy
+(1-bit Adam / EF-SGD family): quantize the cross-pod contribution to int8
+with a per-tensor scale, accumulate the quantization error locally, and add
+it back into the next step's gradient — unbiased in the long run, 4x less
+DCN traffic than fp32 (2x vs bf16).
+
+Usage (see make_compressed_train_step):
+    ef   = ef_init(params)
+    g_q, ef = ef_compress(grads, ef)       # before the cross-pod reduce
+    grads   = ef_decompress(g_q)           # after it
+
+The quantize/dequantize pair runs inside the jitted step; under pjit the
+all-reduce of the int8 tensor is what crosses the DCN.  Error-feedback state
+is sharded like the gradients (it IS a gradient-shaped tree).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params: Any) -> Any:
+    """Zero error-feedback residual, shaped/sharded like the gradients."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def ef_compress(grads: Any, ef_state: Any) -> Tuple[Any, Any]:
+    """Quantize (grad + carried error); new error = input - dequantized."""
+    def per_leaf(g, e):
+        x = g.astype(jnp.float32) + e
+        q, scale = _quantize(x)
+        deq = q.astype(jnp.float32) * scale
+        return (q, scale), x - deq
+
+    flat = jax.tree.map(per_leaf, grads, ef_state)
+    is_pair = lambda t: isinstance(t, tuple) and len(t) == 2 and isinstance(t[0], tuple)
+    qs = jax.tree.map(lambda t: t[0], flat, is_leaf=is_pair)
+    new_ef = jax.tree.map(lambda t: t[1], flat, is_leaf=is_pair)
+    return qs, new_ef
+
+
+def ef_decompress(qs: Any) -> Any:
+    """(q, scale) tree -> fp32 gradient tree."""
+    is_q = lambda t: (isinstance(t, tuple) and len(t) == 2
+                      and getattr(t[0], "dtype", None) == jnp.int8)
+    return jax.tree.map(lambda t: t[0].astype(jnp.float32) * t[1], qs,
+                        is_leaf=is_q)
+
+
+def compression_ratio(params: Any) -> float:
+    """Bytes on the cross-pod link: int8+scale vs fp32."""
+    n = sum(p.size for p in jax.tree.leaves(params))
+    k = len(jax.tree.leaves(params))
+    return (n * 1 + k * 4) / (n * 4)

@@ -1,0 +1,146 @@
+"""Train / serve step builders: loss, grads, optimizer update, metrics.
+
+``make_train_step(cfg)`` returns a pure function
+    (params, opt_state, batch, rng) -> (params, opt_state, metrics)
+suitable for ``jax.jit`` with in/out shardings from the launch layer.
+
+The cross-entropy is computed in sequence chunks (``loss_chunk``) so the
+(B, S, V) logits tensor never materializes at once — with V up to 256 k this
+is the difference between fitting and OOM on a 16 GB chip.  FLOPs are
+unchanged (same matmuls, scanned), so the roofline's compute term is honest.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.layers import unembed
+from ..models.model import decode_step, forward, prefill
+from .optim import make_optimizer
+
+
+def _chunked_xent(cfg: ModelConfig, params: Dict[str, Any], hidden: jax.Array,
+                  labels: jax.Array, valid: jax.Array, chunk: int,
+                  constrain=None) -> Tuple[jax.Array, jax.Array]:
+    """Sum NLL + count over valid positions, scanning over sequence chunks."""
+    B, S, D = hidden.shape
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    hc = hidden.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    vc = valid.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        h, l, v = xs
+        logits = unembed(params["embed"], h, cfg)              # (B, chunk, V) fp32
+        if constrain is not None:
+            # pin (batch -> data, vocab -> model): without this, a tied
+            # embedding's FSDP-sharded contracting dim makes GSPMD replicate
+            # the batch through the loss/backward (verified on gemma-7b)
+            logits = constrain("logits", logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        nll = jnp.where(v, lse - picked, 0.0)
+        nloss, ncount = carry
+        return (nloss + nll.sum(), ncount + v.sum()), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, vc.astype(jnp.float32)), unroll=n if cfg.unroll_scans else 1)
+    return loss_sum, count
+
+
+def loss_fn(cfg: ModelConfig, params: Dict[str, Any], batch: Dict[str, jax.Array],
+            *, loss_chunk: int = 1024, moe_aux_weight: float = 0.01,
+            constrain=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean next-token NLL over valid (segment>0) positions + MoE aux loss."""
+    hidden, moe_aux = forward(cfg, params, batch, constrain=constrain)
+    labels = batch["labels"]
+    valid = (batch["segments"] > 0) & (labels >= 0)
+    loss_sum, count = _chunked_xent(cfg, params, hidden, labels,
+                                    valid, loss_chunk, constrain)
+    xent = loss_sum / jnp.maximum(count, 1.0)
+    total = xent + moe_aux_weight * moe_aux
+    return total, {"loss": total, "xent": xent, "moe_aux": moe_aux,
+                   "tokens": count}
+
+
+def make_train_step(cfg: ModelConfig, *, loss_chunk: int = 1024,
+                    grad_accum: int = 1, optimizer_kw: Optional[Dict[str, Any]] = None,
+                    constrain=None, grad_shardings=None) -> Callable:
+    """Build the jit-able train step (with optional gradient accumulation:
+    the global batch is split into ``grad_accum`` microbatches scanned
+    sequentially — the standard activation-memory lever).
+
+    ``constrain(name, x)`` optionally pins activation shardings (supplied by
+    the launch layer, which knows the mesh)."""
+    _, opt_update, _ = make_optimizer(cfg.optimizer, **(optimizer_kw or {}))
+
+    def single_loss(params, batch):
+        return loss_fn(cfg, params, batch, loss_chunk=loss_chunk,
+                       constrain=constrain)
+
+    def _pin_grads(grads):
+        # Pin gradient shardings to the parameter shardings so GSPMD lowers
+        # the data-axis gradient reduction as reduce-scatter fused into the
+        # FSDP layout instead of a full all-reduce (the standard FSDP fix;
+        # saves ~half the gradient collective traffic).
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                            grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                single_loss, has_aux=True)(params, batch)
+            grads = _pin_grads(grads)
+        else:
+            B = batch["tokens"].shape[0]
+            mb = B // grad_accum
+            micro = jax.tree.map(
+                lambda x: x.reshape(grad_accum, mb, *x.shape[1:])
+                if x.ndim >= 1 and x.shape[0] == B else x, batch)
+
+            def accum(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(single_loss, has_aux=True)(
+                    params, mbatch)
+                g = _pin_grads(g)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), ms = jax.lax.scan(accum, (g0, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+            metrics["loss"] = loss
+        new_params, new_opt, opt_metrics = opt_update(grads, opt_state, params)
+        metrics.update(opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, constrain=None) -> Callable:
+    """One-token decode step: (params, cache, tokens (B,1), pos) ->
+    (next_token (B,1), logits, cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = decode_step(cfg, params, cache, tokens, pos,
+                                        constrain=constrain)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, constrain=None) -> Callable:
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch, max_len, constrain=constrain)
+
+    return prefill_step

@@ -1,0 +1,19 @@
+import os
+import sys
+
+# repo-local imports without installation
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def store(tmp_path):
+    from repro.core import DataStore
+    return DataStore(str(tmp_path / "store"), nodes=["n0", "n1", "n2", "n3"])

@@ -1,0 +1,101 @@
+"""Unit tests: ingest data items, labels/lineage, the operator iterator API."""
+import numpy as np
+import pytest
+
+from repro.core import IngestOp, Label, OperatorFailure, registered_ops, resolve_op
+from repro.core.items import Granularity, IngestItem, concat_columns, matches, num_rows
+from repro.core.operators import MaterializeOp, PassThroughOp
+
+
+def make_item(n=10, gran=Granularity.CHUNK):
+    return IngestItem({"a": np.arange(n), "b": np.ones(n)}, gran)
+
+
+def item_cols(it):
+    return it.data
+
+
+class TestItems:
+    def test_labels_accumulate_lineage(self):
+        it = make_item().with_label("parser", 0).with_label("replicate", 2)
+        assert [l.op for l in it.labels] == ["parser", "replicate"]
+        assert matches(it, {"replicate": 2})
+        assert not matches(it, {"replicate": 1})
+
+    def test_lineage_filename_encodes_labels_in_order(self):
+        it = make_item().with_label("parser", 3).with_label("serialize", "pax")
+        name = it.lineage_name()
+        assert name.index("parser") < name.index("serialize")
+        assert "pax" in name
+
+    def test_predicate_callable(self):
+        it = make_item().with_label("parser", 7)
+        assert matches(it, {"parser": lambda v: v > 5})
+        assert not matches(it, {"parser": lambda v: v > 9})
+
+    def test_concat_and_rows(self):
+        a, b = make_item(4), make_item(6)
+        cols = concat_columns([a.data, b.data])
+        assert num_rows(cols) == 10
+
+    def test_record_granularity_is_chunk_of_one(self):
+        it = make_item(1, Granularity.RECORD)
+        assert it.nrows() == 1
+
+    def test_checksum_tracks_content(self):
+        a, b = make_item(5), make_item(5)
+        assert a.checksum() == b.checksum()
+        c = IngestItem({"a": np.arange(5) + 1, "b": np.ones(5)},
+                       Granularity.CHUNK)
+        assert a.checksum() != c.checksum()
+
+
+class TestOperatorAPI:
+    def test_iterator_protocol(self):
+        from dataclasses import replace
+
+        class Doubler(IngestOp):
+            name = "double"
+
+            def process(self, item):
+                yield replace(item, data={k: v * 2 for k, v in
+                                          item.data.items()}).with_label(
+                    self.name, 1)
+
+        op = Doubler()
+        op.initialize()
+        op.setInput([make_item(3)])
+        outs = []
+        while op.hasNext():
+            outs.append(op.next())
+        op.finalize()
+        assert len(outs) == 1
+        assert outs[0].data["a"].tolist() == [0, 2, 4]
+        assert op._finalized_ok
+
+    def test_registry_resolves_builtins(self):
+        names = registered_ops()
+        for required in ("parser", "filter", "project", "replicate",
+                         "partition", "chunk", "order", "serialize",
+                         "locate", "upload", "erasure", "pack"):
+            assert required in names, required
+        op = resolve_op("filter", predicate=("a", ">", 2))
+        assert isinstance(op, IngestOp)
+
+    def test_passthrough_labels_failure(self):
+        op = PassThroughOp(replaces="broken")
+        outs = op.run([make_item(2)])
+        assert outs[0].labels[-1].value == -1  # paper: dummy labels items -1
+
+    def test_parallel_mode_equals_serial(self):
+        from repro.core.ops_format import SerializeOp
+        items = [make_item(50) for _ in range(8)]
+        ser = SerializeOp(layout="columnar")
+        ser.mode = ser.mode.__class__.SERIAL
+        out_serial = {o.labels[-1].value if o.labels else i
+                      for i, o in enumerate(ser.clone().run(list(items)))}
+        par = SerializeOp(layout="columnar")
+        assert par.cpu_heavy  # serialize defaults to parallel (paper Sec VI-A)
+        out_par = {o.labels[-1].value if o.labels else i
+                   for i, o in enumerate(par.run(list(items)))}
+        assert len(out_serial) == len(out_par)

@@ -1,0 +1,129 @@
+"""The declarative language (DSL + SQL-ish text) and the rule optimizer."""
+import numpy as np
+import pytest
+
+from repro.core import (DataStore, IngestionOptimizer, IngestPlan, chain_stage,
+                        create_stage, format_, parse_ingestion_script, select)
+from repro.core import store as store_stmt
+from repro.core.items import Granularity, IngestItem
+from repro.core.operators import MaterializeOp
+from repro.core.runtime import RuntimeEngine
+
+
+def lineitem_items(n=2000, shards=4):
+    from repro.data.generators import as_file_items, gen_lineitem
+    return as_file_items(gen_lineitem(n), shards)
+
+
+class TestDSL:
+    def test_select_format_store_compile(self, store):
+        p = IngestPlan("t")
+        s1 = select(p, where=("quantity", ">", 10), replicate=2)
+        s2 = format_(p, s1, chunk={"target_rows": 256}, serialize="columnar")
+        s3 = store_stmt(p, s2, locate="roundrobin", upload=store)
+        create_stage(p, using=[s1, s2, s3])
+        sps = p.compile()
+        assert len(sps) == 1
+        names = [type(o).__name__ for o in sps[0].ops]
+        assert "FilterOp" in names and "SerializeOp" in names
+
+    def test_statement_granularity_validation(self):
+        p = IngestPlan("bad")
+        # ORDER (chunk-granularity) after serialize (block) must fail validation
+        s1 = select(p)
+        s2 = format_(p, s1, serialize="columnar")
+        s3 = format_(p, s2, order={"key": "a"})
+        create_stage(p, using=[s1, s2, s3])
+        with pytest.raises(Exception):
+            p.compile()
+
+    def test_stage_routing_predicates(self, store):
+        p = IngestPlan("routes")
+        s1 = select(p, replicate=2)
+        s2 = format_(p, s1, serialize="columnar")
+        s3 = format_(p, s1, serialize="row")
+        st = store_stmt(p, s2, s3, upload=store)
+        create_stage(p, using=[s1], name="a")
+        chain_stage(p, to=["a"], using=[s2], where={"replicate": 1}, name="b")
+        chain_stage(p, to=["a"], using=[s3], where={"replicate": 2}, name="c")
+        chain_stage(p, to=["b", "c"], using=[st], name="d")
+        sps = p.compile()
+        assert [sp.name for sp in sps] == ["a", "b", "c", "d"]
+        assert sps[1].predicates == {"replicate": 1}
+
+
+class TestTextFrontend:
+    def test_paper_syntax_round_trip(self, store):
+        script = """
+        s1 = SELECT * FROM input USING parser REPLICATE BY 2;
+        s2 = FORMAT s1 CHUNK BY 1000 SERIALIZE AS columnar;
+        s3 = STORE s2 LOCATE USING roundrobin UPLOAD TO target;
+        CREATE STAGE a USING s1;
+        CHAIN STAGE b TO a USING s2,s3 WHERE l_replicate=1;
+        """
+        plan = parse_ingestion_script(script, env={"target": store})
+        sps = plan.compile()
+        assert [sp.name for sp in sps] == ["a", "b"]
+        assert sps[1].predicates == {"replicate": 1}
+
+    def test_size_suffixes(self, store):
+        script = """
+        s1 = SELECT * FROM input;
+        s2 = FORMAT s1 CHUNK BY 100mb;
+        CREATE STAGE a USING s1,s2;
+        """
+        plan = parse_ingestion_script(script, env={"target": store})
+        ops = plan.compile()[0].ops
+        chunk = [o for o in ops if o.name == "chunk"][0]
+        assert chunk.params.get("target_bytes") == 100 << 20
+
+
+class TestOptimizer:
+    def test_reorder_pushes_replicate_late(self):
+        p = IngestPlan("r")
+        s1 = select(p, replicate=3, where=("quantity", ">", 25))
+        create_stage(p, using=[s1])
+        sps = IngestionOptimizer().optimize(p.compile())
+        ops = [o for o in sps[0].ops if not isinstance(o, MaterializeOp)]
+        kinds = [o.name for o in ops]
+        # replicate (expander) must come after filter (reducer)
+        assert kinds.index("filter") < kinds.index("replicate")
+
+    def test_reordered_plan_is_equivalent(self, tmp_path):
+        items = lineitem_items()
+        totals = []
+        for optimize in (False, True):
+            ds = DataStore(str(tmp_path / f"s{optimize}"), nodes=["n0", "n1"])
+            p = IngestPlan("eq")
+            s1 = select(p, replicate=2, where=("quantity", ">", 25))
+            s2 = format_(p, s1, chunk={"target_rows": 128}, serialize="columnar")
+            s3 = store_stmt(p, s2, upload=ds)
+            create_stage(p, using=[s1, s2, s3])
+            eng = RuntimeEngine(ds)
+            eng.run(p, [IngestItem(dict(i.data), i.granularity)
+                        for i in items], optimize=optimize)
+            totals.append(sum(ds.read_item(e.block_id).nrows()
+                              for e in ds.blocks()))
+        assert totals[0] == totals[1] > 0
+
+    def test_pipeline_blocks_split_at_granularity_change(self):
+        p = IngestPlan("pipe")
+        s1 = select(p, where=("quantity", ">", 10))
+        s2 = format_(p, s1, chunk={"target_rows": 64}, serialize="columnar")
+        create_stage(p, using=[s1, s2])
+        sps = IngestionOptimizer().optimize(p.compile())
+        blocks = sps[0].pipeline_blocks
+        assert len(blocks) >= 2  # serialize (CHUNK->BLOCK) forces a barrier
+        flat = [i for b in blocks for i in b]
+        assert flat == sorted(flat)
+
+    def test_rules_fire_until_fixpoint(self):
+        p = IngestPlan("fx")
+        s1 = select(p, replicate=2)
+        s2 = format_(p, s1, chunk={"target_rows": 64})
+        create_stage(p, using=[s1, s2])
+        opt = IngestionOptimizer()
+        once = opt.optimize(p.compile())
+        twice = opt.optimize(once)
+        assert [type(o).__name__ for o in once[0].ops] == \
+               [type(o).__name__ for o in twice[0].ops]

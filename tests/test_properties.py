@@ -1,0 +1,165 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.erasure import ReedSolomon
+from repro.erasure.gf256 import GF256
+
+FAST = settings(max_examples=25, deadline=None,
+                suppress_health_check=[HealthCheck.function_scoped_fixture])
+
+
+# ------------------------------------------------------------------ GF(2^8)
+class TestGF256:
+    @FAST
+    @given(st.integers(1, 255), st.integers(1, 255), st.integers(1, 255))
+    def test_field_axioms(self, a, b, c):
+        A, B, C = (np.array([x], np.uint8) for x in (a, b, c))
+        assert GF256.mul(A, B) == GF256.mul(B, A)
+        assert GF256.mul(A, GF256.mul(B, C)) == GF256.mul(GF256.mul(A, B), C)
+        # distributivity over xor
+        assert GF256.mul(A, B ^ C) == (GF256.mul(A, B) ^ GF256.mul(A, C))
+
+    @FAST
+    @given(st.integers(1, 255))
+    def test_inverse(self, a):
+        A = np.array([a], np.uint8)
+        inv = GF256.inv(A)
+        assert GF256.mul(A, inv) == np.array([1], np.uint8)
+
+    @FAST
+    @given(st.integers(2, 6), st.integers(1, 3), st.integers(0, 2**31 - 1))
+    def test_matrix_inverse_roundtrip(self, k, m, seed):
+        rng = np.random.default_rng(seed)
+        rs = ReedSolomon(k, m)
+        G = np.concatenate([np.eye(k, dtype=np.uint8), rs.C], axis=0)
+        rows = rng.permutation(k + m)[:k]
+        A = G[sorted(rows)]
+        A_inv = GF256.mat_inv(A)
+        assert (GF256.matmul(A_inv, A) == np.eye(k, dtype=np.uint8)).all()
+
+
+# -------------------------------------------------------------- Reed-Solomon
+class TestReedSolomon:
+    @FAST
+    @given(st.integers(2, 8), st.integers(1, 4), st.integers(0, 2**31 - 1),
+           st.integers(16, 400))
+    def test_survives_any_m_erasures(self, k, m, seed, L):
+        """THE erasure-coding invariant: any <= m lost rows are recoverable."""
+        rng = np.random.default_rng(seed)
+        rs = ReedSolomon(k, m)
+        data = rng.integers(0, 256, (k, L)).astype(np.uint8)
+        parity = rs.encode(data)
+        full = np.concatenate([data, parity], axis=0)
+        lost = rng.permutation(k + m)[:m]
+        shards = {i: full[i] for i in range(k + m) if i not in set(lost)}
+        for pos in lost:
+            rec = rs.recover_block(int(pos), dict(shards))
+            assert (rec == full[pos]).all(), f"row {pos} mismatch"
+
+    @FAST
+    @given(st.integers(0, 2**31 - 1))
+    def test_kernel_path_matches_numpy_path(self, seed):
+        rng = np.random.default_rng(seed)
+        rs_np = ReedSolomon(4, 2, use_pallas=False)
+        rs_pl = ReedSolomon(4, 2, use_pallas=True)
+        data = rng.integers(0, 256, (4, 256)).astype(np.uint8)
+        assert (rs_np.encode(data) == rs_pl.encode(data)).all()
+
+
+# ------------------------------------------------------------------- packing
+class TestPackingConservation:
+    @FAST
+    @given(st.lists(st.integers(1, 300), min_size=1, max_size=40),
+           st.integers(64, 256), st.integers(0, 2**31 - 1))
+    def test_packing_conserves_tokens(self, doc_lens, seq_len, seed):
+        """No token is lost or duplicated by the packer (docs longer than
+        seq_len are split, not dropped)."""
+        from repro.core.ops_format import PackOp
+        from repro.core.items import Granularity, IngestItem
+
+        rng = np.random.default_rng(seed)
+        docs = [rng.integers(1, 1000, L).astype(np.int32) for L in doc_lens]
+        cols = {"tokens": np.array(docs, dtype=object),
+                "length": np.array(doc_lens, np.int32)}
+        op = PackOp(seq_len=seq_len, rows_per_block=4, pad_id=0)
+        outs = op.run([IngestItem(cols, Granularity.CHUNK)])
+        total_in = sum(doc_lens)
+        total_out = 0
+        for it in outs:
+            blk = it.data
+            cols_out = blk if isinstance(blk, dict) else None
+            assert cols_out is not None
+            mask = cols_out["segment_ids"] > 0
+            total_out += int(mask.sum())
+            # positions restart within each segment
+            toks = cols_out["tokens"]
+            assert toks.shape[1] == seq_len
+        assert total_out == total_in
+
+    @FAST
+    @given(st.lists(st.integers(1, 200), min_size=2, max_size=30),
+           st.integers(0, 2**31 - 1))
+    def test_packed_segments_do_not_interleave(self, doc_lens, seed):
+        from repro.core.ops_format import PackOp
+        from repro.core.items import Granularity, IngestItem
+
+        rng = np.random.default_rng(seed)
+        docs = [rng.integers(1, 1000, L).astype(np.int32) for L in doc_lens]
+        cols = {"tokens": np.array(docs, dtype=object),
+                "length": np.array(doc_lens, np.int32)}
+        op = PackOp(seq_len=128, rows_per_block=4, pad_id=0)
+        for it in op.run([IngestItem(cols, Granularity.CHUNK)]):
+            seg = it.data["segment_ids"]
+            for row in seg:
+                nz = row[row > 0]
+                # segment ids are non-decreasing within a row (contiguous runs)
+                assert (np.diff(nz) >= 0).all()
+
+
+# ----------------------------------------------------------- access invariants
+class TestAccessInvariants:
+    @FAST
+    @given(st.integers(2, 6), st.integers(0, 2**31 - 1))
+    def test_split_by_key_is_a_partition(self, num_tasks, seed):
+        import tempfile
+        from repro.core import DataAccess, DataStore, IngestPlan, create_stage, format_, ingest, select
+        from repro.core import store as store_stmt
+        from repro.data.generators import as_file_items, gen_lineitem
+
+        tmp = tempfile.mkdtemp()
+        ds = DataStore(tmp, nodes=["n0", "n1"])
+        p = IngestPlan("t")
+        s1 = select(p)
+        s2 = format_(p, s1, partition={"scheme": "hash", "key": "suppkey",
+                                       "num_partitions": 5},
+                     chunk={"target_rows": 128}, serialize="columnar")
+        s3 = store_stmt(p, s2, upload=ds)
+        create_stage(p, using=[s1, s2, s3])
+        ingest(p, as_file_items(gen_lineitem(600, seed=seed % 1000), 2), ds)
+
+        acc = DataAccess(ds)
+        splits = acc.split_by_key("partition", num_tasks=num_tasks)
+        ids = [e.block_id for s in splits for e in s.blocks]
+        assert len(ids) == len(set(ids))            # disjoint
+        assert set(ids) == {e.block_id for e in acc.entries}  # exhaustive
+
+
+# -------------------------------------------------------- label round-trips
+class TestLineage:
+    @FAST
+    @given(st.lists(st.tuples(st.sampled_from(["parser", "replicate", "chunk",
+                                               "serialize", "locate"]),
+                              st.integers(0, 99)), min_size=1, max_size=8))
+    def test_lineage_name_preserves_order(self, labels):
+        from repro.core.items import Granularity, IngestItem
+        it = IngestItem(b"x", Granularity.FILE)
+        for op, v in labels:
+            it = it.with_label(op, v)
+        name = it.lineage_name()
+        parts = name.split("_")
+        assert len(parts) == len(labels)
+        for (op, v), part in zip(labels, parts):
+            assert part.startswith(op)

@@ -1,0 +1,122 @@
+"""Runtime engine: parallelism, work stealing, in-flight + post-ingestion FT."""
+import numpy as np
+import pytest
+
+from repro.core import (Catalog, DataAccess, DataStore, ErasureRecovery,
+                        FaultInjection, FaultToleranceDaemon, IngestPlan,
+                        ReplicationRecovery, RuntimeEngine,
+                        TransformationRecovery, create_stage, format_, select)
+from repro.core import store as store_stmt
+from repro.data.generators import as_file_items, gen_lineitem
+
+
+def simple_plan(ds, *, replicas=1, serialize="columnar", erasure=None):
+    p = IngestPlan("t")
+    s1 = select(p, replicate=replicas if replicas > 1 else None)
+    fmt = {"chunk": {"target_rows": 512}, "serialize": serialize}
+    if erasure:
+        fmt["erasure"] = erasure
+    s2 = format_(p, s1, **fmt)
+    s3 = store_stmt(p, s2, locate="roundrobin",
+                    locate_args={"num_locations": len(ds.nodes)}, upload=ds)
+    create_stage(p, using=[s1, s2, s3], name="main")
+    return p
+
+
+class TestParallelIngestion:
+    def test_work_stealing_distributes_shards(self, store):
+        eng = RuntimeEngine(store)
+        items = as_file_items(gen_lineitem(4000), shards=16)
+        rep = eng.run(simple_plan(store), items)  # list -> shared queue
+        assert sum(rep.per_node_shards.values()) == 16
+        assert all(v > 0 for v in rep.per_node_shards.values())
+
+    def test_per_node_sources(self, store):
+        eng = RuntimeEngine(store)
+        items = as_file_items(gen_lineitem(2000), shards=4)
+        rep = eng.run(simple_plan(store), {"n0": items[:2], "n2": items[2:]})
+        assert rep.per_node_shards["n0"] == 2 and rep.per_node_shards["n2"] == 2
+        assert rep.per_node_shards["n1"] == 0
+
+
+class TestInFlightFT:
+    def test_operator_failure_retries_from_checkpoint(self, store):
+        eng = RuntimeEngine(store, max_retries=3)
+        items = as_file_items(gen_lineitem(1000), shards=4)
+        faults = FaultInjection(op_failures={("main", 0): 2})  # fails twice
+        rep = eng.run(simple_plan(store), items, faults=faults)
+        assert rep.op_failures  # observed
+        assert not rep.dummy_substitutions  # recovered before 3 strikes
+        assert store.blocks()
+
+    def test_repeated_failure_installs_dummy_op(self, store):
+        eng = RuntimeEngine(store, max_retries=3)
+        items = as_file_items(gen_lineitem(1000), shards=4)
+        faults = FaultInjection(op_failures={("main", 1): 99})
+        rep = eng.run(simple_plan(store), items, faults=faults)
+        assert rep.dummy_substitutions  # paper: dummy pass-through after 3
+
+    def test_node_failure_reassigns_shards(self, store):
+        eng = RuntimeEngine(store)
+        items = as_file_items(gen_lineitem(2000), shards=8)
+        faults = FaultInjection(node_death_after_stage={"n1": "main"})
+        rep = eng.run(simple_plan(store), items, faults=faults)
+        assert "n1" in rep.node_failures
+
+
+class TestPostIngestionFT:
+    def _ingest(self, ds, **kw):
+        eng = RuntimeEngine(ds)
+        eng.run(simple_plan(ds, **kw), as_file_items(gen_lineitem(2000), 4))
+
+    def test_replication_recovery(self, store):
+        self._ingest(store, replicas=2)
+        victim = next(e for e in store.blocks() if e.replica_index == 0)
+        store.corrupt_block(victim.block_id)
+        daemon = FaultToleranceDaemon(store, [ReplicationRecovery()])
+        rep = daemon.sweep()
+        assert rep.recovered and not rep.unrecoverable
+        assert store.verify_block(victim.block_id)
+
+    def test_transformation_recovery_reencodes_layout(self, tmp_path):
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1"])
+        p = IngestPlan("t")
+        s1 = select(p, replicate=2, replicate_tag="rep")
+        s2 = format_(p, s1, chunk={"target_rows": 512}, serialize="columnar")
+        s3 = format_(p, s1, chunk={"target_rows": 512}, serialize="row")
+        s4 = store_stmt(p, s2, s3, upload=ds)
+        create_stage(p, using=[s1], name="a")
+        from repro.core import chain_stage
+        chain_stage(p, to=["a"], using=[s2], where={"rep": 1}, name="b")
+        chain_stage(p, to=["a"], using=[s3], where={"rep": 2}, name="c")
+        chain_stage(p, to=["b", "c"], using=[s4], name="d")
+        RuntimeEngine(ds).run(p, as_file_items(gen_lineitem(1500), 4))
+
+        victim = next(e for e in ds.blocks() if e.layout == "columnar")
+        ds.corrupt_block(victim.block_id)
+        daemon = FaultToleranceDaemon(ds, [TransformationRecovery()])
+        rep = daemon.sweep()
+        assert rep.recovered
+        assert ds.verify_block(victim.block_id)
+        # layout restored as columnar, not as the donor's layout
+        assert next(e for e in ds.blocks()
+                    if e.block_id == victim.block_id).layout == "columnar"
+
+    def test_erasure_recovery(self, store):
+        self._ingest(store, erasure={"k": 4, "m": 2})
+        striped = [e for e in store.blocks() if e.stripe_id]
+        victim = striped[0]
+        store.corrupt_block(victim.block_id)
+        daemon = FaultToleranceDaemon(store, [ErasureRecovery()])
+        rep = daemon.sweep()
+        assert rep.recovered and store.verify_block(victim.block_id)
+
+    def test_catalog_reinstantiates_plan_and_udfs(self, store):
+        p = simple_plan(store)
+        cat = Catalog(store)
+        cat.register_plan(p, recovery_udfs=["replication"])
+        cat2 = Catalog(store)  # fresh load from disk
+        sig = cat2.plan_signature(p.name)
+        assert sig["statements"]
+        chain = cat2.recovery_chain(p.name)
+        assert len(chain) == 1

@@ -1,0 +1,67 @@
+"""Continuous batching: per-slot positions + slot reuse, verified against
+single-request decoding (the gold path)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models.model import model_defs
+from repro.models.params import init_params
+from repro.serving import ContinuousBatcher, Request
+
+
+def gold_continuation(cfg, params, prompt, n_new):
+    """Reference: prefill+decode this request alone (uniform-pos path)."""
+    import jax.numpy as jnp
+    from repro.models.model import decode_step, prefill
+    T = len(prompt)
+    batch = {"tokens": jnp.asarray(prompt[None, :]),
+             "segments": jnp.ones((1, T), jnp.int32),
+             "positions": jnp.arange(T, dtype=jnp.int32)[None, :]}
+    logits, cache = prefill(cfg, params, batch, max_len=128)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    tok = jnp.asarray([[out[-1]]], jnp.int32)
+    for i in range(n_new - 1):
+        logits, cache = decode_step(cfg, params, cache, tok,
+                                    jnp.asarray(T + i, jnp.int32))
+        out.append(int(jnp.argmax(logits[0, -1])))
+        tok = jnp.asarray([[out[-1]]], jnp.int32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "glm4-9b"])
+def test_matches_single_request_decoding(arch, rng):
+    cfg = get_smoke(arch)
+    params = init_params(jax.random.PRNGKey(0), model_defs(cfg))
+    prompts = [rng.integers(1, cfg.vocab_size, rng.integers(8, 24)).astype(np.int32)
+               for _ in range(5)]
+    n_new = 6
+
+    batcher = ContinuousBatcher(cfg, params, num_slots=2, max_len=128)
+    for i, pr in enumerate(prompts):
+        batcher.submit(Request(rid=i, prompt=pr, max_new_tokens=n_new))
+    done = batcher.run()
+    assert len(done) == 5
+    assert all(len(r.generated) == n_new for r in done)
+
+    for r in done:
+        gold = gold_continuation(cfg, params, prompts[r.rid], n_new)
+        assert r.generated == gold, (
+            f"req {r.rid} (slot {r.slot}) diverged: {r.generated} vs {gold}")
+
+
+def test_slots_are_reused(rng):
+    cfg = get_smoke("smollm-135m")
+    params = init_params(jax.random.PRNGKey(0), model_defs(cfg))
+    batcher = ContinuousBatcher(cfg, params, num_slots=2, max_len=64)
+    for i in range(6):
+        batcher.submit(Request(
+            rid=i, prompt=rng.integers(1, cfg.vocab_size, 8).astype(np.int32),
+            max_new_tokens=3 + (i % 3)))
+    done = batcher.run()
+    assert len(done) == 6
+    slots_used = {r.slot for r in done}
+    assert slots_used == {0, 1}   # 6 requests through 2 slots
+    # iteration-level scheduling: far fewer steps than serial decoding
+    serial_steps = sum(3 + (i % 3) for i in range(6))
+    assert batcher.steps < serial_steps

@@ -1,0 +1,34 @@
+"""Integration: the end-to-end train driver — ingest -> feed -> train ->
+checkpoint -> crash -> resume (the fault-tolerant restart path)."""
+import sys
+
+import pytest
+
+
+def run_train(tmp_path, extra):
+    from repro.launch.train import main
+    argv = sys.argv
+    sys.argv = ["train", "--arch", "smollm-135m", "--smoke",
+                "--batch", "4", "--seq-len", "128", "--docs", "300",
+                "--data-dir", str(tmp_path / "corpus"),
+                "--ckpt-dir", str(tmp_path / "ckpt"),
+                "--log-every", "1000"] + extra
+    try:
+        return main()
+    finally:
+        sys.argv = argv
+
+
+@pytest.mark.slow
+def test_train_checkpoint_resume(tmp_path):
+    # phase 1: train 12 steps, checkpoint every 6 (loss-decrease over such a
+    # short run is noise — convergence is asserted by examples/train_smollm)
+    rc = run_train(tmp_path, ["--steps", "12", "--ckpt-every", "6"])
+    assert rc in (0, 1)
+    from repro.training.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path / "ckpt"))
+    assert mgr.latest_step() == 12
+
+    # phase 2: "the job died" — resume from the latest checkpoint
+    rc = run_train(tmp_path, ["--steps", "6", "--ckpt-every", "6", "--resume"])
+    assert mgr.latest_step() == 18  # continued, didn't restart from 0
