@@ -1,0 +1,60 @@
+"""Streaming vs batch ingestion: sustained throughput and epoch-commit
+latency.  The streaming engine pays a commit (manifest rename) per epoch; the
+batch engine pays one barrier at the end — this bench reports the price of
+incremental visibility."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import (IngestPlan, RuntimeEngine, StreamingRuntimeEngine,
+                        create_stage, format_, select)
+from repro.core import store as store_stmt
+from repro.core.items import IngestItem
+
+from .common import Row, cleanup, fresh_store, lineitem_shards, timed
+
+SHARDS = 32
+EPOCH_ITEMS = 4
+
+
+def _plan(ds):
+    p = IngestPlan("stream_bench")
+    s1 = select(p)
+    s2 = format_(p, s1, chunk={"target_rows": 8192}, serialize="columnar")
+    s3 = store_stmt(p, s2, locate="roundrobin",
+                    locate_args={"num_locations": len(ds.nodes)}, upload=ds)
+    create_stage(p, using=[s1, s2, s3], name="main")
+    return p
+
+
+def run(scale: int) -> List[Row]:
+    rows: List[Row] = []
+    shards = lineitem_shards(scale, SHARDS)
+
+    # ---- batch baseline: one full-barrier run
+    ds = fresh_store()
+    batch_s = timed(lambda: RuntimeEngine(ds).run(_plan(ds), list(shards)))
+    cleanup(ds)
+    rows.append(("streaming/batch_engine", batch_s,
+                 f"{scale / batch_s:,.0f} rows/s"))
+
+    # ---- streaming: same data as an unbounded feed, micro-batch epochs
+    ds = fresh_store()
+    eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                 queue_capacity=2 * EPOCH_ITEMS)
+    t0 = time.perf_counter()
+    rep = eng.run_stream(_plan(ds), iter([IngestItem(dict(it.data), it.granularity)
+                                          for it in shards]))
+    stream_s = time.perf_counter() - t0
+    cleanup(ds)
+    lat = sorted(rep.commit_latencies())
+    p50 = lat[len(lat) // 2]
+    p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
+    rows.append(("streaming/streaming_engine", stream_s,
+                 f"{scale / stream_s:,.0f} rows/s "
+                 f"({stream_s / batch_s:.2f}x batch, "
+                 f"{len(rep.epochs)} epochs)"))
+    rows.append(("streaming/epoch_commit_p50", p50, f"{p50 * 1e3:.1f} ms"))
+    rows.append(("streaming/epoch_commit_p99", p99, f"{p99 * 1e3:.1f} ms"))
+    return rows

@@ -11,7 +11,7 @@ import time
 
 
 MODULES = ["cleaning", "sampling", "layouts", "storage", "cooking",
-           "access", "recovery", "roofline"]
+           "access", "recovery", "streaming", "roofline"]
 
 
 def main() -> int:

@@ -1,0 +1,71 @@
+"""Streaming log ingestion, end to end: an unbounded log feed is cut into
+micro-batch epochs, committed atomically, and queried while ingestion runs —
+with a node killed mid-stream to show epoch-granular replay (no loss, no
+duplicate commits).
+
+    PYTHONPATH=src python examples/streaming_logs.py
+
+The plan is written in the textual language; ``STREAM WITH EPOCHS(...)``
+declares the epoch-cut policy, and the same optimized stage pipeline the batch
+engine runs is reused per epoch.
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import (DataAccess, DataStore, StreamFaultInjection,
+                        StreamingRuntimeEngine, parse_ingestion_script)
+from repro.core.items import IngestItem
+from repro.data.generators import gen_log_records
+
+SCRIPT = """
+s1 = SELECT * FROM input USING parser;
+s2 = FORMAT s1 CHUNK BY 4096 SERIALIZE AS columnar;
+s3 = STORE s2 LOCATE USING roundrobin UPLOAD TO target;
+CREATE STAGE main USING s1,s2,s3;
+STREAM WITH EPOCHS(items=4, capacity=16);
+"""
+
+
+def log_feed(n_shards=24, rows_per_shard=2_000):
+    """The 'fast arriving data': one shard of log lines per pull."""
+    for i in range(n_shards):
+        yield IngestItem(gen_log_records(rows_per_shard, seed=i))
+
+
+def main():
+    root = tempfile.mkdtemp(prefix="ingestbase_stream_")
+    ds = DataStore(root, nodes=[f"n{i}" for i in range(4)])
+    plan = parse_ingestion_script(SCRIPT, env={"target": ds})
+
+    n_shards, rows = 24, 2_000
+    engine = StreamingRuntimeEngine(ds)
+    faults = StreamFaultInjection(node_death_in_epoch={"n1": 2})  # die mid-stream
+    report = engine.run_stream(plan, log_feed(n_shards, rows), faults=faults)
+
+    print(f"epochs committed: {report.committed_epoch_ids()}")
+    print(f"node failures: {report.node_failures} "
+          f"(epoch(s) {report.replayed_epochs} replayed on survivors)")
+    lat = sorted(report.commit_latencies())
+    print(f"sustained: {report.items_per_sec() * rows:,.0f} rows/s; "
+          f"epoch commit p50={lat[len(lat) // 2] * 1e3:.1f}ms "
+          f"max={lat[-1] * 1e3:.1f}ms")
+
+    # epoch-aware access: fresh data is queryable the moment its epoch commits
+    acc = DataAccess(ds)
+    total = len(acc.since_epoch(-1).read_all(projection=["ts"])["ts"])
+    assert total == n_shards * rows, (total, n_shards * rows)
+    print(f"rows readable after death+replay: {total:,} (zero loss)")
+
+    last = acc.latest_epoch()
+    fresh = acc.filter_epoch(last).read_all(projection=["severity"])
+    print(f"freshest epoch {last}: {len(fresh['severity']):,} rows, "
+          f"{int((fresh['severity'] >= 2).sum())} errors")
+
+
+if __name__ == "__main__":
+    main()

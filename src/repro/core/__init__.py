@@ -17,14 +17,16 @@ from .fault import (ErasureRecovery, FaultToleranceDaemon, RecoveryUDF,
                     ReplicationRecovery, TransformationRecovery)
 from .items import Granularity, IngestItem, Label
 from .language import (LanguageSession, chain_stage, create_stage, format_,
-                       parse_ingestion_script, select, store)
+                       parse_ingestion_script, select, store, with_epochs)
 from .operators import (IngestOp, MaterializeOp, OperatorFailure, OpMode,
                         PassThroughOp, register_op, registered_ops, resolve_op)
 from .optimizer import (FilterFusionRule, IngestionOptimizer, IngestOpExpr,
                         ParallelModeRule, PipelineRule, ReorderRule, Rule)
 from .plan import IngestPlan, Stage, StagePlan, Statement
 from .runtime import FaultInjection, NodeFailure, RunReport, RuntimeEngine, ingest
-from .store import BlockEntry, DataStore
+from .store import BlockEntry, DataStore, EpochEntry
+from .streaming import (EpochReport, IngestQueues, StreamFaultInjection,
+                        StreamingRuntimeEngine, StreamReport, stream_ingest)
 
 # operator implementations register themselves on import
 from . import ops_select as _ops_select  # noqa: F401
@@ -37,12 +39,14 @@ __all__ = [
     "ReplicationRecovery", "TransformationRecovery",
     "Granularity", "IngestItem", "Label",
     "LanguageSession", "chain_stage", "create_stage", "format_",
-    "parse_ingestion_script", "select", "store",
+    "parse_ingestion_script", "select", "store", "with_epochs",
     "IngestOp", "MaterializeOp", "OperatorFailure", "OpMode", "PassThroughOp",
     "register_op", "registered_ops", "resolve_op",
     "FilterFusionRule", "IngestionOptimizer", "IngestOpExpr", "ParallelModeRule",
     "PipelineRule", "ReorderRule", "Rule",
     "IngestPlan", "Stage", "StagePlan", "Statement",
     "FaultInjection", "NodeFailure", "RunReport", "RuntimeEngine", "ingest",
-    "BlockEntry", "DataStore",
+    "BlockEntry", "DataStore", "EpochEntry",
+    "EpochReport", "IngestQueues", "StreamFaultInjection",
+    "StreamingRuntimeEngine", "StreamReport", "stream_ingest",
 ]

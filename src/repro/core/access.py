@@ -39,9 +39,13 @@ class DataAccess:
     def __init__(self, store: DataStore,
                  entries: Optional[List[BlockEntry]] = None) -> None:
         self.store = store
+        # default view: no parity blocks, and no blocks of uncommitted
+        # streaming epochs — readers never observe in-flight micro-batches
         self.entries: List[BlockEntry] = (
             list(entries) if entries is not None
-            else [e for e in store.blocks() if not e.is_parity])
+            else [e for e in store.blocks()
+                  if not e.is_parity
+                  and (e.epoch < 0 or store.epoch_committed(e.epoch))])
 
     # ------------------------------------------------------------ what (Sec VII)
     def filter_replica(self, op: str, value: Any = None) -> "DataAccess":
@@ -74,6 +78,29 @@ class DataAccess:
     def filter_block_by_label(self, op: str, value: Any) -> "DataAccess":
         return self.filter_block(
             lambda e: any(lop == op and lval == value for lop, lval in e.labels))
+
+    # -------------------------------------------------------- epochs (streaming)
+    def filter_epoch(self, epoch: int) -> "DataAccess":
+        """Keep blocks committed by exactly this streaming epoch."""
+        if not self.store.epoch_committed(epoch):
+            return DataAccess(self.store, [])
+        return DataAccess(self.store,
+                          [e for e in self.entries if e.epoch == epoch])
+
+    def since_epoch(self, epoch: int) -> "DataAccess":
+        """Blocks of every *committed* epoch strictly after ``epoch`` —
+        the incremental-consumption surface (``since_epoch(-1)`` = all
+        committed streaming data).  In-flight epochs are never visible."""
+        committed = set(self.store.committed_epoch_ids())
+        return DataAccess(self.store,
+                          [e for e in self.entries
+                           if e.epoch > epoch and e.epoch in committed])
+
+    def latest_epoch(self) -> int:
+        """Highest committed epoch in view (-1 when no streaming data)."""
+        committed = set(self.store.committed_epoch_ids())
+        eps = [e.epoch for e in self.entries if e.epoch in committed]
+        return max(eps, default=-1)
 
     def distinct_replicas(self) -> "DataAccess":
         """At most one physical block per logical id (avoid double reads when a

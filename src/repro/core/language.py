@@ -150,9 +150,24 @@ def chain_stage(plan: IngestPlan, to: Sequence[str], using: Sequence[str],
     return plan.chain_stage(to, using, where, name)
 
 
+def with_epochs(plan: IngestPlan, *, items: Optional[int] = None,
+                seconds: Optional[float] = None,
+                capacity: Optional[int] = None) -> IngestPlan:
+    """Declare the plan streamable: epochs cut every ``items`` items and/or
+    ``seconds`` of wall clock, behind per-node ingest queues bounded at
+    ``capacity`` (STREAM WITH EPOCHS(...) in the textual language)."""
+    cfg = {k: v for k, v in
+           (("items", items), ("seconds", seconds), ("capacity", capacity))
+           if v is not None}
+    if not cfg:
+        raise LanguageError("with_epochs: give at least one of items/seconds/capacity")
+    plan.stream_config = cfg
+    return plan
+
+
 # ---------------------------------------------------------------- text parser
 _STMT_RE = re.compile(r"^\s*(?:(\w+)\s*=\s*)?(SELECT|FORMAT|STORE|CREATE\s+STAGE|"
-                      r"CHAIN\s+STAGE)\b(.*)$", re.IGNORECASE | re.DOTALL)
+                      r"CHAIN\s+STAGE|STREAM)\b(.*)$", re.IGNORECASE | re.DOTALL)
 
 
 class LanguageError(ValueError):
@@ -242,6 +257,8 @@ class LanguageSession:
             self._create_stage(rest)
         elif verb == "CHAIN STAGE":
             self._chain_stage(rest)
+        elif verb == "STREAM":
+            self._stream(rest)
 
     def _select(self, sid: Optional[str], rest: str) -> None:
         m = re.match(r"(?P<proj>.+?)\s+FROM\s+(?P<src>\w+)"
@@ -345,6 +362,22 @@ class LanguageSession:
                 raise LanguageError(f"UPLOAD TO {m.group('target')!r}: not a DataStore in env")
             ops.append(resolve_op("upload", store=target))
         self.plan.add_statement(ops, kind="store", sid=sid, inputs=srcs)
+
+    def _stream(self, rest: str) -> None:
+        """STREAM WITH EPOCHS(items=128, seconds=0.5, capacity=1024);"""
+        m = re.match(r"WITH\s+EPOCHS\s*\((?P<args>[^)]*)\)$", rest, re.IGNORECASE)
+        if not m:
+            raise LanguageError(f"bad STREAM (want WITH EPOCHS(...)): {rest!r}")
+        kwargs = self._parse_args(m.group("args"))
+        allowed = {"items", "seconds", "capacity"}
+        bad = set(kwargs) - allowed
+        if bad:
+            raise LanguageError(f"STREAM WITH EPOCHS: unknown knobs {sorted(bad)} "
+                                f"(allowed: {sorted(allowed)})")
+        if not kwargs:
+            raise LanguageError("STREAM WITH EPOCHS: give at least one of "
+                                f"{sorted(allowed)}")
+        with_epochs(self.plan, **kwargs)
 
     def _create_stage(self, rest: str) -> None:
         m = re.match(r"(\w+)\s+USING\s+([\w\s,]+?)(?:\s+WHERE\s+(.*))?$", rest, re.IGNORECASE)

@@ -71,6 +71,9 @@ class IngestPlan:
         self.name = name
         self.statements: Dict[str, Statement] = {}
         self.stages: Dict[str, Stage] = {}
+        # streaming epoch-cut config (None = batch-only plan); set by the
+        # declarative ``STREAM WITH EPOCHS(...)`` / ``with_epochs`` surface
+        self.stream_config: Optional[Dict[str, Any]] = None
         self._auto_sid = 0
         self._auto_stage = 0
 
@@ -178,6 +181,7 @@ class IngestPlan:
         """Serializable description (catalog stores params, not instances)."""
         return {
             "name": self.name,
+            "stream": dict(self.stream_config) if self.stream_config else None,
             "statements": {
                 sid: {"kind": s.kind, "inputs": s.inputs,
                       "ops": [o.signature() for o in s.ops]}

@@ -22,6 +22,7 @@ from __future__ import annotations
 import os
 import pickle
 import queue
+import shutil
 import threading
 import time
 from collections import defaultdict
@@ -116,12 +117,34 @@ class RuntimeEngine:
                     break
         report.per_node_shards = {n: len(v) for n, v in node_sources.items()}
 
+        alive = {n: True for n in self.nodes}
+        self._execute(stage_plans, node_sources, faults, report, alive)
+
+        report.wall_time_s = time.time() - t0
+        self.store.flush_manifest()
+        return report
+
+    # ----------------------------------------------------------- stage dataflow
+    def _execute(self, stage_plans: List[StagePlan],
+                 node_sources: Dict[str, List[IngestItem]],
+                 faults: FaultInjection, report: RunReport,
+                 alive: Dict[str, bool],
+                 on_node_death: str = "reassign") -> Dict[str, Dict[str, List[IngestItem]]]:
+        """Run the stage DAG over per-node shards (the body shared by the batch
+        engine and the streaming engine's per-epoch execution).
+
+        ``on_node_death`` selects the recovery policy:
+          * ``"reassign"`` (batch): the dead node's shards move to the next
+            live node, which replays stages 0..si for them (Sec. VI-C1).
+          * ``"raise"`` (streaming): mark the node dead and raise NodeFailure —
+            the caller aborts the staged epoch and replays it on the
+            surviving nodes (epoch-granular recovery).
+        """
         # ---- ship plan to every node
         node_plans = {n: self.launch_remote(n, stage_plans) for n in self.nodes}
         # per-node stage outputs
         outputs: Dict[str, Dict[str, List[IngestItem]]] = {
             n: defaultdict(list) for n in self.nodes}
-        alive = {n: True for n in self.nodes}
         failure_counts: Dict[Tuple[str, str, int], int] = defaultdict(int)
 
         # dedicated lock for report mutation from worker threads
@@ -155,6 +178,8 @@ class RuntimeEngine:
                     except NodeFailure:
                         alive[n] = False
                         report.node_failures.append(n)
+                        if on_node_death == "raise":
+                            raise NodeFailure(n)
 
             # ---- shuffle barrier: redistribute DFS groups (Sec. VI-B)
             self._shuffle_barrier(sp, outputs, alive, report)
@@ -164,6 +189,8 @@ class RuntimeEngine:
                 if after == sp.name and alive.get(n):
                     alive[n] = False
                     report.node_failures.append(n)
+                    if on_node_death == "raise":
+                        raise NodeFailure(n)
 
             # ---- node-failure recovery: reassign dead nodes' shards to the
             # next live node in the slaves order and re-run stages 0..si for
@@ -198,9 +225,7 @@ class RuntimeEngine:
             total = sum(len(outputs[n][sp.name]) for n in self.nodes if alive[n])
             report.stage_items[sp.name] = total
 
-        report.wall_time_s = time.time() - t0
-        self.store.flush_manifest()
-        return report
+        return outputs
 
     # ------------------------------------------------------------- stage exec
     def _run_stage(self, node: str, sp: StagePlan, items: List[IngestItem],
@@ -288,6 +313,9 @@ class RuntimeEngine:
         if shuffle_by is None:
             return
         dfs = os.path.join(self.store.dfs_dir, f"shuffle_{sp.name}")
+        # a fresh round never merges leftovers: an epoch attempt aborted
+        # between shuffle write and read leaves files behind
+        shutil.rmtree(dfs, ignore_errors=True)
         os.makedirs(dfs, exist_ok=True)
         live = [n for n in alive if alive[n]]
         # phase 1: local groups -> DFS group directories
@@ -310,6 +338,9 @@ class RuntimeEngine:
                 with open(os.path.join(gdir, fn), "rb") as f:
                     merged.append(pickle.load(f))
             outputs[target][sp.name].extend(merged)
+        # consume-on-read: a later barrier for the same stage (next epoch, or
+        # an epoch replay after abort) must not merge this round's files
+        shutil.rmtree(dfs, ignore_errors=True)
 
 
 def ingest(plan: IngestPlan, sources: Union[Dict[str, List[IngestItem]], List[IngestItem]],

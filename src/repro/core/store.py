@@ -8,6 +8,12 @@ detect and recover failures (paper Sec. VI-C2).
 
 A shared ``<root>/dfs/`` directory mediates shuffles (paper Sec. VI-B: local
 groups are copied to the distributed file system, then read back per group).
+
+Streaming epochs: the micro-batch runtime stages each epoch's blocks under an
+epoch id and publishes them atomically via ``commit_epoch`` — the manifest only
+ever records blocks of *committed* epochs, and the temp-write + rename in
+``flush_manifest`` is the exactly-once commit point.  Blocks with ``epoch=-1``
+are batch-ingested and always visible.
 """
 from __future__ import annotations
 
@@ -15,6 +21,7 @@ import json
 import os
 import shutil
 import threading
+import time
 from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -40,7 +47,18 @@ class BlockEntry:
     stripe_id: str = ""        # erasure stripe membership ("" = not striped)
     stripe_pos: int = -1       # position within the stripe (data: 0..k-1, parity: k..k+m-1)
     is_parity: bool = False
+    epoch: int = -1            # streaming epoch that wrote this block (-1 = batch)
     meta: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class EpochEntry:
+    """Manifest entry for one committed streaming epoch."""
+
+    epoch: int
+    n_blocks: int = 0
+    n_items: int = 0           # source items the epoch consumed
+    committed_at: float = 0.0  # wall-clock commit timestamp
 
 
 class DataStore:
@@ -49,6 +67,8 @@ class DataStore:
         self.nodes = list(nodes)
         self._lock = threading.Lock()
         self.entries: Dict[str, BlockEntry] = {}
+        self.epochs: Dict[int, EpochEntry] = {}   # committed epochs only
+        self._staging_epoch: Optional[int] = None
         os.makedirs(self.dfs_dir, exist_ok=True)
         for n in self.nodes:
             os.makedirs(self.node_dir(n), exist_ok=True)
@@ -68,17 +88,89 @@ class DataStore:
 
     # --------------------------------------------------------------- manifest
     def _load_manifest(self) -> None:
-        if os.path.exists(self.manifest_path):
-            with open(self.manifest_path) as f:
-                raw = json.load(f)
+        if not os.path.exists(self.manifest_path):
+            return
+        with open(self.manifest_path) as f:
+            raw = json.load(f)
+        if "blocks" in raw:        # epoch-aware format
+            self.entries = {k: BlockEntry(**v) for k, v in raw["blocks"].items()}
+            self.epochs = {int(k): EpochEntry(**v)
+                           for k, v in raw.get("epochs", {}).items()}
+        else:                      # legacy flat block map
             self.entries = {k: BlockEntry(**v) for k, v in raw.items()}
 
     def flush_manifest(self) -> None:
+        """Atomically publish the manifest (write-temp + rename).
+
+        Blocks of a still-staging epoch are withheld: a crash before
+        ``commit_epoch`` leaves at most orphaned ``.blk`` files that no
+        manifest references — the epoch never half-commits.
+        """
         with self._lock:
+            blocks = {k: asdict(v) for k, v in self.entries.items()
+                      if v.epoch < 0 or v.epoch in self.epochs}
+            payload = {"blocks": blocks,
+                       "epochs": {str(k): asdict(v) for k, v in self.epochs.items()}}
             tmp = self.manifest_path + ".tmp"
             with open(tmp, "w") as f:
-                json.dump({k: asdict(v) for k, v in self.entries.items()}, f, indent=0)
+                json.dump(payload, f, indent=0)
             os.replace(tmp, self.manifest_path)
+
+    # ------------------------------------------------------------------ epochs
+    def begin_epoch(self, epoch: int) -> None:
+        """Start staging blocks under ``epoch``.  Re-ingesting a committed
+        epoch is refused — the exactly-once guard for replays.
+
+        The staging marker is store-global: while an epoch stages, this store
+        has a single writer (the streaming engine).  Concurrent ingestion into
+        the same store must target a different DataStore root — any put_block
+        between begin and commit/abort is attributed to the staging epoch.
+        Overlapping ``begin_epoch`` calls are refused for the same reason."""
+        with self._lock:
+            if epoch in self.epochs:
+                raise ValueError(f"epoch {epoch} already committed")
+            if self._staging_epoch is not None and self._staging_epoch != epoch:
+                raise RuntimeError(
+                    f"epoch {self._staging_epoch} is still staging; "
+                    f"one writer per store during streaming ingestion")
+            self._staging_epoch = epoch
+
+    def commit_epoch(self, epoch: int, n_items: int = 0) -> EpochEntry:
+        """Atomically publish every block staged under ``epoch``."""
+        with self._lock:
+            if epoch in self.epochs:
+                raise ValueError(f"epoch {epoch} already committed")
+            n_blocks = sum(1 for e in self.entries.values() if e.epoch == epoch)
+            entry = EpochEntry(epoch=epoch, n_blocks=n_blocks, n_items=n_items,
+                               committed_at=time.time())
+            self.epochs[epoch] = entry
+            self._staging_epoch = None
+        self.flush_manifest()   # the commit point: temp-write + rename
+        return entry
+
+    def abort_epoch(self, epoch: int) -> int:
+        """Roll back a failed epoch attempt: drop its staged entries and
+        delete their physical files.  Committed epochs cannot be aborted."""
+        with self._lock:
+            if epoch in self.epochs:
+                raise ValueError(f"epoch {epoch} already committed")
+            victims = [k for k, e in self.entries.items() if e.epoch == epoch]
+            for k in victims:
+                full = os.path.join(self.root, self.entries[k].path)
+                if os.path.exists(full):
+                    os.remove(full)
+                del self.entries[k]
+            self._staging_epoch = None
+        return len(victims)
+
+    def epoch_committed(self, epoch: int) -> bool:
+        return epoch in self.epochs
+
+    def committed_epoch_ids(self) -> List[int]:
+        return sorted(self.epochs)
+
+    def next_epoch_id(self) -> int:
+        return max(self.epochs, default=-1) + 1
 
     # ------------------------------------------------------------------- write
     def put_block(self, item: IngestItem, node: str, *, logical_id: str = "",
@@ -109,6 +201,7 @@ class DataStore:
                 layout=layout, logical_id=logical_id or self._logical_id(item),
                 replica_index=replica_index, stripe_id=stripe_id,
                 stripe_pos=stripe_pos, is_parity=is_parity,
+                epoch=self._staging_epoch if self._staging_epoch is not None else -1,
                 meta=dict(item.meta),
             )
             self.entries[block_id] = entry
@@ -145,11 +238,12 @@ class DataStore:
 
     # ------------------------------------------------------------------- query
     def blocks(self) -> List[BlockEntry]:
-        return list(self.entries.values())
+        with self._lock:   # consistent snapshot while a streaming epoch writes
+            return list(self.entries.values())
 
     def blocks_with_label(self, op: str, value: Any = None) -> List[BlockEntry]:
         out = []
-        for e in self.entries.values():
+        for e in self.blocks():
             for lop, lval in e.labels:
                 if lop == op and (value is None or lval == value):
                     out.append(e)
@@ -157,14 +251,14 @@ class DataStore:
         return out
 
     def replicas_of(self, logical_id: str) -> List[BlockEntry]:
-        return [e for e in self.entries.values() if e.logical_id == logical_id]
+        return [e for e in self.blocks() if e.logical_id == logical_id]
 
     def stripe_members(self, stripe_id: str) -> List[BlockEntry]:
-        out = [e for e in self.entries.values() if e.stripe_id == stripe_id]
+        out = [e for e in self.blocks() if e.stripe_id == stripe_id]
         return sorted(out, key=lambda e: e.stripe_pos)
 
     def total_bytes(self) -> int:
-        return sum(e.nbytes for e in self.entries.values())
+        return sum(e.nbytes for e in self.blocks())
 
     # --------------------------------------------------- failure detect/inject
     def verify_block(self, block_id: str) -> bool:
@@ -179,7 +273,7 @@ class DataStore:
 
     def failed_blocks(self) -> List[str]:
         """The fault daemon's ``detect`` scan source (paper Fig. 3)."""
-        return [bid for bid in self.entries if not self.verify_block(bid)]
+        return [e.block_id for e in self.blocks() if not self.verify_block(e.block_id)]
 
     def corrupt_block(self, block_id: str) -> None:
         entry = self.entries[block_id]

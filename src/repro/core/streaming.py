@@ -1,0 +1,305 @@
+"""Streaming micro-batch ingestion runtime.
+
+The batch ``RuntimeEngine`` takes a finite source list and runs every stage
+behind a full barrier; this module makes the same optimized stage DAG consume
+an *unbounded* source, in the shape of AsterixDB-style long-running feeds
+(arXiv:1405.1705) with enrichment pipelines layered on top (arXiv:1902.08271):
+
+* **Bounded ingest queues + backpressure** — a feeder thread routes source
+  items round-robin into per-node ``queue.Queue(maxsize=...)``; when a node's
+  queue is full the producer *blocks*, so queue memory is bounded no matter
+  how fast data arrives.
+* **Epochs (micro-batches)** — the stream is cut into epochs by item count
+  and/or wall-clock tick; each epoch runs through the existing optimized
+  ``StagePlan`` pipeline (operator chains, pipeline blocks, shuffle, retry /
+  dummy-substitution fault machinery are all reused via
+  ``RuntimeEngine._execute``).
+* **Epoch-granular fault tolerance** — a node death mid-epoch aborts the
+  staged epoch (its partially-written blocks are rolled back) and replays the
+  whole epoch on the surviving nodes.  Committed epochs are never redone:
+  ``DataStore.begin_epoch`` refuses an already-committed epoch id.
+* **Exactly-once commits** — ``DataStore.commit_epoch`` publishes an epoch's
+  blocks atomically (manifest temp-write + rename); ``DataAccess.since_epoch``
+  lets queries consume exactly the committed epochs while ingestion continues.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import (Any, Dict, Iterable, Iterator, List, Optional, Sequence,
+                    Tuple, Union)
+
+from .items import IngestItem
+from .optimizer import IngestionOptimizer
+from .plan import IngestPlan, StagePlan
+from .runtime import FaultInjection, NodeFailure, RunReport, RuntimeEngine
+from .store import DataStore
+
+
+@dataclass
+class StreamFaultInjection:
+    """Deterministic streaming fault hooks (tests/benchmarks).
+
+    ``op_failures`` uses the batch engine's (stage, op_index) -> count format
+    and is shared across epochs; ``node_death_in_epoch`` kills a node while
+    the given epoch index is mid-flight (after its first stage, before
+    commit) — exercising abort + replay.
+    """
+
+    op_failures: Dict[Tuple[str, int], int] = field(default_factory=dict)
+    node_death_in_epoch: Dict[str, int] = field(default_factory=dict)
+
+
+@dataclass
+class EpochReport:
+    """What the engine observed for one committed epoch."""
+
+    epoch: int
+    items_in: int                 # source items consumed by the epoch
+    n_blocks: int                 # blocks the commit published
+    attempts: int                 # 1 = clean; >1 = replayed after node death
+    commit_latency_s: float       # epoch cut -> manifest rename landed
+    run: RunReport = field(default_factory=RunReport)
+
+
+@dataclass
+class StreamReport:
+    """Aggregate of a ``run_stream`` call."""
+
+    epochs: List[EpochReport] = field(default_factory=list)
+    node_failures: List[str] = field(default_factory=list)
+    replayed_epochs: List[int] = field(default_factory=list)
+    total_items: int = 0
+    wall_time_s: float = 0.0
+
+    def committed_epoch_ids(self) -> List[int]:
+        return [e.epoch for e in self.epochs]
+
+    def commit_latencies(self) -> List[float]:
+        return [e.commit_latency_s for e in self.epochs]
+
+    def items_per_sec(self) -> float:
+        return self.total_items / self.wall_time_s if self.wall_time_s else 0.0
+
+
+class IngestQueues:
+    """Per-node bounded ingest queues fed from an unbounded source.
+
+    The feeder thread pulls from the source iterator and round-robins items
+    across node queues with *blocking* puts — the backpressure seam: a slow
+    pipeline stalls the producer instead of growing memory.  ``mark_dead``
+    removes a node from the routing set; items already queued on a dead node
+    are still drained (and re-routed to live nodes by the epoch cutter).
+    """
+
+    def __init__(self, source: Iterable[IngestItem], nodes: Sequence[str],
+                 capacity: int = 64) -> None:
+        self.nodes = list(nodes)
+        self.capacity = capacity
+        self.queues: Dict[str, "queue.Queue[IngestItem]"] = {
+            n: queue.Queue(maxsize=capacity) for n in self.nodes}
+        self._live = {n: True for n in self.nodes}
+        self._source = iter(source)
+        self._stop = threading.Event()
+        self.exhausted = threading.Event()
+        self.produced = 0   # items the feeder has pulled from the source
+        self._thread = threading.Thread(target=self._feed, daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------------ feeder
+    def _next_live(self, rr: Iterator[str]) -> Optional[str]:
+        """Next live node in round-robin order; None when none remain (or the
+        queues were stopped) — never spins on an all-dead cycle."""
+        for _ in range(len(self.nodes)):
+            n = next(rr)
+            if self._live.get(n):
+                return n
+        return None
+
+    def _feed(self) -> None:
+        rr = itertools.cycle(self.nodes)
+        for item in self._source:
+            self.produced += 1
+            target = self._next_live(rr)
+            while target is not None and not self._stop.is_set():
+                try:
+                    self.queues[target].put(item, timeout=0.05)
+                    break
+                except queue.Full:
+                    # blocked: backpressure — re-check liveness so items never
+                    # pile onto a node that died while we waited
+                    if not self._live.get(target):
+                        target = self._next_live(rr)
+            if target is None or self._stop.is_set():
+                break
+        self.exhausted.set()
+
+    # ------------------------------------------------------------------- drain
+    def cut_epoch(self, max_items: int, tick_s: Optional[float] = None
+                  ) -> Dict[str, List[IngestItem]]:
+        """Drain queues into one epoch: up to ``max_items`` total, or whatever
+        arrived when ``tick_s`` elapses (needs >= 1 item — an empty tick waits
+        for data or end-of-stream)."""
+        batch: Dict[str, List[IngestItem]] = {n: [] for n in self.nodes}
+        count = 0
+        deadline = None
+        while count < max_items:
+            got = False
+            for n in self.nodes:
+                if count >= max_items:
+                    break
+                try:
+                    batch[n].append(self.queues[n].get_nowait())
+                    count += 1
+                    got = True
+                except queue.Empty:
+                    continue
+            if got:
+                if deadline is None and tick_s is not None:
+                    deadline = time.monotonic() + tick_s
+                continue
+            if self.exhausted.is_set() and all(q.empty() for q in self.queues.values()):
+                break
+            if deadline is not None and time.monotonic() >= deadline:
+                break
+            time.sleep(0.001)
+        return batch
+
+    def mark_dead(self, node: str) -> None:
+        self._live[node] = False
+
+    def qsizes(self) -> Dict[str, int]:
+        return {n: q.qsize() for n, q in self.queues.items()}
+
+    def stop(self) -> None:
+        self._stop.set()
+
+
+class StreamingRuntimeEngine(RuntimeEngine):
+    """Micro-batch streaming over the batch engine's optimized stage DAG.
+
+    Epoch-cut knobs (``epoch_items`` / ``epoch_seconds`` / ``queue_capacity``)
+    default from ``plan.stream_config`` — the declarative
+    ``STREAM WITH EPOCHS(...)`` surface — and can be overridden per engine.
+    """
+
+    def __init__(self, store: DataStore, optimizer: Optional[IngestionOptimizer] = None,
+                 max_retries: int = 3, epoch_items: int = 64,
+                 epoch_seconds: Optional[float] = None,
+                 queue_capacity: int = 64) -> None:
+        super().__init__(store, optimizer, max_retries)
+        self.epoch_items = epoch_items
+        self.epoch_seconds = epoch_seconds
+        self.queue_capacity = queue_capacity
+        self.alive = {n: True for n in self.nodes}
+
+    # ----------------------------------------------------------------- config
+    def _config(self, plan: IngestPlan) -> Tuple[int, Optional[float], int]:
+        cfg = getattr(plan, "stream_config", None) or {}
+        return (int(cfg.get("items", self.epoch_items)),
+                cfg.get("seconds", self.epoch_seconds),
+                int(cfg.get("capacity", self.queue_capacity)))
+
+    # -------------------------------------------------------------------- run
+    def run_stream(self, plan: IngestPlan, source: Iterable[IngestItem],
+                   faults: Optional[StreamFaultInjection] = None,
+                   optimize: bool = True,
+                   max_epochs: Optional[int] = None) -> StreamReport:
+        """Consume ``source`` (any iterator, possibly unbounded) until it is
+        exhausted or ``max_epochs`` epochs have committed."""
+        t0 = time.time()
+        faults = faults or StreamFaultInjection()
+        sreport = StreamReport()
+
+        # compile + optimize ONCE; every epoch reuses the same stage plans
+        stage_plans = plan.compile()
+        if optimize:
+            stage_plans = self.optimizer.optimize(stage_plans)
+
+        epoch_items, epoch_seconds, capacity = self._config(plan)
+        queues = IngestQueues(source, self.nodes, capacity)
+        eid = self.store.next_epoch_id()
+        try:
+            while max_epochs is None or len(sreport.epochs) < max_epochs:
+                batch = queues.cut_epoch(epoch_items, epoch_seconds)
+                items = [it for per_node in batch.values() for it in per_node]
+                if not items:
+                    break   # end of stream
+                ereport = self._run_epoch(eid, batch, stage_plans, faults,
+                                          sreport, queues)
+                sreport.epochs.append(ereport)
+                sreport.total_items += ereport.items_in
+                eid += 1
+        finally:
+            queues.stop()
+        sreport.wall_time_s = time.time() - t0
+        return sreport
+
+    # ------------------------------------------------------------------ epoch
+    def _run_epoch(self, eid: int, batch: Dict[str, List[IngestItem]],
+                   stage_plans: List[StagePlan], faults: StreamFaultInjection,
+                   sreport: StreamReport, queues: IngestQueues) -> EpochReport:
+        """Run one micro-batch through the stage DAG and commit it atomically.
+
+        Node death mid-attempt -> abort the staged blocks, mark the node dead,
+        replay the *entire epoch* on the survivors.  The commit is the only
+        publish point, so a replayed epoch can neither lose items (the full
+        input batch is retained until commit) nor double-commit
+        (``begin_epoch`` refuses committed ids)."""
+        epoch_index = len(sreport.epochs)
+        all_items = [it for per_node in batch.values() for it in per_node]
+        t_cut = time.time()
+        attempts = 0
+        while True:
+            attempts += 1
+            live = [n for n in self.nodes if self.alive[n]]
+            if not live:
+                raise RuntimeError("all nodes failed")
+            # redistribute: queue affinity where the node is alive, round-robin
+            # onto survivors otherwise (first attempt after a death, or replay)
+            node_sources: Dict[str, List[IngestItem]] = {n: [] for n in self.nodes}
+            spill: List[IngestItem] = []
+            for n, its in batch.items():
+                (node_sources[n] if self.alive[n] else spill).extend(its)
+            for i, it in enumerate(spill):
+                node_sources[live[i % len(live)]].append(it)
+
+            # injected mid-epoch deaths for this epoch index -> die after the
+            # first stage of the attempt (blocks already staged get aborted)
+            ef = FaultInjection(op_failures=faults.op_failures)
+            for n, at_epoch in faults.node_death_in_epoch.items():
+                if at_epoch == epoch_index and self.alive.get(n):
+                    ef.node_death_after_stage[n] = stage_plans[0].name
+
+            self.store.begin_epoch(eid)
+            ereport = RunReport()
+            try:
+                self._execute(stage_plans, node_sources, ef, ereport,
+                              self.alive, on_node_death="raise")
+            except NodeFailure as e:
+                dead = str(e)
+                self.store.abort_epoch(eid)
+                queues.mark_dead(dead)
+                sreport.node_failures.append(dead)
+                if eid not in sreport.replayed_epochs:
+                    sreport.replayed_epochs.append(eid)
+                continue
+            entry = self.store.commit_epoch(eid, n_items=len(all_items))
+            return EpochReport(epoch=eid, items_in=len(all_items),
+                               n_blocks=entry.n_blocks, attempts=attempts,
+                               commit_latency_s=time.time() - t_cut,
+                               run=ereport)
+
+
+def stream_ingest(plan: IngestPlan, source: Iterable[IngestItem], store: DataStore,
+                  *, optimize: bool = True,
+                  faults: Optional[StreamFaultInjection] = None,
+                  max_epochs: Optional[int] = None,
+                  **engine_kw: Any) -> StreamReport:
+    """One-call entry point: stream a source through an ingestion plan."""
+    eng = StreamingRuntimeEngine(store, **engine_kw)
+    return eng.run_stream(plan, source, faults=faults, optimize=optimize,
+                          max_epochs=max_epochs)

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -74,12 +75,16 @@ class BlockFeeder:
         self.fields = tuple(fields)
         self.seed = seed
         self.step = start_step  # resumable position (checkpoint/restart)
-        access = DataAccess(data_store).filter_replica("serialize", "packed")
-        splits = access.split_by_key("pack", num_tasks=num_tasks)
-        self.access = access
-        self.my_blocks = splits[task].blocks if task < len(splits) else []
+        self.my_blocks = self._assigned_blocks()
         # deterministic per-epoch order shared by all tasks
         self._order = np.random.default_rng(seed).permutation(len(self.my_blocks))
+
+    def _assigned_blocks(self):
+        """This task's packed blocks: replica choice + block->task assignment
+        (the one policy shared by construction and live refresh)."""
+        self.access = DataAccess(self.store).filter_replica("serialize", "packed")
+        splits = self.access.split_by_key("pack", num_tasks=self.num_tasks)
+        return splits[self.task].blocks if self.task < len(splits) else []
 
     def __len__(self) -> int:
         return len(self.my_blocks)
@@ -114,6 +119,43 @@ class BlockFeeder:
                 produced += 1
                 self.step = idx
                 yield out
+
+    # ------------------------------------------------------------- live tailing
+    def refresh(self) -> int:
+        """Pick up blocks committed since construction (or the last refresh):
+        the streaming engine commits epochs while training runs, and the
+        feeder's view extends without re-shuffling what it already replayed.
+        Returns the number of newly visible blocks for this task."""
+        fresh = self._assigned_blocks()
+        known = {e.block_id for e in self.my_blocks}
+        added = [e for e in fresh if e.block_id not in known]
+        if added:
+            start = len(self.my_blocks)
+            self.my_blocks.extend(added)
+            # new blocks replay in commit order after the shuffled prefix
+            self._order = np.concatenate(
+                [self._order, np.arange(start, len(self.my_blocks))]).astype(np.int64)
+        return len(added)
+
+    def tail(self, num_steps: int, poll_s: float = 0.05,
+             timeout_s: float = 10.0) -> Iterator[Columns]:
+        """Follow a live store: read each packed block once, in order, waiting
+        for newly committed epochs when caught up.  Stops after ``num_steps``
+        blocks or when no new epoch commits within ``timeout_s``."""
+        from ..layouts import deserialize_block
+        pos = 0
+        deadline = time.monotonic() + timeout_s
+        while pos < num_steps:
+            if pos >= len(self.my_blocks):
+                if self.refresh() == 0:
+                    if time.monotonic() > deadline:
+                        return
+                    time.sleep(poll_s)
+                    continue
+                deadline = time.monotonic() + timeout_s
+            block = self.store.read_block(self.my_blocks[pos].block_id)
+            yield deserialize_block(block, projection=list(self.fields))
+            pos += 1
 
     # ------------------------------------------------------------ work stealing
     @staticmethod

@@ -14,6 +14,12 @@ from repro.training.steps import make_train_step
 
 B, S = 2, 64
 
+# tier-1 compiles one representative arch; the full sweep is the slow tier
+# (each arch pays a multi-second JAX compile on CPU)
+FAST_ARCHS = ("smollm-135m",)
+ARCH_PARAMS = [a if a in FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+               for a in ARCHS]
+
 
 def make_batch(cfg, rng):
     toks = rng.integers(1, cfg.vocab_size, (B, S)).astype(np.int32)
@@ -30,7 +36,7 @@ def make_batch(cfg, rng):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 class TestArchSmoke:
     def test_forward_and_train_step(self, arch, rng):
         cfg = get_smoke(arch)

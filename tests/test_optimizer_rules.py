@@ -1,0 +1,117 @@
+"""Direct regression tests for the optimizer's rewrite rules: ReorderRule
+legality (field dependencies, replicate never earlier) and FilterFusionRule
+(AND semantics, fused selectivity, field union)."""
+import numpy as np
+import pytest
+
+from repro.core.items import Granularity, IngestItem
+from repro.core.operators import MaterializeOp
+from repro.core.optimizer import (FilterFusionRule, IngestionOptimizer,
+                                  IngestOpExpr, ReorderRule, _commutes)
+from repro.core.ops_select import FilterOp, ProjectOp, ReplicateOp
+
+
+def names(ops):
+    return [type(o).__name__ for o in ops if not isinstance(o, MaterializeOp)]
+
+
+def chunk_item(n=100, seed=0):
+    rng = np.random.default_rng(seed)
+    return IngestItem({"a": rng.integers(0, 10, n).astype(np.int32),
+                       "b": rng.integers(0, 10, n).astype(np.int32)},
+                      Granularity.CHUNK)
+
+
+class TestReorderLegality:
+    def test_filter_moves_before_projection_keeping_its_fields(self):
+        proj = ProjectOp(fields=("a", "b"))
+        filt = FilterOp(predicate=lambda c: c["a"] > 5, fields=("a",),
+                        selectivity=0.3)
+        out = IngestionOptimizer(rules=[ReorderRule()]).optimize_chain([proj, filt])
+        assert names(out) == ["FilterOp", "ProjectOp"]
+
+    def test_filter_never_moves_before_projection_dropping_its_fields(self):
+        proj = ProjectOp(fields=("a",))    # drops "b"
+        filt = FilterOp(predicate=lambda c: c["b"] > 5, fields=("b",),
+                        selectivity=0.3)
+        assert not _commutes(proj, filt)
+        out = IngestionOptimizer(rules=[ReorderRule()]).optimize_chain([proj, filt])
+        assert names(out) == ["ProjectOp", "FilterOp"]
+
+    def test_filter_with_unknown_fields_stays_put(self):
+        """A filter that declares no fields may read anything: moving it past
+        a projection is never legal."""
+        proj = ProjectOp(fields=("a", "b"))
+        filt = FilterOp(predicate=lambda c: c["a"] > 5, fields=())
+        assert not _commutes(proj, filt)
+
+    def test_replicate_is_never_moved_earlier(self):
+        filt = FilterOp(predicate=lambda c: c["a"] > 5, fields=("a",),
+                        selectivity=0.9)   # even a weak reducer
+        rep = ReplicateOp(copies=2)
+        # replicate is the later op: the rule must not pull it forward
+        assert not _commutes(filt, rep)
+        out = IngestionOptimizer(rules=[ReorderRule()]).optimize_chain([filt, rep])
+        assert names(out) == ["FilterOp", "ReplicateOp"]
+
+    def test_reducer_moves_before_replicate(self):
+        rep = ReplicateOp(copies=3)
+        filt = FilterOp(predicate=lambda c: c["a"] > 5, fields=("a",),
+                        selectivity=0.3)
+        out = IngestionOptimizer(rules=[ReorderRule()]).optimize_chain([rep, filt])
+        assert names(out) == ["FilterOp", "ReplicateOp"]
+
+    def test_reorder_preserves_result_rows(self):
+        item = chunk_item()
+        proj = ProjectOp(fields=("a", "b"))
+        filt = FilterOp(predicate=lambda c: c["a"] > 5, fields=("a",),
+                        selectivity=0.3)
+        before = filt.clone().run(proj.clone().run([item]))
+        after_ops = IngestionOptimizer(rules=[ReorderRule()]).optimize_chain(
+            [proj, filt])
+        out = [item]
+        for op in after_ops:
+            out = op.clone().run(out)
+        assert before[0].nrows() == out[0].nrows()
+        assert sorted(before[0].data) == sorted(out[0].data)
+
+
+class TestFilterFusion:
+    def test_adjacent_filters_fuse_to_and(self):
+        f1 = FilterOp(predicate=lambda c: c["a"] > 3, fields=("a",),
+                      selectivity=0.6)
+        f2 = FilterOp(predicate=lambda c: c["b"] < 7, fields=("b",),
+                      selectivity=0.5)
+        out = IngestionOptimizer(rules=[FilterFusionRule()]).optimize_chain([f1, f2])
+        fused = [o for o in out if isinstance(o, FilterOp)]
+        assert len(fused) == 1
+        # fused selectivity is the product; fields are the union
+        assert fused[0].expansion == pytest.approx(0.3)
+        assert set(fused[0].fields) == {"a", "b"}
+
+        item = chunk_item()
+        got = fused[0].run([item])[0]
+        mask = (item.data["a"] > 3) & (item.data["b"] < 7)
+        assert got.nrows() == int(mask.sum())
+        np.testing.assert_array_equal(got.data["a"], item.data["a"][mask])
+
+    def test_fusion_chains_to_single_filter(self):
+        fs = [FilterOp(predicate=lambda c, t=t: c["a"] != t, fields=("a",),
+                       selectivity=0.9) for t in range(4)]
+        out = IngestionOptimizer(rules=[FilterFusionRule()]).optimize_chain(fs)
+        fused = [o for o in out if isinstance(o, FilterOp)]
+        assert len(fused) == 1
+        assert fused[0].expansion == pytest.approx(0.9 ** 4)
+
+    def test_fusion_matches_unfused_semantics(self):
+        item = chunk_item(n=500, seed=3)
+        f1 = FilterOp(predicate=lambda c: c["a"] >= 2, fields=("a",))
+        f2 = FilterOp(predicate=lambda c: c["b"] <= 8, fields=("b",))
+        unfused = f2.clone().run(f1.clone().run([item]))
+        fused_ops = IngestionOptimizer(rules=[FilterFusionRule()]).optimize_chain(
+            [f1, f2])
+        fused_out = [item]
+        for op in fused_ops:
+            fused_out = op.run(fused_out)
+        np.testing.assert_array_equal(unfused[0].data["a"], fused_out[0].data["a"])
+        np.testing.assert_array_equal(unfused[0].data["b"], fused_out[0].data["b"])

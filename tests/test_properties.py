@@ -1,6 +1,7 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

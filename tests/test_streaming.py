@@ -1,0 +1,257 @@
+"""Streaming micro-batch runtime: backpressure, epoch commit/replay,
+epoch-aware access, language surface, and live-store tailing."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (DataAccess, DataStore, IngestPlan, IngestQueues,
+                        StreamFaultInjection, StreamingRuntimeEngine,
+                        create_stage, format_, parse_ingestion_script, select,
+                        stream_ingest, with_epochs)
+from repro.core import store as store_stmt
+from repro.core.items import Granularity, IngestItem
+from repro.data.generators import gen_lineitem, gen_token_documents
+
+
+def columnar_plan(ds, *, epoch_items=None):
+    p = IngestPlan("stream")
+    s1 = select(p)
+    s2 = format_(p, s1, chunk={"target_rows": 256}, serialize="columnar")
+    s3 = store_stmt(p, s2, locate="roundrobin",
+                    locate_args={"num_locations": len(ds.nodes)}, upload=ds)
+    create_stage(p, using=[s1, s2, s3], name="main")
+    if epoch_items is not None:
+        with_epochs(p, items=epoch_items)
+    return p
+
+
+def shard_source(n_shards, rows=100):
+    """Unbounded-style source: items materialize lazily, one per pull."""
+    for i in range(n_shards):
+        yield IngestItem(gen_lineitem(rows, seed=i))
+
+
+class TestBackpressure:
+    def test_producer_blocks_at_capacity(self):
+        pulled = []
+
+        def source():
+            for i in range(1000):
+                pulled.append(i)
+                yield IngestItem({"x": np.arange(4)})
+
+        q = IngestQueues(source(), ["n0"], capacity=4)
+        time.sleep(0.3)  # give the feeder every chance to overrun
+        # bounded: capacity in the queue + at most 1 item in the feeder's hand
+        assert len(pulled) <= 5
+        assert q.qsizes()["n0"] == 4
+
+        # draining an epoch releases the producer for exactly that much more
+        batch = q.cut_epoch(max_items=4)
+        assert sum(len(v) for v in batch.values()) == 4
+        time.sleep(0.3)
+        assert 5 <= len(pulled) <= 9
+        q.stop()
+
+    def test_queue_memory_stays_bounded_during_run(self, store):
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=2)
+        rep = eng.run_stream(columnar_plan(store), shard_source(12, rows=50))
+        assert rep.total_items == 12
+        assert len(rep.epochs) == 3
+
+
+class TestEpochCommit:
+    def test_epochs_commit_exactly_once(self, store):
+        rep = stream_ingest(columnar_plan(store, epoch_items=4),
+                            shard_source(12), store)
+        assert rep.committed_epoch_ids() == [0, 1, 2]
+        assert store.committed_epoch_ids() == [0, 1, 2]
+        # exactly-once guards
+        with pytest.raises(ValueError):
+            store.begin_epoch(1)
+        with pytest.raises(ValueError):
+            store.commit_epoch(1)
+
+    def test_abort_rolls_back_staged_blocks(self, store):
+        store.begin_epoch(0)
+        it = IngestItem(np.arange(64, dtype=np.int32), Granularity.BLOCK)
+        entry = store.put_block(it, "n0")
+        full = os.path.join(store.root, entry.path)
+        assert os.path.exists(full) and entry.epoch == 0
+        assert store.abort_epoch(0) == 1
+        assert not os.path.exists(full)
+        assert entry.block_id not in store.entries
+        # the id is free again: the epoch never committed
+        store.begin_epoch(0)
+        store.commit_epoch(0)
+
+    def test_uncommitted_epoch_invisible_midflight(self, store):
+        """since_epoch sees exactly the committed epochs while an epoch is
+        still staging (= ingestion mid-flight)."""
+        store.begin_epoch(0)
+        store.put_block(IngestItem(np.arange(8), Granularity.BLOCK,
+                                   (), {}).with_label("chunk", 0), "n0")
+        store.commit_epoch(0, n_items=1)
+
+        store.begin_epoch(1)   # mid-flight: staged but not committed
+        store.put_block(IngestItem(np.arange(8), Granularity.BLOCK,
+                                   (), {}).with_label("chunk", 1), "n1")
+
+        acc = DataAccess(store)
+        assert {e.epoch for e in acc.entries} == {0}
+        assert len(acc.since_epoch(-1)) == 1
+        assert len(acc.filter_epoch(1)) == 0
+        assert acc.latest_epoch() == 0
+
+        store.commit_epoch(1, n_items=1)
+        acc = DataAccess(store)
+        assert len(acc.since_epoch(-1)) == 2
+        assert len(acc.since_epoch(0)) == 1
+        assert len(acc.filter_epoch(1)) == 1
+
+    def test_manifest_roundtrip_excludes_staged(self, store):
+        store.begin_epoch(0)
+        store.put_block(IngestItem(np.arange(8), Granularity.BLOCK), "n0")
+        store.commit_epoch(0)
+        store.begin_epoch(1)
+        store.put_block(IngestItem(np.arange(9), Granularity.BLOCK), "n0")
+        store.flush_manifest()   # e.g. an UploadOp finalize mid-epoch
+
+        reloaded = DataStore(store.root, nodes=store.nodes)
+        assert reloaded.committed_epoch_ids() == [0]
+        assert all(e.epoch != 1 for e in reloaded.blocks())
+        assert reloaded.epochs[0].n_blocks == 1
+        assert reloaded.next_epoch_id() == 1
+
+
+class TestEpochReplay:
+    def test_node_death_replays_epoch_without_loss(self, store):
+        """Acceptance demo: unbounded iterator, >=3 epochs, one node death
+        mid-stream -> every item readable, no loss, no duplicate commits."""
+        n_shards, rows = 16, 100
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=8)
+        faults = StreamFaultInjection(node_death_in_epoch={"n2": 1})
+        rep = eng.run_stream(columnar_plan(store), shard_source(n_shards, rows),
+                             faults=faults)
+
+        assert len(rep.epochs) >= 3
+        assert rep.node_failures == ["n2"]
+        assert rep.replayed_epochs == [1]
+        assert rep.epochs[1].attempts == 2          # aborted once, replayed
+        # commits are unique (no epoch committed twice)
+        ids = rep.committed_epoch_ids()
+        assert len(ids) == len(set(ids))
+        assert store.committed_epoch_ids() == ids
+
+        # zero loss / zero duplication: row count over epoch-aware access
+        cols = DataAccess(store).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == n_shards * rows
+        # the dead node took no blocks in any later epoch
+        later = [e for e in store.blocks() if e.epoch > 1]
+        assert later and all(e.node != "n2" for e in later)
+
+    def test_shuffled_epochs_never_merge_stale_dfs_files(self, store):
+        """The shuffle barrier's DFS directory is consumed per round: epoch N+1
+        (and an epoch replay after abort) must not re-read epoch N's pickles —
+        that would duplicate committed items."""
+        from repro.core import chain_stage, resolve_op
+
+        def shuffled_plan():
+            p = IngestPlan("shuf")
+            s1 = p.add_statement([
+                resolve_op("identity_parser"),
+                resolve_op("partition", scheme="hash", key="orderkey",
+                           num_partitions=4),
+                resolve_op("map", fn=lambda cols: cols, shuffle_by="partition"),
+            ], kind="select")
+            s2 = p.add_statement([
+                resolve_op("chunk", target_rows=256),
+                resolve_op("serialize", layout="columnar"),
+                resolve_op("upload", store=store),
+            ], kind="store", inputs=[s1])
+            create_stage(p, using=[s1], name="a")
+            chain_stage(p, to=["a"], using=[s2], name="b")
+            return p
+
+        n_shards, rows = 12, 100
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=8)
+        faults = StreamFaultInjection(node_death_in_epoch={"n1": 1})
+        rep = eng.run_stream(shuffled_plan(), shard_source(n_shards, rows),
+                             faults=faults)
+        assert len(rep.epochs) == 3 and rep.replayed_epochs == [1]
+        cols = DataAccess(store).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == n_shards * rows   # exactly once
+
+    def test_op_failures_still_retry_within_epoch(self, store):
+        faults = StreamFaultInjection(op_failures={("main", 0): 2})
+        rep = stream_ingest(columnar_plan(store, epoch_items=8),
+                            shard_source(8), store, faults=faults)
+        runs = [e.run for e in rep.epochs]
+        assert any(r.op_failures for r in runs)          # observed
+        assert not any(r.dummy_substitutions for r in runs)  # recovered
+
+
+class TestStreamingLanguage:
+    def test_stream_with_epochs_text_surface(self, store):
+        plan = parse_ingestion_script(
+            """
+            s1 = SELECT * FROM input;
+            s2 = FORMAT s1 CHUNK BY 1000 SERIALIZE AS columnar;
+            s3 = STORE s2 UPLOAD TO target;
+            CREATE STAGE main USING s1,s2,s3;
+            STREAM WITH EPOCHS(items=4, capacity=16);
+            """, env={"target": store})
+        assert plan.stream_config == {"items": 4, "capacity": 16}
+        assert plan.signature()["stream"] == {"items": 4, "capacity": 16}
+
+        rep = stream_ingest(plan, shard_source(8), store)
+        assert len(rep.epochs) == 2   # items=4 came from the script
+
+    def test_bad_stream_clause_rejected(self):
+        from repro.core.language import LanguageError
+        with pytest.raises(LanguageError):
+            parse_ingestion_script("STREAM WITH EPOCHS(bogus=1);")
+        with pytest.raises(LanguageError):
+            parse_ingestion_script("STREAM EVERY 5;")
+
+    def test_wallclock_tick_cuts_epoch(self, store):
+        """A slow source with a wall-clock tick commits partial epochs."""
+        def slow_source():
+            for i in range(4):
+                time.sleep(0.05)
+                yield IngestItem(gen_lineitem(50, seed=i))
+
+        p = columnar_plan(store)
+        with_epochs(p, items=1000, seconds=0.02)  # tick fires before 1000 items
+        rep = stream_ingest(p, slow_source(), store)
+        assert rep.total_items == 4
+        assert len(rep.epochs) >= 2   # ticks cut the stream into several epochs
+
+
+class TestFeederTailing:
+    def _lm_plan(self, ds):
+        from repro.data.feeder import build_lm_plan
+        return build_lm_plan(ds, seq_len=64, rows_per_block=4)
+
+    def _doc_source(self, n_docs, seed):
+        from repro.data.generators import as_file_items
+        docs = gen_token_documents(n_docs, vocab=512, seed=seed, max_len=128)
+        return iter(as_file_items(docs, shards=4))
+
+    def test_tail_follows_committed_epochs(self, store):
+        from repro.data.feeder import BlockFeeder
+        eng = StreamingRuntimeEngine(store, epoch_items=2, queue_capacity=4)
+        eng.run_stream(self._lm_plan(store), self._doc_source(12, seed=0))
+        feeder = BlockFeeder(store, num_tasks=1, task=0)
+        n_before = len(feeder)
+        assert n_before > 0
+
+        # more epochs commit after the feeder was built; tail picks them up
+        eng.run_stream(self._lm_plan(store), self._doc_source(12, seed=1))
+        assert feeder.refresh() > 0
+        batches = list(feeder.tail(num_steps=len(feeder), timeout_s=0.5))
+        assert len(batches) == len(feeder) > n_before
+        assert all("tokens" in b for b in batches)
