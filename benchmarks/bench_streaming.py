@@ -1,14 +1,23 @@
-"""Streaming vs batch ingestion: sustained throughput and epoch-commit
-latency.  The streaming engine pays a commit (manifest rename) per epoch; the
-batch engine pays one barrier at the end — this bench reports the price of
-incremental visibility."""
+"""Streaming vs batch ingestion, and sequential vs *pipelined* epochs.
+
+The streaming engine pays a commit (manifest rename) per epoch; the batch
+engine pays one barrier at the end — the first rows report the price of
+incremental visibility.  The second group runs a shuffle-stage plan through
+the same engine with epoch pipelining off and on (ISSUE 2): epoch N+1's
+ingest segment (parse/partition/shuffle/serialize) overlaps epoch N's store
+segment (upload + commit), and the double-buffered shuffle moves the DFS
+journal write off the barrier.  Results are appended to the
+``BENCH_streaming.json`` trajectory file at the repo root.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import List
+from typing import Dict, List
 
 from repro.core import (IngestPlan, RuntimeEngine, StreamingRuntimeEngine,
-                        create_stage, format_, select)
+                        chain_stage, create_stage, format_, resolve_op, select)
 from repro.core import store as store_stmt
 from repro.core.items import IngestItem
 
@@ -16,6 +25,7 @@ from .common import Row, cleanup, fresh_store, lineitem_shards, timed
 
 SHARDS = 32
 EPOCH_ITEMS = 4
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "..", "BENCH_streaming.json")
 
 
 def _plan(ds):
@@ -26,6 +36,82 @@ def _plan(ds):
                     locate_args={"num_locations": len(ds.nodes)}, upload=ds)
     create_stage(p, using=[s1, s2, s3], name="main")
     return p
+
+
+def _shuffled_plan(ds):
+    """Ingest segment: parse + hash-partition + shuffle, then chunk +
+    serialize + replicate (the paper's scenarios all keep >=2 replicas);
+    store segment: locate + upload.  The segment split is what the epoch
+    pipeliner overlaps: transform compute against replica upload I/O."""
+    p = IngestPlan("stream_shuffle_bench")
+    s1 = p.add_statement([
+        resolve_op("identity_parser"),
+        resolve_op("partition", scheme="hash", key="orderkey", num_partitions=8),
+        resolve_op("map", fn=lambda cols: cols, shuffle_by="partition"),
+    ], kind="select")
+    s2 = p.add_statement([
+        resolve_op("chunk", target_rows=8192),
+        resolve_op("serialize", layout="columnar"),
+        resolve_op("replicate", copies=2, tag="bench_rep"),
+    ], kind="format", inputs=[s1])
+    s3 = p.add_statement([
+        resolve_op("locate", scheme="roundrobin", num_locations=len(ds.nodes)),
+        resolve_op("upload", store=ds),
+    ], kind="store", inputs=[s2])
+    create_stage(p, using=[s1], name="a")
+    chain_stage(p, to=["a"], using=[s2], name="b")
+    chain_stage(p, to=["b"], using=[s3], name="c")
+    return p
+
+
+def _fresh_shards(shards, delay_s: float = 0.0):
+    """Re-materialize the shard list as a source; ``delay_s`` > 0 makes it a
+    *rate-limited feed* (one shard per tick — streaming arrival, not a
+    pre-materialized list)."""
+    items = [IngestItem(dict(it.data), it.granularity) for it in shards]
+
+    def gen():
+        for it in items:
+            if delay_s:
+                time.sleep(delay_s)
+            yield it
+
+    return gen()
+
+
+def _stream_once(shards, plan_fn, *, legacy: bool, delay_s: float = 0.0):
+    """One streaming run.  ``legacy=True`` configures the pre-ISSUE-2
+    runtime: strictly sequential epochs, synchronous per-epoch DFS shuffle
+    round-trips, and O(store) snapshot-manifest commits.  ``legacy=False``
+    is the pipelined execution core: overlapped epochs on the persistent
+    node executors, in-memory double-buffered shuffle, O(epoch) journal
+    commits."""
+    ds = fresh_store()
+    ds.journal_commits = not legacy
+    eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                 queue_capacity=2 * EPOCH_ITEMS,
+                                 pipelined=not legacy,
+                                 shuffle_synchronous=legacy)
+    t0 = time.perf_counter()
+    rep = eng.run_stream(plan_fn(ds), _fresh_shards(shards, delay_s))
+    secs = time.perf_counter() - t0
+    eng.close()
+    cleanup(ds)
+    return secs, rep
+
+
+def _append_trajectory(record: Dict) -> None:
+    history: List[Dict] = []
+    if os.path.exists(TRAJECTORY):
+        try:
+            with open(TRAJECTORY) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(record)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(history, f, indent=2)
+        f.write("\n")
 
 
 def run(scale: int) -> List[Row]:
@@ -40,14 +126,7 @@ def run(scale: int) -> List[Row]:
                  f"{scale / batch_s:,.0f} rows/s"))
 
     # ---- streaming: same data as an unbounded feed, micro-batch epochs
-    ds = fresh_store()
-    eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
-                                 queue_capacity=2 * EPOCH_ITEMS)
-    t0 = time.perf_counter()
-    rep = eng.run_stream(_plan(ds), iter([IngestItem(dict(it.data), it.granularity)
-                                          for it in shards]))
-    stream_s = time.perf_counter() - t0
-    cleanup(ds)
+    stream_s, rep = _stream_once(shards, _plan, legacy=False)
     lat = sorted(rep.commit_latencies())
     p50 = lat[len(lat) // 2]
     p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
@@ -57,4 +136,35 @@ def run(scale: int) -> List[Row]:
                  f"{len(rep.epochs)} epochs)"))
     rows.append(("streaming/epoch_commit_p50", p50, f"{p50 * 1e3:.1f} ms"))
     rows.append(("streaming/epoch_commit_p99", p99, f"{p99 * 1e3:.1f} ms"))
+
+    # ---- sequential vs pipelined epochs over a shuffle-stage plan (ISSUE 2):
+    # the pre-ISSUE-2 runtime (sequential epochs, sync DFS shuffle, snapshot
+    # commits) against the pipelined execution core on the same plan + data
+    # (best-of-N like the rest of the harness: the container scheduler is noisy)
+    from .common import REPEATS
+    seq_s, seq_rep = min((_stream_once(shards, _shuffled_plan, legacy=True)
+                          for _ in range(REPEATS)), key=lambda t: t[0])
+    pipe_s, pipe_rep = min((_stream_once(shards, _shuffled_plan, legacy=False)
+                            for _ in range(REPEATS)), key=lambda t: t[0])
+    speedup = seq_s / pipe_s
+    rows.append(("streaming/shuffle_sequential_epochs", seq_s,
+                 f"{scale / seq_s:,.0f} rows/s ({len(seq_rep.epochs)} epochs; "
+                 f"sync shuffle, snapshot commits)"))
+    rows.append(("streaming/shuffle_pipelined_epochs", pipe_s,
+                 f"{scale / pipe_s:,.0f} rows/s ({speedup:.2f}x sequential)"))
+
+    _append_trajectory({
+        "ts": time.time(),
+        "scale": scale,
+        "batch_s": batch_s,
+        "stream_s": stream_s,
+        "epoch_commit_p50_s": p50,
+        "epoch_commit_p99_s": p99,
+        "shuffle_sequential_s": seq_s,
+        "shuffle_pipelined_s": pipe_s,
+        "pipelined_speedup": speedup,
+        "sequential_epochs": seq_rep.committed_epoch_ids(),
+        "pipelined_epochs": pipe_rep.committed_epoch_ids(),
+        "pipelined_rows_per_s": scale / pipe_s,
+    })
     return rows

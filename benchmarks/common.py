@@ -27,8 +27,9 @@ Row = Tuple[str, float, str]
 NODES = ["n0", "n1", "n2", "n3"]
 
 
-def fresh_store() -> DataStore:
-    return DataStore(tempfile.mkdtemp(prefix="ibench_"), nodes=NODES)
+def fresh_store(durable: bool = False, compress: bool = False) -> DataStore:
+    return DataStore(tempfile.mkdtemp(prefix="ibench_"), nodes=NODES,
+                     durable=durable, compress=compress)
 
 
 def cleanup(ds: DataStore) -> None:

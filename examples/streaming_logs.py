@@ -45,7 +45,10 @@ def main():
     n_shards, rows = 24, 2_000
     engine = StreamingRuntimeEngine(ds)
     faults = StreamFaultInjection(node_death_in_epoch={"n1": 2})  # die mid-stream
-    report = engine.run_stream(plan, log_feed(n_shards, rows), faults=faults)
+    try:
+        report = engine.run_stream(plan, log_feed(n_shards, rows), faults=faults)
+    finally:
+        engine.close()   # release the persistent node executors
 
     print(f"epochs committed: {report.committed_epoch_ids()}")
     print(f"node failures: {report.node_failures} "

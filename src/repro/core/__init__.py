@@ -16,17 +16,21 @@ from .catalog import Catalog
 from .fault import (ErasureRecovery, FaultToleranceDaemon, RecoveryUDF,
                     ReplicationRecovery, TransformationRecovery)
 from .items import Granularity, IngestItem, Label
-from .language import (LanguageSession, chain_stage, create_stage, format_,
-                       parse_ingestion_script, select, store, with_epochs)
+from .language import (FeedSpec, LanguageSession, chain_stage, create_stage,
+                       format_, parse_feed_script, parse_ingestion_script,
+                       select, store, with_epochs)
 from .operators import (IngestOp, MaterializeOp, OperatorFailure, OpMode,
                         PassThroughOp, register_op, registered_ops, resolve_op)
 from .optimizer import (FilterFusionRule, IngestionOptimizer, IngestOpExpr,
-                        ParallelModeRule, PipelineRule, ReorderRule, Rule)
+                        ParallelModeRule, PipelineRule, ReorderRule, Rule,
+                        split_pipeline_segments)
 from .plan import IngestPlan, Stage, StagePlan, Statement
-from .runtime import FaultInjection, NodeFailure, RunReport, RuntimeEngine, ingest
+from .runtime import (FaultInjection, NodeExecutor, NodeFailure, RunReport,
+                      RuntimeEngine, ShuffleService, ingest)
 from .store import BlockEntry, DataStore, EpochEntry
-from .streaming import (EpochReport, IngestQueues, StreamFaultInjection,
-                        StreamingRuntimeEngine, StreamReport, stream_ingest)
+from .streaming import (EpochReport, FeedDistributor, IngestQueues,
+                        StreamFaultInjection, StreamingRuntimeEngine,
+                        StreamReport, stream_ingest, stream_ingest_multi)
 
 # operator implementations register themselves on import
 from . import ops_select as _ops_select  # noqa: F401
@@ -38,15 +42,18 @@ __all__ = [
     "ErasureRecovery", "FaultToleranceDaemon", "RecoveryUDF",
     "ReplicationRecovery", "TransformationRecovery",
     "Granularity", "IngestItem", "Label",
-    "LanguageSession", "chain_stage", "create_stage", "format_",
-    "parse_ingestion_script", "select", "store", "with_epochs",
+    "FeedSpec", "LanguageSession", "chain_stage", "create_stage", "format_",
+    "parse_feed_script", "parse_ingestion_script", "select", "store",
+    "with_epochs",
     "IngestOp", "MaterializeOp", "OperatorFailure", "OpMode", "PassThroughOp",
     "register_op", "registered_ops", "resolve_op",
     "FilterFusionRule", "IngestionOptimizer", "IngestOpExpr", "ParallelModeRule",
-    "PipelineRule", "ReorderRule", "Rule",
+    "PipelineRule", "ReorderRule", "Rule", "split_pipeline_segments",
     "IngestPlan", "Stage", "StagePlan", "Statement",
-    "FaultInjection", "NodeFailure", "RunReport", "RuntimeEngine", "ingest",
+    "FaultInjection", "NodeExecutor", "NodeFailure", "RunReport",
+    "RuntimeEngine", "ShuffleService", "ingest",
     "BlockEntry", "DataStore", "EpochEntry",
-    "EpochReport", "IngestQueues", "StreamFaultInjection",
+    "EpochReport", "FeedDistributor", "IngestQueues", "StreamFaultInjection",
     "StreamingRuntimeEngine", "StreamReport", "stream_ingest",
+    "stream_ingest_multi",
 ]

@@ -102,6 +102,17 @@ class DataAccess:
         eps = [e.epoch for e in self.entries if e.epoch in committed]
         return max(eps, default=-1)
 
+    def committed_frontier(self, start: int = 0) -> int:
+        """Highest epoch ``f`` with epochs ``start..f`` *all* committed (-1 =
+        none).  Under pipelined ingestion the commit sequencer publishes in
+        epoch order, so the frontier equals ``latest_epoch`` — this is the
+        gap-free watermark incremental readers can trust (DESIGN.md §3)."""
+        committed = set(self.store.committed_epoch_ids())
+        f = start - 1
+        while f + 1 in committed:
+            f += 1
+        return f
+
     def distinct_replicas(self) -> "DataAccess":
         """At most one physical block per logical id (avoid double reads when a
         plan created several copies)."""

@@ -134,7 +134,7 @@ class ErasureRecovery(RecoveryUDF):
             row[: len(raw)] = raw
             shards[e.stripe_pos] = row
         if L is None:
-            L = max(1, -(-failed.nbytes // 128) * 128)
+            L = max(1, -(-failed.logical_nbytes() // 128) * 128)
         # virtual zero rows of a partial stripe (never stored, implicitly intact)
         stored = {e.stripe_pos for e in store.stripe_members(failed.stripe_id)}
         for p in range(k):
@@ -143,7 +143,7 @@ class ErasureRecovery(RecoveryUDF):
             if p not in shards and p not in stored:
                 shards[p] = np.zeros(L, dtype=np.uint8)
         out = rs.recover_block(failed.stripe_pos, shards)
-        return out.tobytes()[: failed.nbytes]
+        return out.tobytes()[: failed.logical_nbytes()]
 
 
 @dataclass

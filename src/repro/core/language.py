@@ -20,15 +20,33 @@ Two front-ends over the same plan builder:
 
    Operator names resolve through the operator registry, so custom operators
    participate in the textual language too.
+
+Feed fan-out (ISSUE 2 / DESIGN.md §5): ``FEED <source> INTO plan1, plan2``
+declares an AsterixDB-style feed joint — one ingest fanned into several
+plans.  Plan names resolve to IngestPlan objects in ``env``; the resulting
+``FeedSpec`` plugs straight into ``stream_ingest_multi``.
 """
 from __future__ import annotations
 
 import re
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .operators import IngestOp, resolve_op
 from .plan import IngestPlan
 from .store import DataStore
+
+
+@dataclass
+class FeedSpec:
+    """A parsed ``FEED <source> INTO p1, p2, ...`` statement.
+
+    ``plans`` is what ``stream_ingest_multi`` consumes (it duck-types on the
+    attribute, keeping the language layer import-free from the runtime)."""
+
+    source: str
+    plan_names: List[str] = field(default_factory=list)
+    plans: List[IngestPlan] = field(default_factory=list)
 
 
 # --------------------------------------------------------------------- helpers
@@ -167,7 +185,7 @@ def with_epochs(plan: IngestPlan, *, items: Optional[int] = None,
 
 # ---------------------------------------------------------------- text parser
 _STMT_RE = re.compile(r"^\s*(?:(\w+)\s*=\s*)?(SELECT|FORMAT|STORE|CREATE\s+STAGE|"
-                      r"CHAIN\s+STAGE|STREAM)\b(.*)$", re.IGNORECASE | re.DOTALL)
+                      r"CHAIN\s+STAGE|STREAM|FEED)\b(.*)$", re.IGNORECASE | re.DOTALL)
 
 
 class LanguageError(ValueError):
@@ -225,6 +243,7 @@ class LanguageSession:
                  env: Optional[Dict[str, Any]] = None) -> None:
         self.plan = plan or IngestPlan("scripted")
         self.env = env or {}
+        self.feeds: List[FeedSpec] = []   # FEED ... INTO declarations
 
     # ---- operator spec resolution: registry key, env object, or inline args
     def _resolve(self, key: str, **kw: Any) -> IngestOp:
@@ -259,6 +278,8 @@ class LanguageSession:
             self._chain_stage(rest)
         elif verb == "STREAM":
             self._stream(rest)
+        elif verb == "FEED":
+            self._feed(rest)
 
     def _select(self, sid: Optional[str], rest: str) -> None:
         m = re.match(r"(?P<proj>.+?)\s+FROM\s+(?P<src>\w+)"
@@ -379,6 +400,25 @@ class LanguageSession:
                                 f"{sorted(allowed)}")
         with_epochs(self.plan, **kwargs)
 
+    def _feed(self, rest: str) -> None:
+        """FEED <source> INTO plan1, plan2[, ...];  — plan names are IngestPlan
+        objects in env (the feed joint: one ingest fanned into many plans)."""
+        m = re.match(r"(\w+)\s+INTO\s+([\w\s,]+)$", rest, re.IGNORECASE)
+        if not m:
+            raise LanguageError(f"bad FEED (want FEED <source> INTO p1, p2): {rest!r}")
+        names = [s.strip() for s in m.group(2).split(",") if s.strip()]
+        if len(names) < 1:
+            raise LanguageError("FEED ... INTO needs at least one plan")
+        plans: List[IngestPlan] = []
+        for name in names:
+            target = self.env.get(name)
+            if not isinstance(target, IngestPlan):
+                raise LanguageError(
+                    f"FEED INTO {name!r}: not an IngestPlan in env")
+            plans.append(target)
+        self.feeds.append(FeedSpec(source=m.group(1), plan_names=names,
+                                   plans=plans))
+
     def _create_stage(self, rest: str) -> None:
         m = re.match(r"(\w+)\s+USING\s+([\w\s,]+?)(?:\s+WHERE\s+(.*))?$", rest, re.IGNORECASE)
         if not m:
@@ -400,3 +440,13 @@ class LanguageSession:
 
 def parse_ingestion_script(text: str, env: Optional[Dict[str, Any]] = None) -> IngestPlan:
     return LanguageSession(env=env).execute(text)
+
+
+def parse_feed_script(text: str, env: Optional[Dict[str, Any]] = None) -> List[FeedSpec]:
+    """Parse a script of ``FEED ... INTO ...`` statements (plans in ``env``)
+    and return the declared feed joints."""
+    session = LanguageSession(env=env)
+    session.execute(text)
+    if not session.feeds:
+        raise LanguageError("script declared no FEED ... INTO statements")
+    return session.feeds

@@ -48,6 +48,9 @@ class IngestOp:
     expansion: float = 1.0
     #: CPU-heavy operators default to parallel mode (paper Sec. VI-A)
     cpu_heavy: bool = False
+    #: operators that publish into the DataStore; stages containing one form
+    #: the commit-side segment the epoch pipeliner may overlap (DESIGN.md §4)
+    commit_side: bool = False
 
     def __init__(self, **params: Any) -> None:
         self.params: Dict[str, Any] = params

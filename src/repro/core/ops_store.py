@@ -162,6 +162,7 @@ class UploadOp(IngestOp):
     name = "upload"
     granularity_in = Granularity.BLOCK
     granularity_out = Granularity.BLOCK
+    commit_side = True  # publishes into the DataStore -> store-segment stage
 
     def __init__(self, store: Optional[DataStore] = None,
                  location_map: Optional[Dict[int, str]] = None,
@@ -174,7 +175,10 @@ class UploadOp(IngestOp):
         self._replica_counter: Dict[str, int] = {}
 
     def _node_for(self, item: IngestItem) -> str:
-        nodes = self.store.nodes
+        # location IDs map over the *live* slaves: a node the runtime marked
+        # dead takes no new blocks — its location ids flow to the survivors
+        # (paper Sec. VI-C1)
+        nodes = self.store.live_nodes() or self.store.nodes
         loc = item.label_value("locate")
         if loc is None:
             loc = abs(hash(item.lineage_name()))
@@ -202,6 +206,13 @@ class UploadOp(IngestOp):
         yield item.with_label(self.name, entry.node)
 
     def finalize(self) -> None:
-        if self.store is not None:
+        # while an epoch stages, a manifest flush publishes nothing (staged
+        # blocks are withheld) — skip the O(store) rewrite; the epoch commit
+        # is the publish point.  Batch runs still flush per stage, and
+        # snapshot-commit stores (journal_commits=False) keep the manifest
+        # continuously current, as before ISSUE 2.
+        if self.store is not None and (
+                not getattr(self.store, "journal_commits", True)
+                or not self.store.staging_epoch_ids()):
             self.store.flush_manifest()
         super().finalize()

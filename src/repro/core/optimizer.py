@@ -199,6 +199,21 @@ class PipelineRule:
         return sp
 
 
+def split_pipeline_segments(stage_plans: Sequence[StagePlan]) -> int:
+    """Index of the first commit-side stage in the topologically-ordered DAG.
+
+    Stages ``[0, split)`` form the *ingest segment* (parse / transform /
+    shuffle — no DataStore writes); stages ``[split, n)`` form the *store
+    segment* (upload + everything at or after it in topo order).  The
+    pipelined streaming runtime overlaps epoch N+1's ingest segment with
+    epoch N's store segment; this pipeline-block metadata is the single
+    source of truth for what may overlap (DESIGN.md §4)."""
+    for i, sp in enumerate(stage_plans):
+        if sp.commit_side or sp.compute_commit_side():
+            return i
+    return len(stage_plans)
+
+
 # ------------------------------------------------------------------- optimizer
 class IngestionOptimizer:
     """Ordered rule set; preorder traversal; fire until fixpoint (paper Sec. V)."""
@@ -243,6 +258,7 @@ class IngestionOptimizer:
         for sp in stage_plans:
             ops = self.optimize_chain(sp.ops)
             nsp = StagePlan(sp.name, ops, sp.upstream, sp.predicates)
+            nsp.commit_side = nsp.compute_commit_side()
             out.append(self.pipeline.rewrite(nsp))
         return out
 

@@ -49,6 +49,11 @@ class StagePlan:
     ``pipeline_blocks`` partitions the chain into pipelined groups; a
     materialization barrier (= in-flight checkpoint) sits after each block
     (paper Sec. V pipelining, Sec. VI-C1 recovery).
+
+    ``commit_side`` marks stages whose operators publish into the DataStore
+    (upload).  The pipelined streaming runtime may overlap a new epoch's
+    execution only with the *commit-side* suffix of the previous epoch
+    (DESIGN.md §4) — this metadata is what drives that split.
     """
 
     name: str
@@ -56,12 +61,17 @@ class StagePlan:
     upstream: List[str]
     predicates: Dict[str, Any]
     pipeline_blocks: List[List[int]] = field(default_factory=list)
+    commit_side: bool = False
 
     def block_of(self, op_idx: int) -> int:
         for b, idxs in enumerate(self.pipeline_blocks):
             if op_idx in idxs:
                 return b
         return 0
+
+    def compute_commit_side(self) -> bool:
+        """A stage is commit-side iff any of its operators writes the store."""
+        return any(getattr(op, "commit_side", False) for op in self.ops)
 
 
 class IngestPlan:
@@ -128,8 +138,9 @@ class IngestPlan:
                 ops.extend(self.statements[sid].ops)
             self._validate_chain(name, ops)
             blocks = [[i] for i in range(len(ops))]  # default: materialize everywhere
-            plans.append(StagePlan(name, ops, list(st.upstream), dict(st.predicates),
-                                   blocks))
+            sp = StagePlan(name, ops, list(st.upstream), dict(st.predicates), blocks)
+            sp.commit_side = sp.compute_commit_side()
+            plans.append(sp)
         return plans
 
     @staticmethod

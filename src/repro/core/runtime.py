@@ -2,15 +2,18 @@
 
 * **Inter-node parallelism** — the client ships the *optimized* plan to every
   node in the slaves list and runs it over node-local shards ("ship the plan
-  to the data").  Nodes here are worker threads over per-node directories; the
-  remote-shell seam is ``launch_remote`` (DESIGN.md §2).
+  to the data").  Nodes here are persistent ``NodeExecutor`` workers over
+  per-node directories; the remote-shell seam is ``launch_remote``
+  (DESIGN.md §2), invoked once per compiled plan, not once per stage barrier.
 * **Intra-node parallelism** — parallel-mode operators fan out over a thread
   pool (see operators.IngestOp._parallel_iter).
 * **Work stealing** — when sources are given as a shared list, nodes pull
   shards from a global queue, so stragglers simply take fewer shards.
-* **Distributed I/O** — shuffle via the store's DFS directory (local groups ->
-  DFS -> group-directories read back per node), placement via location IDs,
-  replication decoupled from placement.
+* **Distributed I/O** — shuffle via the ``ShuffleService`` (DESIGN.md §4):
+  in-memory group handoff with a write-behind DFS journal, double-buffered so
+  the DFS write of one round overlaps the next epoch's ingest; rounds past
+  the spill threshold take the classic blocking DFS round-trip.  Placement
+  via location IDs, replication decoupled from placement.
 * **In-flight fault tolerance** — pipeline blocks are checkpoints: a failing
   operator retries its block from the previous materialization; after
   ``max_retries`` failures it is replaced by a dummy pass-through operator
@@ -26,7 +29,7 @@ import shutil
 import threading
 import time
 from collections import defaultdict
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
@@ -51,6 +54,8 @@ class RunReport:
     node_failures: List[str] = field(default_factory=list)
     reassigned_shards: int = 0
     shuffled_items: int = 0
+    shuffle_spills: int = 0        # blocking DFS round-trips (size > threshold)
+    shuffle_async_rounds: int = 0  # in-memory handoffs w/ write-behind journal
     wall_time_s: float = 0.0
     per_node_shards: Dict[str, int] = field(default_factory=dict)
 
@@ -65,13 +70,264 @@ class FaultInjection:
     node_death_after_stage: Dict[str, str] = field(default_factory=dict)
 
 
+# --------------------------------------------------------------------------
+# Persistent node executors (DESIGN.md §4)
+# --------------------------------------------------------------------------
+class _ExecutorLane:
+    """One FIFO worker thread: jobs run in submission order."""
+
+    def __init__(self, name: str) -> None:
+        self.jobs: "queue.Queue[Optional[Tuple[Callable, tuple, Future]]]" = queue.Queue()
+        self.thread = threading.Thread(target=self._loop,
+                                       name=f"nodeexec-{name}", daemon=True)
+        self.thread.start()
+
+    def submit(self, fn: Callable, *args: Any) -> Future:
+        fut: Future = Future()
+        self.jobs.put((fn, args, fut))
+        return fut
+
+    def _loop(self) -> None:
+        while True:
+            job = self.jobs.get()
+            if job is None:
+                return
+            fn, args, fut = job
+            if not fut.set_running_or_notify_cancel():
+                continue
+            try:
+                fut.set_result(fn(*args))
+            except BaseException as e:  # delivered via Future.result()
+                fut.set_exception(e)
+
+    def stop(self) -> None:
+        self.jobs.put(None)
+
+
+class NodeExecutor:
+    """One long-lived worker per node, owning the node's plan clone.
+
+    The plan-clone cache is bounded (``PLAN_CACHE``): a long-lived engine
+    running many different plans re-clones an evicted one instead of pinning
+    every plan it ever saw.
+
+    The engine used to create a fresh ``ThreadPoolExecutor`` at every stage
+    barrier and re-clone ("re-ship") the whole plan per ``_execute`` call.  A
+    NodeExecutor instead persists for the engine's lifetime and owns
+
+    * the node's **plan clone** — installed once per compiled plan, so
+      streaming epochs stop re-shipping plans (operator state, including
+      dummy substitutions after repeated failures, survives across epochs
+      exactly as it would in a long-running per-node JVM), and
+    * one or more **lanes** — named FIFO worker threads.  Batch stages run on
+      the default ``"main"`` lane; the pipelined streaming engine runs epoch
+      N+1's ingest segment on the ``"ingest"`` lane while epoch N's store
+      segment occupies the ``"store"`` lane, overlapping transform compute
+      with commit I/O on every node (DESIGN.md §4).
+    """
+
+    PLAN_CACHE = 4
+
+    def __init__(self, node: str) -> None:
+        self.node = node
+        self._lock = threading.Lock()
+        self._lanes: Dict[str, _ExecutorLane] = {}
+        # id(original) -> (original, clone); the original is pinned so its id
+        # cannot be recycled while the cache entry lives
+        self._plans: Dict[int, Tuple[List[StagePlan], List[StagePlan]]] = {}
+
+    def install_plan(self, stage_plans: List[StagePlan],
+                     cloner: Callable[[str, List[StagePlan]], List[StagePlan]]
+                     ) -> List[StagePlan]:
+        """This node's clone of ``stage_plans`` — cloned on first sight only
+        ("ship the plan to the data" happens once, not per barrier)."""
+        key = id(stage_plans)
+        with self._lock:
+            cached = self._plans.get(key)
+            if cached is not None and cached[0] is stage_plans:
+                return cached[1]
+            clone = cloner(self.node, stage_plans)
+            while len(self._plans) >= self.PLAN_CACHE:   # bounded: evict oldest
+                self._plans.pop(next(iter(self._plans)))
+            self._plans[key] = (stage_plans, clone)
+            return clone
+
+    def submit(self, fn: Callable, *args: Any, lane: str = "main") -> Future:
+        with self._lock:
+            ln = self._lanes.get(lane)
+            if ln is None:
+                ln = self._lanes[lane] = _ExecutorLane(f"{self.node}:{lane}")
+        return ln.submit(fn, *args)
+
+    def shutdown(self) -> None:
+        with self._lock:
+            lanes, self._lanes = list(self._lanes.values()), {}
+            self._plans.clear()
+        for ln in lanes:
+            ln.stop()
+
+
+# --------------------------------------------------------------------------
+# Asynchronous double-buffered shuffle (paper Sec. VI-B, DESIGN.md §4)
+# --------------------------------------------------------------------------
+class ShuffleService:
+    """Redistributes a stage's output across nodes by group label.
+
+    The old barrier round-tripped every shuffled item through pickled DFS
+    files *inside* the epoch barrier.  Now:
+
+    * groups hand off **in memory** to their target nodes immediately — the
+      next stage starts without any DFS traffic (round memory is already
+      bounded upstream: bounded ingest queues cap the epoch, and the
+      committer's job queue caps epochs in flight);
+    * only a round past ``spill_bytes`` is spilled to the DFS (the group
+      files other nodes would fetch in a real deployment), and the write is
+      *asynchronous and double-buffered*: the DFS write of epoch N's groups
+      overlaps epoch N+1's ingest, and the next barrier for the same stage
+      first drains the previous round's write — at most two rounds are ever
+      in flight per stage (the two buffers).
+
+    ``synchronous=True`` restores the pre-pipelining barrier (paper Sec.
+    VI-B verbatim, and what this engine did before ISSUE 2): every round is
+    written to the DFS and read back *inside* the barrier.  Kept as a mode
+    for debugging and as the baseline of the pipelining benchmark.
+    """
+
+    def __init__(self, store: DataStore, spill_bytes: int = 32 << 20,
+                 synchronous: bool = False) -> None:
+        self.store = store
+        self.spill_bytes = spill_bytes
+        self.synchronous = synchronous
+        self._lock = threading.Lock()
+        self._stage_locks: Dict[str, threading.Lock] = {}
+        self._pending: Dict[str, Future] = {}
+        self._writer: Optional[_ExecutorLane] = None
+        self._spilled_stages: set = set()   # stages with DFS group files
+
+    # ------------------------------------------------------------------ util
+    def _stage_lock(self, stage: str) -> threading.Lock:
+        with self._lock:
+            lk = self._stage_locks.get(stage)
+            if lk is None:
+                lk = self._stage_locks[stage] = threading.Lock()
+            return lk
+
+    def _writer_lane(self) -> _ExecutorLane:
+        with self._lock:
+            if self._writer is None:
+                self._writer = _ExecutorLane("shuffle-journal")
+            return self._writer
+
+    def _dfs_dir(self, stage: str) -> str:
+        return os.path.join(self.store.dfs_dir, f"shuffle_{stage}")
+
+    @staticmethod
+    def _shuffle_key(sp: StagePlan) -> Optional[str]:
+        key = None
+        for op in sp.ops:
+            if "shuffle_by" in op.params:
+                key = op.params["shuffle_by"]
+        return key
+
+    # --------------------------------------------------------------- barrier
+    def barrier(self, sp: StagePlan,
+                outputs: Dict[str, Dict[str, List[IngestItem]]],
+                live: List[str], report: RunReport) -> None:
+        """``live`` is the caller's pinned executing-node set — groups are
+        collected from and reassigned over exactly these nodes."""
+        if not sp.ops:
+            return
+        shuffle_by = self._shuffle_key(sp)
+        if shuffle_by is None:
+            return
+        with self._stage_lock(sp.name):
+            with self._lock:
+                prev = self._pending.pop(sp.name, None)
+            if prev is not None:
+                prev.result()  # double buffer: last round's journal must land
+
+            groups: Dict[Any, List[IngestItem]] = {}
+            nbytes = 0
+            for n in live:
+                for it in outputs[n][sp.name]:
+                    g = it.label_value(shuffle_by, 0)
+                    groups.setdefault(g, []).append(it)
+                    nbytes += it.nbytes()
+                    report.shuffled_items += 1
+                outputs[n][sp.name] = []
+            if not groups:
+                return
+            order = sorted(groups, key=str)
+            if self.synchronous:
+                # legacy path: DFS round-trip inside the barrier
+                report.shuffle_spills += 1
+                dfs = self._write_groups(sp.name, order, groups)
+                groups.clear()
+                for gi, fn in enumerate(sorted(os.listdir(dfs))):
+                    target = live[gi % len(live)]
+                    with open(os.path.join(dfs, fn), "rb") as f:
+                        outputs[target][sp.name].extend(pickle.load(f))
+                # consume-on-read: the next round must not merge these files
+                shutil.rmtree(dfs, ignore_errors=True)
+                return
+            for gi, g in enumerate(order):
+                outputs[live[gi % len(live)]][sp.name].extend(groups[g])
+            if nbytes > self.spill_bytes:
+                # oversized round: materialize the group files on the DFS in
+                # the background — overlapped with the next epoch's ingest
+                report.shuffle_spills += 1
+                fut = self._writer_lane().submit(
+                    self._write_groups, sp.name, order, groups)
+                with self._lock:
+                    self._pending[sp.name] = fut
+                    self._spilled_stages.add(sp.name)
+            else:
+                report.shuffle_async_rounds += 1
+
+    # ----------------------------------------------------------------- paths
+    def _write_groups(self, stage: str, order: List[Any],
+                      groups: Dict[Any, List[IngestItem]]) -> str:
+        """Local groups -> one DFS file per group (consume-on-write: a fresh
+        round never merges an earlier round's leftovers)."""
+        dfs = self._dfs_dir(stage)
+        shutil.rmtree(dfs, ignore_errors=True)
+        os.makedirs(dfs, exist_ok=True)
+        for g in order:
+            with open(os.path.join(dfs, f"group{g}.pkl"), "wb") as f:
+                pickle.dump(groups[g], f, protocol=pickle.HIGHEST_PROTOCOL)
+        return dfs
+
+    # ------------------------------------------------------------- lifecycle
+    def drain(self) -> None:
+        """Wait for every outstanding journal write (end-of-stream barrier)."""
+        with self._lock:
+            pending, self._pending = list(self._pending.values()), {}
+        for fut in pending:
+            fut.result()
+
+    def close(self) -> None:
+        self.drain()
+        with self._lock:
+            writer, self._writer = self._writer, None
+            spilled, self._spilled_stages = set(self._spilled_stages), set()
+        if writer is not None:
+            writer.stop()
+        for stage in spilled:   # spilled group files die with the service
+            shutil.rmtree(self._dfs_dir(stage), ignore_errors=True)
+
+
 class RuntimeEngine:
     def __init__(self, store: DataStore, optimizer: Optional[IngestionOptimizer] = None,
-                 max_retries: int = 3) -> None:
+                 max_retries: int = 3, shuffle_spill_bytes: int = 32 << 20,
+                 shuffle_synchronous: bool = False) -> None:
         self.store = store
         self.nodes = list(store.nodes)
         self.optimizer = optimizer or IngestionOptimizer()
         self.max_retries = max_retries
+        self.shuffle = ShuffleService(store, spill_bytes=shuffle_spill_bytes,
+                                      synchronous=shuffle_synchronous)
+        self._executors: Dict[str, NodeExecutor] = {}
+        self._exec_lock = threading.Lock()
 
     # ------------------------------------------------------------------ remote
     def launch_remote(self, node: str, stage_plans: List[StagePlan]) -> List[StagePlan]:
@@ -79,8 +335,32 @@ class RuntimeEngine:
         plan to ``node`` (paper Sec. VI-A).  Here it clones operator instances
         so every node runs its own state, exactly as separate JVMs would."""
         return [StagePlan(sp.name, [op.clone() for op in sp.ops], list(sp.upstream),
-                          dict(sp.predicates), [list(b) for b in sp.pipeline_blocks])
+                          dict(sp.predicates), [list(b) for b in sp.pipeline_blocks],
+                          commit_side=sp.commit_side)
                 for sp in stage_plans]
+
+    def executor(self, node: str) -> NodeExecutor:
+        """The node's persistent executor (created on first use, kept for the
+        engine's lifetime — stage barriers stop re-creating thread pools)."""
+        with self._exec_lock:
+            ex = self._executors.get(node)
+            if ex is None:
+                ex = self._executors[node] = NodeExecutor(node)
+            return ex
+
+    def close(self) -> None:
+        """Shut down persistent node executors and the shuffle writer."""
+        self.shuffle.close()
+        with self._exec_lock:
+            execs, self._executors = list(self._executors.values()), {}
+        for ex in execs:
+            ex.shutdown()
+
+    def __enter__(self) -> "RuntimeEngine":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
 
     # --------------------------------------------------------------------- run
     def run(self, plan: IngestPlan,
@@ -118,20 +398,40 @@ class RuntimeEngine:
         report.per_node_shards = {n: len(v) for n, v in node_sources.items()}
 
         alive = {n: True for n in self.nodes}
+        # a fresh batch run starts from full liveness — clear placement marks
+        # a previous run's (injected) deaths left on the shared store
+        for n in self.nodes:
+            self.store.mark_node_live(n)
         self._execute(stage_plans, node_sources, faults, report, alive)
+        self.shuffle.drain()
 
         report.wall_time_s = time.time() - t0
         self.store.flush_manifest()
         return report
 
     # ----------------------------------------------------------- stage dataflow
+    def _mark_dead(self, node: str, alive: Dict[str, bool], report: RunReport) -> None:
+        alive[node] = False
+        report.node_failures.append(node)
+        # location IDs of the dead node flow to the survivors (Sec. VI-C1):
+        # the upload operator maps location ids over live nodes only
+        self.store.mark_node_dead(node)
+
     def _execute(self, stage_plans: List[StagePlan],
                  node_sources: Dict[str, List[IngestItem]],
                  faults: FaultInjection, report: RunReport,
                  alive: Dict[str, bool],
-                 on_node_death: str = "reassign") -> Dict[str, Dict[str, List[IngestItem]]]:
-        """Run the stage DAG over per-node shards (the body shared by the batch
-        engine and the streaming engine's per-epoch execution).
+                 on_node_death: str = "reassign",
+                 lane: str = "main",
+                 epoch: Optional[int] = None,
+                 outputs: Optional[Dict[str, Dict[str, List[IngestItem]]]] = None,
+                 start_stage: int = 0,
+                 end_stage: Optional[int] = None,
+                 node_set: Optional[List[str]] = None
+                 ) -> Dict[str, Dict[str, List[IngestItem]]]:
+        """Run (a slice of) the stage DAG over per-node shards — the body
+        shared by the batch engine and the streaming engine's per-epoch
+        execution.  Stage jobs run on the persistent per-node executors.
 
         ``on_node_death`` selects the recovery policy:
           * ``"reassign"`` (batch): the dead node's shards move to the next
@@ -139,23 +439,42 @@ class RuntimeEngine:
           * ``"raise"`` (streaming): mark the node dead and raise NodeFailure —
             the caller aborts the staged epoch and replays it on the
             surviving nodes (epoch-granular recovery).
+
+        ``lane`` picks the NodeExecutor lane (pipelined streaming keeps epoch
+        N+1's ingest and epoch N's store on separate lanes); ``epoch`` binds
+        ``DataStore.put_block`` attribution for concurrent staging epochs;
+        ``outputs``/``start_stage``/``end_stage`` execute a slice of the DAG
+        over pre-seeded upstream outputs (the ingest/store segment split).
+
+        ``node_set`` pins the executing nodes for the whole call: with two
+        epochs in flight, ``alive`` can flip concurrently from the *other*
+        epoch's thread, and a per-stage liveness read could silently skip a
+        node whose inputs this epoch still holds.  Raise-mode callers pass
+        their consistent snapshot; batch recomputes per stage (it owns
+        ``alive`` exclusively and needs reassignment to see deaths).
         """
-        # ---- ship plan to every node
-        node_plans = {n: self.launch_remote(n, stage_plans) for n in self.nodes}
-        # per-node stage outputs
-        outputs: Dict[str, Dict[str, List[IngestItem]]] = {
-            n: defaultdict(list) for n in self.nodes}
+        if on_node_death == "reassign" and (start_stage != 0 or end_stage is not None):
+            raise ValueError("shard reassignment requires the full stage DAG")
+        # ---- plan is resident on every node executor (installed once)
+        node_plans = {n: self.executor(n).install_plan(stage_plans, self.launch_remote)
+                      for n in self.nodes}
+        if outputs is None:
+            outputs = {n: defaultdict(list) for n in self.nodes}
+        stop = len(stage_plans) if end_stage is None else end_stage
         failure_counts: Dict[Tuple[str, str, int], int] = defaultdict(int)
 
         # dedicated lock for report mutation from worker threads
         rlock = threading.Lock()
 
-        for si, sp in enumerate(stage_plans):
+        for si in range(start_stage, stop):
+            sp = stage_plans[si]
+
             # -------------------------------------------------- stage barrier
             def run_stage_on(node: str, nsp: StagePlan,
                              input_items: List[IngestItem]) -> List[IngestItem]:
-                return self._run_stage(node, nsp, input_items, faults,
-                                       failure_counts, report, rlock)
+                with self.store.epoch_context(epoch):
+                    return self._run_stage(node, nsp, input_items, faults,
+                                           failure_counts, report, rlock)
 
             def stage_inputs(node: str, nsp: StagePlan) -> List[IngestItem]:
                 if not nsp.upstream:
@@ -166,36 +485,49 @@ class RuntimeEngine:
                         base = base + outputs[node][up]
                 return route_items(base, nsp.predicates)
 
-            live_nodes = [n for n in self.nodes if alive[n]]
-            with ThreadPoolExecutor(max_workers=max(1, len(live_nodes))) as pool:
-                futs = {}
-                for n in live_nodes:
-                    nsp = node_plans[n][si]
-                    futs[n] = pool.submit(run_stage_on, n, nsp, stage_inputs(n, nsp))
-                for n, fut in futs.items():
-                    try:
-                        outputs[n][sp.name] = fut.result()
-                    except NodeFailure:
-                        alive[n] = False
-                        report.node_failures.append(n)
-                        if on_node_death == "raise":
-                            raise NodeFailure(n)
+            live_nodes = (list(node_set) if node_set is not None
+                          else [n for n in self.nodes if alive[n]])
+            futs = {}
+            for n in live_nodes:
+                nsp = node_plans[n][si]
+                futs[n] = self.executor(n).submit(
+                    run_stage_on, n, nsp, stage_inputs(n, nsp), lane=lane)
+            failed: List[str] = []
+            for n, fut in futs.items():  # drain ALL jobs before acting on death
+                try:
+                    outputs[n][sp.name] = fut.result()
+                except NodeFailure:
+                    failed.append(n)
+            for n in failed:
+                self._mark_dead(n, alive, report)
+            if failed and on_node_death == "raise":
+                raise NodeFailure(failed[0])
 
-            # ---- shuffle barrier: redistribute DFS groups (Sec. VI-B)
-            self._shuffle_barrier(sp, outputs, alive, report)
+            # ---- shuffle barrier: redistribute groups (Sec. VI-B).  With a
+            # pinned node_set (raise mode) a stage failure raised above, so
+            # the whole set redistributes — re-reading `alive` here would
+            # race with the other epoch's thread and silently skip a node's
+            # outputs.  Batch mode re-reads it so a node that just failed
+            # this stage takes no groups.
+            barrier_live = (live_nodes if node_set is not None
+                            else [n for n in live_nodes if alive[n]])
+            self.shuffle.barrier(sp, outputs, barrier_live, report)
 
             # ---- injected node deaths after this stage
             for n, after in faults.node_death_after_stage.items():
                 if after == sp.name and alive.get(n):
-                    alive[n] = False
-                    report.node_failures.append(n)
+                    self._mark_dead(n, alive, report)
                     if on_node_death == "raise":
                         raise NodeFailure(n)
 
             # ---- node-failure recovery: reassign dead nodes' shards to the
             # next live node in the slaves order and re-run stages 0..si for
-            # them (their in-flight state is lost with the node).
-            dead = [n for n in self.nodes if not alive[n] and node_sources[n]]
+            # them (their in-flight state is lost with the node).  Only the
+            # batch policy reassigns here — under "raise" the epoch replays
+            # wholesale, and a death observed from a *concurrent* epoch's
+            # thread must not trigger a partial replay inside this one.
+            dead = ([n for n in self.nodes if not alive[n] and node_sources[n]]
+                    if on_node_death == "reassign" else [])
             for n in dead:
                 target = self._next_live(n, alive)
                 if target is None:
@@ -204,7 +536,6 @@ class RuntimeEngine:
                 node_sources[n] = []
                 node_sources[target].extend(shards)
                 report.reassigned_shards += len(shards)
-                # location IDs of the dead node flow to the target (Sec. VI-C1)
                 # re-run all stages so far for the moved shards on the target
                 replay_out: Dict[str, List[IngestItem]] = defaultdict(list)
                 for sj in range(si + 1):
@@ -293,58 +624,10 @@ class RuntimeEngine:
                 return cand
         return None
 
-    # ---------------------------------------------------------------- shuffle
-    def _shuffle_barrier(self, sp: StagePlan,
-                         outputs: Dict[str, Dict[str, List[IngestItem]]],
-                         alive: Dict[str, bool], report: RunReport) -> None:
-        """Redistribute a stage's output across nodes by group label.
-
-        If the stage's last operator declared ``shuffle_by`` in its params, the
-        engine (1) writes each node's local groups into the DFS directory, and
-        (2) reassigns each group directory to the node ``group % n_live``
-        (paper Sec. VI-B Shuffling).
-        """
-        if not sp.ops:
-            return
-        shuffle_by = None
-        for op in sp.ops:
-            if "shuffle_by" in op.params:
-                shuffle_by = op.params["shuffle_by"]
-        if shuffle_by is None:
-            return
-        dfs = os.path.join(self.store.dfs_dir, f"shuffle_{sp.name}")
-        # a fresh round never merges leftovers: an epoch attempt aborted
-        # between shuffle write and read leaves files behind
-        shutil.rmtree(dfs, ignore_errors=True)
-        os.makedirs(dfs, exist_ok=True)
-        live = [n for n in alive if alive[n]]
-        # phase 1: local groups -> DFS group directories
-        for n in live:
-            for i, it in enumerate(outputs[n][sp.name]):
-                g = it.label_value(shuffle_by, 0)
-                gdir = os.path.join(dfs, f"group{g}")
-                os.makedirs(gdir, exist_ok=True)
-                with open(os.path.join(gdir, f"{n}_{i}.pkl"), "wb") as f:
-                    pickle.dump(it, f)
-                report.shuffled_items += 1
-            outputs[n][sp.name] = []
-        # phase 2: each group directory is read back by one node
-        groups = sorted(os.listdir(dfs))
-        for gi, g in enumerate(groups):
-            target = live[gi % len(live)]
-            gdir = os.path.join(dfs, g)
-            merged: List[IngestItem] = []
-            for fn in sorted(os.listdir(gdir)):
-                with open(os.path.join(gdir, fn), "rb") as f:
-                    merged.append(pickle.load(f))
-            outputs[target][sp.name].extend(merged)
-        # consume-on-read: a later barrier for the same stage (next epoch, or
-        # an epoch replay after abort) must not merge this round's files
-        shutil.rmtree(dfs, ignore_errors=True)
-
 
 def ingest(plan: IngestPlan, sources: Union[Dict[str, List[IngestItem]], List[IngestItem]],
            store: DataStore, optimize: bool = True,
            faults: Optional[FaultInjection] = None) -> RunReport:
     """One-call entry point: optimize + run an ingestion plan against a store."""
-    return RuntimeEngine(store).run(plan, sources, faults=faults, optimize=optimize)
+    with RuntimeEngine(store) as eng:
+        return eng.run(plan, sources, faults=faults, optimize=optimize)

@@ -11,19 +11,30 @@ groups are copied to the distributed file system, then read back per group).
 
 Streaming epochs: the micro-batch runtime stages each epoch's blocks under an
 epoch id and publishes them atomically via ``commit_epoch`` — the manifest only
-ever records blocks of *committed* epochs, and the temp-write + rename in
-``flush_manifest`` is the exactly-once commit point.  Blocks with ``epoch=-1``
-are batch-ingested and always visible.
+ever records blocks of *committed* epochs.  The exactly-once commit point is
+one appended line in the epoch journal (``manifest.epochs.jsonl``): a whole
+line is a committed epoch, a torn line is not; ``flush_manifest`` (temp-write
++ rename) periodically compacts the journal into the base snapshot.  Blocks
+with ``epoch=-1`` are batch-ingested and always visible.
+
+Pipelined epochs (DESIGN.md §3): several epochs may stage *concurrently* —
+each writer thread binds its epoch with ``epoch_context`` so ``put_block``
+attributes blocks unambiguously — and the **commit sequencer** publishes
+commits strictly in epoch-id order: ``commit_epoch(e)`` blocks while any
+epoch < e is still staging, so ``since_epoch`` readers only ever observe a
+gap-free, in-order prefix of the epoch sequence.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import shutil
 import threading
 import time
+import zlib
 from dataclasses import asdict, dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -48,7 +59,12 @@ class BlockEntry:
     stripe_pos: int = -1       # position within the stripe (data: 0..k-1, parity: k..k+m-1)
     is_parity: bool = False
     epoch: int = -1            # streaming epoch that wrote this block (-1 = batch)
+    compressed: bool = False   # payload is zlib-compressed at rest
+    raw_nbytes: int = -1       # logical (uncompressed) size; -1 = same as nbytes
     meta: Dict[str, Any] = field(default_factory=dict)
+
+    def logical_nbytes(self) -> int:
+        return self.raw_nbytes if self.raw_nbytes >= 0 else self.nbytes
 
 
 @dataclass
@@ -62,13 +78,37 @@ class EpochEntry:
 
 
 class DataStore:
-    def __init__(self, root: str, nodes: Sequence[str] = ("node0",)) -> None:
+    #: how long a commit waits on out-of-order predecessors before giving up
+    COMMIT_SEQUENCE_TIMEOUT_S = 60.0
+
+    def __init__(self, root: str, nodes: Sequence[str] = ("node0",),
+                 durable: bool = False, compress: bool = False,
+                 compress_level: int = 3, journal_commits: bool = True) -> None:
+        """``durable=True`` fsyncs staged block files and the epoch-commit
+        journal line — a committed epoch survives power loss, not just
+        process death.  ``compress=True`` zlib-compresses block payloads at
+        rest (transparent: ``read_payload`` decompresses; checksums stay
+        logical).  ``journal_commits=False`` commits by rewriting the full
+        manifest snapshot instead of appending a journal line — a single
+        manifest file, at O(store) cost per commit (the pre-ISSUE-2
+        behavior, kept for ops that want one file and as the pipelining
+        benchmark's baseline)."""
         self.root = root
         self.nodes = list(nodes)
+        self.durable = durable
+        self.compress = compress
+        self.compress_level = compress_level
+        self.journal_commits = journal_commits
         self._lock = threading.Lock()
+        self._commit_cv = threading.Condition(self._lock)
         self.entries: Dict[str, BlockEntry] = {}
         self.epochs: Dict[int, EpochEntry] = {}   # committed epochs only
-        self._staging_epoch: Optional[int] = None
+        self._staging: Set[int] = set()           # epochs currently staging
+        # staging epoch -> its block ids, so commit/abort are O(epoch
+        # blocks), not an O(store) scan
+        self._epoch_blocks: Dict[int, List[str]] = {}
+        self._epoch_ctx = threading.local()       # per-thread staging binding
+        self._dead_nodes: Set[str] = set()        # in-flight node deaths
         os.makedirs(self.dfs_dir, exist_ok=True)
         for n in self.nodes:
             os.makedirs(self.node_dir(n), exist_ok=True)
@@ -80,6 +120,10 @@ class DataStore:
         return os.path.join(self.root, "manifest.json")
 
     @property
+    def epoch_journal_path(self) -> str:
+        return os.path.join(self.root, "manifest.epochs.jsonl")
+
+    @property
     def dfs_dir(self) -> str:
         return os.path.join(self.root, "dfs")
 
@@ -88,19 +132,42 @@ class DataStore:
 
     # --------------------------------------------------------------- manifest
     def _load_manifest(self) -> None:
-        if not os.path.exists(self.manifest_path):
+        if os.path.exists(self.manifest_path):
+            with open(self.manifest_path) as f:
+                raw = json.load(f)
+            if "blocks" in raw:        # epoch-aware format
+                self.entries = {k: BlockEntry(**v) for k, v in raw["blocks"].items()}
+                self.epochs = {int(k): EpochEntry(**v)
+                               for k, v in raw.get("epochs", {}).items()}
+            else:                      # legacy flat block map
+                self.entries = {k: BlockEntry(**v) for k, v in raw.items()}
+        self._replay_epoch_journal()
+
+    def _replay_epoch_journal(self) -> None:
+        """Apply epoch-commit journal lines on top of the base snapshot.
+
+        A torn trailing line (crash mid-append) is simply an epoch that never
+        committed — its blocks stay unreferenced and ``gc_orphans`` reclaims
+        them; lines for epochs already in the snapshot are skipped (crash
+        between snapshot rename and journal truncation)."""
+        if not os.path.exists(self.epoch_journal_path):
             return
-        with open(self.manifest_path) as f:
-            raw = json.load(f)
-        if "blocks" in raw:        # epoch-aware format
-            self.entries = {k: BlockEntry(**v) for k, v in raw["blocks"].items()}
-            self.epochs = {int(k): EpochEntry(**v)
-                           for k, v in raw.get("epochs", {}).items()}
-        else:                      # legacy flat block map
-            self.entries = {k: BlockEntry(**v) for k, v in raw.items()}
+        with open(self.epoch_journal_path) as f:
+            for line in f:
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    break   # torn tail: everything after it never committed
+                entry = EpochEntry(**rec["epoch"])
+                if entry.epoch in self.epochs:
+                    continue
+                self.epochs[entry.epoch] = entry
+                for k, v in rec["blocks"].items():
+                    self.entries[k] = BlockEntry(**v)
 
     def flush_manifest(self) -> None:
-        """Atomically publish the manifest (write-temp + rename).
+        """Atomically publish the full manifest snapshot (write-temp + rename)
+        and compact the epoch-commit journal into it.
 
         Blocks of a still-staging epoch are withheld: a crash before
         ``commit_epoch`` leaves at most orphaned ``.blk`` files that no
@@ -114,63 +181,145 @@ class DataStore:
             tmp = self.manifest_path + ".tmp"
             with open(tmp, "w") as f:
                 json.dump(payload, f, indent=0)
+                if self.durable:
+                    f.flush()
+                    os.fsync(f.fileno())
             os.replace(tmp, self.manifest_path)
+            # journal lines are now folded into the snapshot; a crash right
+            # here only leaves duplicate records, which replay skips
+            if os.path.exists(self.epoch_journal_path):
+                os.remove(self.epoch_journal_path)
 
     # ------------------------------------------------------------------ epochs
     def begin_epoch(self, epoch: int) -> None:
         """Start staging blocks under ``epoch``.  Re-ingesting a committed
         epoch is refused — the exactly-once guard for replays.
 
-        The staging marker is store-global: while an epoch stages, this store
-        has a single writer (the streaming engine).  Concurrent ingestion into
-        the same store must target a different DataStore root — any put_block
-        between begin and commit/abort is attributed to the staging epoch.
-        Overlapping ``begin_epoch`` calls are refused for the same reason."""
+        Several epochs may stage concurrently (pipelined streaming overlaps
+        epoch N's store/commit with epoch N+1's ingest).  A writer thread that
+        stages blocks while more than one epoch is open must bind its epoch
+        with ``epoch_context`` so ``put_block`` attributes them unambiguously.
+        Re-beginning a still-staging epoch is a no-op (epoch replay)."""
         with self._lock:
             if epoch in self.epochs:
                 raise ValueError(f"epoch {epoch} already committed")
-            if self._staging_epoch is not None and self._staging_epoch != epoch:
-                raise RuntimeError(
-                    f"epoch {self._staging_epoch} is still staging; "
-                    f"one writer per store during streaming ingestion")
-            self._staging_epoch = epoch
+            self._staging.add(epoch)
+
+    @contextlib.contextmanager
+    def epoch_context(self, epoch: Optional[int]) -> Iterator[None]:
+        """Bind ``put_block`` calls on this thread to a staging epoch (None =
+        no binding: batch writes, or single-staging-epoch legacy mode)."""
+        prev = getattr(self._epoch_ctx, "epoch", None)
+        self._epoch_ctx.epoch = epoch
+        try:
+            yield
+        finally:
+            self._epoch_ctx.epoch = prev
+
+    def _current_epoch(self) -> int:
+        """Epoch to attribute a put_block to: thread binding first, else the
+        single staging epoch, else batch (-1).  Ambiguity is an error — a
+        block silently attached to the wrong epoch would break atomicity."""
+        bound = getattr(self._epoch_ctx, "epoch", None)
+        if bound is not None:
+            return bound
+        if not self._staging:
+            return -1
+        if len(self._staging) == 1:
+            return next(iter(self._staging))
+        raise RuntimeError(
+            f"epochs {sorted(self._staging)} are staging concurrently; "
+            f"writers must bind one with DataStore.epoch_context")
 
     def commit_epoch(self, epoch: int, n_items: int = 0) -> EpochEntry:
-        """Atomically publish every block staged under ``epoch``."""
-        with self._lock:
+        """Atomically publish every block staged under ``epoch``.
+
+        The commit sequencer: if any *smaller* epoch id is still staging, this
+        call blocks until that epoch commits or aborts, so commits land in
+        strict epoch order and readers never observe a gap in the committed
+        sequence (DESIGN.md §3).
+
+        The durable commit point is one appended journal line (O(epoch
+        blocks), not an O(store) manifest rewrite): a fully-written line is a
+        committed epoch, a torn line is not — ``flush_manifest`` periodically
+        folds the journal into the snapshot."""
+        deadline = time.monotonic() + self.COMMIT_SEQUENCE_TIMEOUT_S
+        with self._commit_cv:
             if epoch in self.epochs:
                 raise ValueError(f"epoch {epoch} already committed")
-            n_blocks = sum(1 for e in self.entries.values() if e.epoch == epoch)
-            entry = EpochEntry(epoch=epoch, n_blocks=n_blocks, n_items=n_items,
-                               committed_at=time.time())
+            while any(s < epoch for s in self._staging):
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise RuntimeError(
+                        f"commit of epoch {epoch} timed out waiting for "
+                        f"staged predecessors {sorted(s for s in self._staging if s < epoch)}")
+                self._commit_cv.wait(timeout=remaining)
+            if epoch in self.epochs:      # re-check after waiting
+                raise ValueError(f"epoch {epoch} already committed")
+            blocks = {k: asdict(self.entries[k])
+                      for k in self._epoch_blocks.pop(epoch, [])
+                      if k in self.entries}
+            entry = EpochEntry(epoch=epoch, n_blocks=len(blocks),
+                               n_items=n_items, committed_at=time.time())
+            if self.journal_commits:
+                # the commit point: one whole journal line lands (or doesn't)
+                with open(self.epoch_journal_path, "a") as f:
+                    f.write(json.dumps({"epoch": asdict(entry), "blocks": blocks}))
+                    f.write("\n")
+                    f.flush()
+                    if self.durable:
+                        os.fsync(f.fileno())
             self.epochs[epoch] = entry
-            self._staging_epoch = None
-        self.flush_manifest()   # the commit point: temp-write + rename
+            self._staging.discard(epoch)
+            self._commit_cv.notify_all()
+        if not self.journal_commits:
+            self.flush_manifest()   # snapshot commit: temp-write + rename
         return entry
 
     def abort_epoch(self, epoch: int) -> int:
         """Roll back a failed epoch attempt: drop its staged entries and
         delete their physical files.  Committed epochs cannot be aborted."""
-        with self._lock:
+        with self._commit_cv:
             if epoch in self.epochs:
                 raise ValueError(f"epoch {epoch} already committed")
-            victims = [k for k, e in self.entries.items() if e.epoch == epoch]
+            victims = [k for k in self._epoch_blocks.pop(epoch, [])
+                       if k in self.entries]
             for k in victims:
                 full = os.path.join(self.root, self.entries[k].path)
                 if os.path.exists(full):
                     os.remove(full)
                 del self.entries[k]
-            self._staging_epoch = None
+            self._staging.discard(epoch)
+            self._commit_cv.notify_all()
         return len(victims)
 
     def epoch_committed(self, epoch: int) -> bool:
         return epoch in self.epochs
 
     def committed_epoch_ids(self) -> List[int]:
-        return sorted(self.epochs)
+        with self._lock:   # consistent snapshot while the committer publishes
+            return sorted(self.epochs)
+
+    def staging_epoch_ids(self) -> List[int]:
+        with self._lock:
+            return sorted(self._staging)
 
     def next_epoch_id(self) -> int:
-        return max(self.epochs, default=-1) + 1
+        with self._lock:
+            return max(max(self.epochs, default=-1),
+                       max(self._staging, default=-1)) + 1
+
+    # ---------------------------------------------------------- node liveness
+    def mark_node_dead(self, node: str) -> None:
+        """In-flight node failure (runtime): stop placing new blocks there —
+        its location IDs flow to the surviving nodes (paper Sec. VI-C1)."""
+        self._dead_nodes.add(node)
+
+    def mark_node_live(self, node: str) -> None:
+        self._dead_nodes.discard(node)
+
+    def live_nodes(self) -> List[str]:
+        return [n for n in self.nodes if n not in self._dead_nodes]
 
     # ------------------------------------------------------------------- write
     def put_block(self, item: IngestItem, node: str, *, logical_id: str = "",
@@ -185,6 +334,10 @@ class DataStore:
             payload, layout = bytes(data), "raw"
         else:
             raise TypeError(f"cannot store payload of type {type(data)}")
+
+        raw_nbytes = len(payload)
+        if self.compress:   # at-rest compression: transparent to readers
+            payload = zlib.compress(payload, self.compress_level)
 
         base = item.lineage_name()
         with self._lock:
@@ -201,14 +354,20 @@ class DataStore:
                 layout=layout, logical_id=logical_id or self._logical_id(item),
                 replica_index=replica_index, stripe_id=stripe_id,
                 stripe_pos=stripe_pos, is_parity=is_parity,
-                epoch=self._staging_epoch if self._staging_epoch is not None else -1,
+                epoch=self._current_epoch(),
+                compressed=self.compress, raw_nbytes=raw_nbytes,
                 meta=dict(item.meta),
             )
             self.entries[block_id] = entry
+            if entry.epoch >= 0:   # index for O(epoch) commit/abort
+                self._epoch_blocks.setdefault(entry.epoch, []).append(block_id)
         full = os.path.join(self.root, rel)
         os.makedirs(os.path.dirname(full), exist_ok=True)
         with open(full, "wb") as f:
             f.write(payload)
+            if self.durable:   # staged data must survive a crash-then-commit
+                f.flush()
+                os.fsync(f.fileno())
         return entry
 
     @staticmethod
@@ -219,9 +378,11 @@ class DataStore:
 
     # -------------------------------------------------------------------- read
     def read_payload(self, block_id: str) -> bytes:
+        """The block's *logical* payload (at-rest compression is peeled off)."""
         entry = self.entries[block_id]
         with open(os.path.join(self.root, entry.path), "rb") as f:
-            return f.read()
+            raw = f.read()
+        return zlib.decompress(raw) if entry.compressed else raw
 
     def read_block(self, block_id: str) -> SerializedBlock:
         entry = self.entries[block_id]
@@ -275,6 +436,36 @@ class DataStore:
         """The fault daemon's ``detect`` scan source (paper Fig. 3)."""
         return [e.block_id for e in self.blocks() if not self.verify_block(e.block_id)]
 
+    def gc_orphans(self) -> List[str]:
+        """Delete block files no live entry references and return their paths.
+
+        An epoch aborted or crashed mid-stage leaves ``.blk`` files behind
+        that the manifest never references (the commit protocol guarantees
+        this is the *only* kind of garbage a crash can leave).  Blocks of
+        epochs still staging in *this* process are referenced by in-memory
+        entries and are kept; after a crash, a fresh DataStore loads only the
+        committed manifest, so the dead epoch's files become orphans here.
+
+        The scan holds the store lock: ``put_block`` registers the entry
+        under this lock *before* writing the file, so every ``.blk`` file the
+        locked scan can see already has its entry in ``referenced`` — a
+        concurrently-staged block can never be swept."""
+        removed: List[str] = []
+        with self._lock:
+            referenced = {os.path.normpath(e.path) for e in self.entries.values()}
+            for node in self.nodes:
+                ndir = self.node_dir(node)
+                if not os.path.isdir(ndir):
+                    continue
+                for fn in sorted(os.listdir(ndir)):
+                    if not fn.endswith(".blk"):
+                        continue
+                    rel = os.path.normpath(os.path.join("nodes", node, fn))
+                    if rel not in referenced:
+                        os.remove(os.path.join(self.root, rel))
+                        removed.append(rel)
+        return removed
+
     def corrupt_block(self, block_id: str) -> None:
         entry = self.entries[block_id]
         full = os.path.join(self.root, entry.path)
@@ -286,10 +477,17 @@ class DataStore:
         shutil.rmtree(self.node_dir(node), ignore_errors=True)
 
     def restore_file(self, entry: BlockEntry, payload: bytes, node: Optional[str] = None) -> None:
-        """Write a recovered payload back (optionally onto a different node)."""
+        """Write a recovered *logical* payload back (optionally onto a
+        different node), re-applying at-rest compression."""
         if node is not None and node != entry.node:
             entry.node = node
             entry.path = os.path.join("nodes", node, entry.block_id + ".blk")
+        entry.raw_nbytes = len(payload)
+        if self.compress:
+            payload = zlib.compress(payload, self.compress_level)
+            entry.compressed = True
+        else:
+            entry.compressed = False
         full = os.path.join(self.root, entry.path)
         os.makedirs(os.path.dirname(full), exist_ok=True)
         with open(full, "wb") as f:

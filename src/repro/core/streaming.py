@@ -8,12 +8,22 @@ an *unbounded* source, in the shape of AsterixDB-style long-running feeds
 * **Bounded ingest queues + backpressure** — a feeder thread routes source
   items round-robin into per-node ``queue.Queue(maxsize=...)``; when a node's
   queue is full the producer *blocks*, so queue memory is bounded no matter
-  how fast data arrives.
+  how fast data arrives.  An item the feeder could not place (``stop()`` fired
+  mid-put, or every node died) is never silently dropped: it is parked in
+  ``IngestQueues.unrouted``.
 * **Epochs (micro-batches)** — the stream is cut into epochs by item count
   and/or wall-clock tick; each epoch runs through the existing optimized
   ``StagePlan`` pipeline (operator chains, pipeline blocks, shuffle, retry /
   dummy-substitution fault machinery are all reused via
-  ``RuntimeEngine._execute``).
+  ``RuntimeEngine._execute`` on the persistent per-node executors).
+* **Pipelined epochs** (DESIGN.md §4) — the optimizer's segment split
+  (``split_pipeline_segments``) divides the DAG into an *ingest segment*
+  (parse / transform / shuffle) and a *store segment* (upload + commit).
+  Epoch N+1's ingest segment runs on the node executors' ``"ingest"`` lane
+  while epoch N's store segment occupies the ``"store"`` lane inside a
+  background committer; the DataStore commit sequencer publishes commits
+  strictly in epoch order, so ``since_epoch`` readers never observe a gap.
+  ``pipelined=False`` restores strictly sequential epochs.
 * **Epoch-granular fault tolerance** — a node death mid-epoch aborts the
   staged epoch (its partially-written blocks are rolled back) and replays the
   whole epoch on the surviving nodes.  Committed epochs are never redone:
@@ -21,6 +31,9 @@ an *unbounded* source, in the shape of AsterixDB-style long-running feeds
 * **Exactly-once commits** — ``DataStore.commit_epoch`` publishes an epoch's
   blocks atomically (manifest temp-write + rename); ``DataAccess.since_epoch``
   lets queries consume exactly the committed epochs while ingestion continues.
+* **Feed fan-out** — ``FeedDistributor`` + ``stream_ingest_multi`` fan one
+  source into several plans (the language's ``FEED ... INTO plan1, plan2``),
+  AsterixDB-style feed joints: enrichment pipelines share a single ingest.
 """
 from __future__ import annotations
 
@@ -28,12 +41,13 @@ import itertools
 import queue
 import threading
 import time
+from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import (Any, Dict, Iterable, Iterator, List, Optional, Sequence,
                     Tuple, Union)
 
 from .items import IngestItem
-from .optimizer import IngestionOptimizer
+from .optimizer import IngestionOptimizer, split_pipeline_segments
 from .plan import IngestPlan, StagePlan
 from .runtime import FaultInjection, NodeFailure, RunReport, RuntimeEngine
 from .store import DataStore
@@ -93,48 +107,86 @@ class IngestQueues:
     pipeline stalls the producer instead of growing memory.  ``mark_dead``
     removes a node from the routing set; items already queued on a dead node
     are still drained (and re-routed to live nodes by the epoch cutter).
+
+    **Manual mode** (``IngestQueues.manual``, used by feed joints): no feeder
+    thread is started — an external distributor pushes items with ``put`` and
+    signals end-of-stream with ``close``.
+
+    An item in the feeder's (or distributor's) hand when ``stop()`` fires, or
+    when every node has died, is recorded in ``unrouted`` — never silently
+    dropped: the stream's producer offset can be rewound by exactly
+    ``len(unrouted)`` items on restart.
     """
 
-    def __init__(self, source: Iterable[IngestItem], nodes: Sequence[str],
+    def __init__(self, source: Optional[Iterable[IngestItem]], nodes: Sequence[str],
                  capacity: int = 64) -> None:
         self.nodes = list(nodes)
         self.capacity = capacity
         self.queues: Dict[str, "queue.Queue[IngestItem]"] = {
             n: queue.Queue(maxsize=capacity) for n in self.nodes}
         self._live = {n: True for n in self.nodes}
-        self._source = iter(source)
+        self._rr = itertools.cycle(self.nodes)
         self._stop = threading.Event()
         self.exhausted = threading.Event()
-        self.produced = 0   # items the feeder has pulled from the source
-        self._thread = threading.Thread(target=self._feed, daemon=True)
-        self._thread.start()
+        self.produced = 0   # items pulled from the source / pushed by put()
+        self.unrouted: List[IngestItem] = []   # in-flight items never placed
+        self._thread: Optional[threading.Thread] = None
+        if source is not None:
+            self._source = iter(source)
+            self._thread = threading.Thread(target=self._feed, daemon=True)
+            self._thread.start()
+
+    @classmethod
+    def manual(cls, nodes: Sequence[str], capacity: int = 64) -> "IngestQueues":
+        """Queues without a feeder thread (fed by a FeedDistributor)."""
+        return cls(None, nodes, capacity)
 
     # ------------------------------------------------------------------ feeder
-    def _next_live(self, rr: Iterator[str]) -> Optional[str]:
+    def _next_live(self) -> Optional[str]:
         """Next live node in round-robin order; None when none remain (or the
         queues were stopped) — never spins on an all-dead cycle."""
         for _ in range(len(self.nodes)):
-            n = next(rr)
+            n = next(self._rr)
             if self._live.get(n):
                 return n
         return None
 
+    def _route(self, item: IngestItem) -> bool:
+        """Blocking put with liveness re-checks.  False when the item could
+        not be placed (stop() fired mid-put, or all nodes are dead)."""
+        target = self._next_live()
+        while target is not None and not self._stop.is_set():
+            try:
+                self.queues[target].put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                # blocked: backpressure — re-check liveness so items never
+                # pile onto a node that died while we waited
+                if not self._live.get(target):
+                    target = self._next_live()
+        return False
+
     def _feed(self) -> None:
-        rr = itertools.cycle(self.nodes)
         for item in self._source:
             self.produced += 1
-            target = self._next_live(rr)
-            while target is not None and not self._stop.is_set():
-                try:
-                    self.queues[target].put(item, timeout=0.05)
-                    break
-                except queue.Full:
-                    # blocked: backpressure — re-check liveness so items never
-                    # pile onto a node that died while we waited
-                    if not self._live.get(target):
-                        target = self._next_live(rr)
-            if target is None or self._stop.is_set():
+            if not self._route(item):
+                # the in-flight item is parked, not lost (satellite of ISSUE 2)
+                self.unrouted.append(item)
                 break
+        self.exhausted.set()
+
+    # --------------------------------------------------------- manual producer
+    def put(self, item: IngestItem) -> bool:
+        """Feed-joint surface: route one item (blocking).  Returns False — and
+        records the item in ``unrouted`` — when it could not be placed."""
+        self.produced += 1
+        if self._route(item):
+            return True
+        self.unrouted.append(item)
+        return False
+
+    def close(self) -> None:
+        """Feed-joint end-of-stream (what source exhaustion is to the feeder)."""
         self.exhausted.set()
 
     # ------------------------------------------------------------------- drain
@@ -178,22 +230,213 @@ class IngestQueues:
         self._stop.set()
 
 
+class FeedDistributor:
+    """AsterixDB-style feed joint (arXiv:1405.1705): one pull from the source,
+    fanned out to several plans' ingest queues.
+
+    Every joint receives every item (enrichment pipelines share the ingest);
+    a slow pipeline exerts backpressure on the shared feed through its
+    blocking ``put``.  A stopped or fully-dead pipeline fails its puts fast —
+    the item is recorded unrouted on *that joint only* and the feed keeps
+    serving the healthy pipelines.
+    """
+
+    def __init__(self, source: Iterable[IngestItem],
+                 joints: Sequence[IngestQueues]) -> None:
+        self.joints = list(joints)
+        self.fanned_out = 0   # items pulled from the shared source
+        self._source = iter(source)
+        self._thread = threading.Thread(target=self._pump, daemon=True)
+        self._thread.start()
+
+    def _pump(self) -> None:
+        active = list(self.joints)
+        try:
+            for item in self._source:
+                self.fanned_out += 1
+                for j in list(active):
+                    if not j.put(item):
+                        # the joint stopped (its pipeline finished or died):
+                        # detach it so a long stream doesn't pile the whole
+                        # remainder into its unrouted list
+                        active.remove(j)
+                if not active:
+                    break
+        finally:
+            for j in self.joints:
+                j.close()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._thread.join(timeout)
+
+
+# --------------------------------------------------------------------------
+# Pipelined epoch committer
+# --------------------------------------------------------------------------
+@dataclass
+class _EpochJob:
+    """A cut epoch whose ingest segment has run, awaiting store + commit."""
+
+    eid: int
+    epoch_index: int
+    batch: Dict[str, List[IngestItem]]
+    node_sources: Dict[str, List[IngestItem]]
+    outputs: Dict[str, Dict[str, List[IngestItem]]]
+    faults: FaultInjection           # this epoch's injection view
+    ereport: RunReport
+    attempts: int
+    items_in: int
+    t_cut: float
+
+
+class _EpochCommitter:
+    """Background store-segment worker for pipelined epochs.
+
+    A single FIFO thread runs each staged epoch's commit-side stages on the
+    node executors' ``"store"`` lane and publishes the commit; the bounded
+    job queue is the pipeline depth (cut N+1 blocks while N+1-depth epochs
+    are still staged).  Processing order + the DataStore commit sequencer
+    guarantee commits land strictly in epoch order.
+    """
+
+    def __init__(self, engine: "StreamingRuntimeEngine",
+                 stage_plans: List[StagePlan], split: int,
+                 faults: StreamFaultInjection, sreport: StreamReport,
+                 queues: IngestQueues, max_inflight: int = 2) -> None:
+        self.engine = engine
+        self.stage_plans = stage_plans
+        self.split = split
+        self.faults = faults
+        self.sreport = sreport
+        self.queues = queues
+        self._jobs: "queue.Queue[Optional[_EpochJob]]" = queue.Queue(
+            maxsize=max(1, max_inflight))
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="epoch-committer")
+        self._thread.start()
+
+    # ----------------------------------------------------------------- public
+    def submit(self, job: _EpochJob) -> None:
+        self.raise_if_failed()
+        self._jobs.put(job)   # blocks: bounds the number of in-flight epochs
+
+    def close(self) -> None:
+        self._jobs.put(None)
+        self._thread.join()
+
+    def raise_if_failed(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------------- loop
+    def _loop(self) -> None:
+        while True:
+            job = self._jobs.get()
+            if job is None:
+                return
+            if self._error is not None:
+                continue   # drain remaining jobs so submit() never deadlocks
+            try:
+                self._commit_job(job)
+            except BaseException as e:
+                self._error = e
+
+    def _commit_job(self, job: _EpochJob) -> None:
+        """Run the epoch's store segment and commit.
+
+        The coordinator *retains* the epoch's ingest-segment outputs (like it
+        retains the raw batch) until the commit lands, so a node death never
+        loses them: dead contributors' retained outputs are rebalanced onto
+        the survivors and the store segment re-runs from the rolled-back
+        staging state.  The executing node set is pinned per attempt — a
+        death flipping ``alive`` from the ingest thread mid-attempt cannot
+        silently drop a node's inputs."""
+        eng, store = self.engine, self.engine.store
+        first = True
+        while True:
+            if not first:
+                job.attempts += 1
+            first = False
+            if not any(eng.alive.values()):
+                raise RuntimeError("all nodes failed")
+            live = [n for n in eng.nodes if eng.alive.get(n)]
+            self._rebalance_retained(job, live)
+            store.begin_epoch(job.eid)
+            try:
+                eng._execute(self.stage_plans, job.node_sources, job.faults,
+                             job.ereport, eng.alive, on_node_death="raise",
+                             lane="store", epoch=job.eid, outputs=job.outputs,
+                             start_stage=self.split, node_set=live)
+                self._publish(job)
+                return
+            except NodeFailure as e:
+                store.abort_epoch(job.eid)
+                eng._note_death(str(e), job.eid, self.sreport, self.queues)
+                # drop the failed attempt's partial store-stage outputs; the
+                # retained ingest outputs are intact and get rebalanced
+                for n in eng.nodes:
+                    for sp in self.stage_plans[self.split:]:
+                        job.outputs[n][sp.name] = []
+
+    def _rebalance_retained(self, job: _EpochJob, live: List[str]) -> None:
+        """Move dead nodes' retained inputs (source shards + ingest-segment
+        outputs) round-robin onto the live set."""
+        ingest_names = [sp.name for sp in self.stage_plans[:self.split]]
+        for n in self.engine.nodes:
+            if n in live:
+                continue
+            shards = job.node_sources.get(n) or []
+            if shards:
+                job.node_sources[n] = []
+                for i, it in enumerate(shards):
+                    job.node_sources[live[i % len(live)]].append(it)
+            for sname in ingest_names:
+                items = job.outputs[n][sname]
+                if items:
+                    job.outputs[n][sname] = []
+                    for i, it in enumerate(items):
+                        job.outputs[live[i % len(live)]][sname].append(it)
+
+    def _publish(self, job: _EpochJob) -> None:
+        entry = self.engine.store.commit_epoch(job.eid, n_items=job.items_in)
+        self.sreport.epochs.append(EpochReport(
+            epoch=job.eid, items_in=job.items_in, n_blocks=entry.n_blocks,
+            attempts=job.attempts, commit_latency_s=time.time() - job.t_cut,
+            run=job.ereport))
+        self.sreport.total_items += job.items_in
+
+
 class StreamingRuntimeEngine(RuntimeEngine):
     """Micro-batch streaming over the batch engine's optimized stage DAG.
 
     Epoch-cut knobs (``epoch_items`` / ``epoch_seconds`` / ``queue_capacity``)
     default from ``plan.stream_config`` — the declarative
     ``STREAM WITH EPOCHS(...)`` surface — and can be overridden per engine.
+
+    ``pipelined=True`` (default) overlaps epoch N+1's ingest segment with
+    epoch N's store/commit segment (DESIGN.md §4); ``max_inflight_epochs``
+    bounds how many staged epochs the committer may hold.  Committed epoch
+    ids are gap-free and in-order in either mode.
     """
 
     def __init__(self, store: DataStore, optimizer: Optional[IngestionOptimizer] = None,
                  max_retries: int = 3, epoch_items: int = 64,
                  epoch_seconds: Optional[float] = None,
-                 queue_capacity: int = 64) -> None:
-        super().__init__(store, optimizer, max_retries)
+                 queue_capacity: int = 64,
+                 pipelined: bool = True,
+                 max_inflight_epochs: int = 2,
+                 shuffle_spill_bytes: int = 32 << 20,
+                 shuffle_synchronous: bool = False) -> None:
+        super().__init__(store, optimizer, max_retries,
+                         shuffle_spill_bytes=shuffle_spill_bytes,
+                         shuffle_synchronous=shuffle_synchronous)
         self.epoch_items = epoch_items
         self.epoch_seconds = epoch_seconds
         self.queue_capacity = queue_capacity
+        self.pipelined = pipelined
+        self.max_inflight_epochs = max_inflight_epochs
         self.alive = {n: True for n in self.nodes}
 
     # ----------------------------------------------------------------- config
@@ -204,53 +447,160 @@ class StreamingRuntimeEngine(RuntimeEngine):
                 int(cfg.get("capacity", self.queue_capacity)))
 
     # -------------------------------------------------------------------- run
-    def run_stream(self, plan: IngestPlan, source: Iterable[IngestItem],
+    def run_stream(self, plan: IngestPlan,
+                   source: Optional[Iterable[IngestItem]] = None,
                    faults: Optional[StreamFaultInjection] = None,
                    optimize: bool = True,
-                   max_epochs: Optional[int] = None) -> StreamReport:
+                   max_epochs: Optional[int] = None,
+                   queues: Optional[IngestQueues] = None) -> StreamReport:
         """Consume ``source`` (any iterator, possibly unbounded) until it is
-        exhausted or ``max_epochs`` epochs have committed."""
+        exhausted or ``max_epochs`` epochs have committed.  Alternatively pass
+        pre-built ``queues`` (a feed joint) instead of a source."""
+        if (source is None) == (queues is None):
+            raise ValueError("run_stream needs exactly one of source/queues")
         t0 = time.time()
         faults = faults or StreamFaultInjection()
         sreport = StreamReport()
 
-        # compile + optimize ONCE; every epoch reuses the same stage plans
+        # compile + optimize ONCE; every epoch reuses the same stage plans —
+        # and the node executors keep their clone for the whole stream
         stage_plans = plan.compile()
         if optimize:
             stage_plans = self.optimizer.optimize(stage_plans)
+        split = split_pipeline_segments(stage_plans)
+
+        # store placement marks must agree with this engine's liveness view —
+        # a fresh engine on a store a previous stream left marks on starts
+        # from its own (all-live) map
+        for n in self.nodes:
+            (self.store.mark_node_live if self.alive[n]
+             else self.store.mark_node_dead)(n)
 
         epoch_items, epoch_seconds, capacity = self._config(plan)
-        queues = IngestQueues(source, self.nodes, capacity)
+        if queues is None:
+            queues = IngestQueues(source, self.nodes, capacity)
         eid = self.store.next_epoch_id()
         try:
-            while max_epochs is None or len(sreport.epochs) < max_epochs:
-                batch = queues.cut_epoch(epoch_items, epoch_seconds)
-                items = [it for per_node in batch.values() for it in per_node]
-                if not items:
-                    break   # end of stream
-                ereport = self._run_epoch(eid, batch, stage_plans, faults,
-                                          sreport, queues)
-                sreport.epochs.append(ereport)
-                sreport.total_items += ereport.items_in
-                eid += 1
+            if self.pipelined:
+                self._run_pipelined(stage_plans, split, queues, faults, sreport,
+                                    epoch_items, epoch_seconds, max_epochs, eid)
+            else:
+                epoch_index = 0
+                while max_epochs is None or epoch_index < max_epochs:
+                    batch = queues.cut_epoch(epoch_items, epoch_seconds)
+                    if not any(len(v) for v in batch.values()):
+                        break   # end of stream
+                    ereport = self._run_epoch(eid, epoch_index, batch,
+                                              stage_plans, faults, sreport, queues)
+                    sreport.epochs.append(ereport)
+                    sreport.total_items += ereport.items_in
+                    eid += 1
+                    epoch_index += 1
         finally:
             queues.stop()
+            self.shuffle.drain()
+            self.store.flush_manifest()   # compact the epoch journal
         sreport.wall_time_s = time.time() - t0
         return sreport
 
+    # -------------------------------------------------------------- pipelined
+    def _run_pipelined(self, stage_plans: List[StagePlan], split: int,
+                       queues: IngestQueues, faults: StreamFaultInjection,
+                       sreport: StreamReport, epoch_items: int,
+                       epoch_seconds: Optional[float],
+                       max_epochs: Optional[int], eid: int) -> None:
+        """Overlapped epochs: this thread cuts epoch N+1 and runs its ingest
+        segment (lane "ingest") while the committer thread runs epoch N's
+        store segment + commit (lane "store")."""
+        committer = _EpochCommitter(self, stage_plans, split, faults, sreport,
+                                    queues, max_inflight=self.max_inflight_epochs)
+        epoch_index = 0
+        try:
+            while max_epochs is None or epoch_index < max_epochs:
+                committer.raise_if_failed()
+                batch = queues.cut_epoch(epoch_items, epoch_seconds)
+                if not any(len(v) for v in batch.values()):
+                    break   # end of stream
+                t_cut = time.time()
+                job = self._ingest_segment(eid, epoch_index, batch, stage_plans,
+                                           split, faults, sreport, queues, t_cut)
+                committer.submit(job)
+                eid += 1
+                epoch_index += 1
+        finally:
+            committer.close()
+        committer.raise_if_failed()
+
+    def _ingest_segment(self, eid: int, epoch_index: int,
+                        batch: Dict[str, List[IngestItem]],
+                        stage_plans: List[StagePlan], split: int,
+                        faults: StreamFaultInjection, sreport: StreamReport,
+                        queues: IngestQueues, t_cut: float) -> _EpochJob:
+        """Run the epoch's ingest segment (stages [0, split)), replaying on
+        node death — nothing is staged yet, so recovery is pure recompute."""
+        attempts = 0
+        ereport = RunReport()
+        items_in = sum(len(v) for v in batch.values())
+        while True:
+            attempts += 1
+            live = [n for n in self.nodes if self.alive[n]]
+            if not live:
+                raise RuntimeError("all nodes failed")
+            node_sources = self._redistribute(batch, live)
+            ef = FaultInjection(op_failures=faults.op_failures)
+            for n, at_epoch in faults.node_death_in_epoch.items():
+                if at_epoch == epoch_index and self.alive.get(n):
+                    # die after the epoch's first stage — in the ingest
+                    # segment if one exists, else at the store segment's head
+                    ef.node_death_after_stage[n] = stage_plans[0].name
+            outputs = {n: defaultdict(list) for n in self.nodes}
+            if split == 0:
+                return _EpochJob(eid, epoch_index, batch, node_sources, outputs,
+                                 ef, ereport, attempts, items_in, t_cut)
+            try:
+                self._execute(stage_plans, node_sources, ef, ereport, self.alive,
+                              on_node_death="raise", lane="ingest",
+                              outputs=outputs, start_stage=0, end_stage=split,
+                              node_set=live)
+            except NodeFailure as e:
+                self._note_death(str(e), eid, sreport, queues)
+                continue
+            return _EpochJob(eid, epoch_index, batch, node_sources, outputs,
+                             ef, ereport, attempts, items_in, t_cut)
+
     # ------------------------------------------------------------------ epoch
-    def _run_epoch(self, eid: int, batch: Dict[str, List[IngestItem]],
+    def _redistribute(self, batch: Dict[str, List[IngestItem]],
+                      live: List[str]) -> Dict[str, List[IngestItem]]:
+        """Queue affinity where the node is in the live set; round-robin onto
+        survivors otherwise (first attempt after a death, or replay)."""
+        node_sources: Dict[str, List[IngestItem]] = {n: [] for n in self.nodes}
+        spill: List[IngestItem] = []
+        for n, its in batch.items():
+            (node_sources[n] if n in live else spill).extend(its)
+        for i, it in enumerate(spill):
+            node_sources[live[i % len(live)]].append(it)
+        return node_sources
+
+    def _note_death(self, dead: str, eid: int, sreport: StreamReport,
+                    queues: IngestQueues) -> None:
+        queues.mark_dead(dead)
+        sreport.node_failures.append(dead)
+        if eid not in sreport.replayed_epochs:
+            sreport.replayed_epochs.append(eid)
+
+    def _run_epoch(self, eid: int, epoch_index: int,
+                   batch: Dict[str, List[IngestItem]],
                    stage_plans: List[StagePlan], faults: StreamFaultInjection,
                    sreport: StreamReport, queues: IngestQueues) -> EpochReport:
-        """Run one micro-batch through the stage DAG and commit it atomically.
+        """Sequential mode: run one micro-batch through the full stage DAG and
+        commit it atomically.
 
         Node death mid-attempt -> abort the staged blocks, mark the node dead,
         replay the *entire epoch* on the survivors.  The commit is the only
         publish point, so a replayed epoch can neither lose items (the full
         input batch is retained until commit) nor double-commit
         (``begin_epoch`` refuses committed ids)."""
-        epoch_index = len(sreport.epochs)
-        all_items = [it for per_node in batch.values() for it in per_node]
+        items_in = sum(len(v) for v in batch.values())
         t_cut = time.time()
         attempts = 0
         while True:
@@ -258,14 +608,7 @@ class StreamingRuntimeEngine(RuntimeEngine):
             live = [n for n in self.nodes if self.alive[n]]
             if not live:
                 raise RuntimeError("all nodes failed")
-            # redistribute: queue affinity where the node is alive, round-robin
-            # onto survivors otherwise (first attempt after a death, or replay)
-            node_sources: Dict[str, List[IngestItem]] = {n: [] for n in self.nodes}
-            spill: List[IngestItem] = []
-            for n, its in batch.items():
-                (node_sources[n] if self.alive[n] else spill).extend(its)
-            for i, it in enumerate(spill):
-                node_sources[live[i % len(live)]].append(it)
+            node_sources = self._redistribute(batch, live)
 
             # injected mid-epoch deaths for this epoch index -> die after the
             # first stage of the attempt (blocks already staged get aborted)
@@ -278,17 +621,14 @@ class StreamingRuntimeEngine(RuntimeEngine):
             ereport = RunReport()
             try:
                 self._execute(stage_plans, node_sources, ef, ereport,
-                              self.alive, on_node_death="raise")
+                              self.alive, on_node_death="raise", epoch=eid,
+                              node_set=live)
             except NodeFailure as e:
-                dead = str(e)
                 self.store.abort_epoch(eid)
-                queues.mark_dead(dead)
-                sreport.node_failures.append(dead)
-                if eid not in sreport.replayed_epochs:
-                    sreport.replayed_epochs.append(eid)
+                self._note_death(str(e), eid, sreport, queues)
                 continue
-            entry = self.store.commit_epoch(eid, n_items=len(all_items))
-            return EpochReport(epoch=eid, items_in=len(all_items),
+            entry = self.store.commit_epoch(eid, n_items=items_in)
+            return EpochReport(epoch=eid, items_in=items_in,
                                n_blocks=entry.n_blocks, attempts=attempts,
                                commit_latency_s=time.time() - t_cut,
                                run=ereport)
@@ -301,5 +641,76 @@ def stream_ingest(plan: IngestPlan, source: Iterable[IngestItem], store: DataSto
                   **engine_kw: Any) -> StreamReport:
     """One-call entry point: stream a source through an ingestion plan."""
     eng = StreamingRuntimeEngine(store, **engine_kw)
-    return eng.run_stream(plan, source, faults=faults, optimize=optimize,
-                          max_epochs=max_epochs)
+    try:
+        return eng.run_stream(plan, source, faults=faults, optimize=optimize,
+                              max_epochs=max_epochs)
+    finally:
+        eng.close()   # one-shot engine: release node executors + shuffle writer
+
+
+def stream_ingest_multi(plans: Union[Sequence[IngestPlan], Any],
+                        source: Iterable[IngestItem],
+                        stores: Union[DataStore, Sequence[DataStore]],
+                        *, optimize: bool = True,
+                        faults: Optional[Union[StreamFaultInjection,
+                                               Dict[str, StreamFaultInjection]]] = None,
+                        max_epochs: Optional[int] = None,
+                        **engine_kw: Any) -> Dict[str, StreamReport]:
+    """Fan one source into several plans (``FEED ... INTO plan1, plan2``).
+
+    ``plans`` is a sequence of IngestPlans, or any object with a ``.plans``
+    attribute (the language front-end's FeedSpec).  Each plan runs in its own
+    StreamingRuntimeEngine over its own DataStore from ``stores`` — one store
+    per plan: concurrent engines must not share an epoch-id space.  A single
+    ``StreamFaultInjection`` applies to every pipeline; a dict maps plan name
+    -> injection.  Returns plan name -> StreamReport.
+    """
+    plan_list: List[IngestPlan] = list(getattr(plans, "plans", plans))
+    store_list = list(stores) if isinstance(stores, (list, tuple)) else [stores]
+    if len(store_list) != len(plan_list):
+        raise ValueError(f"{len(plan_list)} plans need {len(plan_list)} stores, "
+                         f"got {len(store_list)}")
+    roots = {s.root for s in store_list}
+    if len(roots) != len(store_list):
+        raise ValueError("each fanned-out plan needs its own DataStore "
+                         "(engines must not share an epoch-id space)")
+
+    names = [p.name for p in plan_list]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate plan names {names}: rename plans so "
+                         f"faults/results can be addressed deterministically")
+
+    engines: List[StreamingRuntimeEngine] = []
+    joints: List[IngestQueues] = []
+    for plan, st in zip(plan_list, store_list):
+        eng = StreamingRuntimeEngine(st, **engine_kw)
+        _, _, capacity = eng._config(plan)
+        engines.append(eng)
+        joints.append(IngestQueues.manual(eng.nodes, capacity))
+    distributor = FeedDistributor(source, joints)
+
+    results: Dict[str, StreamReport] = {}
+    errors: List[Tuple[str, BaseException]] = []
+
+    def run_one(name: str, eng: StreamingRuntimeEngine, plan: IngestPlan,
+                joint: IngestQueues) -> None:
+        f = faults.get(name) if isinstance(faults, dict) else faults
+        try:
+            results[name] = eng.run_stream(plan, queues=joint, faults=f,
+                                           optimize=optimize, max_epochs=max_epochs)
+        except BaseException as e:
+            errors.append((name, e))
+            joint.stop()   # unblock the distributor for this joint
+
+    threads = [threading.Thread(target=run_one, args=(nm, e, p, j), daemon=True)
+               for nm, e, p, j in zip(names, engines, plan_list, joints)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    distributor.join()
+    for eng in engines:
+        eng.close()
+    if errors:
+        raise errors[0][1]
+    return results

@@ -1,0 +1,379 @@
+"""Pipelined execution core (ISSUE 2): persistent node executors, the
+DataStore commit sequencer, async double-buffered shuffle, overlapped epochs,
+feed fan-out, orphan GC, and the unrouted-item guarantee."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (DataAccess, DataStore, FeedSpec, IngestPlan,
+                        IngestQueues, StreamFaultInjection,
+                        StreamingRuntimeEngine, chain_stage, create_stage,
+                        format_, parse_feed_script, resolve_op, select,
+                        split_pipeline_segments, stream_ingest_multi,
+                        with_epochs)
+from repro.core import store as store_stmt
+from repro.core.items import Granularity, IngestItem
+from repro.core.language import LanguageError
+from repro.data.generators import gen_lineitem
+
+
+def columnar_plan(ds, *, name="stream", epoch_items=None):
+    p = IngestPlan(name)
+    s1 = select(p)
+    s2 = format_(p, s1, chunk={"target_rows": 256}, serialize="columnar")
+    s3 = store_stmt(p, s2, locate="roundrobin",
+                    locate_args={"num_locations": len(ds.nodes)}, upload=ds)
+    create_stage(p, using=[s1, s2, s3], name="main")
+    if epoch_items is not None:
+        with_epochs(p, items=epoch_items)
+    return p
+
+
+def shuffled_plan(ds):
+    """Three stages: ingest segment (parse+partition+shuffle, then
+    chunk+serialize) and store segment (upload) — the overlap split."""
+    p = IngestPlan("shuf")
+    s1 = p.add_statement([
+        resolve_op("identity_parser"),
+        resolve_op("partition", scheme="hash", key="orderkey", num_partitions=4),
+        resolve_op("map", fn=lambda cols: cols, shuffle_by="partition"),
+    ], kind="select")
+    s2 = p.add_statement([
+        resolve_op("chunk", target_rows=256),
+        resolve_op("serialize", layout="columnar"),
+    ], kind="format", inputs=[s1])
+    s3 = p.add_statement([resolve_op("upload", store=ds)],
+                         kind="store", inputs=[s2])
+    create_stage(p, using=[s1], name="a")
+    chain_stage(p, to=["a"], using=[s2], name="b")
+    chain_stage(p, to=["b"], using=[s3], name="c")
+    return p
+
+
+def shard_source(n_shards, rows=100):
+    for i in range(n_shards):
+        yield IngestItem(gen_lineitem(rows, seed=i))
+
+
+# ---------------------------------------------------------------------------
+class TestCommitSequencer:
+    def test_commit_blocks_until_predecessor_commits(self, store):
+        store.begin_epoch(0)
+        store.begin_epoch(1)   # concurrent staging is allowed now
+        with store.epoch_context(1):
+            store.put_block(IngestItem(np.arange(4), Granularity.BLOCK), "n0")
+        done = []
+
+        def commit1():
+            store.commit_epoch(1)
+            done.append(1)
+
+        t = threading.Thread(target=commit1, daemon=True)
+        t.start()
+        time.sleep(0.15)
+        assert done == []   # epoch 1 is held: epoch 0 still staging
+        store.commit_epoch(0)
+        t.join(timeout=5)
+        assert done == [1]
+        assert store.committed_epoch_ids() == [0, 1]
+
+    def test_abort_of_predecessor_releases_commit(self, store):
+        store.begin_epoch(0)
+        store.begin_epoch(1)
+        done = []
+
+        def commit1():
+            store.commit_epoch(1)
+            done.append(1)
+
+        t = threading.Thread(target=commit1, daemon=True)
+        t.start()
+        time.sleep(0.1)
+        assert done == []
+        store.abort_epoch(0)   # predecessor dies -> successor may publish
+        t.join(timeout=5)
+        assert done == [1]
+        assert store.committed_epoch_ids() == [1]
+
+    def test_ambiguous_put_without_context_is_refused(self, store):
+        store.begin_epoch(0)
+        store.begin_epoch(1)
+        with pytest.raises(RuntimeError, match="epoch_context"):
+            store.put_block(IngestItem(np.arange(4), Granularity.BLOCK), "n0")
+        # bound writes attribute correctly
+        with store.epoch_context(0):
+            e0 = store.put_block(IngestItem(np.arange(4), Granularity.BLOCK), "n0")
+        with store.epoch_context(1):
+            e1 = store.put_block(IngestItem(np.arange(5), Granularity.BLOCK), "n1")
+        assert (e0.epoch, e1.epoch) == (0, 1)
+        store.abort_epoch(0)
+        store.abort_epoch(1)
+
+    def test_segment_split_metadata(self, store):
+        plans = shuffled_plan(store).compile()
+        assert [sp.commit_side for sp in plans] == [False, False, True]
+        assert split_pipeline_segments(plans) == 2
+        # single-stage upload plans have no ingest segment
+        assert split_pipeline_segments(columnar_plan(store).compile()) == 0
+
+
+# ---------------------------------------------------------------------------
+class TestPipelinedEpochs:
+    def test_pipelined_equals_sequential_output(self, tmp_path):
+        rows = {}
+        for mode in (True, False):
+            ds = DataStore(str(tmp_path / f"s{mode}"), nodes=["n0", "n1", "n2", "n3"])
+            eng = StreamingRuntimeEngine(ds, epoch_items=4, queue_capacity=8,
+                                         pipelined=mode)
+            rep = eng.run_stream(shuffled_plan(ds), shard_source(12, rows=100))
+            assert rep.committed_epoch_ids() == [0, 1, 2]
+            cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+            rows[mode] = np.sort(cols["quantity"])
+            eng.close()
+        np.testing.assert_array_equal(rows[True], rows[False])
+
+    def test_plan_ships_once_not_per_epoch(self, store):
+        """Persistent NodeExecutors install the plan clone once per node —
+        epochs stop re-shipping plans at every barrier."""
+        calls = []
+
+        class CountingEngine(StreamingRuntimeEngine):
+            def launch_remote(self, node, stage_plans):
+                calls.append((node, len(stage_plans)))
+                return super().launch_remote(node, stage_plans)
+
+        eng = CountingEngine(store, epoch_items=4, queue_capacity=8)
+        rep = eng.run_stream(columnar_plan(store), shard_source(12, rows=50))
+        assert len(rep.epochs) == 3
+        # one clone per node for the whole stream (no deaths -> no replay
+        # clones), instead of one per node per epoch per _execute call
+        assert len(calls) == len(store.nodes)
+        eng.close()
+
+    def test_async_shuffle_rounds_recorded(self, store):
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=8)
+        rep = eng.run_stream(shuffled_plan(store), shard_source(8, rows=100))
+        assert sum(e.run.shuffle_async_rounds for e in rep.epochs) >= 2
+        assert sum(e.run.shuffled_items for e in rep.epochs) > 0
+        assert all(e.run.shuffle_spills == 0 for e in rep.epochs)
+        eng.close()
+
+    def test_oversized_shuffle_takes_spill_path(self, store):
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=8,
+                                     shuffle_spill_bytes=1)  # everything spills
+        rep = eng.run_stream(shuffled_plan(store), shard_source(8, rows=100))
+        assert sum(e.run.shuffle_spills for e in rep.epochs) >= 2
+        cols = DataAccess(store).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 8 * 100   # exactly once either path
+        eng.close()
+
+    def test_pipelined_node_death_keeps_epochs_contiguous(self, store):
+        """Acceptance: committed epoch ids stay contiguous and in-order under
+        an injected mid-epoch node death, with zero loss."""
+        n_shards, rows = 16, 100
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=8)
+        faults = StreamFaultInjection(node_death_in_epoch={"n2": 1})
+        rep = eng.run_stream(shuffled_plan(store), shard_source(n_shards, rows),
+                             faults=faults)
+        ids = rep.committed_epoch_ids()
+        assert ids == list(range(len(ids))) and len(ids) == 4
+        assert rep.node_failures == ["n2"]
+        assert rep.replayed_epochs == [1]
+        cols = DataAccess(store).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == n_shards * rows
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+class TestConcurrentReaders:
+    def test_reader_only_sees_contiguous_committed_epochs(self, store):
+        """A thread polling since_epoch during pipelined streaming must only
+        ever observe gap-free, in-order committed epochs — including across
+        an injected node death (ISSUE 2 acceptance)."""
+        stop = threading.Event()
+        bad: list = []
+        snapshots: list = []
+
+        def poll():
+            while not stop.is_set():
+                ids = store.committed_epoch_ids()
+                if ids != list(range(len(ids))):
+                    bad.append(("store-ids", ids))
+                acc = DataAccess(store)
+                seen = sorted({e.epoch for e in acc.since_epoch(-1).entries})
+                if seen != list(range(len(seen))):
+                    bad.append(("access-epochs", seen))
+                # frontier is computed after the ids snapshot — commits may
+                # land between the reads, so it can only move forward
+                if acc.committed_frontier() < len(ids) - 1:
+                    bad.append(("frontier", acc.committed_frontier(), ids))
+                snapshots.append(len(seen))
+                time.sleep(0.002)
+
+        reader = threading.Thread(target=poll, daemon=True)
+        reader.start()
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=8)
+        faults = StreamFaultInjection(node_death_in_epoch={"n1": 1})
+        rep = eng.run_stream(shuffled_plan(store), shard_source(16, rows=100),
+                             faults=faults)
+        stop.set()
+        reader.join(timeout=5)
+        eng.close()
+        assert not bad, f"non-contiguous observations: {bad[:5]}"
+        assert rep.replayed_epochs == [1]
+        # the reader actually watched ingestion progress mid-flight
+        assert len(set(snapshots)) > 1
+
+
+# ---------------------------------------------------------------------------
+class TestStoreModes:
+    def test_torn_journal_line_is_an_uncommitted_epoch(self, store):
+        store.begin_epoch(0)
+        store.put_block(IngestItem(np.arange(8), Granularity.BLOCK), "n0")
+        store.commit_epoch(0)
+        store.begin_epoch(1)
+        store.put_block(IngestItem(np.arange(9), Granularity.BLOCK), "n1")
+        store.commit_epoch(1)
+        # crash mid-append: tear the journal's last line
+        with open(store.epoch_journal_path) as f:
+            lines = f.readlines()
+        with open(store.epoch_journal_path, "w") as f:
+            f.write(lines[0])
+            f.write(lines[1][: len(lines[1]) // 2])
+        revived = DataStore(store.root, nodes=store.nodes)
+        assert revived.committed_epoch_ids() == [0]   # torn line never committed
+        assert revived.gc_orphans()                   # epoch 1's block reclaimed
+
+    def test_snapshot_commit_mode_skips_journal(self, tmp_path):
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0"], journal_commits=False)
+        ds.begin_epoch(0)
+        ds.put_block(IngestItem(np.arange(8), Granularity.BLOCK), "n0")
+        ds.commit_epoch(0)
+        assert not os.path.exists(ds.epoch_journal_path)
+        assert DataStore(ds.root, nodes=ds.nodes).committed_epoch_ids() == [0]
+
+    def test_compressed_store_roundtrip(self, tmp_path):
+        ds = DataStore(str(tmp_path / "c"), nodes=["n0"], compress=True)
+        data = np.zeros(4096, dtype=np.int64)   # very compressible
+        entry = ds.put_block(IngestItem(data, Granularity.BLOCK), "n0")
+        assert entry.compressed and entry.nbytes < entry.logical_nbytes()
+        assert ds.verify_block(entry.block_id)  # size check uses on-disk bytes
+        out = np.frombuffer(ds.read_payload(entry.block_id), dtype=np.int64)
+        np.testing.assert_array_equal(out, data)
+
+    def test_synchronous_shuffle_mode_still_exact_once(self, store):
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=8,
+                                     pipelined=False, shuffle_synchronous=True)
+        rep = eng.run_stream(shuffled_plan(store), shard_source(8, rows=100))
+        assert sum(e.run.shuffle_spills for e in rep.epochs) >= 2  # sync rounds
+        cols = DataAccess(store).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 8 * 100
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+class TestGcOrphans:
+    def test_crash_mid_epoch_leaves_orphans_gc_removes_them(self, store):
+        # epoch 0 commits cleanly
+        store.begin_epoch(0)
+        store.put_block(IngestItem(np.arange(16), Granularity.BLOCK,
+                                   (), {}).with_label("chunk", 0), "n0")
+        store.commit_epoch(0, n_items=1)
+
+        # epoch 1 "crashes" mid-stage: blocks on disk, never committed
+        store.begin_epoch(1)
+        e1 = store.put_block(IngestItem(np.arange(32), Granularity.BLOCK,
+                                        (), {}).with_label("chunk", 1), "n1")
+        e2 = store.put_block(IngestItem(np.arange(32), Granularity.BLOCK,
+                                        (), {}).with_label("chunk", 2), "n2")
+        dead_files = [os.path.join(store.root, e.path) for e in (e1, e2)]
+        assert all(os.path.exists(f) for f in dead_files)
+
+        # crash = a fresh process loads only the committed manifest
+        revived = DataStore(store.root, nodes=store.nodes)
+        assert revived.committed_epoch_ids() == [0]
+        removed = revived.gc_orphans()
+        assert sorted(removed) == sorted(
+            os.path.normpath(e.path) for e in (e1, e2))
+        assert not any(os.path.exists(f) for f in dead_files)
+        # committed data survives the sweep, and a second sweep is a no-op
+        assert revived.gc_orphans() == []
+        assert len(DataAccess(revived).since_epoch(-1)) == 1
+        assert revived.verify_block(next(iter(revived.entries)))
+
+    def test_gc_keeps_blocks_of_inflight_staging_epoch(self, store):
+        store.begin_epoch(0)
+        e = store.put_block(IngestItem(np.arange(8), Granularity.BLOCK), "n0")
+        assert store.gc_orphans() == []   # staged-in-this-process != orphan
+        assert os.path.exists(os.path.join(store.root, e.path))
+        store.commit_epoch(0)
+
+
+# ---------------------------------------------------------------------------
+class TestUnroutedItems:
+    def test_stop_mid_backpressure_parks_inflight_item(self):
+        q = IngestQueues(iter([IngestItem({"x": np.arange(2)}) for _ in range(5)]),
+                         ["n0"], capacity=1)
+        time.sleep(0.2)          # feeder: 1 queued, 1 in hand (blocked)
+        assert q.produced == 2 and q.qsizes()["n0"] == 1
+        q.stop()
+        q.exhausted.wait(timeout=2)
+        assert len(q.unrouted) == 1          # the in-flight item is recorded
+        assert q.produced == q.qsizes()["n0"] + len(q.unrouted) + 0
+
+    def test_all_nodes_dead_parks_item_instead_of_dropping(self):
+        q = IngestQueues.manual(["n0", "n1"], capacity=4)
+        q.mark_dead("n0")
+        q.mark_dead("n1")
+        item = IngestItem({"x": np.arange(2)})
+        assert q.put(item) is False
+        assert q.unrouted == [item]
+        q.close()
+
+
+# ---------------------------------------------------------------------------
+class TestFeedFanout:
+    def _mk(self, tmp_path, name):
+        ds = DataStore(str(tmp_path / name), nodes=["n0", "n1"])
+        return ds, columnar_plan(ds, name=name, epoch_items=4)
+
+    def test_one_source_feeds_two_plans(self, tmp_path):
+        dsa, pa = self._mk(tmp_path, "a")
+        dsb, pb = self._mk(tmp_path, "b")
+        reports = stream_ingest_multi([pa, pb], shard_source(12, rows=50),
+                                      [dsa, dsb])
+        assert set(reports) == {"a", "b"}
+        for name, ds in (("a", dsa), ("b", dsb)):
+            assert reports[name].total_items == 12
+            assert reports[name].committed_epoch_ids() == [0, 1, 2]
+            cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+            assert len(cols["quantity"]) == 12 * 50   # every plan sees every item
+
+    def test_feed_language_surface(self, tmp_path):
+        dsa, pa = self._mk(tmp_path, "clean")
+        dsb, pb = self._mk(tmp_path, "analytics")
+        feeds = parse_feed_script("FEED input INTO clean, analytics;",
+                                  env={"clean": pa, "analytics": pb})
+        assert len(feeds) == 1 and isinstance(feeds[0], FeedSpec)
+        assert feeds[0].plan_names == ["clean", "analytics"]
+        reports = stream_ingest_multi(feeds[0], shard_source(8, rows=50),
+                                      [dsa, dsb])
+        assert all(r.total_items == 8 for r in reports.values())
+
+    def test_bad_feed_statements_rejected(self, tmp_path):
+        ds, p = self._mk(tmp_path, "a")
+        with pytest.raises(LanguageError):
+            parse_feed_script("FEED input INTO missing;", env={"a": p})
+        with pytest.raises(LanguageError):
+            parse_feed_script("FEED input;", env={"a": p})
+        with pytest.raises(LanguageError):
+            parse_feed_script("SELECT * FROM input;", env={})  # no FEED at all
+
+    def test_shared_store_is_rejected(self, tmp_path):
+        ds, pa = self._mk(tmp_path, "a")
+        pb = columnar_plan(ds, name="b", epoch_items=4)
+        with pytest.raises(ValueError, match="own DataStore"):
+            stream_ingest_multi([pa, pb], shard_source(4), [ds, ds])
