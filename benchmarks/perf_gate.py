@@ -1,0 +1,71 @@
+"""CI perf gate over the streaming benchmark trajectory.
+
+The nightly job appends a fresh record to ``BENCH_streaming.json``
+(``benchmarks.bench_streaming``) and then runs this gate: it compares the
+fresh entry's throughput metric against the previous entry and fails the job
+(exit 1) on a regression beyond the threshold.  With fewer than two
+comparable entries (first run, wiped trajectory, unreadable file) it skips
+cleanly (exit 0) — a missing history must never fail the build.
+
+Usage::
+
+    python -m benchmarks.perf_gate [--file BENCH_streaming.json]
+        [--metric pipelined_rows_per_s] [--threshold 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Tuple
+
+DEFAULT_FILE = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_streaming.json")
+DEFAULT_METRIC = "pipelined_rows_per_s"
+DEFAULT_THRESHOLD = 0.25
+
+
+def check(path: str, metric: str = DEFAULT_METRIC,
+          threshold: float = DEFAULT_THRESHOLD) -> Tuple[int, str]:
+    """Compare the trajectory's last entry against its predecessor.
+
+    Returns ``(exit_code, message)``: 0 = pass or clean skip, 1 = regression
+    beyond ``threshold`` (fractional, e.g. 0.25 = 25%).
+    """
+    if not os.path.exists(path):
+        return 0, f"perf gate: no trajectory at {path} — skipping"
+    try:
+        with open(path) as f:
+            history = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        return 0, f"perf gate: unreadable trajectory ({e}) — skipping"
+    entries = [h for h in history
+               if isinstance(h, dict) and h.get(metric)]
+    if len(entries) < 2:
+        return 0, (f"perf gate: {len(entries)} entr{'y' if len(entries) == 1 else 'ies'} "
+                   f"with {metric!r} — nothing to compare, skipping")
+    prev, last = entries[-2], entries[-1]
+    base, fresh = float(prev[metric]), float(last[metric])
+    if base <= 0:
+        return 0, f"perf gate: baseline {metric}={base} — skipping"
+    drop = 1.0 - fresh / base
+    detail = f"{metric}: {fresh:,.0f} vs {base:,.0f} baseline ({-drop:+.1%})"
+    if drop > threshold:
+        return 1, f"perf gate: REGRESSION {detail} exceeds {threshold:.0%} budget"
+    return 0, f"perf gate: OK {detail}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--file", default=DEFAULT_FILE)
+    ap.add_argument("--metric", default=DEFAULT_METRIC)
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD)
+    args = ap.parse_args(argv)
+    code, msg = check(args.file, args.metric, args.threshold)
+    print(msg)
+    return code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

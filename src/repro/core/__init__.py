@@ -15,22 +15,27 @@ from .access import DataAccess, Split
 from .catalog import Catalog
 from .fault import (ErasureRecovery, FaultToleranceDaemon, RecoveryUDF,
                     ReplicationRecovery, TransformationRecovery)
-from .items import Granularity, IngestItem, Label
+from .items import (Granularity, IngestItem, Label, ShmLease, decode_items,
+                    encode_items)
 from .language import (FeedSpec, LanguageSession, chain_stage, create_stage,
                        format_, parse_feed_script, parse_ingestion_script,
-                       select, store, with_epochs)
+                       select, store, unparse_stream, with_epochs)
 from .operators import (IngestOp, MaterializeOp, OperatorFailure, OpMode,
-                        PassThroughOp, register_op, registered_ops, resolve_op)
+                        PassThroughOp, register_op, registered_ops,
+                        resolve_callable, resolve_op)
 from .optimizer import (FilterFusionRule, IngestionOptimizer, IngestOpExpr,
                         ParallelModeRule, PipelineRule, ReorderRule, Rule,
                         split_pipeline_segments)
-from .plan import IngestPlan, Stage, StagePlan, Statement
+from .plan import IngestPlan, Stage, StagePlan, Statement, serialize_plans
+from .procexec import ProcessNodeExecutor, WorkerDeath
 from .runtime import (FaultInjection, NodeExecutor, NodeFailure, RunReport,
-                      RuntimeEngine, ShuffleService, ingest)
+                      RuntimeEngine, ShuffleService, derive_spill_bytes,
+                      ingest)
 from .store import BlockEntry, DataStore, EpochEntry
-from .streaming import (EpochReport, FeedDistributor, IngestQueues,
-                        StreamFaultInjection, StreamingRuntimeEngine,
-                        StreamReport, stream_ingest, stream_ingest_multi)
+from .streaming import (EpochPolicy, EpochReport, FeedDistributor,
+                        IngestQueues, StreamFaultInjection,
+                        StreamingRuntimeEngine, StreamReport, stream_ingest,
+                        stream_ingest_multi)
 
 # operator implementations register themselves on import
 from . import ops_select as _ops_select  # noqa: F401
@@ -41,19 +46,21 @@ __all__ = [
     "DataAccess", "Split", "Catalog",
     "ErasureRecovery", "FaultToleranceDaemon", "RecoveryUDF",
     "ReplicationRecovery", "TransformationRecovery",
-    "Granularity", "IngestItem", "Label",
+    "Granularity", "IngestItem", "Label", "ShmLease", "decode_items",
+    "encode_items",
     "FeedSpec", "LanguageSession", "chain_stage", "create_stage", "format_",
     "parse_feed_script", "parse_ingestion_script", "select", "store",
-    "with_epochs",
+    "unparse_stream", "with_epochs",
     "IngestOp", "MaterializeOp", "OperatorFailure", "OpMode", "PassThroughOp",
-    "register_op", "registered_ops", "resolve_op",
+    "register_op", "registered_ops", "resolve_callable", "resolve_op",
     "FilterFusionRule", "IngestionOptimizer", "IngestOpExpr", "ParallelModeRule",
     "PipelineRule", "ReorderRule", "Rule", "split_pipeline_segments",
-    "IngestPlan", "Stage", "StagePlan", "Statement",
+    "IngestPlan", "Stage", "StagePlan", "Statement", "serialize_plans",
+    "ProcessNodeExecutor", "WorkerDeath",
     "FaultInjection", "NodeExecutor", "NodeFailure", "RunReport",
-    "RuntimeEngine", "ShuffleService", "ingest",
+    "RuntimeEngine", "ShuffleService", "derive_spill_bytes", "ingest",
     "BlockEntry", "DataStore", "EpochEntry",
-    "EpochReport", "FeedDistributor", "IngestQueues", "StreamFaultInjection",
-    "StreamingRuntimeEngine", "StreamReport", "stream_ingest",
-    "stream_ingest_multi",
+    "EpochPolicy", "EpochReport", "FeedDistributor", "IngestQueues",
+    "StreamFaultInjection", "StreamingRuntimeEngine", "StreamReport",
+    "stream_ingest", "stream_ingest_multi",
 ]

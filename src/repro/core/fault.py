@@ -15,6 +15,7 @@ registered recovery UDFs.  Three built-ins (paper):
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from dataclasses import dataclass, field
@@ -188,12 +189,16 @@ class FaultToleranceDaemon:
                     payload = udf.recover(self.store, entry, rec_ids)
                 except RecoveryError:
                     continue
-                # place the rebuilt block; if its node died, move to a live one
+                # place the rebuilt block; if its node died (runtime liveness
+                # mark, e.g. a dead worker process, or its storage is gone),
+                # move it to a node that is both live and present
                 node = entry.node
-                import os
-                if not os.path.isdir(self.store.node_dir(node)):
-                    live = [n for n in self.store.nodes
-                            if os.path.isdir(self.store.node_dir(n))]
+                runtime_live = set(self.store.live_nodes())
+                if (node not in runtime_live
+                        or not os.path.isdir(self.store.node_dir(node))):
+                    present = [n for n in self.store.nodes
+                               if os.path.isdir(self.store.node_dir(n))]
+                    live = [n for n in present if n in runtime_live] or present
                     node = live[0] if live else node
                 self.store.restore_file(entry, payload, node=node)
                 self.report.recovered.append((bid, udf.name))

@@ -13,8 +13,9 @@ from __future__ import annotations
 
 import enum
 import hashlib
+import pickle
 from dataclasses import dataclass, field, replace
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -132,6 +133,146 @@ class IngestItem:
         elif hasattr(d, "tobytes"):
             h.update(d.tobytes())
         return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# Shared-memory item codec (DESIGN.md §6: the process backend's data plane)
+# ---------------------------------------------------------------------------
+# Item batches crossing a process boundary are encoded with pickle protocol 5:
+# every C-contiguous numpy buffer is exported out-of-band and packed into ONE
+# ``multiprocessing.shared_memory`` segment, so the receiving process rebuilds
+# the arrays as zero-copy views over the mapped segment (numpy's protocol-5
+# ``_frombuffer`` path).  Small batches (< ``shm_min_bytes`` of array payload)
+# skip the segment and ship fully inline — a pipe write is cheaper than a
+# segment create/map for tiny epochs.  Object-dtype columns and non-array
+# payloads ride in the in-band pickle either way.
+#
+# Lifetime: each segment has exactly one producer and one consumer.  The
+# producer copies buffers in, then ``ShmLease.detach()``-es (close + drop the
+# resource-tracker registration so the consumer's unlink is authoritative);
+# the consumer maps it, uses the views, and ``release()``-s (close + unlink)
+# when the decoded items are no longer referenced.
+
+SHM_MIN_BYTES = 64 << 10   # below this, inline pickle beats a segment
+
+
+class ShmLease:
+    """Owns one shared-memory segment end-to-end of a transfer leg."""
+
+    def __init__(self, shm: Any) -> None:
+        self._shm = shm
+
+    @property
+    def name(self) -> Optional[str]:
+        return self._shm.name if self._shm is not None else None
+
+    def detach(self) -> None:
+        """Producer side: unmap and disown (the consumer will unlink)."""
+        shm, self._shm = self._shm, None
+        if shm is None:
+            return
+        try:
+            from multiprocessing import resource_tracker
+            resource_tracker.unregister(shm._name, "shared_memory")
+        except Exception:
+            pass
+        shm.close()
+
+    def release(self, unlink: bool = True) -> None:
+        """Consumer side: unmap and (by default) destroy the segment."""
+        shm, self._shm = self._shm, None
+        if shm is None:
+            return
+        try:
+            shm.close()
+        except BufferError:
+            # a view still points into the mapping: the unlink below frees
+            # the name now and the memory when the last view dies
+            pass
+        finally:
+            if unlink:
+                try:
+                    shm.unlink()
+                except FileNotFoundError:
+                    pass
+
+
+def encode_items(items: Sequence["IngestItem"],
+                 shm_min_bytes: int = SHM_MIN_BYTES
+                 ) -> Tuple[Dict[str, Any], Optional[ShmLease]]:
+    """Encode an item batch for a process hop.
+
+    Returns ``(payload, lease)``; ``lease`` is None for the inline-pickle
+    fallback, else the producer must ``detach()`` it once the payload has been
+    handed to the transport.  ``payload`` is a plain picklable dict.
+    """
+    buffers: List[pickle.PickleBuffer] = []
+    meta = pickle.dumps(list(items), protocol=5,
+                        buffer_callback=buffers.append)
+    views = [b.raw() for b in buffers]
+    total = sum(v.nbytes for v in views)
+    if total < shm_min_bytes:
+        # inline fast path, one pickle pass: ship the out-of-band buffers
+        # next to the meta stream (bytearray: reconstructed arrays must stay
+        # writable, like the shm path's views)
+        inline = [bytearray(v) for v in views]
+        for b in buffers:
+            b.release()
+        return {"kind": "pickle", "meta": meta, "buffers": inline}, None
+    from multiprocessing import shared_memory
+    shm = shared_memory.SharedMemory(create=True, size=max(total, 1))
+    offsets: List[Tuple[int, int]] = []
+    off = 0
+    for v in views:
+        shm.buf[off:off + v.nbytes] = v.cast("B")
+        offsets.append((off, v.nbytes))
+        off += v.nbytes
+    for b in buffers:
+        b.release()
+    return {"kind": "shm", "meta": meta, "shm": shm.name,
+            "offsets": offsets}, ShmLease(shm)
+
+
+def decode_items(payload: Dict[str, Any], copy: bool = False
+                 ) -> Tuple[List["IngestItem"], Optional[ShmLease]]:
+    """Decode a batch produced by :func:`encode_items`.
+
+    With ``copy=False`` the arrays are zero-copy views over the mapped
+    segment: the caller must hold the returned lease alive while the items
+    are in use and ``release()`` it afterwards.  With ``copy=True`` the
+    arrays are materialized and the segment is released (and unlinked)
+    before returning — the safe mode when decoded items outlive the call.
+    """
+    if payload["kind"] == "pickle":
+        return pickle.loads(payload["meta"],
+                            buffers=payload.get("buffers") or ()), None
+    from multiprocessing import shared_memory
+    shm = shared_memory.SharedMemory(name=payload["shm"])
+    lease = ShmLease(shm)
+    base = memoryview(shm.buf)
+    items = pickle.loads(payload["meta"],
+                         buffers=[base[o:o + l] for o, l in payload["offsets"]])
+    if not copy:
+        return items, lease
+    # comprehension scope: no loop variable may outlive the release below,
+    # or the segment unmaps with exported views (BufferError at GC)
+    out = [_materialize_item(it) for it in items]
+    del items, base
+    lease.release()
+    return out, None
+
+
+def _materialize_item(item: "IngestItem") -> "IngestItem":
+    """Deep-copy any array payload out of a shared-memory view."""
+    d = item.data
+    if isinstance(d, np.ndarray):
+        d = d.copy()
+    elif isinstance(d, dict):
+        d = {k: (v.copy() if isinstance(v, np.ndarray) else v)
+             for k, v in d.items()}
+    else:
+        return item
+    return replace(item, data=d)
 
 
 def matches(item: IngestItem, predicates: Dict[str, Any]) -> bool:

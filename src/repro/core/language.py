@@ -170,17 +170,33 @@ def chain_stage(plan: IngestPlan, to: Sequence[str], using: Sequence[str],
 
 def with_epochs(plan: IngestPlan, *, items: Optional[int] = None,
                 seconds: Optional[float] = None,
+                bytes: Optional[int] = None,
                 capacity: Optional[int] = None) -> IngestPlan:
-    """Declare the plan streamable: epochs cut every ``items`` items and/or
-    ``seconds`` of wall clock, behind per-node ingest queues bounded at
-    ``capacity`` (STREAM WITH EPOCHS(...) in the textual language)."""
+    """Declare the plan streamable: epochs cut every ``items`` items,
+    ``bytes`` of queued payload, and/or ``seconds`` of wall clock — first
+    threshold wins — behind per-node ingest queues bounded at ``capacity``
+    (STREAM WITH EPOCHS(...) in the textual language)."""
     cfg = {k: v for k, v in
-           (("items", items), ("seconds", seconds), ("capacity", capacity))
+           (("items", items), ("seconds", seconds), ("bytes", bytes),
+            ("capacity", capacity))
            if v is not None}
     if not cfg:
-        raise LanguageError("with_epochs: give at least one of items/seconds/capacity")
+        raise LanguageError(
+            "with_epochs: give at least one of items/seconds/bytes/capacity")
     plan.stream_config = cfg
     return plan
+
+
+def unparse_stream(plan: IngestPlan) -> str:
+    """The textual ``STREAM WITH EPOCHS(...)`` statement equivalent to the
+    plan's stream config (parse -> unparse -> parse is stable: the language
+    round-trip test rides this)."""
+    cfg = getattr(plan, "stream_config", None)
+    if not cfg:
+        raise LanguageError("plan has no stream config to unparse")
+    order = ("items", "seconds", "bytes", "capacity")
+    args = ", ".join(f"{k}={cfg[k]}" for k in order if k in cfg)
+    return f"STREAM WITH EPOCHS({args});"
 
 
 # ---------------------------------------------------------------- text parser
@@ -385,12 +401,12 @@ class LanguageSession:
         self.plan.add_statement(ops, kind="store", sid=sid, inputs=srcs)
 
     def _stream(self, rest: str) -> None:
-        """STREAM WITH EPOCHS(items=128, seconds=0.5, capacity=1024);"""
+        """STREAM WITH EPOCHS(items=128, seconds=0.5, bytes=4mb, capacity=1024);"""
         m = re.match(r"WITH\s+EPOCHS\s*\((?P<args>[^)]*)\)$", rest, re.IGNORECASE)
         if not m:
             raise LanguageError(f"bad STREAM (want WITH EPOCHS(...)): {rest!r}")
         kwargs = self._parse_args(m.group("args"))
-        allowed = {"items", "seconds", "capacity"}
+        allowed = {"items", "seconds", "bytes", "capacity"}
         bad = set(kwargs) - allowed
         if bad:
             raise LanguageError(f"STREAM WITH EPOCHS: unknown knobs {sorted(bad)} "
@@ -398,6 +414,8 @@ class LanguageSession:
         if not kwargs:
             raise LanguageError("STREAM WITH EPOCHS: give at least one of "
                                 f"{sorted(allowed)}")
+        if isinstance(kwargs.get("bytes"), str):
+            kwargs["bytes"] = _parse_size(kwargs["bytes"])   # "4mb" literals
         with_epochs(self.plan, **kwargs)
 
     def _feed(self, rest: str) -> None:

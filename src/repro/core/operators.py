@@ -150,6 +150,14 @@ class IngestOp:
         op.mode = self.mode
         return op
 
+    def __reduce__(self):
+        """Operators pickle as (type, params, mode) — exactly the catalog
+        contract — so shipping a plan to a worker process re-instantiates
+        fresh operator state there (the process backend's launch_remote).
+        Closure-valued params (a lambda predicate) fail here by design:
+        ``assert_picklable_plan`` turns that into an actionable error."""
+        return (_rebuild_op, (type(self), dict(self.params), self.mode))
+
     def signature(self) -> Dict[str, Any]:
         return {"type": type(self).__name__, "name": self.name,
                 "params": {k: repr(v) for k, v in self.params.items()},
@@ -158,6 +166,35 @@ class IngestOp:
     def __repr__(self) -> str:
         ps = ", ".join(f"{k}={v!r}" for k, v in self.params.items())
         return f"{type(self).__name__}({ps})"
+
+
+def _rebuild_op(cls: type, params: Dict[str, Any], mode: OpMode) -> "IngestOp":
+    op = cls(**params)
+    op.mode = mode
+    return op
+
+
+def resolve_callable(spec: Any) -> Any:
+    """Resolve a picklable callable spec.
+
+    Accepts a callable (returned unchanged — fine for thread backends, only
+    picklable if it is a module-level function) or an import spec string
+    ``"package.module:attr"`` resolved at call time.  Spec strings are what
+    make FilterOp / MapOp / ParserOp params cross process boundaries.
+    """
+    if isinstance(spec, str):
+        mod, _, attr = spec.partition(":")
+        if not attr:
+            raise ValueError(
+                f"callable spec {spec!r} must look like 'pkg.module:attr'")
+        import importlib
+        obj = importlib.import_module(mod)
+        for part in attr.split("."):
+            obj = getattr(obj, part)
+        if not callable(obj):
+            raise TypeError(f"callable spec {spec!r} resolved to non-callable {obj!r}")
+        return obj
+    return spec
 
 
 class PassThroughOp(IngestOp):

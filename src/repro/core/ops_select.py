@@ -11,7 +11,25 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
 import numpy as np
 
 from .items import Columns, Granularity, IngestItem, num_rows, take_rows
-from .operators import IngestOp, register_op
+from .operators import IngestOp, register_op, resolve_callable
+
+
+def identity_columns(cols: Columns) -> Columns:
+    """Importable no-op transform — a picklable stand-in for ``lambda c: c``
+    in plans that must cross a process boundary (``fn="repro.core.ops_select:
+    identity_columns"``)."""
+    return cols
+
+
+def _as_text(data: Any) -> str:
+    """FILE payload -> str.  uint8 ndarrays are accepted so raw text can ride
+    the zero-copy shared-memory data plane to worker processes (bytes pickle
+    in-band; arrays go out-of-band into the segment)."""
+    if isinstance(data, np.ndarray):
+        data = data.tobytes()
+    if isinstance(data, (bytes, bytearray)):
+        return bytes(data).decode()
+    return str(data)
 
 
 # --------------------------------------------------------------------- parsers
@@ -38,7 +56,8 @@ class ParserOp(IngestOp):
         self.schema = schema
         self.sep = sep
         self.chunk_rows = chunk_rows
-        self.label_fn = label_fn
+        # spec string "module:attr" keeps the op picklable (process backend)
+        self.label_fn = resolve_callable(label_fn) if label_fn else None
         self._counter = 0
 
     def _parse_text(self, text: str) -> Columns:
@@ -61,8 +80,7 @@ class ParserOp(IngestOp):
         if isinstance(item.data, dict):
             cols = item.data  # already columnar (in-memory source)
         else:
-            text = item.data.decode() if isinstance(item.data, (bytes, bytearray)) else str(item.data)
-            cols = self._parse_text(text)
+            cols = self._parse_text(_as_text(item.data))
         n = num_rows(cols)
         for start in range(0, max(n, 1), self.chunk_rows):
             part = take_rows(cols, np.arange(start, min(start + self.chunk_rows, n)))
@@ -83,6 +101,59 @@ class IdentityParserOp(ParserOp):
         super().__init__(**kw)
 
 
+@register_op("regex_parser")
+class RegexParserOp(IngestOp):
+    """FILE -> CHUNK: parse semi-structured log lines with a named-group
+    regex (the paper's cloud-log scenario, Sec. IV-C).
+
+    Each line is matched against ``pattern``; named groups become columns,
+    cast per ``schema`` (group name -> numpy dtype; unnamed groups and
+    unmatched lines are dropped — the dropped count is recorded in
+    ``meta["dropped"]``).  Per-line regex matching is interpreter-bound CPU
+    work, which is exactly what the process node backend parallelizes across
+    cores; ``pattern`` is a plain string, so the operator ships to worker
+    processes by spec.
+    """
+
+    name = "parser"
+    granularity_in = Granularity.FILE
+    granularity_out = Granularity.CHUNK
+    cpu_heavy = True
+
+    def __init__(self, pattern: str, schema: Optional[Dict[str, str]] = None,
+                 chunk_rows: int = 65536, **kw: Any) -> None:
+        super().__init__(pattern=pattern, schema=schema, chunk_rows=chunk_rows, **kw)
+        import re
+        self._re = re.compile(pattern)
+        if not self._re.groupindex:
+            raise ValueError("regex_parser pattern needs named groups "
+                             "(?P<field>...) to produce columns")
+        self.schema = schema or {}
+        self.chunk_rows = chunk_rows
+        self._counter = 0
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        text = _as_text(item.data)
+        match = self._re.match
+        lines = text.splitlines()
+        rows = [m.groups() for m in map(match, lines) if m]
+        dropped = len([l for l in lines if l]) - len(rows)
+        fields = sorted(self._re.groupindex, key=self._re.groupindex.get)
+        cols: Columns = {}
+        for f in fields:
+            gi = self._re.groupindex[f] - 1   # groups() is 0-based, all groups
+            dt = np.dtype(self.schema.get(f, object))
+            cols[f] = np.array([r[gi] for r in rows], dtype=dt)
+        n = len(rows)
+        for start in range(0, max(n, 1), self.chunk_rows):
+            part = take_rows(cols, np.arange(start, min(start + self.chunk_rows, n)))
+            label = self._counter
+            self._counter += 1
+            out = IngestItem(part, Granularity.CHUNK, item.labels,
+                             dict(item.meta, dropped=dropped))
+            yield out.with_label(self.name, label)
+
+
 # --------------------------------------------------------------------- filters
 @register_op("filter")
 class FilterOp(IngestOp):
@@ -100,11 +171,14 @@ class FilterOp(IngestOp):
                  selectivity: float = 0.5, **kw: Any) -> None:
         super().__init__(predicate=predicate, fields=tuple(fields), selectivity=selectivity, **kw)
         if isinstance(predicate, tuple):
-            # layouts-style (field, op, value) selection triple
+            # layouts-style (field, op, value) selection triple — a picklable
+            # predicate spec (the process backend ships these, not closures)
             from ..layouts.blocks import _OPS
             f, o, v = predicate
             fields = tuple(fields) or (f,)
             predicate = lambda cols: _OPS[o](cols[f], v)
+        else:
+            predicate = resolve_callable(predicate)
         self.predicate = predicate
         self.fields = tuple(fields)  # fields the predicate reads (for reorder legality)
         self.expansion = selectivity
@@ -147,7 +221,8 @@ class MapOp(IngestOp):
 
     def __init__(self, fn: Callable[[Columns], Columns], label: Any = 1, **kw: Any) -> None:
         super().__init__(fn=fn, label=label, **kw)
-        self.fn = fn
+        # fn may be an import spec "module:attr" so the op stays picklable
+        self.fn = resolve_callable(fn)
         self.label = label
 
     def process(self, item: IngestItem) -> Iterable[IngestItem]:

@@ -7,6 +7,7 @@ rewrites the DAG; Sec. VI: the runtime executes it.
 """
 from __future__ import annotations
 
+import pickle
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -68,6 +69,15 @@ class StagePlan:
             if op_idx in idxs:
                 return b
         return 0
+
+    def clone(self) -> "StagePlan":
+        """Fresh operator instances, same structure — what shipping the plan
+        to a node means (thread backend: in-process clone; process backend:
+        pickled across the control pipe, see ``serialize_plans``)."""
+        return StagePlan(self.name, [op.clone() for op in self.ops],
+                         list(self.upstream), dict(self.predicates),
+                         [list(b) for b in self.pipeline_blocks],
+                         commit_side=self.commit_side)
 
     def compute_commit_side(self) -> bool:
         """A stage is commit-side iff any of its operators writes the store."""
@@ -209,3 +219,39 @@ class IngestPlan:
 def route_items(items: Iterable[IngestItem], predicates: Dict[str, Any]) -> List[IngestItem]:
     """Label-predicate routing into a stage (paper Sec. IV-B WHERE clause)."""
     return [it for it in items if matches(it, predicates)]
+
+
+def failed_op_index(sp: StagePlan, block: Sequence[int], exc: Exception) -> int:
+    """Recover which op in a multi-op pipeline block failed from the failure
+    message (shared by the thread and process backends' retry machinery)."""
+    msg = str(exc)
+    for oi in block:
+        if f"[{oi}]" in msg or sp.ops[oi].name in msg:
+            return oi
+    return block[0]
+
+
+def serialize_plans(stage_plans: Sequence[StagePlan]) -> bytes:
+    """Pickle a compiled stage DAG for shipping to a worker process.
+
+    Operators reduce to (type, params) — see ``IngestOp.__reduce__`` — so a
+    closure-valued param (a lambda predicate / map fn) cannot cross the
+    boundary.  This wrapper names the offending operator instead of leaking a
+    bare PicklingError: swap the closure for a spec the worker can rebuild
+    (FilterOp tuple predicates, MapOp/ParserOp ``"module:attr"`` strings)."""
+    try:
+        return pickle.dumps(list(stage_plans), protocol=pickle.HIGHEST_PROTOCOL)
+    except Exception as exc:
+        for sp in stage_plans:
+            for oi, op in enumerate(sp.ops):
+                try:
+                    pickle.dumps(op, protocol=pickle.HIGHEST_PROTOCOL)
+                except Exception:
+                    raise TypeError(
+                        f"stage {sp.name!r} op [{oi}] ({type(op).__name__}) is "
+                        f"not picklable for the process backend — replace "
+                        f"closure params with importable specs (e.g. "
+                        f"fn='pkg.module:attr' or a (field, op, value) "
+                        f"predicate tuple); offending params: "
+                        f"{sorted(op.params)}") from exc
+        raise

@@ -1,0 +1,550 @@
+"""Process-based node backend: real CPU parallelism over ``launch_remote``.
+
+The thread backend's ``NodeExecutor`` lanes share one Python process, so on a
+GIL-bound host the pipelined core overlaps latency but cannot multiply
+CPU-heavy operator throughput (DESIGN.md §6).  This module realizes the
+``launch_remote`` seam with real OS processes:
+
+* **One long-lived worker process per logical node** (``ProcessNodeExecutor``
+  spawns it once per engine), hosting the node's plan clone and the same
+  named-lane model as the thread backend — the pipelined streaming engine's
+  ``"ingest"`` / ``"store"`` lanes run as threads *inside* the worker, so
+  epoch overlap and core-parallelism compose.
+* **Plans ship once, by pickle** — ``IngestOp.__reduce__`` reduces operators
+  to (type, params), exactly the catalog contract, so the worker re-creates
+  fresh operator state that then persists across epochs (dummy substitutions
+  survive, like in a long-running per-node JVM).  Closure params fail fast
+  with a named operator (``plan.serialize_plans``).
+* **Shared-memory data plane** — item batches cross the process boundary via
+  ``items.encode_items``: one ``multiprocessing.shared_memory`` segment per
+  hop, zero-copy numpy views on the worker side, inline pickle for small
+  batches (see items.py).
+* **Commit routing** — upload operators run *in the worker*, which performs
+  the serialization/compression and the disk write locally (a ``.tmp`` name
+  the orphan GC ignores), then registers the block's metadata with the
+  coordinator over a dedicated store-RPC pipe
+  (``DataStore.register_block_file``).  The manifest, the epoch staging
+  index, and the commit sequencer therefore live only in the coordinator:
+  epoch begin/commit/abort work unchanged.
+* **Death detection** — the coordinator's receiver thread treats pipe EOF
+  (worker crash, ``kill()``) as the node dying: every in-flight and future
+  stage job on that node fails with ``NodeFailure``, which is exactly what
+  the existing fault path consumes (batch shard reassignment, streaming
+  epoch-granular abort + replay).
+
+Cross-process *shuffle* needs no new machinery: stage outputs return to the
+coordinator, where the existing ``ShuffleService`` barrier (in-memory handoff
++ DFS spill files) redistributes them.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import pickle
+import queue
+import threading
+import time
+import uuid
+from collections import defaultdict
+from concurrent.futures import Future
+from dataclasses import asdict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import multiprocessing as mp
+
+from .items import IngestItem, decode_items, encode_items
+from .operators import OperatorFailure, PassThroughOp
+from .plan import StagePlan, failed_op_index, serialize_plans
+from .store import BlockEntry, DataStore, prepare_block_payload
+
+
+class WorkerDeath(RuntimeError):
+    """Raised coordinator-side when a node's worker process is gone; the
+    runtime maps it onto ``NodeFailure`` (the existing fault path)."""
+
+
+class _StoreToken:
+    """Picklable placeholder swapped for a ``DataStore`` param while a plan
+    crosses the process boundary; the worker swaps in its store client."""
+
+    def __repr__(self) -> str:
+        return "<store@coordinator>"
+
+
+_TOKEN = _StoreToken()
+_ship_lock = threading.Lock()   # serializes the param swap on shared plans
+
+
+def _mp_context():
+    """fork by default (fast spawn, inherited imports); override with
+    REPRO_MP_START_METHOD=spawn|forkserver on platforms or runtimes where
+    forking a threaded parent is unsafe.  Workers only run ingestion
+    operators — never JAX/XLA — so fork-after-jax-import is benign here."""
+    methods = mp.get_all_start_methods()
+    want = os.environ.get("REPRO_MP_START_METHOD",
+                          "fork" if "fork" in methods else "spawn")
+    if want not in methods:
+        want = "spawn"
+    return mp.get_context(want)
+
+
+def serialize_plans_for_worker(stage_plans: Sequence[StagePlan],
+                               store: DataStore) -> bytes:
+    """Pickle a stage DAG with DataStore params tokenized for the worker."""
+    with _ship_lock:
+        swapped = []
+        for sp in stage_plans:
+            for op in sp.ops:
+                s = op.params.get("store")
+                if isinstance(s, DataStore):
+                    if s is not store:
+                        raise ValueError(
+                            f"stage {sp.name!r}: upload target is not the "
+                            f"engine's store — the process backend routes "
+                            f"commits through the coordinator's store only")
+                    swapped.append(op)
+                    op.params["store"] = _TOKEN
+        try:
+            return serialize_plans(stage_plans)
+        finally:
+            for op in swapped:
+                op.params["store"] = store
+
+
+# ---------------------------------------------------------------------------
+# Worker-process side
+# ---------------------------------------------------------------------------
+class _WorkerStoreClient:
+    """The worker's stand-in for ``DataStore``: local payload prep + disk
+    write, metadata registration RPC'd to the coordinator (DESIGN.md §6)."""
+
+    def __init__(self, node: str, conn: Any, spec: Dict[str, Any]) -> None:
+        self.node = node
+        self._conn = conn
+        self._rpc_lock = threading.Lock()
+        self.root = spec["root"]
+        self.nodes = list(spec["nodes"])
+        self.durable = spec["durable"]
+        self.compress = spec["compress"]
+        self.compress_level = spec["compress_level"]
+        self.journal_commits = spec["journal_commits"]
+        self._live: List[str] = list(self.nodes)
+        self._epoch = threading.local()
+
+    # ------------------------------------------------------------- job scope
+    def bind_live(self, live: Optional[Sequence[str]]) -> None:
+        if live is not None:
+            self._live = list(live)
+
+    def set_epoch(self, epoch: Optional[int]) -> Any:
+        prev = getattr(self._epoch, "value", None)
+        self._epoch.value = epoch
+        return prev
+
+    # ------------------------------------------------- DataStore duck-typing
+    def live_nodes(self) -> List[str]:
+        live = set(self._live)
+        return [n for n in self.nodes if n in live]
+
+    def _rpc(self, *msg: Any) -> Any:
+        with self._rpc_lock:
+            self._conn.send(msg)
+            status, val = self._conn.recv()
+        if status == "err":
+            raise RuntimeError(f"store RPC {msg[0]!r} failed: {val}")
+        return val
+
+    def staging_epoch_ids(self) -> List[int]:
+        return self._rpc("staging")
+
+    def flush_manifest(self) -> None:
+        self._rpc("flush")
+
+    def put_block(self, item: IngestItem, node: str, *, logical_id: str = "",
+                  replica_index: int = 0, stripe_id: str = "",
+                  stripe_pos: int = -1, is_parity: bool = False) -> BlockEntry:
+        payload, layout, raw_nbytes = prepare_block_payload(
+            item.data, self.compress, self.compress_level)
+        # heavy half stays here: the physical write, to a name gc never scans
+        tmp = os.path.join(self.root, "nodes", node, f".{uuid.uuid4().hex}.tmp")
+        os.makedirs(os.path.dirname(tmp), exist_ok=True)
+        with open(tmp, "wb") as f:
+            f.write(payload)
+            if self.durable:
+                f.flush()
+                os.fsync(f.fileno())
+        epoch = getattr(self._epoch, "value", None)
+        rec = self._rpc("put", {
+            "node": node, "tmp_path": tmp, "base": item.lineage_name(),
+            "checksum": item.checksum(), "nbytes": len(payload),
+            "raw_nbytes": raw_nbytes, "compressed": self.compress,
+            "labels": [[l.op, l.value] for l in item.labels],
+            "layout": layout,
+            "logical_id": logical_id or DataStore._logical_id(item),
+            "replica_index": replica_index, "stripe_id": stripe_id,
+            "stripe_pos": stripe_pos, "is_parity": is_parity,
+            "meta": dict(item.meta),
+            "epoch": -1 if epoch is None else epoch,
+        })
+        return BlockEntry(**rec)
+
+
+class _WorkerLane:
+    """FIFO worker thread inside the node process (same model as the thread
+    backend's lanes: "ingest" and "store" jobs overlap within the worker)."""
+
+    def __init__(self, name: str) -> None:
+        self.jobs: "queue.Queue[Optional[Callable[[], None]]]" = queue.Queue()
+        self.thread = threading.Thread(target=self._loop, daemon=True,
+                                       name=f"lane-{name}")
+        self.thread.start()
+
+    def _loop(self) -> None:
+        while True:
+            job = self.jobs.get()
+            if job is None:
+                return
+            job()
+
+
+def _run_stage_ops(sp: StagePlan, items: List[IngestItem],
+                   injections: Dict[int, int], max_retries: int
+                   ) -> Tuple[List[IngestItem], Dict[str, Any]]:
+    """The worker-side twin of ``RuntimeEngine._run_stage``: pipeline blocks
+    as checkpoints, retry from the previous materialization, dummy
+    substitution after ``max_retries`` (paper Sec. VI-C1).  Substitutions
+    mutate the worker's resident plan, so they persist across epochs exactly
+    like the thread backend's node clones."""
+    stats: Dict[str, Any] = {"op_failures": {}, "dummy": []}
+    counts: Dict[int, int] = defaultdict(int)
+    current = items
+    for block in sp.pipeline_blocks or [[i] for i in range(len(sp.ops))]:
+        checkpoint = current
+        while True:
+            try:
+                out = checkpoint
+                for oi in block:
+                    if injections.get(oi, 0) > 0:
+                        injections[oi] -= 1
+                        raise OperatorFailure(f"injected @ {sp.name}[{oi}]")
+                    out = sp.ops[oi].run(out)
+                current = out
+                break
+            except OperatorFailure as e:
+                oi = block[0] if len(block) == 1 else failed_op_index(sp, block, e)
+                counts[oi] += 1
+                stats["op_failures"][f"{sp.name}[{oi}]"] = counts[oi]
+                if counts[oi] >= max_retries:
+                    failing = sp.ops[oi]
+                    sp.ops[oi] = PassThroughOp(replaces=failing.name)
+                    stats["dummy"].append(
+                        f"{sp.name}[{oi}]:{type(failing).__name__}")
+                continue
+    return current, stats
+
+
+def _worker_main(node: str, conn: Any, store_conn: Any,
+                 store_spec: Dict[str, Any]) -> None:
+    """Worker process entry: recv loop dispatching stage jobs onto lanes."""
+    client = _WorkerStoreClient(node, store_conn, store_spec)
+    plans: Dict[str, Any] = {}
+    lanes: Dict[str, _WorkerLane] = {}
+    send_lock = threading.Lock()
+
+    def send(msg: Any) -> bool:
+        with send_lock:
+            try:
+                conn.send(msg)
+                return True
+            except (BrokenPipeError, OSError):
+                return False
+
+    def run_job(jid: int, plan_key: str, si: int, payload: Dict[str, Any],
+                ctx: Dict[str, Any]) -> None:
+        lease = out_lease = None
+        try:
+            installed = plans.get(plan_key)
+            if isinstance(installed, BaseException):
+                raise installed
+            if installed is None:
+                raise KeyError(f"worker {node}: plan {plan_key!r} not installed")
+            sp = installed[si]
+            items, lease = decode_items(payload)   # zero-copy shm views
+            client.bind_live(ctx.get("live_nodes"))
+            prev = client.set_epoch(ctx.get("epoch"))
+            t0 = time.perf_counter()
+            try:
+                out, stats = _run_stage_ops(
+                    sp, items, dict(ctx.get("injections") or {}),
+                    int(ctx.get("max_retries", 3)))
+            finally:
+                client.set_epoch(prev)
+            stats["worker_s"] = time.perf_counter() - t0
+            # encode before releasing the input lease: outputs may alias it
+            out_payload, out_lease = encode_items(out)
+            del items, out
+            if lease is not None:
+                lease.release()
+                lease = None
+            if send(("done", jid, out_payload, stats)):
+                if out_lease is not None:
+                    out_lease.detach()
+            elif out_lease is not None:
+                out_lease.release()     # coordinator gone: don't leak the seg
+            out_lease = None
+        except BaseException as e:
+            if lease is not None:
+                lease.release()
+            if out_lease is not None:
+                out_lease.release()
+            try:
+                pickle.dumps(e)
+            except Exception:
+                e = RuntimeError(f"{type(e).__name__}: {e}")
+            send(("fail", jid, e))
+
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            break
+        kind = msg[0]
+        if kind == "stop":
+            break
+        if kind == "install":
+            _, key, blob = msg
+            try:
+                sps = pickle.loads(blob)
+                for sp in sps:
+                    for op in sp.ops:
+                        if isinstance(op.params.get("store"), _StoreToken):
+                            op.params["store"] = client
+                            op.store = client
+                plans[key] = sps
+            except BaseException as e:      # surfaced when a job needs it
+                plans[key] = e
+        elif kind == "run":
+            _, jid, plan_key, si, lane, payload, ctx = msg
+            ln = lanes.get(lane)
+            if ln is None:
+                ln = lanes[lane] = _WorkerLane(f"{node}:{lane}")
+            ln.jobs.put(lambda j=jid, k=plan_key, s=si, p=payload, c=ctx:
+                        run_job(j, k, s, p, c))
+    for ln in lanes.values():
+        ln.jobs.put(None)
+
+
+# ---------------------------------------------------------------------------
+# Coordinator side
+# ---------------------------------------------------------------------------
+class ProcessNodeExecutor:
+    """Coordinator handle for one node's worker process.
+
+    Mirrors ``NodeExecutor``'s surface (install once, lane-addressed jobs,
+    shutdown) but jobs are stage descriptors shipped over a control pipe, and
+    results come back on a receiver thread that resolves Futures by job id.
+    A second pipe services the worker's store RPCs (put_block metadata,
+    flush) against the coordinator's ``DataStore``.
+    """
+
+    def __init__(self, node: str, store: DataStore) -> None:
+        self.node = node
+        self.store = store
+        ctx = _mp_context()
+        self._conn, child_conn = ctx.Pipe()
+        self._store_conn, child_store = ctx.Pipe()
+        spec = {"root": store.root, "nodes": list(store.nodes),
+                "durable": store.durable, "compress": store.compress,
+                "compress_level": store.compress_level,
+                "journal_commits": store.journal_commits}
+        self._proc = ctx.Process(target=_worker_main,
+                                 args=(node, child_conn, child_store, spec),
+                                 daemon=True, name=f"ingest-node-{node}")
+        self._proc.start()
+        child_conn.close()
+        child_store.close()
+        self._send_lock = threading.Lock()
+        self._lock = threading.Lock()
+        self._pending: Dict[int, Future] = {}
+        self._inflight_shm: Dict[int, str] = {}   # jid -> input segment name
+        self._plans: Dict[int, Tuple[Any, str]] = {}   # id(orig) -> (pin, key)
+        self._jid = itertools.count()
+        self._dead = False
+        self._recv_thread = threading.Thread(target=self._recv_loop,
+                                             daemon=True,
+                                             name=f"recv-{node}")
+        self._store_thread = threading.Thread(target=self._store_loop,
+                                              daemon=True,
+                                              name=f"store-rpc-{node}")
+        self._recv_thread.start()
+        self._store_thread.start()
+
+    # --------------------------------------------------------------- liveness
+    @property
+    def alive(self) -> bool:
+        return not self._dead and self._proc.is_alive()
+
+    def kill(self) -> None:
+        """Test hook: simulated machine failure (SIGTERM the worker)."""
+        self._proc.terminate()
+
+    # ------------------------------------------------------------------- send
+    def _send(self, msg: Any) -> None:
+        if self._dead:
+            raise WorkerDeath(self.node)
+        with self._send_lock:
+            try:
+                self._conn.send(msg)
+            except (BrokenPipeError, OSError) as e:
+                raise WorkerDeath(self.node) from e
+
+    # ------------------------------------------------------------------ plans
+    def install_plan(self, stage_plans: List[StagePlan]) -> str:
+        """Ship the compiled plan once (the launch_remote seam, realized:
+        the pickled DAG crosses to the worker, which keeps it resident)."""
+        key_id = id(stage_plans)
+        with self._lock:
+            cached = self._plans.get(key_id)
+            if cached is not None and cached[0] is stage_plans:
+                return cached[1]
+        blob = serialize_plans_for_worker(stage_plans, self.store)
+        key = f"plan-{key_id:x}"
+        self._send(("install", key, blob))
+        with self._lock:
+            self._plans[key_id] = (stage_plans, key)
+        return key
+
+    # ------------------------------------------------------------------- jobs
+    def run_stage(self, plan_key: str, stage_idx: int,
+                  items: List[IngestItem], *, lane: str = "main",
+                  epoch: Optional[int] = None,
+                  live_nodes: Optional[Sequence[str]] = None,
+                  injections: Optional[Dict[int, int]] = None,
+                  max_retries: int = 3) -> Future:
+        """Run one stage over ``items`` on the worker; resolves to
+        ``(output_items, stats)``.  Fails with WorkerDeath if the node dies
+        mid-flight (mapped to NodeFailure by the runtime)."""
+        fut: Future = Future()
+        if self._dead:
+            fut.set_exception(WorkerDeath(self.node))
+            return fut
+        payload, lease = encode_items(items)
+        jid = next(self._jid)
+        with self._lock:
+            self._pending[jid] = fut
+            if payload.get("shm"):
+                # registered before the send: a worker dying at any point
+                # after this cannot leak the segment (_mark_dead reclaims)
+                self._inflight_shm[jid] = payload["shm"]
+        ctx = {"epoch": epoch,
+               "live_nodes": list(live_nodes) if live_nodes else None,
+               "injections": dict(injections or {}),
+               "max_retries": max_retries}
+        try:
+            self._send(("run", jid, plan_key, stage_idx, lane, payload, ctx))
+            if lease is not None:
+                lease.detach()   # disown: consumer (or _mark_dead) unlinks
+        except WorkerDeath as e:
+            with self._lock:
+                self._pending.pop(jid, None)
+                self._inflight_shm.pop(jid, None)
+            if lease is not None:
+                lease.release()
+            fut.set_exception(e)
+        return fut
+
+    # -------------------------------------------------------------- receivers
+    def _recv_loop(self) -> None:
+        try:
+            while True:
+                msg = self._conn.recv()
+                kind = msg[0]
+                if kind == "done":
+                    _, jid, payload, stats = msg
+                    with self._lock:
+                        fut = self._pending.pop(jid, None)
+                        self._inflight_shm.pop(jid, None)
+                    if fut is None:
+                        continue
+                    try:
+                        # copy=True: results outlive the hop (retained epoch
+                        # outputs, shuffle buffers) — the segment dies here
+                        items, _ = decode_items(payload, copy=True)
+                        fut.set_result((items, stats))
+                    except BaseException as e:
+                        fut.set_exception(e)
+                elif kind == "fail":
+                    _, jid, exc = msg
+                    with self._lock:
+                        fut = self._pending.pop(jid, None)
+                        self._inflight_shm.pop(jid, None)
+                    if fut is not None:
+                        fut.set_exception(
+                            exc if isinstance(exc, BaseException)
+                            else RuntimeError(str(exc)))
+        except (EOFError, OSError):
+            pass
+        finally:
+            self._mark_dead()
+
+    def _mark_dead(self) -> None:
+        """Pipe EOF == the sentinel: the worker process is gone.  Every
+        pending and future job fails with WorkerDeath, which the runtime's
+        stage barrier converts into the NodeFailure fault path.  Input
+        segments the dead worker never consumed are reclaimed here."""
+        with self._lock:
+            self._dead = True
+            pending, self._pending = list(self._pending.values()), {}
+            orphans, self._inflight_shm = list(self._inflight_shm.values()), {}
+        for name in orphans:
+            try:
+                from multiprocessing import shared_memory
+                seg = shared_memory.SharedMemory(name=name)
+                seg.close()
+                seg.unlink()
+            except (FileNotFoundError, OSError):
+                pass
+        for fut in pending:
+            fut.set_exception(WorkerDeath(self.node))
+
+    def _store_loop(self) -> None:
+        try:
+            while True:
+                msg = self._store_conn.recv()
+                kind = msg[0]
+                try:
+                    if kind == "put":
+                        kw = dict(msg[1])
+                        entry = self.store.register_block_file(
+                            kw.pop("node"), kw.pop("tmp_path"), **kw)
+                        reply = ("ok", asdict(entry))
+                    elif kind == "staging":
+                        reply = ("ok", self.store.staging_epoch_ids())
+                    elif kind == "flush":
+                        self.store.flush_manifest()
+                        reply = ("ok", None)
+                    else:
+                        reply = ("err", f"unknown store RPC {kind!r}")
+                except BaseException as e:
+                    reply = ("err", f"{type(e).__name__}: {e}")
+                self._store_conn.send(reply)
+        except (EOFError, OSError):
+            pass
+
+    # --------------------------------------------------------------- shutdown
+    def shutdown(self) -> None:
+        if not self._dead:
+            try:
+                self._send(("stop",))
+            except WorkerDeath:
+                pass
+        self._proc.join(timeout=5)
+        if self._proc.is_alive():
+            self._proc.terminate()
+            self._proc.join(timeout=5)
+        self._mark_dead()
+        for conn in (self._conn, self._store_conn):
+            try:
+                conn.close()
+            except OSError:
+                pass

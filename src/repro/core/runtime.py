@@ -5,6 +5,9 @@
   to the data").  Nodes here are persistent ``NodeExecutor`` workers over
   per-node directories; the remote-shell seam is ``launch_remote``
   (DESIGN.md §2), invoked once per compiled plan, not once per stage barrier.
+  ``backend="process"`` realizes the seam with one long-lived worker
+  *process* per node (``core/procexec.py``, DESIGN.md §6) — real CPU
+  parallelism for GIL-bound operators; ``backend="thread"`` is the default.
 * **Intra-node parallelism** — parallel-mode operators fan out over a thread
   pool (see operators.IngestOp._parallel_iter).
 * **Work stealing** — when sources are given as a shared list, nodes pull
@@ -36,12 +39,28 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tupl
 from .items import IngestItem
 from .operators import IngestOp, OperatorFailure, PassThroughOp
 from .optimizer import IngestionOptimizer
-from .plan import IngestPlan, StagePlan, route_items
+from .plan import IngestPlan, StagePlan, failed_op_index, route_items
+from .procexec import ProcessNodeExecutor, WorkerDeath
 from .store import DataStore
 
 
 class NodeFailure(RuntimeError):
     """Simulated machine failure during ingestion."""
+
+
+#: legacy static shuffle spill threshold (used when no memory budget is set)
+DEFAULT_SPILL_BYTES = 32 << 20
+#: floor under budget-derived spill thresholds — a tiny budget must not turn
+#: every shuffle round into a blocking DFS round-trip
+MIN_SPILL_BYTES = 1 << 20
+
+
+def derive_spill_bytes(memory_budget_bytes: int, reserved_bytes: int = 0) -> int:
+    """Shuffle spill threshold from a shared memory budget: whatever the
+    ingest queues are expected to hold (``reserved_bytes``) is carved out
+    first, the remainder bounds in-memory shuffle rounds (ROADMAP
+    "spill-aware shuffle sizing")."""
+    return max(MIN_SPILL_BYTES, int(memory_budget_bytes) - int(reserved_bytes))
 
 
 @dataclass
@@ -318,35 +337,64 @@ class ShuffleService:
 
 class RuntimeEngine:
     def __init__(self, store: DataStore, optimizer: Optional[IngestionOptimizer] = None,
-                 max_retries: int = 3, shuffle_spill_bytes: int = 32 << 20,
-                 shuffle_synchronous: bool = False) -> None:
+                 max_retries: int = 3, shuffle_spill_bytes: Optional[int] = None,
+                 shuffle_synchronous: bool = False,
+                 backend: str = "thread",
+                 memory_budget_bytes: Optional[int] = None) -> None:
+        """``backend`` selects the node substrate: ``"thread"`` (default —
+        in-process ``NodeExecutor`` lanes) or ``"process"`` (one long-lived
+        worker process per node, real CPU parallelism; DESIGN.md §6).
+
+        ``memory_budget_bytes`` is the engine's shared memory budget: when
+        set and no explicit ``shuffle_spill_bytes`` is given, the shuffle
+        spill threshold is derived from it (minus the ingest queues' share,
+        for the streaming engine) instead of the static default."""
+        if backend not in ("thread", "process"):
+            raise ValueError(f"unknown backend {backend!r} (thread|process)")
         self.store = store
         self.nodes = list(store.nodes)
         self.optimizer = optimizer or IngestionOptimizer()
         self.max_retries = max_retries
+        self.backend = backend
+        self.memory_budget_bytes = memory_budget_bytes
+        self._explicit_spill = shuffle_spill_bytes is not None
+        if shuffle_spill_bytes is None:
+            shuffle_spill_bytes = (derive_spill_bytes(memory_budget_bytes)
+                                   if memory_budget_bytes is not None
+                                   else DEFAULT_SPILL_BYTES)
         self.shuffle = ShuffleService(store, spill_bytes=shuffle_spill_bytes,
                                       synchronous=shuffle_synchronous)
-        self._executors: Dict[str, NodeExecutor] = {}
+        self._executors: Dict[str, Any] = {}
         self._exec_lock = threading.Lock()
 
     # ------------------------------------------------------------------ remote
     def launch_remote(self, node: str, stage_plans: List[StagePlan]) -> List[StagePlan]:
         """The remote-shell seam: in a real deployment this SSHes the optimized
-        plan to ``node`` (paper Sec. VI-A).  Here it clones operator instances
-        so every node runs its own state, exactly as separate JVMs would."""
-        return [StagePlan(sp.name, [op.clone() for op in sp.ops], list(sp.upstream),
-                          dict(sp.predicates), [list(b) for b in sp.pipeline_blocks],
-                          commit_side=sp.commit_side)
-                for sp in stage_plans]
+        plan to ``node`` (paper Sec. VI-A).  The thread backend clones operator
+        instances so every node runs its own state, exactly as separate JVMs
+        would; the process backend ships the same plan by pickle to the node's
+        worker process (``ProcessNodeExecutor.install_plan``)."""
+        return [sp.clone() for sp in stage_plans]
 
-    def executor(self, node: str) -> NodeExecutor:
+    def executor(self, node: str) -> Any:
         """The node's persistent executor (created on first use, kept for the
-        engine's lifetime — stage barriers stop re-creating thread pools)."""
+        engine's lifetime — stage barriers stop re-creating thread pools).
+        Thread backend: ``NodeExecutor``; process backend:
+        ``ProcessNodeExecutor`` (a live worker process)."""
         with self._exec_lock:
             ex = self._executors.get(node)
             if ex is None:
-                ex = self._executors[node] = NodeExecutor(node)
+                ex = (ProcessNodeExecutor(node, self.store)
+                      if self.backend == "process" else NodeExecutor(node))
+                self._executors[node] = ex
             return ex
+
+    def prewarm_executors(self) -> None:
+        """Spawn every node's executor up front.  The process backend forks
+        here — before feeder/committer threads exist — so worker processes
+        never inherit mid-operation thread state."""
+        for n in self.nodes:
+            self.executor(n)
 
     def close(self) -> None:
         """Shut down persistent node executors and the shuffle writer."""
@@ -370,6 +418,8 @@ class RuntimeEngine:
         t0 = time.time()
         faults = faults or FaultInjection()
         report = RunReport()
+        if self.backend == "process":
+            self.prewarm_executors()   # fork before any run-scoped threads
 
         stage_plans = plan.compile()
         if optimize:
@@ -455,9 +505,29 @@ class RuntimeEngine:
         """
         if on_node_death == "reassign" and (start_stage != 0 or end_stage is not None):
             raise ValueError("shard reassignment requires the full stage DAG")
-        # ---- plan is resident on every node executor (installed once)
-        node_plans = {n: self.executor(n).install_plan(stage_plans, self.launch_remote)
-                      for n in self.nodes}
+        use_proc = self.backend == "process"
+        # ---- plan is resident on every node executor (installed once);
+        # thread backend: in-process clone; process backend: pickled ship to
+        # the worker.  A worker already dead at install time takes the same
+        # fault path as one dying mid-stage.
+        node_plans: Dict[str, List[StagePlan]] = {}
+        plan_keys: Dict[str, str] = {}
+        install_failed: List[str] = []
+        exec_nodes = (list(node_set) if node_set is not None
+                      else [n for n in self.nodes if alive.get(n)])
+        for n in exec_nodes:
+            try:
+                if use_proc:
+                    plan_keys[n] = self.executor(n).install_plan(stage_plans)
+                else:
+                    node_plans[n] = self.executor(n).install_plan(
+                        stage_plans, self.launch_remote)
+            except WorkerDeath:
+                install_failed.append(n)
+        for n in install_failed:
+            self._mark_dead(n, alive, report)
+        if install_failed and on_node_death == "raise":
+            raise NodeFailure(install_failed[0])
         if outputs is None:
             outputs = {n: defaultdict(list) for n in self.nodes}
         stop = len(stage_plans) if end_stage is None else end_stage
@@ -488,16 +558,42 @@ class RuntimeEngine:
             live_nodes = (list(node_set) if node_set is not None
                           else [n for n in self.nodes if alive[n]])
             futs = {}
-            for n in live_nodes:
-                nsp = node_plans[n][si]
-                futs[n] = self.executor(n).submit(
-                    run_stage_on, n, nsp, stage_inputs(n, nsp), lane=lane)
+            if use_proc:
+                # injected op failures are assigned to the first live node
+                # (the thread backend's shared-dict race picks an arbitrary
+                # winner; the process backend makes it deterministic)
+                injections: Dict[int, int] = {}
+                for (sname, oi), cnt in list(faults.op_failures.items()):
+                    if sname == sp.name and cnt > 0:
+                        injections[oi] = cnt
+                        faults.op_failures[(sname, oi)] = 0
+                for ni, n in enumerate(live_nodes):
+                    futs[n] = self.executor(n).run_stage(
+                        plan_keys[n], si, stage_inputs(n, sp), lane=lane,
+                        epoch=epoch, live_nodes=live_nodes,
+                        injections=injections if ni == 0 else None,
+                        max_retries=self.max_retries)
+            else:
+                for n in live_nodes:
+                    nsp = node_plans[n][si]
+                    futs[n] = self.executor(n).submit(
+                        run_stage_on, n, nsp, stage_inputs(n, nsp), lane=lane)
             failed: List[str] = []
             for n, fut in futs.items():  # drain ALL jobs before acting on death
                 try:
-                    outputs[n][sp.name] = fut.result()
-                except NodeFailure:
+                    res = fut.result()
+                except (NodeFailure, WorkerDeath):
                     failed.append(n)
+                    continue
+                if use_proc:
+                    outputs[n][sp.name], stats = res
+                    with rlock:
+                        for k, v in stats["op_failures"].items():
+                            report.op_failures[k] = max(
+                                report.op_failures.get(k, 0), v)
+                        report.dummy_substitutions.extend(stats["dummy"])
+                else:
+                    outputs[n][sp.name] = res
             for n in failed:
                 self._mark_dead(n, alive, report)
             if failed and on_node_death == "raise":
@@ -526,9 +622,14 @@ class RuntimeEngine:
             # batch policy reassigns here — under "raise" the epoch replays
             # wholesale, and a death observed from a *concurrent* epoch's
             # thread must not trigger a partial replay inside this one.
-            dead = ([n for n in self.nodes if not alive[n] and node_sources[n]]
-                    if on_node_death == "reassign" else [])
-            for n in dead:
+            # Recomputed until quiescent: a *target* worker dying mid-replay
+            # (process backend) is marked dead, its shards — including the
+            # ones just moved onto it — reassign to the next survivor.
+            while on_node_death == "reassign":
+                dead = [n for n in self.nodes if not alive[n] and node_sources[n]]
+                if not dead:
+                    break
+                n = dead[0]
                 target = self._next_live(n, alive)
                 if target is None:
                     raise RuntimeError("all nodes failed")
@@ -538,8 +639,9 @@ class RuntimeEngine:
                 report.reassigned_shards += len(shards)
                 # re-run all stages so far for the moved shards on the target
                 replay_out: Dict[str, List[IngestItem]] = defaultdict(list)
+                target_died = False
                 for sj in range(si + 1):
-                    rp = node_plans[target][sj]
+                    rp = stage_plans[sj] if use_proc else node_plans[target][sj]
                     if not rp.upstream:
                         base = shards
                     else:
@@ -547,11 +649,30 @@ class RuntimeEngine:
                         for up in rp.upstream:
                             base = base + replay_out[up]
                     routed = route_items(base, rp.predicates)
-                    replay_out[rp.name] = self._run_stage(
-                        target, self.launch_remote(target, [rp])[0], routed, faults,
-                        failure_counts, report, rlock)
-                for k, v in replay_out.items():
-                    outputs[target][k].extend(v)
+                    if use_proc:
+                        # replay runs on the target's worker (its resident
+                        # plan state absorbs the moved shards)
+                        try:
+                            replay_out[rp.name], rstats = self.executor(
+                                target).run_stage(
+                                    plan_keys[target], sj, routed, lane=lane,
+                                    epoch=epoch, live_nodes=live_nodes,
+                                    max_retries=self.max_retries).result()
+                        except (NodeFailure, WorkerDeath):
+                            # the shards sit in node_sources[target]; the
+                            # next loop pass moves them to a survivor
+                            self._mark_dead(target, alive, report)
+                            target_died = True
+                            break
+                        with rlock:
+                            report.dummy_substitutions.extend(rstats["dummy"])
+                    else:
+                        replay_out[rp.name] = self._run_stage(
+                            target, self.launch_remote(target, [rp])[0], routed,
+                            faults, failure_counts, report, rlock)
+                if not target_died:
+                    for k, v in replay_out.items():
+                        outputs[target][k].extend(v)
 
             total = sum(len(outputs[n][sp.name]) for n in self.nodes if alive[n])
             report.stage_items[sp.name] = total
@@ -603,14 +724,8 @@ class RuntimeEngine:
                     continue
         return current
 
-    @staticmethod
-    def _failed_op_index(sp: StagePlan, block: List[int], exc: Exception) -> int:
-        """Recover which op in a multi-op block failed from the message."""
-        msg = str(exc)
-        for oi in block:
-            if f"[{oi}]" in msg or sp.ops[oi].name in msg:
-                return oi
-        return block[0]
+    # shared with the process backend's worker (plan.failed_op_index)
+    _failed_op_index = staticmethod(failed_op_index)
 
     def _next_live(self, node: str, alive: Dict[str, bool]) -> Optional[str]:
         """Round-robin successor in the slaves file order (paper Sec. VI-C1)."""

@@ -77,13 +77,34 @@ class EpochEntry:
     committed_at: float = 0.0  # wall-clock commit timestamp
 
 
+def prepare_block_payload(data: Any, compress: bool,
+                          compress_level: int) -> Tuple[bytes, str, int]:
+    """Item payload -> (stored bytes, layout id, logical size).  Shared by
+    ``DataStore.put_block`` and the process backend's worker-side store
+    client, so both backends accept exactly the same payload types and
+    apply at-rest compression identically."""
+    if isinstance(data, SerializedBlock):
+        payload, layout = data.tobytes(), data.layout
+    elif isinstance(data, np.ndarray):
+        payload, layout = data.tobytes(), "raw"
+    elif isinstance(data, (bytes, bytearray)):
+        payload, layout = bytes(data), "raw"
+    else:
+        raise TypeError(f"cannot store payload of type {type(data)}")
+    raw_nbytes = len(payload)
+    if compress:   # at-rest compression: transparent to readers
+        payload = zlib.compress(payload, compress_level)
+    return payload, layout, raw_nbytes
+
+
 class DataStore:
     #: how long a commit waits on out-of-order predecessors before giving up
     COMMIT_SEQUENCE_TIMEOUT_S = 60.0
 
     def __init__(self, root: str, nodes: Sequence[str] = ("node0",),
                  durable: bool = False, compress: bool = False,
-                 compress_level: int = 3, journal_commits: bool = True) -> None:
+                 compress_level: int = 3, journal_commits: bool = True,
+                 journal_compact_lines: int = 512) -> None:
         """``durable=True`` fsyncs staged block files and the epoch-commit
         journal line — a committed epoch survives power loss, not just
         process death.  ``compress=True`` zlib-compresses block payloads at
@@ -92,13 +113,19 @@ class DataStore:
         manifest snapshot instead of appending a journal line — a single
         manifest file, at O(store) cost per commit (the pre-ISSUE-2
         behavior, kept for ops that want one file and as the pipelining
-        benchmark's baseline)."""
+        benchmark's baseline).  ``journal_compact_lines`` bounds the epoch
+        journal: once it exceeds that many commit lines, the next commit
+        auto-folds it into the base snapshot (``flush_manifest``), so a
+        long-running stream never replays an unbounded journal on open
+        (0/None disables auto-compaction)."""
         self.root = root
         self.nodes = list(nodes)
         self.durable = durable
         self.compress = compress
         self.compress_level = compress_level
         self.journal_commits = journal_commits
+        self.journal_compact_lines = journal_compact_lines
+        self._journal_lines = 0      # commit lines currently in the journal
         self._lock = threading.Lock()
         self._commit_cv = threading.Condition(self._lock)
         self.entries: Dict[str, BlockEntry] = {}
@@ -158,6 +185,7 @@ class DataStore:
                     rec = json.loads(line)
                 except json.JSONDecodeError:
                     break   # torn tail: everything after it never committed
+                self._journal_lines += 1
                 entry = EpochEntry(**rec["epoch"])
                 if entry.epoch in self.epochs:
                     continue
@@ -189,6 +217,7 @@ class DataStore:
             # here only leaves duplicate records, which replay skips
             if os.path.exists(self.epoch_journal_path):
                 os.remove(self.epoch_journal_path)
+            self._journal_lines = 0
 
     # ------------------------------------------------------------------ epochs
     def begin_epoch(self, epoch: int) -> None:
@@ -269,11 +298,17 @@ class DataStore:
                     f.flush()
                     if self.durable:
                         os.fsync(f.fileno())
+                self._journal_lines += 1
             self.epochs[epoch] = entry
             self._staging.discard(epoch)
             self._commit_cv.notify_all()
         if not self.journal_commits:
             self.flush_manifest()   # snapshot commit: temp-write + rename
+        elif (self.journal_compact_lines
+              and self._journal_lines > self.journal_compact_lines):
+            # auto-compaction: fold the oversized journal into the snapshot
+            # so a long-running stream never replays an unbounded journal
+            self.flush_manifest()
         return entry
 
     def abort_epoch(self, epoch: int) -> int:
@@ -325,20 +360,8 @@ class DataStore:
     def put_block(self, item: IngestItem, node: str, *, logical_id: str = "",
                   replica_index: int = 0, stripe_id: str = "", stripe_pos: int = -1,
                   is_parity: bool = False) -> BlockEntry:
-        data = item.data
-        if isinstance(data, SerializedBlock):
-            payload, layout = data.tobytes(), data.layout
-        elif isinstance(data, np.ndarray):
-            payload, layout = data.tobytes(), "raw"
-        elif isinstance(data, (bytes, bytearray)):
-            payload, layout = bytes(data), "raw"
-        else:
-            raise TypeError(f"cannot store payload of type {type(data)}")
-
-        raw_nbytes = len(payload)
-        if self.compress:   # at-rest compression: transparent to readers
-            payload = zlib.compress(payload, self.compress_level)
-
+        payload, layout, raw_nbytes = prepare_block_payload(
+            item.data, self.compress, self.compress_level)
         base = item.lineage_name()
         with self._lock:
             block_id = base
@@ -368,6 +391,47 @@ class DataStore:
             if self.durable:   # staged data must survive a crash-then-commit
                 f.flush()
                 os.fsync(f.fileno())
+        return entry
+
+    def register_block_file(self, node: str, tmp_path: str, *, base: str,
+                            checksum: str, nbytes: int, raw_nbytes: int,
+                            compressed: bool, labels: List[List[Any]],
+                            layout: str, logical_id: str, replica_index: int,
+                            stripe_id: str, stripe_pos: int, is_parity: bool,
+                            meta: Dict[str, Any], epoch: int) -> BlockEntry:
+        """Adopt a block file a *worker process* already wrote (DESIGN.md §6).
+
+        The process backend keeps the heavy work — serialization, compression,
+        the disk write — in the worker, which writes to a ``.tmp`` name the
+        orphan GC never scans; only this metadata registration is routed
+        through the coordinator, which owns the manifest: it allocates the
+        unique block id under the store lock, records the entry (attributed
+        to the worker's staging ``epoch``), and renames the temp file into
+        its final lineage-encoded path.  Entry-before-rename preserves the
+        ``gc_orphans`` invariant: every visible ``.blk`` file has an entry.
+        """
+        with self._lock:
+            if epoch >= 0 and epoch in self.epochs:
+                raise ValueError(f"epoch {epoch} already committed")
+            block_id = base
+            k = 0
+            while block_id in self.entries:
+                k += 1
+                block_id = f"{base}_{k}"
+            rel = os.path.join("nodes", node, block_id + ".blk")
+            entry = BlockEntry(
+                block_id=block_id, node=node, path=rel, checksum=checksum,
+                nbytes=nbytes, labels=labels, layout=layout,
+                logical_id=logical_id or base, replica_index=replica_index,
+                stripe_id=stripe_id, stripe_pos=stripe_pos,
+                is_parity=is_parity, epoch=epoch, compressed=compressed,
+                raw_nbytes=raw_nbytes, meta=dict(meta))
+            self.entries[block_id] = entry
+            if epoch >= 0:
+                self._epoch_blocks.setdefault(epoch, []).append(block_id)
+        full = os.path.join(self.root, rel)
+        os.makedirs(os.path.dirname(full), exist_ok=True)
+        os.replace(tmp_path, full)
         return entry
 
     @staticmethod

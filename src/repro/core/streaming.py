@@ -49,8 +49,37 @@ from typing import (Any, Dict, Iterable, Iterator, List, Optional, Sequence,
 from .items import IngestItem
 from .optimizer import IngestionOptimizer, split_pipeline_segments
 from .plan import IngestPlan, StagePlan
-from .runtime import FaultInjection, NodeFailure, RunReport, RuntimeEngine
+from .runtime import (FaultInjection, NodeFailure, RunReport, RuntimeEngine,
+                      derive_spill_bytes)
 from .store import DataStore
+
+
+@dataclass
+class EpochPolicy:
+    """When to cut an epoch, and how big the ingest queues are.
+
+    An epoch closes at the *first* threshold hit: ``items`` source items,
+    ``bytes`` of queued payload (the first slice of adaptive epoch sizing —
+    a burst of fat items no longer inflates the staged epoch), or ``seconds``
+    of wall clock since the epoch's first item.  ``capacity`` bounds each
+    node's ingest queue (the backpressure seam).  The declarative surface is
+    ``STREAM WITH EPOCHS(items=…, seconds=…, bytes=…, capacity=…)``.
+    """
+
+    items: int = 64
+    seconds: Optional[float] = None
+    bytes: Optional[int] = None
+    capacity: int = 64
+
+    @classmethod
+    def from_stream_config(cls, cfg: Optional[Dict[str, Any]],
+                           default: "EpochPolicy") -> "EpochPolicy":
+        cfg = cfg or {}
+        return cls(items=int(cfg.get("items", default.items)),
+                   seconds=cfg.get("seconds", default.seconds),
+                   bytes=(int(cfg["bytes"]) if cfg.get("bytes") is not None
+                          else default.bytes),
+                   capacity=int(cfg.get("capacity", default.capacity)))
 
 
 @dataclass
@@ -129,6 +158,10 @@ class IngestQueues:
         self._stop = threading.Event()
         self.exhausted = threading.Event()
         self.produced = 0   # items pulled from the source / pushed by put()
+        self.items_routed = 0       # successfully placed items …
+        self.bytes_routed = 0       # … and their payload bytes (for the
+        # spill-aware shuffle budget: avg_item_bytes() estimates how much
+        # memory the queues themselves can pin at full capacity)
         self.unrouted: List[IngestItem] = []   # in-flight items never placed
         self._thread: Optional[threading.Thread] = None
         if source is not None:
@@ -158,6 +191,8 @@ class IngestQueues:
         while target is not None and not self._stop.is_set():
             try:
                 self.queues[target].put(item, timeout=0.05)
+                self.items_routed += 1
+                self.bytes_routed += item.nbytes()
                 return True
             except queue.Full:
                 # blocked: backpressure — re-check liveness so items never
@@ -190,22 +225,37 @@ class IngestQueues:
         self.exhausted.set()
 
     # ------------------------------------------------------------------- drain
-    def cut_epoch(self, max_items: int, tick_s: Optional[float] = None
+    def avg_item_bytes(self, default: int = 64 << 10) -> int:
+        """Observed mean payload size of routed items (``default`` until the
+        first item lands) — the ingest queues' share of a memory budget is
+        ``capacity * len(nodes) * avg_item_bytes()``."""
+        if not self.items_routed:
+            return default
+        return max(1, self.bytes_routed // self.items_routed)
+
+    def cut_epoch(self, max_items: int, tick_s: Optional[float] = None,
+                  max_bytes: Optional[int] = None
                   ) -> Dict[str, List[IngestItem]]:
-        """Drain queues into one epoch: up to ``max_items`` total, or whatever
-        arrived when ``tick_s`` elapses (needs >= 1 item — an empty tick waits
-        for data or end-of-stream)."""
+        """Drain queues into one epoch: up to ``max_items`` total (and/or
+        ``max_bytes`` of payload — the byte cut closes the epoch at the first
+        item that reaches the threshold), or whatever arrived when ``tick_s``
+        elapses (needs >= 1 item — an empty tick waits for data or
+        end-of-stream)."""
         batch: Dict[str, List[IngestItem]] = {n: [] for n in self.nodes}
         count = 0
+        nbytes = 0
         deadline = None
-        while count < max_items:
+        while count < max_items and (max_bytes is None or nbytes < max_bytes):
             got = False
             for n in self.nodes:
-                if count >= max_items:
+                if count >= max_items or (max_bytes is not None
+                                          and nbytes >= max_bytes):
                     break
                 try:
-                    batch[n].append(self.queues[n].get_nowait())
+                    it = self.queues[n].get_nowait()
+                    batch[n].append(it)
                     count += 1
+                    nbytes += it.nbytes()
                     got = True
                 except queue.Empty:
                     continue
@@ -424,27 +474,46 @@ class StreamingRuntimeEngine(RuntimeEngine):
     def __init__(self, store: DataStore, optimizer: Optional[IngestionOptimizer] = None,
                  max_retries: int = 3, epoch_items: int = 64,
                  epoch_seconds: Optional[float] = None,
+                 epoch_bytes: Optional[int] = None,
                  queue_capacity: int = 64,
                  pipelined: bool = True,
                  max_inflight_epochs: int = 2,
-                 shuffle_spill_bytes: int = 32 << 20,
-                 shuffle_synchronous: bool = False) -> None:
+                 shuffle_spill_bytes: Optional[int] = None,
+                 shuffle_synchronous: bool = False,
+                 backend: str = "thread",
+                 memory_budget_bytes: Optional[int] = None) -> None:
         super().__init__(store, optimizer, max_retries,
                          shuffle_spill_bytes=shuffle_spill_bytes,
-                         shuffle_synchronous=shuffle_synchronous)
+                         shuffle_synchronous=shuffle_synchronous,
+                         backend=backend,
+                         memory_budget_bytes=memory_budget_bytes)
         self.epoch_items = epoch_items
         self.epoch_seconds = epoch_seconds
+        self.epoch_bytes = epoch_bytes
         self.queue_capacity = queue_capacity
         self.pipelined = pipelined
         self.max_inflight_epochs = max_inflight_epochs
         self.alive = {n: True for n in self.nodes}
 
     # ----------------------------------------------------------------- config
-    def _config(self, plan: IngestPlan) -> Tuple[int, Optional[float], int]:
-        cfg = getattr(plan, "stream_config", None) or {}
-        return (int(cfg.get("items", self.epoch_items)),
-                cfg.get("seconds", self.epoch_seconds),
-                int(cfg.get("capacity", self.queue_capacity)))
+    def _config(self, plan: IngestPlan) -> EpochPolicy:
+        default = EpochPolicy(items=self.epoch_items,
+                              seconds=self.epoch_seconds,
+                              bytes=self.epoch_bytes,
+                              capacity=self.queue_capacity)
+        return EpochPolicy.from_stream_config(
+            getattr(plan, "stream_config", None), default)
+
+    def _update_spill_budget(self, queues: IngestQueues) -> None:
+        """Spill-aware shuffle sizing: re-derive ``spill_bytes`` from the
+        shared memory budget minus what the ingest queues can pin at full
+        capacity (observed mean item size) — re-evaluated at every epoch cut
+        so the split adapts as the stream's item sizes drift."""
+        if self.memory_budget_bytes is None or self._explicit_spill:
+            return
+        reserved = queues.capacity * len(self.nodes) * queues.avg_item_bytes()
+        self.shuffle.spill_bytes = derive_spill_bytes(
+            self.memory_budget_bytes, reserved)
 
     # -------------------------------------------------------------------- run
     def run_stream(self, plan: IngestPlan,
@@ -461,6 +530,9 @@ class StreamingRuntimeEngine(RuntimeEngine):
         t0 = time.time()
         faults = faults or StreamFaultInjection()
         sreport = StreamReport()
+        if self.backend == "process":
+            # fork the node workers before the feeder/committer threads exist
+            self.prewarm_executors()
 
         # compile + optimize ONCE; every epoch reuses the same stage plans —
         # and the node executors keep their clone for the whole stream
@@ -476,18 +548,20 @@ class StreamingRuntimeEngine(RuntimeEngine):
             (self.store.mark_node_live if self.alive[n]
              else self.store.mark_node_dead)(n)
 
-        epoch_items, epoch_seconds, capacity = self._config(plan)
+        policy = self._config(plan)
         if queues is None:
-            queues = IngestQueues(source, self.nodes, capacity)
+            queues = IngestQueues(source, self.nodes, policy.capacity)
         eid = self.store.next_epoch_id()
         try:
             if self.pipelined:
                 self._run_pipelined(stage_plans, split, queues, faults, sreport,
-                                    epoch_items, epoch_seconds, max_epochs, eid)
+                                    policy, max_epochs, eid)
             else:
                 epoch_index = 0
                 while max_epochs is None or epoch_index < max_epochs:
-                    batch = queues.cut_epoch(epoch_items, epoch_seconds)
+                    self._update_spill_budget(queues)
+                    batch = queues.cut_epoch(policy.items, policy.seconds,
+                                             policy.bytes)
                     if not any(len(v) for v in batch.values()):
                         break   # end of stream
                     ereport = self._run_epoch(eid, epoch_index, batch,
@@ -506,8 +580,7 @@ class StreamingRuntimeEngine(RuntimeEngine):
     # -------------------------------------------------------------- pipelined
     def _run_pipelined(self, stage_plans: List[StagePlan], split: int,
                        queues: IngestQueues, faults: StreamFaultInjection,
-                       sreport: StreamReport, epoch_items: int,
-                       epoch_seconds: Optional[float],
+                       sreport: StreamReport, policy: EpochPolicy,
                        max_epochs: Optional[int], eid: int) -> None:
         """Overlapped epochs: this thread cuts epoch N+1 and runs its ingest
         segment (lane "ingest") while the committer thread runs epoch N's
@@ -518,7 +591,9 @@ class StreamingRuntimeEngine(RuntimeEngine):
         try:
             while max_epochs is None or epoch_index < max_epochs:
                 committer.raise_if_failed()
-                batch = queues.cut_epoch(epoch_items, epoch_seconds)
+                self._update_spill_budget(queues)
+                batch = queues.cut_epoch(policy.items, policy.seconds,
+                                         policy.bytes)
                 if not any(len(v) for v in batch.values()):
                     break   # end of stream
                 t_cut = time.time()
@@ -684,9 +759,8 @@ def stream_ingest_multi(plans: Union[Sequence[IngestPlan], Any],
     joints: List[IngestQueues] = []
     for plan, st in zip(plan_list, store_list):
         eng = StreamingRuntimeEngine(st, **engine_kw)
-        _, _, capacity = eng._config(plan)
         engines.append(eng)
-        joints.append(IngestQueues.manual(eng.nodes, capacity))
+        joints.append(IngestQueues.manual(eng.nodes, eng._config(plan).capacity))
     distributor = FeedDistributor(source, joints)
 
     results: Dict[str, StreamReport] = {}

@@ -1,0 +1,215 @@
+"""ISSUE 3 satellites: byte-based epoch cuts (EpochPolicy), spill-aware
+shuffle sizing from a memory budget, manifest-journal auto-compaction, the
+language round-trip (STREAM WITH EPOCHS parse -> unparse -> parse, FEED
+error paths), and the nightly perf gate."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (DataStore, EpochPolicy, IngestPlan, IngestQueues,
+                        StreamingRuntimeEngine, create_stage, derive_spill_bytes,
+                        format_, parse_feed_script, parse_ingestion_script,
+                        select, unparse_stream, with_epochs)
+from repro.core import store as store_stmt
+from repro.core.items import Granularity, IngestItem
+from repro.core.language import LanguageError
+from repro.core.runtime import MIN_SPILL_BYTES
+from repro.data.generators import gen_lineitem
+
+
+def columnar_plan(ds, **epoch_kw):
+    p = IngestPlan("pol")
+    s1 = select(p)
+    s2 = format_(p, s1, chunk={"target_rows": 256}, serialize="columnar")
+    s3 = store_stmt(p, s2, locate="roundrobin",
+                    locate_args={"num_locations": len(ds.nodes)}, upload=ds)
+    create_stage(p, using=[s1, s2, s3], name="main")
+    if epoch_kw:
+        with_epochs(p, **epoch_kw)
+    return p
+
+
+def shard_source(n_shards, rows=100):
+    for i in range(n_shards):
+        yield IngestItem(gen_lineitem(rows, seed=i))
+
+
+# ---------------------------------------------------------------------------
+class TestEpochPolicy:
+    def test_bytes_threshold_cuts_epochs(self, store):
+        """With a byte cut far below the item budget, epochs close early —
+        more, smaller epochs than the item policy alone would give."""
+        rows = 200
+        item_bytes = IngestItem(gen_lineitem(rows, seed=0)).nbytes()
+        eng = StreamingRuntimeEngine(store, epoch_items=100,
+                                     epoch_bytes=2 * item_bytes,
+                                     queue_capacity=16)
+        rep = eng.run_stream(columnar_plan(store), shard_source(8, rows=rows))
+        eng.close()
+        assert len(rep.epochs) >= 4          # ~2 items per epoch, 8 items
+        assert rep.total_items == 8
+
+    def test_policy_resolves_plan_config_over_engine_defaults(self, store):
+        eng = StreamingRuntimeEngine(store, epoch_items=7)
+        pol = eng._config(columnar_plan(store, items=3, bytes=1 << 20,
+                                        capacity=9))
+        assert pol == EpochPolicy(items=3, seconds=None, bytes=1 << 20,
+                                  capacity=9)
+        # no plan config: engine defaults
+        assert eng._config(columnar_plan(store)).items == 7
+        eng.close()
+
+    def test_cut_epoch_by_bytes_direct(self):
+        items = [IngestItem({"x": np.zeros(1000, dtype=np.int64)})
+                 for _ in range(6)]
+        q = IngestQueues(iter(items), ["n0"], capacity=16)
+        q.exhausted.wait(timeout=5)
+        batch = q.cut_epoch(100, max_bytes=2 * 8000)
+        assert sum(len(v) for v in batch.values()) == 2
+        q.stop()
+
+    def test_stream_with_epochs_bytes_knob(self):
+        plan = parse_ingestion_script(
+            "SELECT * FROM input; STREAM WITH EPOCHS(items=16, bytes=4mb);")
+        assert plan.stream_config == {"items": 16, "bytes": 4 << 20}
+
+
+# ---------------------------------------------------------------------------
+class TestLanguageRoundTrip:
+    def test_stream_parse_unparse_parse_stable(self):
+        script = "SELECT * FROM input; STREAM WITH EPOCHS(items=128, seconds=0.5, bytes=1048576, capacity=64);"
+        p1 = parse_ingestion_script(script)
+        text = unparse_stream(p1)
+        p2 = parse_ingestion_script("SELECT * FROM input; " + text)
+        assert p2.stream_config == p1.stream_config
+        assert unparse_stream(p2) == text
+
+    def test_unparse_without_stream_config_raises(self):
+        with pytest.raises(LanguageError, match="no stream config"):
+            unparse_stream(IngestPlan("bare"))
+
+    def test_feed_unknown_plan_rejected(self):
+        p = IngestPlan("known")
+        with pytest.raises(LanguageError, match="missing"):
+            parse_feed_script("FEED input INTO missing;", env={"known": p})
+
+    def test_feed_empty_target_list_rejected(self):
+        for script in ("FEED input INTO ;", "FEED input;", "FEED input INTO ,,;"):
+            with pytest.raises(LanguageError):
+                parse_feed_script(script, env={})
+
+    def test_script_without_feed_rejected(self):
+        with pytest.raises(LanguageError, match="no FEED"):
+            parse_feed_script("SELECT * FROM input;", env={})
+
+
+# ---------------------------------------------------------------------------
+class TestSpillAwareShuffleSizing:
+    def test_derive_spill_bytes_math(self):
+        assert derive_spill_bytes(64 << 20, 16 << 20) == 48 << 20
+        # floor: a tiny budget never forces every round to the DFS
+        assert derive_spill_bytes(1 << 20, 10 << 20) == MIN_SPILL_BYTES
+
+    def test_engine_derives_spill_from_budget(self, store):
+        eng = StreamingRuntimeEngine(store, memory_budget_bytes=64 << 20)
+        assert eng.shuffle.spill_bytes == derive_spill_bytes(64 << 20)
+        eng.close()
+
+    def test_explicit_spill_bytes_wins_over_budget(self, store):
+        eng = StreamingRuntimeEngine(store, memory_budget_bytes=64 << 20,
+                                     shuffle_spill_bytes=123456)
+        assert eng.shuffle.spill_bytes == 123456
+        q = IngestQueues.manual(store.nodes, capacity=4)
+        eng._update_spill_budget(q)
+        assert eng.shuffle.spill_bytes == 123456   # still pinned
+        eng.close()
+
+    def test_budget_adapts_to_observed_item_bytes(self, store):
+        eng = StreamingRuntimeEngine(store, memory_budget_bytes=64 << 20,
+                                     queue_capacity=4)
+        q = IngestQueues.manual(store.nodes, capacity=4)
+        big = IngestItem({"x": np.zeros(1 << 18, dtype=np.int64)})  # 2 MiB
+        q.put(big)
+        eng._update_spill_budget(q)
+        reserved = 4 * len(store.nodes) * q.avg_item_bytes()
+        assert eng.shuffle.spill_bytes == derive_spill_bytes(64 << 20, reserved)
+        assert eng.shuffle.spill_bytes < derive_spill_bytes(64 << 20)
+        q.stop()
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+class TestJournalAutoCompaction:
+    def _commit(self, ds, epoch):
+        ds.begin_epoch(epoch)
+        ds.put_block(IngestItem(np.arange(8), Granularity.BLOCK),
+                     ds.nodes[0])
+        ds.commit_epoch(epoch)
+
+    def test_journal_folds_into_snapshot_past_threshold(self, tmp_path):
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0"],
+                       journal_compact_lines=3)
+        for e in range(6):
+            self._commit(ds, e)
+        # after compaction the journal holds at most the threshold's worth
+        lines = 0
+        if os.path.exists(ds.epoch_journal_path):
+            with open(ds.epoch_journal_path) as f:
+                lines = len(f.readlines())
+        assert lines <= 3
+        # a fresh open replays snapshot + short journal: nothing lost
+        revived = DataStore(ds.root, nodes=["n0"], journal_compact_lines=3)
+        assert revived.committed_epoch_ids() == list(range(6))
+
+    def test_compaction_disabled_with_zero(self, tmp_path):
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0"],
+                       journal_compact_lines=0)
+        for e in range(5):
+            self._commit(ds, e)
+        with open(ds.epoch_journal_path) as f:
+            assert len(f.readlines()) == 5   # untouched journal
+
+
+# ---------------------------------------------------------------------------
+class TestPerfGate:
+    def _write(self, path, entries):
+        with open(path, "w") as f:
+            json.dump(entries, f)
+
+    def test_missing_and_short_history_skip(self, tmp_path):
+        from benchmarks.perf_gate import check
+        code, msg = check(str(tmp_path / "nope.json"))
+        assert code == 0 and "skip" in msg
+        p = str(tmp_path / "one.json")
+        self._write(p, [{"pipelined_rows_per_s": 1000.0}])
+        code, msg = check(p)
+        assert code == 0 and "nothing to compare" in msg
+
+    def test_regression_fails(self, tmp_path):
+        from benchmarks.perf_gate import check
+        p = str(tmp_path / "t.json")
+        self._write(p, [{"pipelined_rows_per_s": 1000.0},
+                        {"pipelined_rows_per_s": 700.0}])
+        code, msg = check(p, threshold=0.25)
+        assert code == 1 and "REGRESSION" in msg
+
+    def test_within_budget_and_improvement_pass(self, tmp_path):
+        from benchmarks.perf_gate import check
+        p = str(tmp_path / "t.json")
+        self._write(p, [{"pipelined_rows_per_s": 1000.0},
+                        {"pipelined_rows_per_s": 800.0}])
+        assert check(p, threshold=0.25)[0] == 0
+        self._write(p, [{"pipelined_rows_per_s": 1000.0},
+                        {"pipelined_rows_per_s": 1400.0}])
+        assert check(p, threshold=0.25)[0] == 0
+
+    def test_unreadable_trajectory_skips(self, tmp_path):
+        from repro.core import DataStore  # noqa: F401 (import side effects none)
+        from benchmarks.perf_gate import check
+        p = str(tmp_path / "bad.json")
+        with open(p, "w") as f:
+            f.write("{not json")
+        code, msg = check(p)
+        assert code == 0 and "skip" in msg
