@@ -42,6 +42,11 @@ def check(path: str, metric: str = DEFAULT_METRIC,
         return 0, f"perf gate: unreadable trajectory ({e}) — skipping"
     entries = [h for h in history
                if isinstance(h, dict) and h.get(metric)]
+    if entries and entries[-1].get("scale") is not None:
+        # rows/s is scale-dependent: only entries at the fresh run's scale
+        # are comparable baselines (manual runs at other scales don't gate)
+        scale = entries[-1]["scale"]
+        entries = [h for h in entries if h.get("scale") == scale]
     if len(entries) < 2:
         return 0, (f"perf gate: {len(entries)} entr{'y' if len(entries) == 1 else 'ies'} "
                    f"with {metric!r} — nothing to compare, skipping")

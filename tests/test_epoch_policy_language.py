@@ -205,6 +205,23 @@ class TestPerfGate:
                         {"pipelined_rows_per_s": 1400.0}])
         assert check(p, threshold=0.25)[0] == 0
 
+    def test_baseline_must_match_scale(self, tmp_path):
+        """A manual run at another scale is not a comparable baseline."""
+        from benchmarks.perf_gate import check
+        p = str(tmp_path / "t.json")
+        # last entry at scale 200k: the 50k entry in between is ignored,
+        # so the real 200k baseline gates the comparison
+        self._write(p, [{"scale": 200000, "pipelined_rows_per_s": 1000.0},
+                        {"scale": 50000, "pipelined_rows_per_s": 100.0},
+                        {"scale": 200000, "pipelined_rows_per_s": 700.0}])
+        code, msg = check(p, threshold=0.25)
+        assert code == 1 and "REGRESSION" in msg
+        # only cross-scale history: nothing comparable, clean skip
+        self._write(p, [{"scale": 50000, "pipelined_rows_per_s": 100.0},
+                        {"scale": 200000, "pipelined_rows_per_s": 700.0}])
+        code, msg = check(p, threshold=0.25)
+        assert code == 0 and "nothing to compare" in msg
+
     def test_unreadable_trajectory_skips(self, tmp_path):
         from repro.core import DataStore  # noqa: F401 (import side effects none)
         from benchmarks.perf_gate import check
