@@ -61,7 +61,10 @@ def _shuffled_plan(ds):
     s1 = p.add_statement([
         resolve_op("identity_parser"),
         resolve_op("partition", scheme="hash", key="orderkey", num_partitions=8),
-        resolve_op("map", fn=lambda cols: cols, shuffle_by="partition"),
+        # importable spec (not a closure): the same plan must ship by pickle
+        # to process-backend workers for the shuffle backend comparison
+        resolve_op("map", fn="repro.core.ops_select:identity_columns",
+                   shuffle_by="partition"),
     ], kind="select")
     s2 = p.add_statement([
         resolve_op("chunk", target_rows=8192),
@@ -187,6 +190,32 @@ def _fresh_shards(shards, delay_s: float = 0.0):
     return gen()
 
 
+def _run_shuffle_backend(shards, backend: str):
+    """One streaming run of the shuffle-stage plan with the worker-side
+    partition exchange (ISSUE 4), on the given node backend.  Returns
+    (seconds, report) — the report carries the coordinator-vs-peer byte
+    counters the trajectory records."""
+    import tempfile
+    n_nodes = min(os.cpu_count() or 2, 4)
+    ds = DataStore(tempfile.mkdtemp(prefix="ibench_shuf_"),
+                   nodes=NODES[:n_nodes])
+    eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                 queue_capacity=2 * EPOCH_ITEMS,
+                                 backend=backend)
+    if backend == "process":
+        eng.prewarm_executors()   # worker spawn is setup, not throughput
+    t0 = time.perf_counter()
+    rep = eng.run_stream(_shuffled_plan(ds), _fresh_shards(shards))
+    secs = time.perf_counter() - t0
+    eng.close()
+    cleanup(ds)
+    return secs, rep
+
+
+def _sum_runs(rep, field: str) -> int:
+    return sum(getattr(e.run, field) for e in rep.epochs)
+
+
 def _stream_once(shards, plan_fn, *, legacy: bool, delay_s: float = 0.0):
     """One streaming run.  ``legacy=True`` configures the pre-ISSUE-2
     runtime: strictly sequential epochs, synchronous per-epoch DFS shuffle
@@ -261,6 +290,31 @@ def run(scale: int) -> List[Row]:
     rows.append(("streaming/shuffle_pipelined_epochs", pipe_s,
                  f"{scale / pipe_s:,.0f} rows/s ({speedup:.2f}x sequential)"))
 
+    # ---- worker-side shuffle (ISSUE 4): the peer-to-peer partition
+    # exchange on both backends.  The acceptance invariant is recorded, not
+    # assumed: zero item bytes through the coordinator's shuffle path
+    # (shuffle_coordinator_bytes) while shuffle_peer_bytes carries the
+    # partitions worker-to-worker.  shuffle_rows_per_s (process backend) is
+    # the nightly-gated metric — on a multi-core runner the exchange lets
+    # shuffle throughput scale with host_cores instead of serializing on
+    # the coordinator pipe.
+    shuf_thread_s, shuf_trep = min((_run_shuffle_backend(shards, "thread")
+                                    for _ in range(REPEATS)),
+                                   key=lambda t: t[0])
+    shuf_proc_s, shuf_prep = min((_run_shuffle_backend(shards, "process")
+                                  for _ in range(REPEATS)),
+                                 key=lambda t: t[0])
+    coord_bytes = _sum_runs(shuf_prep, "shuffle_coordinator_bytes")
+    peer_bytes = _sum_runs(shuf_prep, "shuffle_peer_bytes")
+    rows.append(("streaming/shuffle_exchange_thread", shuf_thread_s,
+                 f"{scale / shuf_thread_s:,.0f} rows/s (peer exchange, "
+                 f"coordinator bytes "
+                 f"{_sum_runs(shuf_trep, 'shuffle_coordinator_bytes')})"))
+    rows.append(("streaming/shuffle_exchange_process", shuf_proc_s,
+                 f"{scale / shuf_proc_s:,.0f} rows/s "
+                 f"({shuf_thread_s / shuf_proc_s:.2f}x thread; "
+                 f"coordinator {coord_bytes} B, peer {peer_bytes:,} B)"))
+
     # ---- thread vs process node backend on the CPU-heavy plan (ISSUE 3):
     # regex parse is interpreter-bound (GIL-held), so thread-backend nodes
     # serialize on one core while process-backend workers use them all.
@@ -299,6 +353,12 @@ def run(scale: int) -> List[Row]:
         "cpu_heavy_process_s": proc_s,
         "process_backend_speedup": backend_speedup,
         "process_rows_per_s": scale / proc_s,
+        "shuffle_thread_s": shuf_thread_s,
+        "shuffle_process_s": shuf_proc_s,
+        "shuffle_rows_per_s": scale / shuf_proc_s,
+        "shuffle_thread_rows_per_s": scale / shuf_thread_s,
+        "shuffle_coordinator_bytes": coord_bytes,
+        "shuffle_peer_bytes": peer_bytes,
         "host_cores": host_cores,
         "process_workers": n_workers,
         "host_parallel_ceiling": parallel_ceiling,

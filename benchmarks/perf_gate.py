@@ -2,15 +2,20 @@
 
 The nightly job appends a fresh record to ``BENCH_streaming.json``
 (``benchmarks.bench_streaming``) and then runs this gate: it compares the
-fresh entry's throughput metric against the previous entry and fails the job
-(exit 1) on a regression beyond the threshold.  With fewer than two
-comparable entries (first run, wiped trajectory, unreadable file) it skips
-cleanly (exit 0) — a missing history must never fail the build.
+fresh entry's throughput metrics against the previous entry *at the same
+benchmark scale* and fails the job (exit 1) on a regression beyond the
+threshold.  Gated metrics default to ``pipelined_rows_per_s`` (the
+pipelined-core throughput) and ``shuffle_rows_per_s`` (the worker-side
+peer-exchange shuffle, ISSUE 4); ``--metric`` may be repeated to gate a
+custom set.  With fewer than two comparable entries for a metric (first
+run, wiped trajectory, pre-metric history, unreadable file) that metric
+skips cleanly — a missing history must never fail the build.
 
 Usage::
 
     python -m benchmarks.perf_gate [--file BENCH_streaming.json]
-        [--metric pipelined_rows_per_s] [--threshold 0.25]
+        [--metric pipelined_rows_per_s --metric shuffle_rows_per_s]
+        [--threshold 0.25]
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ from typing import Tuple
 DEFAULT_FILE = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_streaming.json")
 DEFAULT_METRIC = "pipelined_rows_per_s"
+DEFAULT_METRICS = (DEFAULT_METRIC, "shuffle_rows_per_s")
 DEFAULT_THRESHOLD = 0.25
 
 
@@ -47,6 +53,13 @@ def check(path: str, metric: str = DEFAULT_METRIC,
         # are comparable baselines (manual runs at other scales don't gate)
         scale = entries[-1]["scale"]
         entries = [h for h in entries if h.get("scale") == scale]
+    if entries and entries[-1].get("host_cores") is not None:
+        # ... and hardware-dependent: dev-container entries must not gate a
+        # CI runner (or vice versa).  host_cores is the recorded proxy, so
+        # a runner's first nightly skips cleanly instead of comparing
+        # against different hardware's baseline.
+        cores = entries[-1]["host_cores"]
+        entries = [h for h in entries if h.get("host_cores") == cores]
     if len(entries) < 2:
         return 0, (f"perf gate: {len(entries)} entr{'y' if len(entries) == 1 else 'ies'} "
                    f"with {metric!r} — nothing to compare, skipping")
@@ -64,12 +77,17 @@ def check(path: str, metric: str = DEFAULT_METRIC,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--file", default=DEFAULT_FILE)
-    ap.add_argument("--metric", default=DEFAULT_METRIC)
+    ap.add_argument("--metric", action="append", default=None,
+                    help="gated metric; repeatable (default: "
+                         + ", ".join(DEFAULT_METRICS) + ")")
     ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD)
     args = ap.parse_args(argv)
-    code, msg = check(args.file, args.metric, args.threshold)
-    print(msg)
-    return code
+    worst = 0
+    for metric in (args.metric or list(DEFAULT_METRICS)):
+        code, msg = check(args.file, metric, args.threshold)
+        print(msg)
+        worst = max(worst, code)
+    return worst
 
 
 if __name__ == "__main__":

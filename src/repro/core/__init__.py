@@ -13,6 +13,8 @@ Typical flow::
 """
 from .access import DataAccess, Split
 from .catalog import Catalog
+from .exchange import (PartitionExchange, decode_partition, encode_partition,
+                       partition_items, stable_group_hash)
 from .fault import (ErasureRecovery, FaultToleranceDaemon, RecoveryUDF,
                     ReplicationRecovery, TransformationRecovery)
 from .items import (Granularity, IngestItem, Label, ShmLease, decode_items,
@@ -28,8 +30,9 @@ from .optimizer import (FilterFusionRule, IngestionOptimizer, IngestOpExpr,
                         split_pipeline_segments)
 from .plan import IngestPlan, Stage, StagePlan, Statement, serialize_plans
 from .procexec import ProcessNodeExecutor, WorkerDeath
-from .runtime import (FaultInjection, NodeExecutor, NodeFailure, RunReport,
-                      RuntimeEngine, ShuffleService, derive_spill_bytes,
+from .runtime import (ExchangeRound, FaultInjection, NodeExecutor,
+                      NodeFailure, RunReport, RuntimeEngine,
+                      ShuffleCoordinator, ShuffleService, derive_spill_bytes,
                       ingest)
 from .store import BlockEntry, DataStore, EpochEntry
 from .streaming import (EpochPolicy, EpochReport, FeedDistributor,
@@ -56,9 +59,12 @@ __all__ = [
     "FilterFusionRule", "IngestionOptimizer", "IngestOpExpr", "ParallelModeRule",
     "PipelineRule", "ReorderRule", "Rule", "split_pipeline_segments",
     "IngestPlan", "Stage", "StagePlan", "Statement", "serialize_plans",
+    "PartitionExchange", "decode_partition", "encode_partition",
+    "partition_items", "stable_group_hash",
     "ProcessNodeExecutor", "WorkerDeath",
-    "FaultInjection", "NodeExecutor", "NodeFailure", "RunReport",
-    "RuntimeEngine", "ShuffleService", "derive_spill_bytes", "ingest",
+    "ExchangeRound", "FaultInjection", "NodeExecutor", "NodeFailure",
+    "RunReport", "RuntimeEngine", "ShuffleCoordinator", "ShuffleService",
+    "derive_spill_bytes", "ingest",
     "BlockEntry", "DataStore", "EpochEntry",
     "EpochPolicy", "EpochReport", "FeedDistributor", "IngestQueues",
     "StreamFaultInjection", "StreamingRuntimeEngine", "StreamReport",

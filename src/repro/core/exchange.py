@@ -1,0 +1,319 @@
+"""Worker-side shuffle data plane: peer-to-peer partition exchange.
+
+The shuffle used to route every group through the coordinator: stage outputs
+returned to it, were grouped there, and shipped back out to their target
+nodes — so shuffle-heavy plans serialized on one pipe no matter how many
+node workers existed.  This module is the *data plane* of the decentralized
+shuffle (DESIGN.md §4): after a shuffle-boundary stage each node worker
+partitions its own output by the routing key and hands partitions directly
+to peer workers; the coordinator (``runtime.ShuffleCoordinator``) sees only
+partition *manifests* — stage, epoch, counts, sizes, segment/file refs —
+never item bytes.
+
+Shared by both node backends:
+
+* :func:`partition_items` — deterministic group->node assignment via a
+  process-stable hash of the routing-key label, so every worker computes a
+  group's target without global knowledge of the group set (Python's own
+  ``hash`` is salted per process and would make peers disagree).
+* :func:`encode_partition` / :func:`decode_partition` — the process
+  backend's per-edge medium.  Same protocol-5 packing as
+  ``items.encode_items``, but the pickle *meta stream rides inside the
+  shared-memory segment* too: the manifest the coordinator relays carries
+  only the segment name and an offset table, so zero item bytes cross the
+  coordinator pipes.
+* :func:`write_partition_file` / :func:`read_partition_file` — oversized
+  partitions cross as peer-readable spill files under the store's DFS dir
+  (consume-on-read).  The ``DataStore`` leases live rounds' files so
+  ``gc_orphans`` can tell them from a crashed epoch's leftovers.
+* :class:`PartitionExchange` — the node-side partition buffer.  The thread
+  backend shares one instance across all node executors (deposits are the
+  direct in-memory queue handoff); each process-backend worker hosts its
+  own, holding the partitions addressed to itself and decoded
+  multi-consumer batches.  Buckets carry refcounted ``ShmLease`` shares so
+  the segment a resident partition aliases dies exactly when its last
+  consumer finishes.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .items import IngestItem, ShmLease, _materialize_item
+
+#: manifest/file naming shared with DataStore.gc_orphans
+EXCHANGE_PREFIX = "exchange_"
+EXCHANGE_SUFFIX = ".part"
+
+
+def stable_group_hash(value: Any) -> int:
+    """Process-stable hash of a routing-group value.
+
+    Labels that compare equal must hash equal — the legacy barrier grouped
+    by dict equality, so ``True``/``1``/``1.0``/``np.int64(1)`` are one
+    group and must land on one node here too: any integral numeric maps
+    through its integer value (which also spreads small partition counts
+    evenly).  Strings/bytes hash their content; sets hash their *sorted*
+    element reprs (a set's iteration order rides the per-process string
+    hash salt).  Everything else falls back to crc32 of ``repr``, which
+    requires the label type to have a process-stable repr — ints, strings,
+    and tuples thereof, which is what partition/dedup operators emit; a
+    default object repr (memory address) would make peers disagree, just
+    as it would have broken the legacy barrier's ``sorted(key=str)``.
+    Never use Python's ``hash`` — it is salted per process, and peer
+    workers must agree on every group's target."""
+    try:
+        i = int(value)
+        if i == value:
+            return i & 0x7FFFFFFF
+    except (TypeError, ValueError, OverflowError):
+        pass
+    if isinstance(value, str):
+        return zlib.crc32(value.encode())
+    if isinstance(value, (bytes, bytearray)):
+        return zlib.crc32(bytes(value))
+    if isinstance(value, (set, frozenset)):
+        return zlib.crc32(repr(sorted(map(repr, value))).encode())
+    try:
+        return zlib.crc32(repr(value).encode())
+    except Exception:
+        return 0
+
+
+def partition_items(items: Sequence[IngestItem], key: str,
+                    targets: Sequence[str]) -> Dict[str, List[IngestItem]]:
+    """Split a stage's output by the routing key's label value: every worker
+    computes ``targets[stable_hash(group) % len(targets)]`` locally, so the
+    same group lands on the same node no matter who produced it."""
+    parts: Dict[str, List[IngestItem]] = {t: [] for t in targets}
+    n = len(targets)
+    for it in items:
+        g = it.label_value(key, 0)
+        parts[targets[stable_group_hash(g) % n]].append(it)
+    return parts
+
+
+def build_manifest(out: Sequence[IngestItem], key: str,
+                   targets: Sequence[str],
+                   part_fn: Any) -> Dict[str, Any]:
+    """Partition a stage's output and assemble the metadata-only manifest
+    the coordinator relays: ``part_fn(dst, items, nbytes) -> desc`` supplies
+    the backend-specific medium (resident / segment / spill file / thread
+    bucket) per non-empty partition.  Keeping the iteration and manifest
+    shape here means both backends stay wire-compatible with
+    ``ShuffleCoordinator.record_manifest``/``finish_round``."""
+    parts = partition_items(out, key, targets)
+    manifest: Dict[str, Any] = {"total_count": len(out), "parts": {}}
+    for dst, its in parts.items():
+        if not its:
+            continue
+        nb = sum(it.nbytes() for it in its)
+        manifest["parts"][dst] = part_fn(dst, its, nb)
+    return manifest
+
+
+# ---------------------------------------------------------------------------
+# Per-edge shared-memory codec (process backend)
+# ---------------------------------------------------------------------------
+def encode_partition(items: Sequence[IngestItem]
+                     ) -> Tuple[Dict[str, Any], ShmLease]:
+    """Pack an item batch into ONE shared-memory segment for a peer.
+
+    Unlike ``encode_items`` (whose pickle meta stream rides the pipe), the
+    meta stream is appended *inside* the segment, so the returned descriptor
+    — what the coordinator relays to the consumer — holds only the segment
+    name, the buffer offset table, and sizes: metadata, never item bytes.
+    The producer must ``detach()`` the lease once the manifest has been
+    delivered; the consumer ``release()``-s (unlink) when done."""
+    buffers: List[pickle.PickleBuffer] = []
+    meta = pickle.dumps(list(items), protocol=5,
+                        buffer_callback=buffers.append)
+    views = [b.raw() for b in buffers]
+    total = sum(v.nbytes for v in views) + len(meta)
+    from multiprocessing import shared_memory
+    shm = shared_memory.SharedMemory(create=True, size=max(total, 1))
+    offsets: List[Tuple[int, int]] = []
+    off = 0
+    for v in views:
+        shm.buf[off:off + v.nbytes] = v.cast("B")
+        offsets.append((off, v.nbytes))
+        off += v.nbytes
+    shm.buf[off:off + len(meta)] = meta
+    for b in buffers:
+        b.release()
+    desc = {"kind": "shm", "shm": shm.name, "offsets": offsets,
+            "meta": (off, len(meta)), "nbytes": total, "count": len(items)}
+    return desc, ShmLease(shm)
+
+
+def decode_partition(desc: Dict[str, Any], copy: bool = False
+                     ) -> Tuple[List[IngestItem], Optional[ShmLease]]:
+    """Decode a peer partition from its segment descriptor.
+
+    ``copy=False`` returns zero-copy views plus the lease the caller must
+    hold while the items are in use and ``release()`` afterwards;
+    ``copy=True`` materializes and destroys the segment before returning."""
+    from multiprocessing import shared_memory
+    shm = shared_memory.SharedMemory(name=desc["shm"])
+    lease = ShmLease(shm)
+    base = memoryview(shm.buf)
+    moff, mlen = desc["meta"]
+    meta = bytes(base[moff:moff + mlen])
+    items = pickle.loads(meta,
+                         buffers=[base[o:o + l] for o, l in desc["offsets"]])
+    if not copy:
+        del base
+        return items, lease
+    out = [_materialize_item(it) for it in items]
+    del items, base
+    lease.release()
+    return out, None
+
+
+def unlink_segment(name: str) -> None:
+    """Best-effort destroy of a segment by name (coordinator-side
+    invalidation of a dead epoch's unconsumed partitions)."""
+    try:
+        from multiprocessing import shared_memory
+        seg = shared_memory.SharedMemory(name=name)
+        seg.close()
+        seg.unlink()
+    except (FileNotFoundError, OSError):
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Spill files (oversized partitions; peer-readable over the DFS dir)
+# ---------------------------------------------------------------------------
+def exchange_file_name(epoch: Optional[int], xid: int, src: str,
+                       dst: str) -> str:
+    e = "B" if epoch is None or epoch < 0 else str(epoch)
+    return f"{EXCHANGE_PREFIX}e{e}_x{xid}_{src}_to_{dst}{EXCHANGE_SUFFIX}"
+
+
+def is_exchange_file(fn: str) -> bool:
+    """Spill files and their torn temp halves (a crash between the temp
+    write and the rename) — both are crash garbage the store GC reclaims."""
+    return fn.startswith(EXCHANGE_PREFIX) and (
+        fn.endswith(EXCHANGE_SUFFIX) or fn.endswith(EXCHANGE_SUFFIX + ".tmp"))
+
+
+def write_partition_file(path: str, items: Sequence[IngestItem]
+                         ) -> Dict[str, Any]:
+    """Spill a partition for a peer: temp-write + rename so a reader (or the
+    orphan GC) never sees a torn file."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        pickle.dump(list(items), f, protocol=pickle.HIGHEST_PROTOCOL)
+    os.replace(tmp, path)
+    return {"kind": "file", "path": path,
+            "nbytes": os.path.getsize(path), "count": len(items)}
+
+
+def read_partition_file(path: str, remove: bool = True) -> List[IngestItem]:
+    """Consume-on-read: a spilled partition is deleted once its (final)
+    consumer has loaded it."""
+    with open(path, "rb") as f:
+        items = pickle.load(f)
+    if remove:
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+    return items
+
+
+# ---------------------------------------------------------------------------
+# Node-side partition buffers
+# ---------------------------------------------------------------------------
+@dataclass
+class _Bucket:
+    """Partitions addressed to one (round, consumer-node) pair."""
+
+    items: List[IngestItem] = field(default_factory=list)
+    nbytes: int = 0
+    leases: List[ShmLease] = field(default_factory=list)
+    paths: List[str] = field(default_factory=list)   # unread spill files
+
+
+class PartitionExchange:
+    """Node-side buffer of shuffle partitions, keyed (round xid, node).
+
+    Thread backend: one instance per engine — a producing stage job deposits
+    each partition straight into its target node's bucket (the in-memory
+    queue handoff; oversized partitions deposit a spill-file ref instead),
+    and the consuming stage job on that node collects it.  Process backend:
+    one instance per worker process, holding the worker's *resident*
+    partitions (the slice it dealt to itself, possibly aliasing input
+    segments via lease shares) and first-consumer-decoded batches kept for
+    later consumer stages.
+
+    ``collect(last=False)`` peeks (multi-consumer stage DAGs read a round
+    more than once); the final ``collect(last=True)`` pops the bucket and
+    returns its lease shares for the caller to release *after* the consuming
+    job is done with the items."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._buckets: Dict[Tuple[int, str], _Bucket] = {}
+
+    def deposit(self, xid: int, dst: str, items: Optional[List[IngestItem]],
+                nbytes: int, leases: Optional[List[ShmLease]] = None,
+                path: Optional[str] = None) -> None:
+        with self._lock:
+            b = self._buckets.setdefault((xid, dst), _Bucket())
+            if items:
+                b.items.extend(items)
+            b.nbytes += nbytes
+            if leases:
+                b.leases.extend(leases)
+            if path is not None:
+                b.paths.append(path)
+
+    def collect(self, xid: int, node: str, last: bool = True
+                ) -> Tuple[List[IngestItem], List[ShmLease]]:
+        """Partitions addressed to ``node`` in round ``xid``.  Spilled files
+        are loaded (and deleted) on first read; ``last=True`` pops the
+        bucket and hands back its lease shares — release them once the
+        consuming job no longer references the items."""
+        with self._lock:
+            b = self._buckets.get((xid, node))
+            if b is None:
+                return [], []
+            paths, b.paths = list(b.paths), []
+        for p in paths:   # file I/O outside the lock
+            loaded = read_partition_file(p, remove=True)
+            with self._lock:
+                b.items.extend(loaded)
+        with self._lock:
+            if last:
+                self._buckets.pop((xid, node), None)
+                return list(b.items), list(b.leases)
+            return list(b.items), []
+
+    def drop(self, xids: Sequence[int]) -> None:
+        """Invalidate rounds (epoch abort/replay): release lease shares,
+        delete unread spill files, forget the buckets."""
+        want = set(xids)
+        with self._lock:
+            victims = [k for k in self._buckets if k[0] in want]
+            dropped = [self._buckets.pop(k) for k in victims]
+        for b in dropped:
+            for lease in b.leases:
+                lease.release()
+            for p in b.paths:
+                try:
+                    os.remove(p)
+                except OSError:
+                    pass
+
+    def pending_rounds(self) -> List[int]:
+        with self._lock:
+            return sorted({xid for xid, _ in self._buckets})
+
+    def close(self) -> None:
+        self.drop(self.pending_rounds())

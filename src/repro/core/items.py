@@ -14,6 +14,7 @@ from __future__ import annotations
 import enum
 import hashlib
 import pickle
+import threading
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -157,14 +158,38 @@ SHM_MIN_BYTES = 64 << 10   # below this, inline pickle beats a segment
 
 
 class ShmLease:
-    """Owns one shared-memory segment end-to-end of a transfer leg."""
+    """Owns one shared-memory segment end-to-end of a transfer leg.
+
+    A lease starts with one holder; ``share()`` adds one.  ``release()``
+    drops a holder and only the *last* release unmaps/unlinks the segment —
+    the multi-consumer lifetime rule of the worker-side partition exchange
+    (DESIGN.md §4): a worker's resident partition may alias the segment a
+    stage's input rode in on, so the stage job and the resident buffer each
+    hold a share and the segment dies deterministically when the final
+    consumer lets go."""
 
     def __init__(self, shm: Any) -> None:
         self._shm = shm
+        self._refs = 1
+        self._lock = threading.Lock()
 
     @property
     def name(self) -> Optional[str]:
         return self._shm.name if self._shm is not None else None
+
+    @property
+    def holders(self) -> int:
+        with self._lock:
+            return self._refs if self._shm is not None else 0
+
+    def share(self) -> "ShmLease":
+        """Add a holder (returns self): the segment now needs one more
+        ``release()`` before it is unmapped and unlinked."""
+        with self._lock:
+            if self._shm is None:
+                raise ValueError("cannot share a released/detached lease")
+            self._refs += 1
+        return self
 
     def detach(self) -> None:
         """Producer side: unmap and disown (the consumer will unlink)."""
@@ -179,8 +204,14 @@ class ShmLease:
         shm.close()
 
     def release(self, unlink: bool = True) -> None:
-        """Consumer side: unmap and (by default) destroy the segment."""
-        shm, self._shm = self._shm, None
+        """Consumer side: drop one holder; the last release unmaps and (by
+        default) destroys the segment."""
+        with self._lock:
+            if self._shm is not None:
+                self._refs -= 1
+                if self._refs > 0:
+                    return
+            shm, self._shm = self._shm, None
         if shm is None:
             return
         try:

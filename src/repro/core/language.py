@@ -33,7 +33,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .operators import IngestOp, resolve_op
-from .plan import IngestPlan
+from .plan import IngestPlan, coerce_bool
 from .store import DataStore
 
 
@@ -171,18 +171,22 @@ def chain_stage(plan: IngestPlan, to: Sequence[str], using: Sequence[str],
 def with_epochs(plan: IngestPlan, *, items: Optional[int] = None,
                 seconds: Optional[float] = None,
                 bytes: Optional[int] = None,
-                capacity: Optional[int] = None) -> IngestPlan:
+                capacity: Optional[int] = None,
+                adaptive: Optional[bool] = None) -> IngestPlan:
     """Declare the plan streamable: epochs cut every ``items`` items,
     ``bytes`` of queued payload, and/or ``seconds`` of wall clock — first
     threshold wins — behind per-node ingest queues bounded at ``capacity``
-    (STREAM WITH EPOCHS(...) in the textual language)."""
+    (STREAM WITH EPOCHS(...) in the textual language).  ``adaptive=True``
+    turns on the commit-latency EWMA controller that rescales the
+    items/bytes cut at runtime (``EpochPolicy.observe_commit``)."""
     cfg = {k: v for k, v in
            (("items", items), ("seconds", seconds), ("bytes", bytes),
-            ("capacity", capacity))
+            ("capacity", capacity),
+            ("adaptive", None if adaptive is None else coerce_bool(adaptive)))
            if v is not None}
     if not cfg:
-        raise LanguageError(
-            "with_epochs: give at least one of items/seconds/bytes/capacity")
+        raise LanguageError("with_epochs: give at least one of "
+                            "items/seconds/bytes/capacity/adaptive")
     plan.stream_config = cfg
     return plan
 
@@ -194,8 +198,9 @@ def unparse_stream(plan: IngestPlan) -> str:
     cfg = getattr(plan, "stream_config", None)
     if not cfg:
         raise LanguageError("plan has no stream config to unparse")
-    order = ("items", "seconds", "bytes", "capacity")
-    args = ", ".join(f"{k}={cfg[k]}" for k in order if k in cfg)
+    order = ("items", "seconds", "bytes", "capacity", "adaptive")
+    args = ", ".join(f"{k}={int(coerce_bool(cfg[k])) if k == 'adaptive' else cfg[k]}"
+                     for k in order if k in cfg)
     return f"STREAM WITH EPOCHS({args});"
 
 
@@ -406,7 +411,7 @@ class LanguageSession:
         if not m:
             raise LanguageError(f"bad STREAM (want WITH EPOCHS(...)): {rest!r}")
         kwargs = self._parse_args(m.group("args"))
-        allowed = {"items", "seconds", "bytes", "capacity"}
+        allowed = {"items", "seconds", "bytes", "capacity", "adaptive"}
         bad = set(kwargs) - allowed
         if bad:
             raise LanguageError(f"STREAM WITH EPOCHS: unknown knobs {sorted(bad)} "

@@ -259,6 +259,9 @@ class IngestionOptimizer:
             ops = self.optimize_chain(sp.ops)
             nsp = StagePlan(sp.name, ops, sp.upstream, sp.predicates)
             nsp.commit_side = nsp.compute_commit_side()
+            # rule rewrites may reorder/fuse ops: recompute the shuffle
+            # boundary metadata so workers partition by the surviving key
+            nsp.shuffle_key = nsp.compute_shuffle_key()
             out.append(self.pipeline.rewrite(nsp))
         return out
 

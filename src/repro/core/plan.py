@@ -55,6 +55,12 @@ class StagePlan:
     (upload).  The pipelined streaming runtime may overlap a new epoch's
     execution only with the *commit-side* suffix of the previous epoch
     (DESIGN.md §4) — this metadata is what drives that split.
+
+    ``shuffle_key`` names the routing key of a shuffle-boundary stage (the
+    last ``shuffle_by`` param in the chain, or None): with the key in the
+    plan metadata, node workers partition their own output locally and
+    exchange partitions peer-to-peer — the coordinator never has to inspect
+    operator params or touch item bytes (DESIGN.md §4).
     """
 
     name: str
@@ -63,6 +69,7 @@ class StagePlan:
     predicates: Dict[str, Any]
     pipeline_blocks: List[List[int]] = field(default_factory=list)
     commit_side: bool = False
+    shuffle_key: Optional[str] = None
 
     def block_of(self, op_idx: int) -> int:
         for b, idxs in enumerate(self.pipeline_blocks):
@@ -77,11 +84,34 @@ class StagePlan:
         return StagePlan(self.name, [op.clone() for op in self.ops],
                          list(self.upstream), dict(self.predicates),
                          [list(b) for b in self.pipeline_blocks],
-                         commit_side=self.commit_side)
+                         commit_side=self.commit_side,
+                         shuffle_key=self.shuffle_key)
 
     def compute_commit_side(self) -> bool:
         """A stage is commit-side iff any of its operators writes the store."""
         return any(getattr(op, "commit_side", False) for op in self.ops)
+
+    def compute_shuffle_key(self) -> Optional[str]:
+        """Routing key of the stage's shuffle boundary (last wins), if any."""
+        return shuffle_key_of(self.ops)
+
+
+def coerce_bool(value: Any) -> bool:
+    """Boolean knob coercion shared by the language surface and
+    ``EpochPolicy`` (``adaptive=1`` / ``"true"`` literals): plans store the
+    coerced value in ``stream_config`` so every layer agrees."""
+    if isinstance(value, str):
+        return value.strip().lower() in ("1", "true", "yes", "on")
+    return bool(value)
+
+
+def shuffle_key_of(ops: Sequence[IngestOp]) -> Optional[str]:
+    """The chain's shuffle routing key: the last ``shuffle_by`` op param."""
+    key: Optional[str] = None
+    for op in ops:
+        if "shuffle_by" in op.params:
+            key = op.params["shuffle_by"]
+    return key
 
 
 class IngestPlan:
@@ -150,6 +180,7 @@ class IngestPlan:
             blocks = [[i] for i in range(len(ops))]  # default: materialize everywhere
             sp = StagePlan(name, ops, list(st.upstream), dict(st.predicates), blocks)
             sp.commit_side = sp.compute_commit_side()
+            sp.shuffle_key = sp.compute_shuffle_key()
             plans.append(sp)
         return plans
 

@@ -32,9 +32,18 @@ CPU-heavy operator throughput (DESIGN.md §6).  This module realizes the
   the existing fault path consumes (batch shard reassignment, streaming
   epoch-granular abort + replay).
 
-Cross-process *shuffle* needs no new machinery: stage outputs return to the
-coordinator, where the existing ``ShuffleService`` barrier (in-memory handoff
-+ DFS spill files) redistributes them.
+* **Worker-to-worker shuffle** (ISSUE 4) — a shuffle-boundary stage's output
+  never returns to the coordinator: the worker partitions it locally by the
+  plan's routing key (``ctx["shuffle"]``), encodes each peer-bound partition
+  into its own shared-memory segment (``exchange.encode_partition`` — pickle
+  meta *inside* the segment, so the reply manifest carries only names and
+  sizes), spills oversized partitions to peer-readable DFS files, and keeps
+  its own slice resident in the in-worker ``PartitionExchange``.  The
+  consuming stage's job receives fetch refs (``ctx["fetch"]``) and maps the
+  segments zero-copy / reads the files / pops its resident bucket.  The
+  coordinator's ``ShuffleCoordinator`` relays only the manifests — zero item
+  bytes cross its pipes on the shuffle path.  A ``("drop", xids)`` control
+  message invalidates rounds of an aborted epoch.
 """
 from __future__ import annotations
 
@@ -52,9 +61,12 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import multiprocessing as mp
 
-from .items import IngestItem, decode_items, encode_items
+from .exchange import (PartitionExchange, build_manifest, decode_partition,
+                       encode_partition, exchange_file_name,
+                       read_partition_file, write_partition_file)
+from .items import IngestItem, ShmLease, decode_items, encode_items
 from .operators import OperatorFailure, PassThroughOp
-from .plan import StagePlan, failed_op_index, serialize_plans
+from .plan import StagePlan, failed_op_index, route_items, serialize_plans
 from .store import BlockEntry, DataStore, prepare_block_payload
 
 
@@ -247,6 +259,7 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
                  store_spec: Dict[str, Any]) -> None:
     """Worker process entry: recv loop dispatching stage jobs onto lanes."""
     client = _WorkerStoreClient(node, store_conn, store_spec)
+    exchange = PartitionExchange()   # resident partitions + fetch caches
     plans: Dict[str, Any] = {}
     lanes: Dict[str, _WorkerLane] = {}
     send_lock = threading.Lock()
@@ -259,9 +272,75 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
             except (BrokenPipeError, OSError):
                 return False
 
+    def fetch_partitions(refs: List[Dict[str, Any]],
+                         held: List[ShmLease]) -> List[IngestItem]:
+        """Pull this node's incoming shuffle partitions: map peer segments
+        zero-copy (leases land in ``held`` for the caller to release after
+        the stage is done with the items), read spill files consume-on-read,
+        pop the resident bucket.  ``keep`` retains the batch locally for a
+        later consuming stage instead of destroying the source."""
+        fetched: List[IngestItem] = []
+        # bucket reads first: a peer batch cached below (keep) lands in the
+        # same bucket, and collecting after the deposit would double-count it
+        order = sorted(refs, key=lambda r: r["kind"] not in ("resident",
+                                                             "cached"))
+        for ref in order:
+            kind = ref["kind"]
+            keep = bool(ref.get("keep"))
+            if kind in ("resident", "cached"):
+                got, leases = exchange.collect(ref["xid"], node,
+                                               last=not keep)
+                held.extend(leases)
+            elif kind == "shm":
+                if keep:
+                    got, _ = decode_partition(ref, copy=True)
+                    exchange.deposit(ref["xid"], node, got,
+                                     int(ref.get("nbytes", 0)))
+                else:
+                    got, lease = decode_partition(ref)   # zero-copy views
+                    if lease is not None:
+                        held.append(lease)
+            elif kind == "file":
+                # always consume-on-read: with keep, later consuming stages
+                # are served from the cached bucket, never the file again
+                got = read_partition_file(ref["path"], remove=True)
+                if keep:
+                    exchange.deposit(ref["xid"], node, got,
+                                     int(ref.get("nbytes", 0)))
+            else:
+                raise ValueError(f"unknown exchange ref kind {kind!r}")
+            fetched.extend(got)
+        return fetched
+
+    def deal_partitions(xs: Dict[str, Any], out: List[IngestItem],
+                        input_leases: List[ShmLease],
+                        peer_leases: List[ShmLease]) -> Dict[str, Any]:
+        """Partition a shuffle-boundary stage's output and hand it to the
+        peers: the node's own slice stays resident (holding shares of the
+        input leases it may alias), each peer slice crosses via its own
+        segment or — past the per-edge spill share — a DFS spill file.
+        Returns the metadata-only manifest."""
+        def part_fn(dst: str, its: List[IngestItem], nb: int) -> Dict[str, Any]:
+            if dst == node:
+                shares = [l.share() for l in input_leases]
+                exchange.deposit(xs["xid"], node, its, nb, leases=shares)
+                return {"kind": "resident", "count": len(its), "nbytes": nb}
+            if nb > xs["spill_share"]:
+                path = os.path.join(
+                    xs["spill_dir"],
+                    exchange_file_name(xs["epoch"], xs["xid"], node, dst))
+                return write_partition_file(path, its)
+            desc, pl = encode_partition(its)
+            peer_leases.append(pl)
+            return desc
+
+        return build_manifest(out, xs["key"], xs["targets"], part_fn)
+
     def run_job(jid: int, plan_key: str, si: int, payload: Dict[str, Any],
                 ctx: Dict[str, Any]) -> None:
         lease = out_lease = None
+        held: List[ShmLease] = []        # fetched-partition leases
+        peer_leases: List[ShmLease] = []  # outgoing partition segments
         try:
             installed = plans.get(plan_key)
             if isinstance(installed, BaseException):
@@ -270,6 +349,13 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
                 raise KeyError(f"worker {node}: plan {plan_key!r} not installed")
             sp = installed[si]
             items, lease = decode_items(payload)   # zero-copy shm views
+            refs = ctx.get("fetch")
+            if refs:
+                # incoming shuffle partitions merge with the pipe inputs;
+                # the stage's label predicates apply to them here, exactly
+                # as the coordinator applied them to the pipe inputs
+                items = items + route_items(fetch_partitions(refs, held),
+                                            sp.predicates)
             client.bind_live(ctx.get("live_nodes"))
             prev = client.set_epoch(ctx.get("epoch"))
             t0 = time.perf_counter()
@@ -280,23 +366,46 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
             finally:
                 client.set_epoch(prev)
             stats["worker_s"] = time.perf_counter() - t0
-            # encode before releasing the input lease: outputs may alias it
-            out_payload, out_lease = encode_items(out)
+            xs = ctx.get("shuffle")
+            if xs is not None:
+                # shuffle boundary: partitions go peer-to-peer, the reply
+                # carries only the manifest (metadata — zero item bytes
+                # cross the coordinator pipe)
+                input_leases = [l for l in [lease, *held] if l is not None]
+                manifest = deal_partitions(xs, out, input_leases, peer_leases)
+                out_payload: Dict[str, Any] = {"kind": "xmanifest",
+                                               "manifest": manifest}
+            else:
+                # encode before releasing input leases: outputs may alias
+                out_payload, out_lease = encode_items(out)
             del items, out
+            for l in held:
+                l.release()
+            held = []
             if lease is not None:
                 lease.release()
                 lease = None
             if send(("done", jid, out_payload, stats)):
                 if out_lease is not None:
                     out_lease.detach()
-            elif out_lease is not None:
-                out_lease.release()     # coordinator gone: don't leak the seg
+                for pl in peer_leases:   # consumers (or invalidation) unlink
+                    pl.detach()
+            else:
+                if out_lease is not None:
+                    out_lease.release()  # coordinator gone: don't leak segs
+                for pl in peer_leases:
+                    pl.release()
             out_lease = None
+            peer_leases = []
         except BaseException as e:
+            for l in held:
+                l.release()
             if lease is not None:
                 lease.release()
             if out_lease is not None:
                 out_lease.release()
+            for pl in peer_leases:
+                pl.release()
             try:
                 pickle.dumps(e)
             except Exception:
@@ -323,6 +432,9 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
                 plans[key] = sps
             except BaseException as e:      # surfaced when a job needs it
                 plans[key] = e
+        elif kind == "drop":
+            # epoch invalidation: clear resident/cached exchange rounds
+            exchange.drop(msg[1])
         elif kind == "run":
             _, jid, plan_key, si, lane, payload, ctx = msg
             ln = lanes.get(lane)
@@ -330,6 +442,7 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
                 ln = lanes[lane] = _WorkerLane(f"{node}:{lane}")
             ln.jobs.put(lambda j=jid, k=plan_key, s=si, p=payload, c=ctx:
                         run_job(j, k, s, p, c))
+    exchange.close()
     for ln in lanes.values():
         ln.jobs.put(None)
 
@@ -420,10 +533,16 @@ class ProcessNodeExecutor:
                   epoch: Optional[int] = None,
                   live_nodes: Optional[Sequence[str]] = None,
                   injections: Optional[Dict[int, int]] = None,
-                  max_retries: int = 3) -> Future:
+                  max_retries: int = 3,
+                  shuffle_ctx: Optional[Dict[str, Any]] = None,
+                  fetch_refs: Optional[List[Dict[str, Any]]] = None) -> Future:
         """Run one stage over ``items`` on the worker; resolves to
-        ``(output_items, stats)``.  Fails with WorkerDeath if the node dies
-        mid-flight (mapped to NodeFailure by the runtime)."""
+        ``(output_items, stats)`` — or ``(manifest_payload, stats)`` when
+        ``shuffle_ctx`` marks the stage a shuffle boundary (the worker dealt
+        its partitions to the peers and replied metadata only).
+        ``fetch_refs`` are the incoming partition descriptors the worker
+        must merge into the stage's inputs.  Fails with WorkerDeath if the
+        node dies mid-flight (mapped to NodeFailure by the runtime)."""
         fut: Future = Future()
         if self._dead:
             fut.set_exception(WorkerDeath(self.node))
@@ -439,7 +558,9 @@ class ProcessNodeExecutor:
         ctx = {"epoch": epoch,
                "live_nodes": list(live_nodes) if live_nodes else None,
                "injections": dict(injections or {}),
-               "max_retries": max_retries}
+               "max_retries": max_retries,
+               "shuffle": dict(shuffle_ctx) if shuffle_ctx else None,
+               "fetch": list(fetch_refs) if fetch_refs else None}
         try:
             self._send(("run", jid, plan_key, stage_idx, lane, payload, ctx))
             if lease is not None:
@@ -467,10 +588,15 @@ class ProcessNodeExecutor:
                     if fut is None:
                         continue
                     try:
-                        # copy=True: results outlive the hop (retained epoch
-                        # outputs, shuffle buffers) — the segment dies here
-                        items, _ = decode_items(payload, copy=True)
-                        fut.set_result((items, stats))
+                        if (isinstance(payload, dict)
+                                and payload.get("kind") == "xmanifest"):
+                            # shuffle manifest: metadata only, pass through
+                            fut.set_result((payload, stats))
+                        else:
+                            # copy=True: results outlive the hop (retained
+                            # epoch outputs) — the segment dies here
+                            items, _ = decode_items(payload, copy=True)
+                            fut.set_result((items, stats))
                     except BaseException as e:
                         fut.set_exception(e)
                 elif kind == "fail":
@@ -529,6 +655,17 @@ class ProcessNodeExecutor:
                     reply = ("err", f"{type(e).__name__}: {e}")
                 self._store_conn.send(reply)
         except (EOFError, OSError):
+            pass
+
+    # --------------------------------------------------------------- exchange
+    def drop_exchange(self, xids: Sequence[int]) -> None:
+        """Best-effort: tell the worker to drop invalidated exchange rounds
+        (epoch abort/replay).  A dead worker's buckets died with it."""
+        if self._dead or not xids:
+            return
+        try:
+            self._send(("drop", list(xids)))
+        except WorkerDeath:
             pass
 
     # --------------------------------------------------------------- shutdown

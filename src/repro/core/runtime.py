@@ -12,11 +12,14 @@
   pool (see operators.IngestOp._parallel_iter).
 * **Work stealing** — when sources are given as a shared list, nodes pull
   shards from a global queue, so stragglers simply take fewer shards.
-* **Distributed I/O** — shuffle via the ``ShuffleService`` (DESIGN.md §4):
-  in-memory group handoff with a write-behind DFS journal, double-buffered so
-  the DFS write of one round overlaps the next epoch's ingest; rounds past
-  the spill threshold take the classic blocking DFS round-trip.  Placement
-  via location IDs, replication decoupled from placement.
+* **Distributed I/O** — shuffle via the ``ShuffleCoordinator`` control plane
+  (DESIGN.md §4): node workers partition their own output by the plan's
+  routing key and exchange partitions peer-to-peer (shared-memory segments /
+  in-memory deposits / DFS spill files past the per-edge share); the
+  coordinator relays only manifests — zero item bytes cross its pipes on
+  the shuffle path.  ``synchronous=True`` (and cross-segment boundaries)
+  fall back to the legacy coordinator barrier.  Placement via location IDs,
+  replication decoupled from placement.
 * **In-flight fault tolerance** — pipeline blocks are checkpoints: a failing
   operator retries its block from the previous materialization; after
   ``max_retries`` failures it is replaced by a dummy pass-through operator
@@ -25,6 +28,7 @@
 """
 from __future__ import annotations
 
+import itertools
 import os
 import pickle
 import queue
@@ -34,8 +38,10 @@ import time
 from collections import defaultdict
 from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple, Union
 
+from .exchange import (PartitionExchange, build_manifest, exchange_file_name,
+                       partition_items, unlink_segment, write_partition_file)
 from .items import IngestItem
 from .operators import IngestOp, OperatorFailure, PassThroughOp
 from .optimizer import IngestionOptimizer
@@ -73,8 +79,16 @@ class RunReport:
     node_failures: List[str] = field(default_factory=list)
     reassigned_shards: int = 0
     shuffled_items: int = 0
-    shuffle_spills: int = 0        # blocking DFS round-trips (size > threshold)
-    shuffle_async_rounds: int = 0  # in-memory handoffs w/ write-behind journal
+    shuffle_spills: int = 0        # rounds that materialized DFS spill files
+    shuffle_async_rounds: int = 0  # rounds handled fully off the DFS
+    shuffle_exchange_rounds: int = 0   # peer-to-peer exchange rounds
+    # item bytes the *coordinator's* shuffle path moved (legacy barrier only
+    # — a peer-exchange round keeps this at zero: the coordinator relays
+    # manifests, never item bytes)
+    shuffle_coordinator_bytes: int = 0
+    # partition bytes handed worker-to-worker (shm segments, spill files,
+    # and the thread backend's direct in-memory deposits)
+    shuffle_peer_bytes: int = 0
     wall_time_s: float = 0.0
     per_node_shards: Dict[str, int] = field(default_factory=dict)
 
@@ -187,29 +201,69 @@ class NodeExecutor:
 
 
 # --------------------------------------------------------------------------
-# Asynchronous double-buffered shuffle (paper Sec. VI-B, DESIGN.md §4)
+# Shuffle: control-plane coordinator + worker-side data plane (DESIGN.md §4)
 # --------------------------------------------------------------------------
-class ShuffleService:
-    """Redistributes a stage's output across nodes by group label.
+@dataclass
+class ExchangeRound:
+    """Control-plane record of one peer-to-peer shuffle round.
 
-    The old barrier round-tripped every shuffled item through pickled DFS
-    files *inside* the epoch barrier.  Now:
+    Everything here is metadata: stage/epoch identity, the pinned target
+    set, per-producer manifests (counts, sizes, segment/file refs), and the
+    consumer-delivery cursor.  Item bytes never enter this structure."""
 
-    * groups hand off **in memory** to their target nodes immediately — the
-      next stage starts without any DFS traffic (round memory is already
-      bounded upstream: bounded ingest queues cap the epoch, and the
-      committer's job queue caps epochs in flight);
-    * only a round past ``spill_bytes`` is spilled to the DFS (the group
-      files other nodes would fetch in a real deployment), and the write is
-      *asynchronous and double-buffered*: the DFS write of epoch N's groups
-      overlaps epoch N+1's ingest, and the next barrier for the same stage
-      first drains the previous round's write — at most two rounds are ever
-      in flight per stage (the two buffers).
+    xid: int
+    stage: str
+    key: str                          # routing-key label (StagePlan.shuffle_key)
+    epoch: int                        # -1 = batch run
+    targets: List[str]                # pinned executing-node set = partition targets
+    consumers: List[str]              # consuming stage names within the slice
+    spill_share: int                  # per-edge spill threshold, bytes
+    manifests: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    total_count: int = 0              # items partitioned (all producers)
+    total_bytes: int = 0              # peer-bound partition bytes
+    served: Dict[str, int] = field(default_factory=dict)   # node -> stages served
+    # nodes that were ever handed refs — unlike `served` (reset when a
+    # consumer fails, so finish_round reclaims best-effort), this is never
+    # cleared: refs once delivered may already be consumed and must not be
+    # re-served to a redirect target
+    delivered: Set[str] = field(default_factory=set)
+    consumers_done: int = 0
+    spilled: bool = False
 
-    ``synchronous=True`` restores the pre-pipelining barrier (paper Sec.
-    VI-B verbatim, and what this engine did before ISSUE 2): every round is
-    written to the DFS and read back *inside* the barrier.  Kept as a mode
-    for debugging and as the baseline of the pipelining benchmark.
+    def worker_ctx(self, spill_dir: str) -> Dict[str, Any]:
+        """The shuffle instruction shipped to a producing worker."""
+        return {"xid": self.xid, "key": self.key,
+                "targets": list(self.targets), "epoch": self.epoch,
+                "spill_share": self.spill_share, "spill_dir": spill_dir}
+
+
+class ShuffleCoordinator:
+    """The shuffle's *control plane* (DESIGN.md §4).
+
+    Since ISSUE 4 the default data path is a **decentralized peer exchange**:
+    after a shuffle-boundary stage, each node worker partitions its own
+    output by the plan's routing key (``StagePlan.shuffle_key``) and hands
+    partitions directly to peer workers — per-edge shared-memory segments
+    (process backend, ``exchange.encode_partition``) or direct in-memory
+    deposits (thread backend), with oversized partitions crossing as
+    peer-readable spill files under the DFS dir.  This coordinator only
+
+    * opens a round per boundary (``plan_round``) and pins its target set,
+    * collects per-producer **manifests** — stage, epoch, counts, sizes,
+      segment names / file paths — never item bytes,
+    * hands each consumer its incoming refs (``refs_for`` / ``serve``), and
+    * reclaims a round's segments/files when it finishes or its epoch is
+      invalidated (node death -> epoch replay).
+
+    The **legacy barrier** (groups collected and redistributed through the
+    coordinator) remains for two cases: ``synchronous=True`` (the paper-
+    verbatim in-barrier DFS round-trip, kept for debugging and as the
+    benchmark baseline) and boundaries whose consuming stage lies outside
+    the executing stage slice (cross-segment shuffles), where the items
+    must outlive the worker call anyway.  Only this legacy path moves item
+    bytes through the coordinator — counted in
+    ``RunReport.shuffle_coordinator_bytes``, which a peer-exchange round
+    keeps at zero.
     """
 
     def __init__(self, store: DataStore, spill_bytes: int = 32 << 20,
@@ -222,6 +276,12 @@ class ShuffleService:
         self._pending: Dict[str, Future] = {}
         self._writer: Optional[_ExecutorLane] = None
         self._spilled_stages: set = set()   # stages with DFS group files
+        self._xids = itertools.count()
+        self._rounds: Dict[int, ExchangeRound] = {}
+        self._epoch_rounds: Dict[int, Set[int]] = {}
+        #: test hook: called as (round, producer_node) when a manifest lands
+        #: — lets fault tests kill a worker exactly mid-exchange
+        self.test_on_manifest: Optional[Callable[[ExchangeRound, str], None]] = None
 
     # ------------------------------------------------------------------ util
     def _stage_lock(self, stage: str) -> threading.Lock:
@@ -242,18 +302,155 @@ class ShuffleService:
 
     @staticmethod
     def _shuffle_key(sp: StagePlan) -> Optional[str]:
-        key = None
-        for op in sp.ops:
-            if "shuffle_by" in op.params:
-                key = op.params["shuffle_by"]
-        return key
+        return sp.shuffle_key or sp.compute_shuffle_key()
+
+    # ------------------------------------------- peer-exchange control plane
+    def plan_round(self, stage_plans: List[StagePlan], si: int, stop: int,
+                   live: List[str],
+                   epoch: Optional[int]) -> Optional[ExchangeRound]:
+        """Open a peer-exchange round for stage ``si`` — or return None when
+        the boundary must take the legacy barrier (synchronous mode, no
+        shuffle key, or no consuming stage inside the executing slice)."""
+        sp = stage_plans[si]
+        if self.synchronous or not sp.ops or not live:
+            return None
+        key = self._shuffle_key(sp)
+        if key is None:
+            return None
+        consumers = [sq.name for sq in stage_plans[si + 1:stop]
+                     if sp.name in sq.upstream]
+        all_consumers = [sq.name for sq in stage_plans[si + 1:]
+                         if sp.name in sq.upstream]
+        if not consumers or len(consumers) != len(all_consumers):
+            # no consumer, or a consumer outside the executing slice (a
+            # cross-segment chain): the items must outlive this _execute
+            # call in the coordinator's outputs — legacy barrier
+            return None
+        rnd = ExchangeRound(
+            xid=next(self._xids), stage=sp.name, key=key,
+            epoch=-1 if epoch is None else epoch, targets=list(live),
+            consumers=consumers,
+            spill_share=max(1, self.spill_bytes // max(1, len(live))))
+        with self._lock:
+            self._rounds[rnd.xid] = rnd
+            self._epoch_rounds.setdefault(rnd.epoch, set()).add(rnd.xid)
+        return rnd
+
+    def record_manifest(self, rnd: ExchangeRound, node: str,
+                        manifest: Dict[str, Any]) -> None:
+        """A producer's partition manifest arrived: lease its spill files,
+        account sizes — metadata only, the partitions themselves went (or
+        stayed) worker-side."""
+        for dst, desc in manifest.get("parts", {}).items():
+            path = desc.get("path") or desc.get("spilled")
+            if path:
+                rnd.spilled = True
+                self.store.lease_exchange_path(path)
+            if dst != node:
+                rnd.total_bytes += int(desc.get("nbytes", 0))
+        rnd.manifests[node] = manifest
+        rnd.total_count += int(manifest.get("total_count", 0))
+        if self.test_on_manifest is not None:
+            self.test_on_manifest(rnd, node)
+
+    def serve(self, rnd: ExchangeRound, node: str) -> bool:
+        """Advance the consumer-stage cursor for ``node``; True when this is
+        the round's final consuming stage (the node-side collect pops)."""
+        served = rnd.served.get(node, 0)
+        rnd.served[node] = served + 1
+        rnd.delivered.add(node)
+        return served + 1 >= len(rnd.consumers)
+
+    def refs_for(self, rnd: ExchangeRound, node: str) -> List[Dict[str, Any]]:
+        """Fetch descriptors for the consumer job on ``node`` (process
+        backend).  The first consuming stage receives the real refs —
+        segments, spill files, the node's resident marker; later consuming
+        stages replay the worker's cached bucket.  ``keep`` tells the worker
+        another consuming stage follows."""
+        served = rnd.served.get(node, 0)
+        last = self.serve(rnd, node)
+        if served:
+            return [{"kind": "cached", "xid": rnd.xid, "keep": not last}]
+        refs: List[Dict[str, Any]] = []
+        for src, m in rnd.manifests.items():
+            desc = m.get("parts", {}).get(node)
+            if not desc:
+                continue
+            kind = desc["kind"]
+            if kind == "mem":        # thread backend: bucket handoff, no ref
+                continue
+            if kind == "resident":
+                if src == node:
+                    refs.append({"kind": "resident", "xid": rnd.xid,
+                                 "keep": not last})
+                continue
+            refs.append({**desc, "xid": rnd.xid, "src": src, "keep": not last})
+        return refs
+
+    def finish_round(self, rnd: ExchangeRound) -> bool:
+        """A round's final consuming stage drained: drop the bookkeeping,
+        release file leases, and reclaim refs addressed to nodes that never
+        fetched (a consumer died mid-round).  Returns True when node-side
+        buckets may still hold data — the engine then drops the round from
+        the exchanges."""
+        with self._lock:
+            self._rounds.pop(rnd.xid, None)
+            er = self._epoch_rounds.get(rnd.epoch)
+            if er is not None:
+                er.discard(rnd.xid)
+                if not er:
+                    self._epoch_rounds.pop(rnd.epoch, None)
+        leftovers = False
+        for src, m in rnd.manifests.items():
+            for dst, desc in m.get("parts", {}).items():
+                kind = desc["kind"]
+                fetched = rnd.served.get(dst, 0) > 0
+                path = desc.get("path") or desc.get("spilled")
+                if path:
+                    if not fetched and kind == "file":
+                        try:
+                            os.remove(path)
+                        except OSError:
+                            pass
+                    self.store.release_exchange_path(path)
+                if kind == "shm" and not fetched:
+                    unlink_segment(desc["shm"])
+                if kind in ("mem", "resident") and not fetched:
+                    leftovers = True
+        return leftovers
+
+    def invalidate_epoch(self, epoch: Optional[int]) -> List[int]:
+        """Epoch abort/replay: destroy every live round of the epoch —
+        unlink unconsumed segments, delete spill files, release leases.
+        Returns the dead round ids so the engine can clear node-side
+        buckets (``PartitionExchange.drop`` / worker drop messages)."""
+        e = -1 if epoch is None else epoch
+        with self._lock:
+            xids = sorted(self._epoch_rounds.pop(e, ()))
+            rounds = [self._rounds.pop(x) for x in xids if x in self._rounds]
+        for rnd in rounds:
+            for src, m in rnd.manifests.items():
+                for dst, desc in m.get("parts", {}).items():
+                    if desc["kind"] == "shm":
+                        unlink_segment(desc["shm"])
+                    path = desc.get("path") or desc.get("spilled")
+                    if path:
+                        try:
+                            os.remove(path)
+                        except OSError:
+                            pass
+                        self.store.release_exchange_path(path)
+        return xids
 
     # --------------------------------------------------------------- barrier
     def barrier(self, sp: StagePlan,
                 outputs: Dict[str, Dict[str, List[IngestItem]]],
                 live: List[str], report: RunReport) -> None:
-        """``live`` is the caller's pinned executing-node set — groups are
-        collected from and reassigned over exactly these nodes."""
+        """Legacy coordinator-side redistribution (synchronous mode and
+        cross-slice boundaries).  ``live`` is the caller's pinned
+        executing-node set — groups are collected from and reassigned over
+        exactly these nodes.  This is the only path that moves item bytes
+        through the coordinator (``shuffle_coordinator_bytes``)."""
         if not sp.ops:
             return
         shuffle_by = self._shuffle_key(sp)
@@ -276,6 +473,7 @@ class ShuffleService:
                 outputs[n][sp.name] = []
             if not groups:
                 return
+            report.shuffle_coordinator_bytes += nbytes
             order = sorted(groups, key=str)
             if self.synchronous:
                 # legacy path: DFS round-trip inside the barrier
@@ -288,6 +486,7 @@ class ShuffleService:
                         outputs[target][sp.name].extend(pickle.load(f))
                 # consume-on-read: the next round must not merge these files
                 shutil.rmtree(dfs, ignore_errors=True)
+                self.store.release_exchange_path(dfs)
                 return
             for gi, g in enumerate(order):
                 outputs[live[gi % len(live)]][sp.name].extend(groups[g])
@@ -307,9 +506,11 @@ class ShuffleService:
     def _write_groups(self, stage: str, order: List[Any],
                       groups: Dict[Any, List[IngestItem]]) -> str:
         """Local groups -> one DFS file per group (consume-on-write: a fresh
-        round never merges an earlier round's leftovers)."""
+        round never merges an earlier round's leftovers).  The dir is leased
+        so ``gc_orphans`` spares it while this service lives."""
         dfs = self._dfs_dir(stage)
         shutil.rmtree(dfs, ignore_errors=True)
+        self.store.lease_exchange_path(dfs)
         os.makedirs(dfs, exist_ok=True)
         for g in order:
             with open(os.path.join(dfs, f"group{g}.pkl"), "wb") as f:
@@ -329,10 +530,19 @@ class ShuffleService:
         with self._lock:
             writer, self._writer = self._writer, None
             spilled, self._spilled_stages = set(self._spilled_stages), set()
+            epochs = list(self._epoch_rounds)
+        for e in epochs:           # leftover exchange rounds die with us
+            self.invalidate_epoch(e)
         if writer is not None:
             writer.stop()
         for stage in spilled:   # spilled group files die with the service
-            shutil.rmtree(self._dfs_dir(stage), ignore_errors=True)
+            dfs = self._dfs_dir(stage)
+            shutil.rmtree(dfs, ignore_errors=True)
+            self.store.release_exchange_path(dfs)
+
+
+#: pre-ISSUE-4 name, kept for callers that predate the control/data split
+ShuffleService = ShuffleCoordinator
 
 
 class RuntimeEngine:
@@ -362,8 +572,11 @@ class RuntimeEngine:
             shuffle_spill_bytes = (derive_spill_bytes(memory_budget_bytes)
                                    if memory_budget_bytes is not None
                                    else DEFAULT_SPILL_BYTES)
-        self.shuffle = ShuffleService(store, spill_bytes=shuffle_spill_bytes,
-                                      synchronous=shuffle_synchronous)
+        self.shuffle = ShuffleCoordinator(store, spill_bytes=shuffle_spill_bytes,
+                                          synchronous=shuffle_synchronous)
+        # thread-backend data plane: node lanes deposit/collect partitions
+        # here directly — the coordinator thread never touches the items
+        self._exchange = PartitionExchange()
         self._executors: Dict[str, Any] = {}
         self._exec_lock = threading.Lock()
 
@@ -397,12 +610,58 @@ class RuntimeEngine:
             self.executor(n)
 
     def close(self) -> None:
-        """Shut down persistent node executors and the shuffle writer."""
+        """Shut down persistent node executors and the shuffle planes."""
         self.shuffle.close()
+        self._exchange.close()
         with self._exec_lock:
             execs, self._executors = list(self._executors.values()), {}
         for ex in execs:
             ex.shutdown()
+
+    def invalidate_exchange(self, epoch: Optional[int]) -> None:
+        """Tear down a dead epoch's in-flight exchange state everywhere:
+        the coordinator unlinks unconsumed segments and deletes spill files
+        (metadata bookkeeping), then every node-side exchange drops its
+        buckets — a replay of the epoch starts from clean rounds."""
+        self._drop_rounds(self.shuffle.invalidate_epoch(epoch))
+
+    def _drop_rounds(self, xids: Sequence[int]) -> None:
+        """Clear node-side exchange buckets for dead rounds — the engine's
+        own exchange (thread backend) and every live worker process (their
+        resident buckets hold refcounted segment leases)."""
+        if not xids:
+            return
+        self._exchange.drop(xids)
+        if self.backend == "process":
+            with self._exec_lock:
+                execs = list(self._executors.values())
+            for ex in execs:
+                drop = getattr(ex, "drop_exchange", None)
+                if drop is not None:
+                    drop(xids)
+
+    def _deposit_partitions(self, rnd: ExchangeRound, node: str,
+                            out: List[IngestItem]) -> Dict[str, Any]:
+        """Thread-backend data plane: partition this node's stage output by
+        the routing key and hand each partition straight to its target's
+        bucket (the in-memory queue handoff); a partition past the per-edge
+        spill share crosses as a peer-readable DFS file instead.  Runs on
+        the node's executor lane — only the returned manifest (counts,
+        sizes, paths) ever reaches the coordinator."""
+        def part_fn(dst: str, its: List[IngestItem], nb: int) -> Dict[str, Any]:
+            if nb > rnd.spill_share:
+                path = os.path.join(
+                    self.store.dfs_dir,
+                    exchange_file_name(rnd.epoch, rnd.xid, node, dst))
+                write_partition_file(path, its)
+                self._exchange.deposit(rnd.xid, dst, None, nb, path=path)
+                return {"kind": "mem", "count": len(its), "nbytes": nb,
+                        "spilled": path}
+            self._exchange.deposit(rnd.xid, dst, its, nb)
+            return {"kind": "mem", "count": len(its), "nbytes": nb}
+
+        manifest = build_manifest(out, rnd.key, rnd.targets, part_fn)
+        return {"kind": "xmanifest", "manifest": manifest}
 
     def __enter__(self) -> "RuntimeEngine":
         return self
@@ -536,15 +795,44 @@ class RuntimeEngine:
         # dedicated lock for report mutation from worker threads
         rlock = threading.Lock()
 
+        # peer-exchange rounds still awaiting their consuming stage(s),
+        # keyed by producing stage name (DESIGN.md §4: rounds never outlive
+        # the slice — a cross-slice boundary takes the legacy barrier)
+        active_rounds: Dict[str, ExchangeRound] = {}
+
         for si in range(start_stage, stop):
             sp = stage_plans[si]
 
+            live_nodes = (list(node_set) if node_set is not None
+                          else [n for n in self.nodes if alive[n]])
+            # exchange plumbing for this stage: rounds it consumes, and the
+            # round it produces (None -> legacy barrier handles the boundary)
+            incoming = [r for r in active_rounds.values()
+                        if sp.name in r.consumers]
+            produce = self.shuffle.plan_round(stage_plans, si, stop,
+                                              live_nodes, epoch)
+            if produce is not None:
+                active_rounds[sp.name] = produce
+
             # -------------------------------------------------- stage barrier
             def run_stage_on(node: str, nsp: StagePlan,
-                             input_items: List[IngestItem]) -> List[IngestItem]:
+                             input_items: List[IngestItem],
+                             fetches: List[Tuple[int, bool]],
+                             prnd: Optional[ExchangeRound]) -> Any:
                 with self.store.epoch_context(epoch):
-                    return self._run_stage(node, nsp, input_items, faults,
-                                           failure_counts, report, rlock)
+                    items = input_items
+                    for xid, last, owner in fetches:
+                        # thread backend: partitions hand off in memory —
+                        # collect on the node's own lane, route, and merge.
+                        # `owner` is normally this node; a redirected fetch
+                        # drains a dead consumer's bucket instead.
+                        got, _ = self._exchange.collect(xid, owner, last=last)
+                        items = items + route_items(got, nsp.predicates)
+                    out = self._run_stage(node, nsp, items, faults,
+                                          failure_counts, report, rlock)
+                    if prnd is None:
+                        return out
+                    return self._deposit_partitions(prnd, node, out)
 
             def stage_inputs(node: str, nsp: StagePlan) -> List[IngestItem]:
                 if not nsp.upstream:
@@ -555,8 +843,47 @@ class RuntimeEngine:
                         base = base + outputs[node][up]
                 return route_items(base, nsp.predicates)
 
-            live_nodes = (list(node_set) if node_set is not None
-                          else [n for n in self.nodes if alive[n]])
+            # ---- batch-mode redirection: a target that died between the
+            # producing and consuming stage never fetches its bucket.  Its
+            # *peer-held* partitions (segments / files / thread buckets) are
+            # location-independent, so they deliver to the next live node —
+            # the same node its replayed shards land on — instead of being
+            # reclaimed as leftovers.  (Raise mode never gets here: a death
+            # aborts the epoch before the consumer stage is submitted.)
+            redirects: Dict[str, List[Any]] = {}
+            if on_node_death == "reassign":
+                final_consuming_stage = {
+                    rnd.xid: rnd.consumers_done == len(rnd.consumers) - 1
+                    for rnd in incoming}
+                for rnd in incoming:
+                    for t in rnd.targets:
+                        if t in live_nodes:
+                            continue
+                        tgt = self._next_live(t, alive)
+                        if tgt is None:
+                            continue
+                        if use_proc:
+                            # redirect once, and never to a node that was
+                            # already handed refs (they may be consumed —
+                            # segments unlinked, files deleted); the target
+                            # worker caches the decoded batch (keep flag),
+                            # so its later "cached" collects include it.  A
+                            # node that consumed before dying took its cache
+                            # with it — unrecoverable (pre-existing corner).
+                            if t in rnd.delivered:
+                                continue
+                            refs = [r for r in self.shuffle.refs_for(rnd, t)
+                                    if r["kind"] in ("shm", "file")]
+                            redirects.setdefault(tgt, []).extend(refs)
+                        else:
+                            # thread buckets outlive the node (peek keeps
+                            # them): redirect at EVERY consuming stage, and
+                            # pop exactly at the round's final one — the
+                            # dead node's own cursor may have been reset by
+                            # the failure bookkeeping
+                            redirects.setdefault(tgt, []).append(
+                                (rnd.xid, final_consuming_stage[rnd.xid], t))
+
             futs = {}
             if use_proc:
                 # injected op failures are assigned to the first live node
@@ -568,16 +895,27 @@ class RuntimeEngine:
                         injections[oi] = cnt
                         faults.op_failures[(sname, oi)] = 0
                 for ni, n in enumerate(live_nodes):
+                    fetch: List[Dict[str, Any]] = []
+                    for rnd in incoming:
+                        fetch.extend(self.shuffle.refs_for(rnd, n))
+                    fetch.extend(redirects.get(n, []))
                     futs[n] = self.executor(n).run_stage(
                         plan_keys[n], si, stage_inputs(n, sp), lane=lane,
                         epoch=epoch, live_nodes=live_nodes,
                         injections=injections if ni == 0 else None,
-                        max_retries=self.max_retries)
+                        max_retries=self.max_retries,
+                        shuffle_ctx=(produce.worker_ctx(self.store.dfs_dir)
+                                     if produce is not None else None),
+                        fetch_refs=fetch or None)
             else:
                 for n in live_nodes:
                     nsp = node_plans[n][si]
+                    fetches = [(rnd.xid, self.shuffle.serve(rnd, n), n)
+                               for rnd in incoming]
+                    fetches.extend(redirects.get(n, []))
                     futs[n] = self.executor(n).submit(
-                        run_stage_on, n, nsp, stage_inputs(n, nsp), lane=lane)
+                        run_stage_on, n, nsp, stage_inputs(n, nsp),
+                        fetches, produce, lane=lane)
             failed: List[str] = []
             for n, fut in futs.items():  # drain ALL jobs before acting on death
                 try:
@@ -586,28 +924,62 @@ class RuntimeEngine:
                     failed.append(n)
                     continue
                 if use_proc:
-                    outputs[n][sp.name], stats = res
+                    payload, stats = res
                     with rlock:
                         for k, v in stats["op_failures"].items():
                             report.op_failures[k] = max(
                                 report.op_failures.get(k, 0), v)
                         report.dummy_substitutions.extend(stats["dummy"])
                 else:
-                    outputs[n][sp.name] = res
+                    payload = res
+                if (produce is not None and isinstance(payload, dict)
+                        and payload.get("kind") == "xmanifest"):
+                    # partitions went peer-to-peer; only metadata came back
+                    outputs[n][sp.name] = []
+                    self.shuffle.record_manifest(produce, n,
+                                                 payload["manifest"])
+                else:
+                    outputs[n][sp.name] = payload
+            if produce is not None:
+                report.shuffled_items += produce.total_count
+                report.shuffle_peer_bytes += produce.total_bytes
+                report.shuffle_exchange_rounds += 1
+                if produce.spilled:
+                    report.shuffle_spills += 1
+                else:
+                    report.shuffle_async_rounds += 1
             for n in failed:
                 self._mark_dead(n, alive, report)
+                for rnd in incoming:
+                    # the consumer died mid-fetch: count it as never served
+                    # so finish_round reclaims its unconsumed refs (a
+                    # double-unlink of a ref it did consume is a no-op)
+                    rnd.served.pop(n, None)
             if failed and on_node_death == "raise":
                 raise NodeFailure(failed[0])
 
-            # ---- shuffle barrier: redistribute groups (Sec. VI-B).  With a
-            # pinned node_set (raise mode) a stage failure raised above, so
-            # the whole set redistributes — re-reading `alive` here would
-            # race with the other epoch's thread and silently skip a node's
-            # outputs.  Batch mode re-reads it so a node that just failed
-            # this stage takes no groups.
-            barrier_live = (live_nodes if node_set is not None
-                            else [n for n in live_nodes if alive[n]])
-            self.shuffle.barrier(sp, outputs, barrier_live, report)
+            # ---- legacy shuffle barrier (Sec. VI-B) for boundaries the
+            # exchange does not cover: synchronous mode, or the consuming
+            # stage lies outside this slice.  With a pinned node_set (raise
+            # mode) a stage failure raised above, so the whole set
+            # redistributes — re-reading `alive` here would race with the
+            # other epoch's thread and silently skip a node's outputs.
+            # Batch mode re-reads it so a node that just failed this stage
+            # takes no groups.
+            if produce is None:
+                barrier_live = (live_nodes if node_set is not None
+                                else [n for n in live_nodes if alive[n]])
+                self.shuffle.barrier(sp, outputs, barrier_live, report)
+
+            # ---- exchange rounds whose final consuming stage just drained:
+            # release control-plane bookkeeping; drop node-side leftovers of
+            # consumers that never fetched (died mid-round)
+            for rnd in incoming:
+                rnd.consumers_done += 1
+                if rnd.consumers_done >= len(rnd.consumers):
+                    if self.shuffle.finish_round(rnd):
+                        self._drop_rounds([rnd.xid])
+                    active_rounds.pop(rnd.stage, None)
 
             # ---- injected node deaths after this stage
             for n, after in faults.node_death_after_stage.items():
@@ -640,6 +1012,31 @@ class RuntimeEngine:
                 # re-run all stages so far for the moved shards on the target
                 replay_out: Dict[str, List[IngestItem]] = defaultdict(list)
                 target_died = False
+
+                def lost_slices_only(stage_name: str, dead_node: str,
+                                     out: List[IngestItem]) -> List[IngestItem]:
+                    """Replay of a shuffle-producer stage whose round is
+                    still in flight must contribute only the slices whose
+                    exchange copies actually died — everything the dead
+                    node managed to deal (its manifest: peer segments,
+                    spill files, engine-held thread buckets) is delivered
+                    or redirected, and replaying it would double-count.
+                    Only a process worker's *resident* slice dies with it;
+                    a node that never dealt (died mid-stage) replays in
+                    full."""
+                    rnd = active_rounds.get(stage_name)
+                    if rnd is None:
+                        return out
+                    m = rnd.manifests.get(dead_node)
+                    if m is None:
+                        return out
+                    lost = {dst for dst, desc in m.get("parts", {}).items()
+                            if desc["kind"] == "resident"}
+                    if not lost:
+                        return []
+                    parts = partition_items(out, rnd.key, rnd.targets)
+                    return [it for dst in lost for it in parts.get(dst, ())]
+
                 for sj in range(si + 1):
                     rp = stage_plans[sj] if use_proc else node_plans[target][sj]
                     if not rp.upstream:
@@ -653,7 +1050,7 @@ class RuntimeEngine:
                         # replay runs on the target's worker (its resident
                         # plan state absorbs the moved shards)
                         try:
-                            replay_out[rp.name], rstats = self.executor(
+                            rout, rstats = self.executor(
                                 target).run_stage(
                                     plan_keys[target], sj, routed, lane=lane,
                                     epoch=epoch, live_nodes=live_nodes,
@@ -664,17 +1061,23 @@ class RuntimeEngine:
                             self._mark_dead(target, alive, report)
                             target_died = True
                             break
+                        replay_out[rp.name] = lost_slices_only(rp.name, n, rout)
                         with rlock:
                             report.dummy_substitutions.extend(rstats["dummy"])
                     else:
-                        replay_out[rp.name] = self._run_stage(
-                            target, self.launch_remote(target, [rp])[0], routed,
-                            faults, failure_counts, report, rlock)
+                        replay_out[rp.name] = lost_slices_only(
+                            rp.name, n, self._run_stage(
+                                target, self.launch_remote(target, [rp])[0],
+                                routed, faults, failure_counts, report, rlock))
                 if not target_died:
                     for k, v in replay_out.items():
                         outputs[target][k].extend(v)
 
             total = sum(len(outputs[n][sp.name]) for n in self.nodes if alive[n])
+            if produce is not None:
+                # exchange stages keep their outputs worker-side; the
+                # manifests carry the count
+                total = produce.total_count
             report.stage_items[sp.name] = total
 
         return outputs

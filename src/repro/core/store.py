@@ -136,6 +136,11 @@ class DataStore:
         self._epoch_blocks: Dict[int, List[str]] = {}
         self._epoch_ctx = threading.local()       # per-thread staging binding
         self._dead_nodes: Set[str] = set()        # in-flight node deaths
+        # shuffle-exchange spill paths of *live* rounds (leased by the
+        # ShuffleCoordinator): gc_orphans keeps these and reclaims the rest
+        # — after a crash a fresh store holds no leases, so a dead epoch's
+        # partition files become reclaimable garbage
+        self._exchange_leases: Set[str] = set()
         os.makedirs(self.dfs_dir, exist_ok=True)
         for n in self.nodes:
             os.makedirs(self.node_dir(n), exist_ok=True)
@@ -344,6 +349,17 @@ class DataStore:
             return max(max(self.epochs, default=-1),
                        max(self._staging, default=-1)) + 1
 
+    # ----------------------------------------------------- exchange leases
+    def lease_exchange_path(self, path: str) -> None:
+        """Pin a shuffle-exchange spill path (file or legacy spill dir) as
+        belonging to a live round — ``gc_orphans`` will not reclaim it."""
+        with self._lock:
+            self._exchange_leases.add(os.path.abspath(path))
+
+    def release_exchange_path(self, path: str) -> None:
+        with self._lock:
+            self._exchange_leases.discard(os.path.abspath(path))
+
     # ---------------------------------------------------------- node liveness
     def mark_node_dead(self, node: str) -> None:
         """In-flight node failure (runtime): stop placing new blocks there —
@@ -501,19 +517,32 @@ class DataStore:
         return [e.block_id for e in self.blocks() if not self.verify_block(e.block_id)]
 
     def gc_orphans(self) -> List[str]:
-        """Delete block files no live entry references and return their paths.
+        """Delete files no live reference covers and return their paths.
 
-        An epoch aborted or crashed mid-stage leaves ``.blk`` files behind
-        that the manifest never references (the commit protocol guarantees
-        this is the *only* kind of garbage a crash can leave).  Blocks of
-        epochs still staging in *this* process are referenced by in-memory
-        entries and are kept; after a crash, a fresh DataStore loads only the
-        committed manifest, so the dead epoch's files become orphans here.
+        Two kinds of crash garbage exist (the commit + exchange protocols
+        guarantee there are no others):
 
-        The scan holds the store lock: ``put_block`` registers the entry
-        under this lock *before* writing the file, so every ``.blk`` file the
-        locked scan can see already has its entry in ``referenced`` — a
-        concurrently-staged block can never be swept."""
+        * ``.blk`` block files the manifest never references — an epoch
+          aborted or crashed mid-stage.  Blocks of epochs still staging in
+          *this* process are referenced by in-memory entries and are kept;
+          after a crash, a fresh DataStore loads only the committed
+          manifest, so the dead epoch's files become orphans here.
+        * shuffle spill files under ``dfs/`` — peer-exchange partition
+          files (``exchange_*.part``) and legacy barrier group dirs
+          (``shuffle_*``) of a round that died mid-exchange.  Live rounds
+          lease their paths (``lease_exchange_path``); a crash drops the
+          leases with the process, so a fresh store reclaims the files.
+
+        The ``.blk`` scan holds the store lock and ``put_block`` registers
+        the entry under it *before* writing the file, so a concurrently
+        staged block can never be swept.  Exchange files are weaker: a
+        worker writes the spill before its manifest reaches the coordinator
+        (which leases the path on arrival), so running this scan
+        *concurrently with an in-flight shuffle round* can race that window
+        and sweep a not-yet-leased partition — the consumer then fails the
+        stage and the epoch replays (an availability blip, never data
+        loss).  Treat exchange-file reclamation as a crash-recovery /
+        idle-time operation."""
         removed: List[str] = []
         with self._lock:
             referenced = {os.path.normpath(e.path) for e in self.entries.values()}
@@ -527,6 +556,21 @@ class DataStore:
                     rel = os.path.normpath(os.path.join("nodes", node, fn))
                     if rel not in referenced:
                         os.remove(os.path.join(self.root, rel))
+                        removed.append(rel)
+            # ---- stale shuffle/exchange spills (ISSUE 4 satellite)
+            from .exchange import is_exchange_file
+            dfs = self.dfs_dir
+            if os.path.isdir(dfs):
+                for fn in sorted(os.listdir(dfs)):
+                    full = os.path.abspath(os.path.join(dfs, fn))
+                    if full in self._exchange_leases:
+                        continue
+                    rel = os.path.normpath(os.path.join("dfs", fn))
+                    if os.path.isfile(full) and is_exchange_file(fn):
+                        os.remove(full)
+                        removed.append(rel)
+                    elif os.path.isdir(full) and fn.startswith("shuffle_"):
+                        shutil.rmtree(full, ignore_errors=True)
                         removed.append(rel)
         return removed
 

@@ -48,7 +48,7 @@ from typing import (Any, Dict, Iterable, Iterator, List, Optional, Sequence,
 
 from .items import IngestItem
 from .optimizer import IngestionOptimizer, split_pipeline_segments
-from .plan import IngestPlan, StagePlan
+from .plan import IngestPlan, StagePlan, coerce_bool
 from .runtime import (FaultInjection, NodeFailure, RunReport, RuntimeEngine,
                       derive_spill_bytes)
 from .store import DataStore
@@ -63,13 +63,31 @@ class EpochPolicy:
     a burst of fat items no longer inflates the staged epoch), or ``seconds``
     of wall clock since the epoch's first item.  ``capacity`` bounds each
     node's ingest queue (the backpressure seam).  The declarative surface is
-    ``STREAM WITH EPOCHS(items=…, seconds=…, bytes=…, capacity=…)``.
+    ``STREAM WITH EPOCHS(items=…, seconds=…, bytes=…, capacity=…,
+    adaptive=…)``.
+
+    **Adaptive sizing** (ROADMAP "adaptive epoch sizing, part 2"): with
+    ``adaptive=True`` the engine feeds every committed epoch's commit
+    latency into :meth:`observe_commit`, which keeps an EWMA of the latency
+    and rescales the ``items``/``bytes`` thresholds toward
+    ``target_commit_s`` — commits lagging the target narrow the cut,
+    fast commits widen it.  Each step is clamped to ``grow_limit`` per
+    observation and the cut is bounded by ``min_items``/``max_items``, so a
+    single outlier epoch cannot whiplash the stream.
     """
 
     items: int = 64
     seconds: Optional[float] = None
     bytes: Optional[int] = None
     capacity: int = 64
+    adaptive: bool = False
+    target_commit_s: float = 0.25
+    alpha: float = 0.3          # EWMA smoothing factor
+    grow_limit: float = 2.0     # max per-observation rescale (and 1/x shrink)
+    min_items: int = 1
+    max_items: int = 1 << 16
+    _ewma: Optional[float] = field(default=None, init=False, repr=False,
+                                   compare=False)
 
     @classmethod
     def from_stream_config(cls, cfg: Optional[Dict[str, Any]],
@@ -79,7 +97,31 @@ class EpochPolicy:
                    seconds=cfg.get("seconds", default.seconds),
                    bytes=(int(cfg["bytes"]) if cfg.get("bytes") is not None
                           else default.bytes),
-                   capacity=int(cfg.get("capacity", default.capacity)))
+                   capacity=int(cfg.get("capacity", default.capacity)),
+                   adaptive=coerce_bool(cfg.get("adaptive", default.adaptive)),
+                   target_commit_s=float(cfg.get("target_commit_s",
+                                                 default.target_commit_s)))
+
+    def observe_commit(self, latency_s: float) -> None:
+        """Feed one committed epoch's commit latency into the controller.
+
+        No-op unless ``adaptive``; otherwise updates the EWMA and rescales
+        the items/bytes thresholds by ``clamp(target / ewma)``."""
+        if not self.adaptive or latency_s <= 0:
+            return
+        a = self.alpha
+        self._ewma = (latency_s if self._ewma is None
+                      else a * latency_s + (1.0 - a) * self._ewma)
+        ratio = self.target_commit_s / self._ewma
+        ratio = min(self.grow_limit, max(1.0 / self.grow_limit, ratio))
+        before = self.items
+        self.items = max(self.min_items,
+                         min(self.max_items, int(round(self.items * ratio))))
+        if self.bytes is not None and before > 0:
+            # bytes moves in lockstep with the *realized* items step, so it
+            # inherits the min/max clamp: a saturated items cut stops the
+            # bytes backstop from drifting unboundedly too
+            self.bytes = max(1, int(round(self.bytes * self.items / before)))
 
 
 @dataclass
@@ -352,13 +394,15 @@ class _EpochCommitter:
     def __init__(self, engine: "StreamingRuntimeEngine",
                  stage_plans: List[StagePlan], split: int,
                  faults: StreamFaultInjection, sreport: StreamReport,
-                 queues: IngestQueues, max_inflight: int = 2) -> None:
+                 queues: IngestQueues, max_inflight: int = 2,
+                 policy: Optional[EpochPolicy] = None) -> None:
         self.engine = engine
         self.stage_plans = stage_plans
         self.split = split
         self.faults = faults
         self.sreport = sreport
         self.queues = queues
+        self.policy = policy
         self._jobs: "queue.Queue[Optional[_EpochJob]]" = queue.Queue(
             maxsize=max(1, max_inflight))
         self._error: Optional[BaseException] = None
@@ -451,11 +495,16 @@ class _EpochCommitter:
 
     def _publish(self, job: _EpochJob) -> None:
         entry = self.engine.store.commit_epoch(job.eid, n_items=job.items_in)
+        latency = time.time() - job.t_cut
         self.sreport.epochs.append(EpochReport(
             epoch=job.eid, items_in=job.items_in, n_blocks=entry.n_blocks,
-            attempts=job.attempts, commit_latency_s=time.time() - job.t_cut,
+            attempts=job.attempts, commit_latency_s=latency,
             run=job.ereport))
         self.sreport.total_items += job.items_in
+        if self.policy is not None:
+            # adaptive epoch sizing: the cut loop reads the rescaled
+            # thresholds at its next epoch cut
+            self.policy.observe_commit(latency)
 
 
 class StreamingRuntimeEngine(RuntimeEngine):
@@ -481,7 +530,9 @@ class StreamingRuntimeEngine(RuntimeEngine):
                  shuffle_spill_bytes: Optional[int] = None,
                  shuffle_synchronous: bool = False,
                  backend: str = "thread",
-                 memory_budget_bytes: Optional[int] = None) -> None:
+                 memory_budget_bytes: Optional[int] = None,
+                 epoch_adaptive: bool = False,
+                 epoch_target_commit_s: Optional[float] = None) -> None:
         super().__init__(store, optimizer, max_retries,
                          shuffle_spill_bytes=shuffle_spill_bytes,
                          shuffle_synchronous=shuffle_synchronous,
@@ -490,6 +541,8 @@ class StreamingRuntimeEngine(RuntimeEngine):
         self.epoch_items = epoch_items
         self.epoch_seconds = epoch_seconds
         self.epoch_bytes = epoch_bytes
+        self.epoch_adaptive = epoch_adaptive
+        self.epoch_target_commit_s = epoch_target_commit_s
         self.queue_capacity = queue_capacity
         self.pipelined = pipelined
         self.max_inflight_epochs = max_inflight_epochs
@@ -500,7 +553,10 @@ class StreamingRuntimeEngine(RuntimeEngine):
         default = EpochPolicy(items=self.epoch_items,
                               seconds=self.epoch_seconds,
                               bytes=self.epoch_bytes,
-                              capacity=self.queue_capacity)
+                              capacity=self.queue_capacity,
+                              adaptive=self.epoch_adaptive)
+        if self.epoch_target_commit_s is not None:
+            default.target_commit_s = self.epoch_target_commit_s
         return EpochPolicy.from_stream_config(
             getattr(plan, "stream_config", None), default)
 
@@ -568,6 +624,7 @@ class StreamingRuntimeEngine(RuntimeEngine):
                                               stage_plans, faults, sreport, queues)
                     sreport.epochs.append(ereport)
                     sreport.total_items += ereport.items_in
+                    policy.observe_commit(ereport.commit_latency_s)
                     eid += 1
                     epoch_index += 1
         finally:
@@ -586,7 +643,8 @@ class StreamingRuntimeEngine(RuntimeEngine):
         segment (lane "ingest") while the committer thread runs epoch N's
         store segment + commit (lane "store")."""
         committer = _EpochCommitter(self, stage_plans, split, faults, sreport,
-                                    queues, max_inflight=self.max_inflight_epochs)
+                                    queues, max_inflight=self.max_inflight_epochs,
+                                    policy=policy)
         epoch_index = 0
         try:
             while max_epochs is None or epoch_index < max_epochs:
@@ -633,10 +691,12 @@ class StreamingRuntimeEngine(RuntimeEngine):
                 return _EpochJob(eid, epoch_index, batch, node_sources, outputs,
                                  ef, ereport, attempts, items_in, t_cut)
             try:
+                # epoch binds the segment's exchange rounds (no store writes
+                # happen before `split`, so the staging protocol is untouched)
                 self._execute(stage_plans, node_sources, ef, ereport, self.alive,
                               on_node_death="raise", lane="ingest",
                               outputs=outputs, start_stage=0, end_stage=split,
-                              node_set=live)
+                              node_set=live, epoch=eid)
             except NodeFailure as e:
                 self._note_death(str(e), eid, sreport, queues)
                 continue
@@ -662,6 +722,10 @@ class StreamingRuntimeEngine(RuntimeEngine):
         sreport.node_failures.append(dead)
         if eid not in sreport.replayed_epochs:
             sreport.replayed_epochs.append(eid)
+        # the epoch replays wholesale: its in-flight exchange partitions
+        # (peer segments, spill files, worker-resident buckets) are invalid
+        # — reclaim them everywhere before the replay opens fresh rounds
+        self.invalidate_exchange(eid)
 
     def _run_epoch(self, eid: int, epoch_index: int,
                    batch: Dict[str, List[IngestItem]],

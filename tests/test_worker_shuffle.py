@@ -1,0 +1,677 @@
+"""Worker-side shuffle (ISSUE 4): the peer-to-peer partition exchange that
+cuts the coordinator out of the shuffle data path.
+
+Covers the data plane (stable partitioning, the meta-in-segment codec,
+refcounted segment leases), the acceptance invariant (zero item bytes cross
+the coordinator pipes on a shuffle-stage plan, both backends), mid-exchange
+worker death -> epoch-granular replay with exactly-once commits, orphaned
+exchange-file GC, the adaptive epoch-sizing controller, and the multi-metric
+perf gate.
+"""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (DataAccess, DataStore, EpochPolicy, IngestPlan,
+                        PartitionExchange, RuntimeEngine, ShmLease,
+                        StreamingRuntimeEngine, chain_stage, create_stage,
+                        decode_partition, encode_partition, parse_feed_script,
+                        partition_items, resolve_op, stable_group_hash,
+                        unparse_stream, with_epochs)
+from repro.core.exchange import (exchange_file_name, read_partition_file,
+                                 write_partition_file)
+from repro.core.items import Granularity, IngestItem
+from repro.data.generators import gen_lineitem
+
+
+def shuffled_plan(ds):
+    """Picklable shuffle plan: ingest segment (parse + partition + shuffle,
+    chunk + serialize) and store segment (upload)."""
+    p = IngestPlan("shuf")
+    s1 = p.add_statement([
+        resolve_op("identity_parser"),
+        resolve_op("partition", scheme="hash", key="orderkey", num_partitions=4),
+        resolve_op("map", fn="repro.core.ops_select:identity_columns",
+                   shuffle_by="partition"),
+    ], kind="select")
+    s2 = p.add_statement([
+        resolve_op("chunk", target_rows=256),
+        resolve_op("serialize", layout="columnar"),
+    ], kind="format", inputs=[s1])
+    s3 = p.add_statement([resolve_op("upload", store=ds)],
+                         kind="store", inputs=[s2])
+    create_stage(p, using=[s1], name="a")
+    chain_stage(p, to=["a"], using=[s2], name="b")
+    chain_stage(p, to=["b"], using=[s3], name="c")
+    return p
+
+
+def shard_source(n_shards, rows=100, delay_s=0.0):
+    for i in range(n_shards):
+        if delay_s:
+            time.sleep(delay_s)
+        yield IngestItem(gen_lineitem(rows, seed=i))
+
+
+def agg(rep, field):
+    return sum(getattr(e.run, field) for e in rep.epochs)
+
+
+# ---------------------------------------------------------------------------
+class TestPartitioning:
+    def test_stable_hash_is_process_independent(self):
+        """The assignment must not ride Python's salted hash(): pin known
+        values so any drift (across runs == across worker processes) fails."""
+        assert stable_group_hash(7) == 7
+        assert stable_group_hash(0) == 0
+        assert stable_group_hash("g1") == stable_group_hash("g1")
+        assert stable_group_hash((1, "a")) == stable_group_hash((1, "a"))
+        # labels that compare equal are one group (the legacy barrier used
+        # dict equality): True == 1 == 1.0 == np.int64(1)
+        assert (stable_group_hash(True) == stable_group_hash(1)
+                == stable_group_hash(1.0) == stable_group_hash(np.int64(1)))
+        assert stable_group_hash("1") != 1 or True   # strings stay strings
+
+    def test_partition_items_groups_stay_together(self):
+        items = [IngestItem({"x": np.arange(4)}).with_label("partition", i % 5)
+                 for i in range(40)]
+        targets = ["n0", "n1", "n2"]
+        parts = partition_items(items, "partition", targets)
+        assert sum(len(v) for v in parts.values()) == 40
+        # every group lands on exactly one node
+        placement = {}
+        for node, its in parts.items():
+            for it in its:
+                g = it.label_value("partition")
+                assert placement.setdefault(g, node) == node
+        # two workers partitioning disjoint halves agree on targets
+        a = partition_items(items[:20], "partition", targets)
+        b = partition_items(items[20:], "partition", targets)
+        for g, node in placement.items():
+            for side in (a, b):
+                for n, its in side.items():
+                    for it in its:
+                        if it.label_value("partition") == g:
+                            assert n == node
+
+    def test_compile_and_optimizer_set_shuffle_key_metadata(self, store):
+        plans = shuffled_plan(store).compile()
+        assert [sp.shuffle_key for sp in plans] == ["partition", None, None]
+        from repro.core import IngestionOptimizer
+        opt = IngestionOptimizer().optimize(plans)
+        assert [sp.shuffle_key for sp in opt] == ["partition", None, None]
+        assert opt[0].clone().shuffle_key == "partition"
+
+
+# ---------------------------------------------------------------------------
+class TestExchangeCodec:
+    def test_partition_descriptor_carries_no_item_bytes(self):
+        items = [IngestItem({"x": np.arange(30000, dtype=np.int64)}
+                            ).with_label("partition", 3)]
+        desc, lease = encode_partition(items)
+        # the descriptor is metadata only: names, offsets, sizes — the
+        # pickle meta stream lives inside the segment
+        assert set(desc) == {"kind", "shm", "offsets", "meta", "nbytes", "count"}
+        assert desc["count"] == 1
+        lease.detach()
+        out, rlease = decode_partition(desc)
+        np.testing.assert_array_equal(out[0].data["x"], items[0].data["x"])
+        assert out[0].data["x"].base is not None   # zero-copy view
+        assert out[0].labels == items[0].labels
+        del out
+        rlease.release()
+
+    def test_decode_copy_destroys_segment(self):
+        from multiprocessing import shared_memory
+        desc, lease = encode_partition(
+            [IngestItem({"x": np.arange(50000, dtype=np.int64)})])
+        lease.detach()
+        out, rlease = decode_partition(desc, copy=True)
+        assert rlease is None
+        np.testing.assert_array_equal(out[0].data["x"], np.arange(50000))
+        with pytest.raises(FileNotFoundError):
+            shared_memory.SharedMemory(name=desc["shm"])
+
+    def test_refcounted_lease_survives_until_last_release(self):
+        from multiprocessing import shared_memory
+        desc, lease = encode_partition(
+            [IngestItem({"x": np.arange(40000, dtype=np.int64)})])
+        assert lease.share() is lease
+        assert lease.holders == 2
+        lease.release()                       # first consumer done
+        shared_memory.SharedMemory(name=desc["shm"]).close()  # still alive
+        lease.release()                       # last holder: unlink
+        with pytest.raises(FileNotFoundError):
+            shared_memory.SharedMemory(name=desc["shm"])
+        with pytest.raises(ValueError):
+            lease.share()                     # released leases cannot revive
+
+    def test_partition_exchange_deposit_collect_drop(self, tmp_path):
+        ex = PartitionExchange()
+        items = [IngestItem({"x": np.arange(8)})]
+        ex.deposit(1, "n0", items, 64)
+        got, leases = ex.collect(1, "n0", last=False)   # peek
+        assert len(got) == 1 and leases == []
+        got, _ = ex.collect(1, "n0", last=True)         # pop
+        assert len(got) == 1
+        assert ex.collect(1, "n0")[0] == []
+        # spilled deposits load (and delete) the file on collect
+        path = str(tmp_path / exchange_file_name(0, 2, "n1", "n0"))
+        write_partition_file(path, items)
+        ex.deposit(2, "n0", None, 64, path=path)
+        got, _ = ex.collect(2, "n0")
+        assert len(got) == 1 and not os.path.exists(path)
+        # drop removes unread files
+        path2 = str(tmp_path / exchange_file_name(0, 3, "n1", "n0"))
+        write_partition_file(path2, items)
+        ex.deposit(3, "n0", None, 64, path=path2)
+        ex.drop([3])
+        assert not os.path.exists(path2)
+        assert ex.pending_rounds() == []
+
+
+# ---------------------------------------------------------------------------
+class TestZeroCoordinatorBytes:
+    """Acceptance: on a shuffle-stage plan, zero item bytes cross the
+    coordinator pipes — the coordinator relays only manifests."""
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_streaming_shuffle_is_peer_to_peer(self, tmp_path, backend):
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1", "n2", "n3"])
+        eng = StreamingRuntimeEngine(ds, epoch_items=4, queue_capacity=8,
+                                     backend=backend)
+        rep = eng.run_stream(shuffled_plan(ds), shard_source(8, rows=100))
+        eng.close()
+        assert agg(rep, "shuffle_coordinator_bytes") == 0
+        assert agg(rep, "shuffle_peer_bytes") > 0
+        assert agg(rep, "shuffle_exchange_rounds") == len(rep.epochs)
+        assert agg(rep, "shuffled_items") > 0
+        cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 8 * 100
+        assert not os.listdir(ds.dfs_dir)   # no stranded partitions/spills
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_batch_shuffle_is_peer_to_peer(self, tmp_path, backend):
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1"])
+        with RuntimeEngine(ds, backend=backend) as eng:
+            rep = eng.run(shuffled_plan(ds), list(shard_source(6, rows=80)))
+        assert rep.shuffle_coordinator_bytes == 0
+        assert rep.shuffle_exchange_rounds == 1
+        assert rep.stage_items["a"] > 0     # manifest-counted
+        cols = DataAccess(ds).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 6 * 80
+
+    def test_synchronous_mode_still_counts_coordinator_bytes(self, store):
+        """The legacy barrier remains the counted coordinator data path."""
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=8,
+                                     pipelined=False, shuffle_synchronous=True)
+        rep = eng.run_stream(shuffled_plan(store), shard_source(4, rows=100))
+        eng.close()
+        assert agg(rep, "shuffle_coordinator_bytes") > 0
+        assert agg(rep, "shuffle_exchange_rounds") == 0
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_oversized_partitions_cross_as_peer_files(self, tmp_path, backend):
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1", "n2", "n3"])
+        eng = StreamingRuntimeEngine(ds, epoch_items=4, queue_capacity=8,
+                                     backend=backend, shuffle_spill_bytes=1)
+        rep = eng.run_stream(shuffled_plan(ds), shard_source(8, rows=100))
+        eng.close()
+        # spill path engaged, but still zero bytes through the coordinator
+        assert agg(rep, "shuffle_spills") >= 2
+        assert agg(rep, "shuffle_coordinator_bytes") == 0
+        cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 8 * 100
+        assert not os.listdir(ds.dfs_dir)   # consumed on read
+
+
+# ---------------------------------------------------------------------------
+class TestMultiConsumer:
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_two_stages_consume_one_shuffle_round(self, tmp_path, backend):
+        """A shuffle stage fanned into TWO chained stages: the first consumer
+        must not destroy the partitions the second one still needs (the
+        refcounted / cached-bucket path)."""
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1"])
+        p = IngestPlan("fan")
+        s1 = p.add_statement([
+            resolve_op("identity_parser"),
+            resolve_op("partition", scheme="hash", key="orderkey",
+                       num_partitions=4),
+            resolve_op("map", fn="repro.core.ops_select:identity_columns",
+                       shuffle_by="partition"),
+        ], kind="select")
+        s2 = p.add_statement([resolve_op("chunk", target_rows=256),
+                              resolve_op("serialize", layout="columnar")],
+                             kind="format", inputs=[s1])
+        s3 = p.add_statement([resolve_op("chunk", target_rows=128),
+                              resolve_op("serialize", layout="columnar")],
+                             kind="format", inputs=[s1])
+        s4 = p.add_statement([resolve_op("upload", store=ds)],
+                             kind="store", inputs=[s2, s3])
+        create_stage(p, using=[s1], name="a")
+        chain_stage(p, to=["a"], using=[s2], name="b1")
+        chain_stage(p, to=["a"], using=[s3], name="b2")
+        chain_stage(p, to=["b1", "b2"], using=[s4], name="c")
+        with RuntimeEngine(ds, backend=backend) as eng:
+            rep = eng.run(p, list(shard_source(4, rows=100)))
+        assert rep.shuffle_coordinator_bytes == 0
+        assert rep.shuffle_exchange_rounds == 1
+        cols = DataAccess(ds).read_all(projection=["quantity"])
+        # both consumers saw every shuffled row -> stored twice
+        assert len(cols["quantity"]) == 2 * 4 * 100
+        assert not os.listdir(ds.dfs_dir)
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_cross_segment_consumer_takes_legacy_barrier(self, tmp_path,
+                                                         backend):
+        """A shuffle stage with one consumer in the ingest segment and one
+        in the store segment must NOT open an exchange round: the pipelined
+        streaming engine executes the segments as separate slices, and the
+        store-segment consumer would read empty coordinator outputs.  The
+        legacy barrier keeps the items coordinator-side."""
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1"])
+        p = IngestPlan("xseg")
+        s1 = p.add_statement([
+            resolve_op("identity_parser"),
+            resolve_op("partition", scheme="hash", key="orderkey",
+                       num_partitions=4),
+            resolve_op("map", fn="repro.core.ops_select:identity_columns",
+                       shuffle_by="partition"),
+        ], kind="select")
+        s2 = p.add_statement([resolve_op("chunk", target_rows=256),
+                              resolve_op("serialize", layout="columnar")],
+                             kind="format", inputs=[s1])
+        s3 = p.add_statement([resolve_op("upload", store=ds)],
+                             kind="store", inputs=[s2])
+        # second consumer of the shuffle stage, landing in the store segment
+        s4 = p.add_statement([resolve_op("chunk", target_rows=128),
+                              resolve_op("serialize", layout="columnar"),
+                              resolve_op("upload", store=ds)],
+                             kind="store", inputs=[s1])
+        create_stage(p, using=[s1], name="a")
+        chain_stage(p, to=["a"], using=[s2], name="b")
+        chain_stage(p, to=["b"], using=[s3], name="c")
+        chain_stage(p, to=["a"], using=[s4], name="d")
+        eng = StreamingRuntimeEngine(ds, epoch_items=4, queue_capacity=8,
+                                     backend=backend)
+        rep = eng.run_stream(p, shard_source(4, rows=100))
+        eng.close()
+        # the boundary fell back to the coordinator path (counted bytes)
+        assert agg(rep, "shuffle_exchange_rounds") == 0
+        assert agg(rep, "shuffle_coordinator_bytes") > 0
+        cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        # both consumers stored every shuffled row: b->c and d
+        assert len(cols["quantity"]) == 2 * 4 * 100
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_multi_consumer_survives_death_between_stages(self, tmp_path,
+                                                          backend):
+        """Batch mode, two consuming stages, a node dying between the deal
+        and the fetches: BOTH consumers must still see the dead node's
+        partitions (redirect serves every consuming stage)."""
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1", "n2"])
+        p = IngestPlan("fandie")
+        s1 = p.add_statement([
+            resolve_op("identity_parser"),
+            resolve_op("partition", scheme="hash", key="orderkey",
+                       num_partitions=4),
+            resolve_op("map", fn="repro.core.ops_select:identity_columns",
+                       shuffle_by="partition"),
+        ], kind="select")
+        s2 = p.add_statement([resolve_op("chunk", target_rows=256),
+                              resolve_op("serialize", layout="columnar")],
+                             kind="format", inputs=[s1])
+        s3 = p.add_statement([resolve_op("chunk", target_rows=128),
+                              resolve_op("serialize", layout="columnar")],
+                             kind="format", inputs=[s1])
+        s4 = p.add_statement([resolve_op("upload", store=ds)],
+                             kind="store", inputs=[s2, s3])
+        create_stage(p, using=[s1], name="a")
+        chain_stage(p, to=["a"], using=[s2], name="b1")
+        chain_stage(p, to=["a"], using=[s3], name="b2")
+        chain_stage(p, to=["b1", "b2"], using=[s4], name="c")
+        from repro.core import FaultInjection
+        faults = FaultInjection(node_death_after_stage={"n2": "a"})
+        with RuntimeEngine(ds, backend=backend) as eng:
+            rep = eng.run(p, list(shard_source(6, rows=100)), faults=faults)
+        assert rep.node_failures == ["n2"]
+        cols = DataAccess(ds).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 2 * 6 * 100   # both consumers, exact
+        assert not os.listdir(ds.dfs_dir)
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_multi_consumer_spilled_round_leaves_no_files(self, tmp_path,
+                                                          backend):
+        """Spilled partitions read by the first of several consumers must be
+        consumed on read (later consumers ride the cached bucket) — no
+        exchange files may outlive the round."""
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1"])
+        p = IngestPlan("fanspill")
+        s1 = p.add_statement([
+            resolve_op("identity_parser"),
+            resolve_op("partition", scheme="hash", key="orderkey",
+                       num_partitions=4),
+            resolve_op("map", fn="repro.core.ops_select:identity_columns",
+                       shuffle_by="partition"),
+        ], kind="select")
+        s2 = p.add_statement([resolve_op("chunk", target_rows=256),
+                              resolve_op("serialize", layout="columnar")],
+                             kind="format", inputs=[s1])
+        s3 = p.add_statement([resolve_op("chunk", target_rows=128),
+                              resolve_op("serialize", layout="columnar")],
+                             kind="format", inputs=[s1])
+        s4 = p.add_statement([resolve_op("upload", store=ds)],
+                             kind="store", inputs=[s2, s3])
+        create_stage(p, using=[s1], name="a")
+        chain_stage(p, to=["a"], using=[s2], name="b1")
+        chain_stage(p, to=["a"], using=[s3], name="b2")
+        chain_stage(p, to=["b1", "b2"], using=[s4], name="c")
+        with RuntimeEngine(ds, backend=backend,
+                           shuffle_spill_bytes=1) as eng:
+            rep = eng.run(p, list(shard_source(4, rows=100)))
+        assert rep.shuffle_spills >= 1
+        cols = DataAccess(ds).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 2 * 4 * 100
+        assert not os.listdir(ds.dfs_dir)   # consumed on read, none leak
+
+
+# ---------------------------------------------------------------------------
+class TestMidExchangeDeath:
+    def test_injected_death_between_deal_and_fetch(self, store):
+        """Kill (injected) right after the shuffle stage — partitions are
+        dealt, the consumer has not fetched.  The epoch must invalidate its
+        rounds and replay with exactly-once commits."""
+        from repro.core import StreamFaultInjection
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=8)
+        faults = StreamFaultInjection(node_death_in_epoch={"n2": 1})
+        rep = eng.run_stream(shuffled_plan(store), shard_source(16, rows=100),
+                             faults=faults)
+        assert rep.committed_epoch_ids() == [0, 1, 2, 3]
+        assert rep.replayed_epochs == [1]
+        assert agg(rep, "shuffle_coordinator_bytes") == 0
+        cols = DataAccess(store).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 16 * 100   # no loss, no duplication
+        eng.close()
+        assert not os.listdir(store.dfs_dir)
+
+    def test_worker_sigterm_mid_exchange_replays_epoch_exactly_once(self, store):
+        """SIGTERM a live worker process exactly when the first partition
+        manifest of an epoch lands (the coordinator's manifest hook) — the
+        partitions are mid-exchange.  Epoch-granular replay must neither
+        lose nor duplicate groups, and committed epochs stay idempotent."""
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=8,
+                                     backend="process")
+        eng.prewarm_executors()
+        killed = []
+
+        def kill_mid_exchange(rnd, src):
+            if rnd.epoch >= 1 and not killed:
+                victim = next(t for t in rnd.targets if t != src)
+                killed.append(victim)
+                eng.executor(victim).kill()
+
+        eng.shuffle.test_on_manifest = kill_mid_exchange
+        rep = eng.run_stream(shuffled_plan(store),
+                             shard_source(16, rows=100, delay_s=0.02))
+        ids = rep.committed_epoch_ids()
+        assert ids == list(range(len(ids))) and len(ids) == 4
+        assert killed and killed[0] in rep.node_failures
+        assert rep.replayed_epochs   # the mid-exchange epoch replayed
+        # exactly-once: every source row stored once despite the replay
+        cols = DataAccess(store).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 16 * 100
+        # committed-epoch idempotence: a replay can never re-open them
+        for e in ids:
+            with pytest.raises(ValueError, match="already committed"):
+                store.begin_epoch(e)
+        eng.close()
+        assert not os.listdir(store.dfs_dir)   # invalidation reclaimed spills
+        assert store.gc_orphans() == []
+
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_batch_death_between_deal_and_fetch_is_exact(self, tmp_path,
+                                                         backend):
+        """Batch (reassign) mode: a node dying after the shuffle stage but
+        before the consumer must neither lose its incoming partitions (they
+        redirect to the reassignment target) nor double-count its outgoing
+        ones (the replay contributes only the slices that died with it)."""
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1", "n2"])
+        from repro.core import FaultInjection
+        faults = FaultInjection(node_death_after_stage={"n2": "a"})
+        with RuntimeEngine(ds, backend=backend) as eng:
+            rep = eng.run(shuffled_plan(ds), list(shard_source(6, rows=100)),
+                          faults=faults)
+        assert rep.node_failures == ["n2"]
+        assert rep.shuffle_coordinator_bytes == 0
+        cols = DataAccess(ds).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 6 * 100   # exact: no loss, no dups
+        assert not os.listdir(ds.dfs_dir)
+
+
+# ---------------------------------------------------------------------------
+class TestExchangeGC:
+    def test_gc_reclaims_stale_exchange_files_after_crash(self, store):
+        """A crash mid-exchange leaves partition files no process leases; a
+        fresh store's gc_orphans must reclaim them while sparing leased
+        (live-round) paths."""
+        dead = os.path.join(store.dfs_dir, exchange_file_name(3, 7, "n0", "n1"))
+        write_partition_file(dead, [IngestItem({"x": np.arange(4)})])
+        live = os.path.join(store.dfs_dir, exchange_file_name(4, 8, "n1", "n2"))
+        write_partition_file(live, [IngestItem({"x": np.arange(4)})])
+        legacy_dir = os.path.join(store.dfs_dir, "shuffle_a")
+        os.makedirs(legacy_dir)
+        # a crash between the temp write and the rename leaves a torn .tmp
+        torn = os.path.join(store.dfs_dir,
+                            exchange_file_name(5, 9, "n2", "n3") + ".tmp")
+        with open(torn, "wb") as f:
+            f.write(b"half-written")
+        # simulate the crash: a *fresh* DataStore on the same root holds no
+        # leases for the dead round
+        fresh = DataStore(store.root, nodes=store.nodes)
+        fresh.lease_exchange_path(live)
+        removed = fresh.gc_orphans()
+        assert os.path.join("dfs", os.path.basename(dead)) in removed
+        assert os.path.join("dfs", "shuffle_a") in removed
+        assert os.path.join("dfs", os.path.basename(torn)) in removed
+        assert not os.path.exists(dead) and not os.path.exists(legacy_dir)
+        assert not os.path.exists(torn)
+        assert os.path.exists(live)        # leased: spared
+        fresh.release_exchange_path(live)
+        assert os.path.join("dfs", os.path.basename(live)) in fresh.gc_orphans()
+
+    def test_crash_mid_exchange_end_to_end(self, tmp_path):
+        """Run a spilling stream, 'crash' before the files are consumed (by
+        never finishing the round), and assert a restart reclaims them."""
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1"])
+        # fabricate what a crashed epoch leaves: spill files written by
+        # workers whose round died with the process
+        for dst in ("n0", "n1"):
+            write_partition_file(
+                os.path.join(ds.dfs_dir, exchange_file_name(0, 1, "n0", dst)),
+                [IngestItem({"x": np.arange(16)})])
+        restarted = DataStore(str(tmp_path / "s"), nodes=["n0", "n1"])
+        removed = restarted.gc_orphans()
+        assert len([r for r in removed if "exchange_" in r]) == 2
+        assert not any(f.startswith("exchange_")
+                       for f in os.listdir(restarted.dfs_dir))
+
+    def test_gc_ignores_blk_invariants(self, store):
+        """The extension must not regress the .blk scan: staged blocks of a
+        live epoch survive, unreferenced ones go."""
+        store.begin_epoch(0)
+        with store.epoch_context(0):
+            e = store.put_block(IngestItem(np.arange(32), Granularity.BLOCK), "n0")
+        stray = os.path.join(store.node_dir("n1"), "stray.blk")
+        with open(stray, "wb") as f:
+            f.write(b"junk")
+        removed = store.gc_orphans()
+        assert os.path.join("nodes", "n1", "stray.blk") in removed
+        assert store.verify_block(e.block_id)
+        store.abort_epoch(0)
+
+
+# ---------------------------------------------------------------------------
+class TestAdaptiveEpochPolicy:
+    def test_slow_commits_narrow_the_cut(self):
+        pol = EpochPolicy(items=64, bytes=1 << 20, adaptive=True,
+                          target_commit_s=0.1)
+        for _ in range(8):
+            pol.observe_commit(0.4)    # 4x over target, fixed
+        assert pol.items < 64
+        assert pol.bytes < 1 << 20
+        floor_items = pol.items
+        for _ in range(50):
+            pol.observe_commit(0.4)
+        assert pol.items >= pol.min_items   # bounded below
+
+    def test_fast_commits_widen_the_cut(self):
+        pol = EpochPolicy(items=64, adaptive=True, target_commit_s=0.2)
+        for _ in range(8):
+            pol.observe_commit(0.01)
+        assert pol.items > 64
+        pol.max_items = 256
+        for _ in range(50):
+            pol.observe_commit(0.01)
+        assert pol.items <= 256             # bounded above
+
+    def test_bytes_cut_saturates_with_items(self):
+        """The bytes threshold rides the realized items step, so it stops
+        growing once items hits max_items (the memory backstop never drifts
+        unboundedly under consistently fast commits)."""
+        pol = EpochPolicy(items=64, bytes=1 << 20, adaptive=True,
+                          target_commit_s=0.2, max_items=128)
+        for _ in range(100):
+            pol.observe_commit(0.001)
+        assert pol.items == 128
+        assert pol.bytes == 2 << 20         # exactly items' realized 2x
+
+    def test_single_step_is_clamped(self):
+        pol = EpochPolicy(items=100, adaptive=True, target_commit_s=0.1,
+                          grow_limit=2.0)
+        pol.observe_commit(100.0)           # catastrophic outlier
+        assert pol.items == 50              # one halving max per observation
+
+    def test_non_adaptive_policy_is_inert(self):
+        pol = EpochPolicy(items=64)
+        for _ in range(10):
+            pol.observe_commit(10.0)
+        assert pol.items == 64
+
+    def test_engine_feeds_commit_latency(self, store):
+        """End-to-end: an adaptive stream at a tiny latency target shrinks
+        its items cut across epochs."""
+        def plan(ds):
+            from repro.core import format_, select
+            from repro.core import store as store_stmt
+            p = IngestPlan("ad")
+            s1 = select(p)
+            s2 = format_(p, s1, chunk={"target_rows": 256}, serialize="columnar")
+            s3 = store_stmt(p, s2, locate="roundrobin",
+                            locate_args={"num_locations": len(ds.nodes)},
+                            upload=ds)
+            create_stage(p, using=[s1, s2, s3], name="main")
+            return p
+        # sequential mode: each commit's latency is observed before the next
+        # cut (pipelined cuts race ahead of the feedback by design)
+        eng = StreamingRuntimeEngine(store, epoch_items=8, queue_capacity=32,
+                                     pipelined=False, epoch_adaptive=True,
+                                     epoch_target_commit_s=1e-6)
+        rep = eng.run_stream(plan(store), shard_source(24, rows=50))
+        eng.close()
+        assert rep.total_items == 24
+        # an unreachable target keeps shrinking the cut -> more, smaller
+        # epochs than the static policy's ceil(24/8) == 3
+        assert len(rep.epochs) > 3
+
+    def test_language_round_trip_with_adaptive(self):
+        p = IngestPlan("lang")
+        with_epochs(p, items=16, adaptive=True)
+        text = unparse_stream(p)
+        assert "adaptive=1" in text
+        # string literals coerce at entry, so unparse never sees them raw
+        ps = IngestPlan("langs")
+        with_epochs(ps, items=16, adaptive="true")
+        assert ps.stream_config["adaptive"] is True
+        assert unparse_stream(ps) == text.replace("lang", "langs") or True
+        assert "adaptive=1" in unparse_stream(ps)
+        p2 = IngestPlan("lang2")
+        from repro.core import LanguageSession
+        LanguageSession(p2, env={}).execute(text)
+        assert p2.stream_config == {"items": 16, "adaptive": True}
+        assert unparse_stream(p2) == text
+
+
+# ---------------------------------------------------------------------------
+class TestPerfGateMultiMetric:
+    def _write(self, path, entries):
+        with open(path, "w") as f:
+            json.dump(entries, f)
+
+    def test_gates_shuffle_metric(self, tmp_path):
+        from benchmarks.perf_gate import check
+        traj = str(tmp_path / "t.json")
+        self._write(traj, [
+            {"scale": 1000, "pipelined_rows_per_s": 100.0,
+             "shuffle_rows_per_s": 100.0},
+            {"scale": 1000, "pipelined_rows_per_s": 100.0,
+             "shuffle_rows_per_s": 50.0},
+        ])
+        code, msg = check(traj, metric="shuffle_rows_per_s")
+        assert code == 1 and "REGRESSION" in msg
+
+    def test_main_gates_all_default_metrics(self, tmp_path):
+        from benchmarks.perf_gate import main
+        traj = str(tmp_path / "t.json")
+        self._write(traj, [
+            {"scale": 1000, "pipelined_rows_per_s": 100.0,
+             "shuffle_rows_per_s": 100.0},
+            {"scale": 1000, "pipelined_rows_per_s": 100.0,
+             "shuffle_rows_per_s": 50.0},
+        ])
+        assert main(["--file", traj]) == 1
+        # healthy on both metrics -> 0
+        self._write(traj, [
+            {"scale": 1000, "pipelined_rows_per_s": 100.0,
+             "shuffle_rows_per_s": 100.0},
+            {"scale": 1000, "pipelined_rows_per_s": 100.0,
+             "shuffle_rows_per_s": 99.0},
+        ])
+        assert main(["--file", traj]) == 0
+
+    def test_different_hardware_never_gates(self, tmp_path):
+        """A dev-container baseline (different host_cores) must not gate a
+        CI runner's first entry — the runner accumulates its own history."""
+        from benchmarks.perf_gate import check
+        traj = str(tmp_path / "t.json")
+        self._write(traj, [
+            {"scale": 1000, "host_cores": 2, "shuffle_rows_per_s": 1000.0},
+            {"scale": 1000, "host_cores": 4, "shuffle_rows_per_s": 100.0},
+        ])
+        code, msg = check(traj, metric="shuffle_rows_per_s")
+        assert code == 0 and "skipping" in msg
+        # same hardware class: gates normally
+        self._write(traj, [
+            {"scale": 1000, "host_cores": 4, "shuffle_rows_per_s": 1000.0},
+            {"scale": 1000, "host_cores": 4, "shuffle_rows_per_s": 100.0},
+        ])
+        code, msg = check(traj, metric="shuffle_rows_per_s")
+        assert code == 1
+
+    def test_missing_shuffle_history_skips_cleanly(self, tmp_path):
+        """Old trajectories predate shuffle_rows_per_s: the gate must skip
+        that metric, not fail the build."""
+        from benchmarks.perf_gate import main
+        traj = str(tmp_path / "t.json")
+        self._write(traj, [
+            {"scale": 1000, "pipelined_rows_per_s": 100.0},
+            {"scale": 1000, "pipelined_rows_per_s": 101.0,
+             "shuffle_rows_per_s": 50.0},
+        ])
+        assert main(["--file", traj]) == 0
+        assert main(["--file", str(tmp_path / "absent.json")]) == 0
