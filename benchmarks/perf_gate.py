@@ -5,9 +5,11 @@ The nightly job appends a fresh record to ``BENCH_streaming.json``
 fresh entry's throughput metrics against the previous entry *at the same
 benchmark scale* and fails the job (exit 1) on a regression beyond the
 threshold.  Gated metrics default to ``pipelined_rows_per_s`` (the
-pipelined-core throughput) and ``shuffle_rows_per_s`` (the worker-side
-peer-exchange shuffle, ISSUE 4); ``--metric`` may be repeated to gate a
-custom set.  With fewer than two comparable entries for a metric (first
+pipelined-core throughput), ``shuffle_rows_per_s`` (the worker-side
+peer-exchange shuffle, ISSUE 4), and ``resident_rows_per_s`` (the
+node-resident dataflow on the process backend, ISSUE 5); ``--metric`` may
+be repeated to gate a custom set.  With fewer than two comparable entries
+for a metric (first
 run, wiped trajectory, pre-metric history, unreadable file) that metric
 skips cleanly — a missing history must never fail the build.
 
@@ -28,7 +30,8 @@ from typing import Tuple
 DEFAULT_FILE = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_streaming.json")
 DEFAULT_METRIC = "pipelined_rows_per_s"
-DEFAULT_METRICS = (DEFAULT_METRIC, "shuffle_rows_per_s")
+DEFAULT_METRICS = (DEFAULT_METRIC, "shuffle_rows_per_s",
+                   "resident_rows_per_s")
 DEFAULT_THRESHOLD = 0.25
 
 

@@ -14,7 +14,7 @@ Typical flow::
 from .access import DataAccess, Split
 from .catalog import Catalog
 from .exchange import (PartitionExchange, decode_partition, encode_partition,
-                       partition_items, stable_group_hash)
+                       partition_items, resident_file_name, stable_group_hash)
 from .fault import (ErasureRecovery, FaultToleranceDaemon, RecoveryUDF,
                     ReplicationRecovery, TransformationRecovery)
 from .items import (Granularity, IngestItem, Label, ShmLease, decode_items,
@@ -28,7 +28,8 @@ from .operators import (IngestOp, MaterializeOp, OperatorFailure, OpMode,
 from .optimizer import (FilterFusionRule, IngestionOptimizer, IngestOpExpr,
                         ParallelModeRule, PipelineRule, ReorderRule, Rule,
                         split_pipeline_segments)
-from .plan import IngestPlan, Stage, StagePlan, Statement, serialize_plans
+from .plan import (IngestPlan, Stage, StagePlan, Statement, annotate_edges,
+                   serialize_plans)
 from .procexec import ProcessNodeExecutor, WorkerDeath
 from .runtime import (ExchangeRound, FaultInjection, NodeExecutor,
                       NodeFailure, RunReport, RuntimeEngine,
@@ -58,9 +59,10 @@ __all__ = [
     "register_op", "registered_ops", "resolve_callable", "resolve_op",
     "FilterFusionRule", "IngestionOptimizer", "IngestOpExpr", "ParallelModeRule",
     "PipelineRule", "ReorderRule", "Rule", "split_pipeline_segments",
-    "IngestPlan", "Stage", "StagePlan", "Statement", "serialize_plans",
+    "IngestPlan", "Stage", "StagePlan", "Statement", "annotate_edges",
+    "serialize_plans",
     "PartitionExchange", "decode_partition", "encode_partition",
-    "partition_items", "stable_group_hash",
+    "partition_items", "resident_file_name", "stable_group_hash",
     "ProcessNodeExecutor", "WorkerDeath",
     "ExchangeRound", "FaultInjection", "NodeExecutor", "NodeFailure",
     "RunReport", "RuntimeEngine", "ShuffleCoordinator", "ShuffleService",

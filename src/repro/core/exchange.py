@@ -47,6 +47,9 @@ from .items import IngestItem, ShmLease, _materialize_item
 
 #: manifest/file naming shared with DataStore.gc_orphans
 EXCHANGE_PREFIX = "exchange_"
+#: resident-bucket spills (narrow edges: a stage output pinned on its own
+#: node that exceeded the per-edge memory share) — same GC family
+RESIDENT_PREFIX = "resident_"
 EXCHANGE_SUFFIX = ".part"
 
 
@@ -97,16 +100,25 @@ def partition_items(items: Sequence[IngestItem], key: str,
     return parts
 
 
-def build_manifest(out: Sequence[IngestItem], key: str,
+def build_manifest(out: Sequence[IngestItem], key: Optional[str],
                    targets: Sequence[str],
-                   part_fn: Any) -> Dict[str, Any]:
+                   part_fn: Any, self_node: Optional[str] = None
+                   ) -> Dict[str, Any]:
     """Partition a stage's output and assemble the metadata-only manifest
     the coordinator relays: ``part_fn(dst, items, nbytes) -> desc`` supplies
     the backend-specific medium (resident / segment / spill file / thread
-    bucket) per non-empty partition.  Keeping the iteration and manifest
-    shape here means both backends stay wire-compatible with
-    ``ShuffleCoordinator.record_manifest``/``finish_round``."""
-    parts = partition_items(out, key, targets)
+    bucket) per non-empty partition.  ``key=None`` is a **narrow edge**
+    (identity routing, ISSUE 5): the whole output is one partition addressed
+    to ``self_node`` — the producer itself — so it stays node-resident.
+    Keeping the iteration and manifest shape here means both backends stay
+    wire-compatible with ``ShuffleCoordinator.record_manifest`` /
+    ``finish_round``."""
+    if key is None:
+        if self_node is None:
+            raise ValueError("narrow-edge manifest needs the producing node")
+        parts: Dict[str, List[IngestItem]] = {self_node: list(out)}
+    else:
+        parts = partition_items(out, key, targets)
     manifest: Dict[str, Any] = {"total_count": len(out), "parts": {}}
     for dst, its in parts.items():
         if not its:
@@ -195,10 +207,19 @@ def exchange_file_name(epoch: Optional[int], xid: int, src: str,
     return f"{EXCHANGE_PREFIX}e{e}_x{xid}_{src}_to_{dst}{EXCHANGE_SUFFIX}"
 
 
+def resident_file_name(epoch: Optional[int], xid: int, node: str) -> str:
+    """Spill name for a narrow edge's resident bucket (the node's own stage
+    output past the per-edge share): pinned-round naming so a crash mid-slice
+    leaves a file ``gc_orphans`` recognizes as exchange garbage."""
+    e = "B" if epoch is None or epoch < 0 else str(epoch)
+    return f"{RESIDENT_PREFIX}e{e}_x{xid}_{node}{EXCHANGE_SUFFIX}"
+
+
 def is_exchange_file(fn: str) -> bool:
-    """Spill files and their torn temp halves (a crash between the temp
-    write and the rename) — both are crash garbage the store GC reclaims."""
-    return fn.startswith(EXCHANGE_PREFIX) and (
+    """Spill files — peer partitions (``exchange_*``), resident-bucket spills
+    (``resident_*``), and their torn temp halves (a crash between the temp
+    write and the rename) — all crash garbage the store GC reclaims."""
+    return fn.startswith((EXCHANGE_PREFIX, RESIDENT_PREFIX)) and (
         fn.endswith(EXCHANGE_SUFFIX) or fn.endswith(EXCHANGE_SUFFIX + ".tmp"))
 
 

@@ -136,6 +136,14 @@ class IngestItem:
         return h.hexdigest()[:16]
 
 
+def items_nbytes(items: Sequence["IngestItem"]) -> int:
+    """Total payload bytes of an item batch — the unit every dataflow byte
+    counter (`stage_coordinator_bytes`, `shuffle_peer_bytes`,
+    `stage_resident_bytes`) accounts in, so thread- and process-backend
+    numbers are comparable."""
+    return sum(it.nbytes() for it in items)
+
+
 # ---------------------------------------------------------------------------
 # Shared-memory item codec (DESIGN.md §6: the process backend's data plane)
 # ---------------------------------------------------------------------------

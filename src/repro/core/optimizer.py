@@ -23,7 +23,7 @@ import numpy as np
 from .items import Granularity
 from .operators import IngestOp, OpMode
 from .ops_select import FilterOp, ProjectOp, ReplicateOp
-from .plan import StagePlan
+from .plan import StagePlan, annotate_edges
 
 
 @dataclass
@@ -263,7 +263,9 @@ class IngestionOptimizer:
             # boundary metadata so workers partition by the surviving key
             nsp.shuffle_key = nsp.compute_shuffle_key()
             out.append(self.pipeline.rewrite(nsp))
-        return out
+        # rewrites may change shuffle/commit metadata: recompile the
+        # per-edge routing taxonomy (narrow / shuffle / cross-segment)
+        return annotate_edges(out)
 
     def explain(self, before: Sequence[StagePlan], after: Sequence[StagePlan]) -> str:
         lines = []
@@ -272,4 +274,10 @@ class IngestionOptimizer:
             lines.append("  before: " + " -> ".join(type(o).__name__ for o in b.ops))
             lines.append("  after : " + " -> ".join(type(o).__name__ for o in a.ops))
             lines.append(f"  pipeline blocks: {a.pipeline_blocks}")
+            if a.edge_kinds:
+                # the compiled routing taxonomy (DESIGN.md §4): narrow edges
+                # stay node-resident, shuffle edges partition across peers,
+                # cross-segment edges pin their round across slices
+                lines.append("  edges : " + ", ".join(
+                    f"->{c} [{k}]" for c, k in a.edge_kinds.items()))
         return "\n".join(lines)

@@ -61,6 +61,14 @@ class StagePlan:
     plan metadata, node workers partition their own output locally and
     exchange partitions peer-to-peer — the coordinator never has to inspect
     operator params or touch item bytes (DESIGN.md §4).
+
+    ``edge_kinds`` is the compiled per-edge routing taxonomy (DESIGN.md §4,
+    ISSUE 5): consumer stage name -> ``"narrow"`` (identity routing — the
+    producer's output stays resident on its own node), ``"shuffle"``
+    (partitioned across peers by ``shuffle_key``), or ``"cross-segment"``
+    (the consumer lies in the other pipeline segment, so the exchange round
+    is pinned across ``_execute`` slices).  Set by ``compile()`` and
+    recomputed by the optimizer after rule rewrites.
     """
 
     name: str
@@ -70,6 +78,7 @@ class StagePlan:
     pipeline_blocks: List[List[int]] = field(default_factory=list)
     commit_side: bool = False
     shuffle_key: Optional[str] = None
+    edge_kinds: Dict[str, str] = field(default_factory=dict)
 
     def block_of(self, op_idx: int) -> int:
         for b, idxs in enumerate(self.pipeline_blocks):
@@ -85,7 +94,8 @@ class StagePlan:
                          list(self.upstream), dict(self.predicates),
                          [list(b) for b in self.pipeline_blocks],
                          commit_side=self.commit_side,
-                         shuffle_key=self.shuffle_key)
+                         shuffle_key=self.shuffle_key,
+                         edge_kinds=dict(self.edge_kinds))
 
     def compute_commit_side(self) -> bool:
         """A stage is commit-side iff any of its operators writes the store."""
@@ -103,6 +113,45 @@ def coerce_bool(value: Any) -> bool:
     if isinstance(value, str):
         return value.strip().lower() in ("1", "true", "yes", "on")
     return bool(value)
+
+
+def annotate_edges(stage_plans: Sequence["StagePlan"]) -> List["StagePlan"]:
+    """Compile the per-edge routing taxonomy into the stage DAG (ISSUE 5).
+
+    For every producer stage the edge to each consuming stage is classified:
+
+    * ``"cross-segment"`` — producer in the ingest segment, consumer in the
+      store segment (the first commit-side stage starts the store segment):
+      the exchange round for this edge must be *pinned* across ``_execute``
+      slices so the pipelined streaming engine's store segment can consume
+      node-resident buckets the ingest segment left behind.
+    * ``"shuffle"`` — the producer has a routing key (``shuffle_key``): its
+      output is partitioned across the peers.
+    * ``"narrow"`` — identity routing: the producer's output stays resident
+      on its own node and the consumer reads it in place; no item bytes
+      cross the coordinator.
+
+    Runs after optimizer rewrites too (rules can fuse/reorder the op that
+    carries ``shuffle_by``), so the runtime always sees current metadata.
+    """
+    plans = list(stage_plans)
+    split = len(plans)
+    for i, sp in enumerate(plans):
+        if sp.commit_side or sp.compute_commit_side():
+            split = i
+            break
+    for i, sp in enumerate(plans):
+        kinds: Dict[str, str] = {}
+        shuffles = bool(sp.shuffle_key or sp.compute_shuffle_key())
+        for j in range(i + 1, len(plans)):
+            if sp.name not in plans[j].upstream:
+                continue
+            if i < split <= j:
+                kinds[plans[j].name] = "cross-segment"
+            else:
+                kinds[plans[j].name] = "shuffle" if shuffles else "narrow"
+        sp.edge_kinds = kinds
+    return plans
 
 
 def shuffle_key_of(ops: Sequence[IngestOp]) -> Optional[str]:
@@ -182,7 +231,7 @@ class IngestPlan:
             sp.commit_side = sp.compute_commit_side()
             sp.shuffle_key = sp.compute_shuffle_key()
             plans.append(sp)
-        return plans
+        return annotate_edges(plans)
 
     @staticmethod
     def _validate_chain(stage: str, ops: Sequence[IngestOp]) -> None:

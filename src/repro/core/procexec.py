@@ -63,8 +63,9 @@ import multiprocessing as mp
 
 from .exchange import (PartitionExchange, build_manifest, decode_partition,
                        encode_partition, exchange_file_name,
-                       read_partition_file, write_partition_file)
-from .items import IngestItem, ShmLease, decode_items, encode_items
+                       read_partition_file, resident_file_name,
+                       write_partition_file)
+from .items import IngestItem, ShmLease, decode_items, encode_items, items_nbytes
 from .operators import OperatorFailure, PassThroughOp
 from .plan import StagePlan, failed_op_index, route_items, serialize_plans
 from .store import BlockEntry, DataStore, prepare_block_payload
@@ -315,13 +316,23 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
     def deal_partitions(xs: Dict[str, Any], out: List[IngestItem],
                         input_leases: List[ShmLease],
                         peer_leases: List[ShmLease]) -> Dict[str, Any]:
-        """Partition a shuffle-boundary stage's output and hand it to the
-        peers: the node's own slice stays resident (holding shares of the
-        input leases it may alias), each peer slice crosses via its own
-        segment or — past the per-edge spill share — a DFS spill file.
+        """Partition an exchange-boundary stage's output and hand it out:
+        the node's own slice stays resident (holding shares of the input
+        leases it may alias) — for a narrow round (``key=None``, ISSUE 5)
+        that is the *entire* output — each peer slice crosses via its own
+        segment or, past the per-edge spill share, a DFS spill file; an
+        oversized resident slice spills under the ``resident_*`` naming.
         Returns the metadata-only manifest."""
         def part_fn(dst: str, its: List[IngestItem], nb: int) -> Dict[str, Any]:
             if dst == node:
+                if nb > xs["spill_share"]:
+                    path = os.path.join(
+                        xs["spill_dir"],
+                        resident_file_name(xs["epoch"], xs["xid"], node))
+                    write_partition_file(path, its)
+                    exchange.deposit(xs["xid"], node, None, nb, path=path)
+                    return {"kind": "resident", "count": len(its),
+                            "nbytes": nb, "spilled": path}
                 shares = [l.share() for l in input_leases]
                 exchange.deposit(xs["xid"], node, its, nb, leases=shares)
                 return {"kind": "resident", "count": len(its), "nbytes": nb}
@@ -334,7 +345,8 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
             peer_leases.append(pl)
             return desc
 
-        return build_manifest(out, xs["key"], xs["targets"], part_fn)
+        return build_manifest(out, xs["key"], xs["targets"], part_fn,
+                              self_node=node)
 
     def run_job(jid: int, plan_key: str, si: int, payload: Dict[str, Any],
                 ctx: Dict[str, Any]) -> None:
@@ -368,13 +380,18 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
             stats["worker_s"] = time.perf_counter() - t0
             xs = ctx.get("shuffle")
             if xs is not None:
-                # shuffle boundary: partitions go peer-to-peer, the reply
-                # carries only the manifest (metadata — zero item bytes
-                # cross the coordinator pipe)
+                # exchange boundary (shuffle or narrow): partitions go
+                # peer-to-peer or stay resident, the reply carries only the
+                # manifest (metadata — zero item bytes cross the
+                # coordinator pipe)
                 input_leases = [l for l in [lease, *held] if l is not None]
                 manifest = deal_partitions(xs, out, input_leases, peer_leases)
                 out_payload: Dict[str, Any] = {"kind": "xmanifest",
                                                "manifest": manifest}
+            elif ctx.get("sink"):
+                # terminal stage: outputs die here — only the count returns
+                out_payload = {"kind": "sink", "count": len(out),
+                               "nbytes": items_nbytes(out)}
             else:
                 # encode before releasing input leases: outputs may alias
                 out_payload, out_lease = encode_items(out)
@@ -406,10 +423,21 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
                 out_lease.release()
             for pl in peer_leases:
                 pl.release()
-            try:
-                pickle.dumps(e)
-            except Exception:
-                e = RuntimeError(f"{type(e).__name__}: {e}")
+            import traceback
+            tb = traceback.format_exc()
+            if isinstance(e, StopIteration):
+                # a StopIteration must not cross into Future.result() —
+                # inside a generator frame it would silently end iteration
+                # instead of surfacing; carry the worker traceback instead
+                e = RuntimeError(f"worker {node}: StopIteration escaped a "
+                                 f"stage job\n{tb}")
+            else:
+                try:
+                    pickle.dumps(e)
+                except Exception:
+                    # unpicklable: ship the worker-side traceback, which the
+                    # pickled exception would have dropped anyway
+                    e = RuntimeError(f"{type(e).__name__}: {e}\n{tb}")
             send(("fail", jid, e))
 
     while True:
@@ -535,7 +563,8 @@ class ProcessNodeExecutor:
                   injections: Optional[Dict[int, int]] = None,
                   max_retries: int = 3,
                   shuffle_ctx: Optional[Dict[str, Any]] = None,
-                  fetch_refs: Optional[List[Dict[str, Any]]] = None) -> Future:
+                  fetch_refs: Optional[List[Dict[str, Any]]] = None,
+                  sink: bool = False) -> Future:
         """Run one stage over ``items`` on the worker; resolves to
         ``(output_items, stats)`` — or ``(manifest_payload, stats)`` when
         ``shuffle_ctx`` marks the stage a shuffle boundary (the worker dealt
@@ -560,18 +589,22 @@ class ProcessNodeExecutor:
                "injections": dict(injections or {}),
                "max_retries": max_retries,
                "shuffle": dict(shuffle_ctx) if shuffle_ctx else None,
-               "fetch": list(fetch_refs) if fetch_refs else None}
+               "fetch": list(fetch_refs) if fetch_refs else None,
+               "sink": sink}
         try:
             self._send(("run", jid, plan_key, stage_idx, lane, payload, ctx))
             if lease is not None:
                 lease.detach()   # disown: consumer (or _mark_dead) unlinks
         except WorkerDeath as e:
             with self._lock:
-                self._pending.pop(jid, None)
+                known = self._pending.pop(jid, None)
                 self._inflight_shm.pop(jid, None)
             if lease is not None:
                 lease.release()
-            fut.set_exception(e)
+            if known is not None:
+                # still ours to fail; otherwise _mark_dead raced us here and
+                # already failed the future with WorkerDeath
+                fut.set_exception(e)
         return fut
 
     # -------------------------------------------------------------- receivers
@@ -589,8 +622,9 @@ class ProcessNodeExecutor:
                         continue
                     try:
                         if (isinstance(payload, dict)
-                                and payload.get("kind") == "xmanifest"):
-                            # shuffle manifest: metadata only, pass through
+                                and payload.get("kind") in ("xmanifest",
+                                                            "sink")):
+                            # exchange manifest / sink count: metadata only
                             fut.set_result((payload, stats))
                         else:
                             # copy=True: results outlive the hop (retained

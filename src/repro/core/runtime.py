@@ -41,8 +41,9 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple, Union
 
 from .exchange import (PartitionExchange, build_manifest, exchange_file_name,
-                       partition_items, unlink_segment, write_partition_file)
-from .items import IngestItem
+                       partition_items, resident_file_name, unlink_segment,
+                       write_partition_file)
+from .items import IngestItem, items_nbytes
 from .operators import IngestOp, OperatorFailure, PassThroughOp
 from .optimizer import IngestionOptimizer
 from .plan import IngestPlan, StagePlan, failed_op_index, route_items
@@ -52,6 +53,16 @@ from .store import DataStore
 
 class NodeFailure(RuntimeError):
     """Simulated machine failure during ingestion."""
+
+
+class _CohortReplay(RuntimeError):
+    """Batch-mode recovery escalation (ROADMAP "batch shuffle cohort
+    replay"): a node died at or after a shuffle-consuming stage, so its
+    processed groups mixed other nodes' lineages and cannot be recovered
+    from its own source shards.  The only exact recovery is replaying the
+    whole run as one epoch on the survivors — ``RuntimeEngine.run`` catches
+    this, aborts the run's staged epoch, invalidates its exchange rounds,
+    and re-executes on the live set."""
 
 
 #: legacy static shuffle spill threshold (used when no memory budget is set)
@@ -89,6 +100,16 @@ class RunReport:
     # partition bytes handed worker-to-worker (shm segments, spill files,
     # and the thread backend's direct in-memory deposits)
     shuffle_peer_bytes: int = 0
+    # --- node-resident dataflow (ISSUE 5): narrow stage edges -------------
+    # item bytes that crossed a coordinator pipe at a *stage boundary*
+    # (stage outputs returned to / re-shipped from the coordinator).  With
+    # the resident exchange plane this stays zero end-to-end: only the
+    # final store-stage registration metadata reaches the coordinator.
+    stage_coordinator_bytes: int = 0
+    stage_exchange_rounds: int = 0     # narrow (identity-routed) rounds
+    stage_resident_bytes: int = 0      # bytes kept node-resident across edges
+    resident_spills: int = 0           # resident buckets spilled to the DFS
+    cohort_replays: int = 0            # batch whole-run replays (post-shuffle death)
     wall_time_s: float = 0.0
     per_node_shards: Dict[str, int] = field(default_factory=dict)
 
@@ -205,7 +226,15 @@ class NodeExecutor:
 # --------------------------------------------------------------------------
 @dataclass
 class ExchangeRound:
-    """Control-plane record of one peer-to-peer shuffle round.
+    """Control-plane record of one peer-to-peer exchange round.
+
+    Since ISSUE 5 a round covers *any* stage edge, not just shuffles:
+    ``key=None`` is a **narrow** round (identity routing — every producer's
+    output stays resident on its own node), a non-None key partitions across
+    the peers.  ``pinned=True`` marks a round whose consuming stage lies
+    outside the slice that produced it (the ingest/store segment boundary):
+    it survives the ``_execute`` call in the coordinator's pinned registry
+    and the next slice adopts it.
 
     Everything here is metadata: stage/epoch identity, the pinned target
     set, per-producer manifests (counts, sizes, segment/file refs), and the
@@ -213,14 +242,16 @@ class ExchangeRound:
 
     xid: int
     stage: str
-    key: str                          # routing-key label (StagePlan.shuffle_key)
+    key: Optional[str]                # routing key; None = narrow (identity)
     epoch: int                        # -1 = batch run
     targets: List[str]                # pinned executing-node set = partition targets
-    consumers: List[str]              # consuming stage names within the slice
+    consumers: List[str]              # ALL consuming stage names (DAG order)
     spill_share: int                  # per-edge spill threshold, bytes
+    pinned: bool = False              # consumed (partly) by a later slice
     manifests: Dict[str, Dict[str, Any]] = field(default_factory=dict)
     total_count: int = 0              # items partitioned (all producers)
     total_bytes: int = 0              # peer-bound partition bytes
+    resident_bytes: int = 0           # bytes that stayed on their own node
     served: Dict[str, int] = field(default_factory=dict)   # node -> stages served
     # nodes that were ever handed refs — unlike `served` (reset when a
     # consumer fails, so finish_round reclaims best-effort), this is never
@@ -279,6 +310,10 @@ class ShuffleCoordinator:
         self._xids = itertools.count()
         self._rounds: Dict[int, ExchangeRound] = {}
         self._epoch_rounds: Dict[int, Set[int]] = {}
+        # rounds pinned across _execute slices, keyed (epoch, producing
+        # stage): the ingest segment leaves them here, the store segment
+        # adopts them (ISSUE 5 cross-segment exchange)
+        self._pinned: Dict[Tuple[int, str], ExchangeRound] = {}
         #: test hook: called as (round, producer_node) when a manifest lands
         #: — lets fault tests kill a worker exactly mid-exchange
         self.test_on_manifest: Optional[Callable[[ExchangeRound, str], None]] = None
@@ -308,33 +343,51 @@ class ShuffleCoordinator:
     def plan_round(self, stage_plans: List[StagePlan], si: int, stop: int,
                    live: List[str],
                    epoch: Optional[int]) -> Optional[ExchangeRound]:
-        """Open a peer-exchange round for stage ``si`` — or return None when
-        the boundary must take the legacy barrier (synchronous mode, no
-        shuffle key, or no consuming stage inside the executing slice)."""
+        """Open a peer-exchange round for stage ``si``'s outgoing edges.
+
+        Since ISSUE 5 every edge gets a round: shuffle edges partition by
+        the routing key (``shuffle_key``), narrow edges keep the output
+        resident on the producing node (``key=None``), and an edge whose
+        consumer lies outside the executing slice [si+1, stop) pins the
+        round across slices instead of falling back to the coordinator
+        barrier.  Returns None only for terminal stages (no consumer in the
+        DAG) and in ``synchronous`` legacy mode."""
         sp = stage_plans[si]
         if self.synchronous or not sp.ops or not live:
             return None
-        key = self._shuffle_key(sp)
-        if key is None:
+        consumers = ([c for c in sp.edge_kinds]
+                     if sp.edge_kinds else
+                     [sq.name for sq in stage_plans[si + 1:]
+                      if sp.name in sq.upstream])
+        if not consumers:
             return None
-        consumers = [sq.name for sq in stage_plans[si + 1:stop]
-                     if sp.name in sq.upstream]
-        all_consumers = [sq.name for sq in stage_plans[si + 1:]
-                         if sp.name in sq.upstream]
-        if not consumers or len(consumers) != len(all_consumers):
-            # no consumer, or a consumer outside the executing slice (a
-            # cross-segment chain): the items must outlive this _execute
-            # call in the coordinator's outputs — legacy barrier
-            return None
+        in_slice = {stage_plans[j].name for j in range(si + 1, stop)}
         rnd = ExchangeRound(
-            xid=next(self._xids), stage=sp.name, key=key,
+            xid=next(self._xids), stage=sp.name, key=self._shuffle_key(sp),
             epoch=-1 if epoch is None else epoch, targets=list(live),
             consumers=consumers,
-            spill_share=max(1, self.spill_bytes // max(1, len(live))))
+            spill_share=max(1, self.spill_bytes // max(1, len(live))),
+            pinned=any(c not in in_slice for c in consumers))
         with self._lock:
             self._rounds[rnd.xid] = rnd
             self._epoch_rounds.setdefault(rnd.epoch, set()).add(rnd.xid)
+            if rnd.pinned:
+                self._pinned[(rnd.epoch, rnd.stage)] = rnd
         return rnd
+
+    def adopt_pinned(self, epoch: Optional[int],
+                     slice_stages: Sequence[str]) -> List[ExchangeRound]:
+        """Hand a starting ``_execute`` slice the rounds an earlier slice of
+        the same epoch pinned for it (producing stage outside the slice, at
+        least one consuming stage inside).  Adoption removes the pinned
+        registration — the consuming slice owns the round's lifecycle from
+        here (``finish_round`` on drain, epoch invalidation on failure)."""
+        e = -1 if epoch is None else epoch
+        names = set(slice_stages)
+        with self._lock:
+            keys = [k for k, r in self._pinned.items()
+                    if k[0] == e and (set(r.consumers) & names)]
+            return [self._pinned.pop(k) for k in keys]
 
     def record_manifest(self, rnd: ExchangeRound, node: str,
                         manifest: Dict[str, Any]) -> None:
@@ -348,6 +401,10 @@ class ShuffleCoordinator:
                 self.store.lease_exchange_path(path)
             if dst != node:
                 rnd.total_bytes += int(desc.get("nbytes", 0))
+            else:
+                # the node's own slice: stayed resident (narrow edges keep
+                # the entire output here — zero-coordinator dataflow)
+                rnd.resident_bytes += int(desc.get("nbytes", 0))
         rnd.manifests[node] = manifest
         rnd.total_count += int(manifest.get("total_count", 0))
         if self.test_on_manifest is not None:
@@ -395,6 +452,7 @@ class ShuffleCoordinator:
         the exchanges."""
         with self._lock:
             self._rounds.pop(rnd.xid, None)
+            self._pinned.pop((rnd.epoch, rnd.stage), None)
             er = self._epoch_rounds.get(rnd.epoch)
             if er is not None:
                 er.discard(rnd.xid)
@@ -407,7 +465,10 @@ class ShuffleCoordinator:
                 fetched = rnd.served.get(dst, 0) > 0
                 path = desc.get("path") or desc.get("spilled")
                 if path:
-                    if not fetched and kind == "file":
+                    if not fetched and kind in ("file", "resident"):
+                        # an unfetched resident spill's owning worker may be
+                        # dead (its bucket died with it) — reclaim the file
+                        # here; a live holder's later drop no-ops on it
                         try:
                             os.remove(path)
                         except OSError:
@@ -428,6 +489,8 @@ class ShuffleCoordinator:
         with self._lock:
             xids = sorted(self._epoch_rounds.pop(e, ()))
             rounds = [self._rounds.pop(x) for x in xids if x in self._rounds]
+            for k in [k for k in self._pinned if k[0] == e]:
+                del self._pinned[k]
         for rnd in rounds:
             for src, m in rnd.manifests.items():
                 for dst, desc in m.get("parts", {}).items():
@@ -644,14 +707,18 @@ class RuntimeEngine:
                             out: List[IngestItem]) -> Dict[str, Any]:
         """Thread-backend data plane: partition this node's stage output by
         the routing key and hand each partition straight to its target's
-        bucket (the in-memory queue handoff); a partition past the per-edge
-        spill share crosses as a peer-readable DFS file instead.  Runs on
-        the node's executor lane — only the returned manifest (counts,
-        sizes, paths) ever reaches the coordinator."""
+        bucket (the in-memory queue handoff) — for a narrow round
+        (``rnd.key is None``) the whole output deposits into the node's own
+        bucket, staying resident.  A partition past the per-edge spill share
+        crosses as a DFS file instead (``resident_*`` naming for the node's
+        own slice).  Runs on the node's executor lane — only the returned
+        manifest (counts, sizes, paths) ever reaches the coordinator."""
         def part_fn(dst: str, its: List[IngestItem], nb: int) -> Dict[str, Any]:
             if nb > rnd.spill_share:
                 path = os.path.join(
                     self.store.dfs_dir,
+                    resident_file_name(rnd.epoch, rnd.xid, node)
+                    if dst == node else
                     exchange_file_name(rnd.epoch, rnd.xid, node, dst))
                 write_partition_file(path, its)
                 self._exchange.deposit(rnd.xid, dst, None, nb, path=path)
@@ -660,7 +727,8 @@ class RuntimeEngine:
             self._exchange.deposit(rnd.xid, dst, its, nb)
             return {"kind": "mem", "count": len(its), "nbytes": nb}
 
-        manifest = build_manifest(out, rnd.key, rnd.targets, part_fn)
+        manifest = build_manifest(out, rnd.key, rnd.targets, part_fn,
+                                  self_node=node)
         return {"kind": "xmanifest", "manifest": manifest}
 
     def __enter__(self) -> "RuntimeEngine":
@@ -684,39 +752,119 @@ class RuntimeEngine:
         if optimize:
             stage_plans = self.optimizer.optimize(stage_plans)
 
-        # ---- distribute source shards: node-local dict, or shared queue
-        # (work stealing / straggler mitigation: slow nodes take fewer shards)
-        node_sources: Dict[str, List[IngestItem]] = {n: [] for n in self.nodes}
-        if isinstance(sources, dict):
-            for n, items in sources.items():
-                node_sources[n].extend(items)
-        else:
-            shared: "queue.Queue[IngestItem]" = queue.Queue()
-            for it in sources:
-                shared.put(it)
-            while True:
-                grabbed = False
-                for n in self.nodes:
-                    try:
-                        node_sources[n].append(shared.get_nowait())
-                        grabbed = True
-                    except queue.Empty:
-                        break
-                if not grabbed:
-                    break
-        report.per_node_shards = {n: len(v) for n, v in node_sources.items()}
+        if not isinstance(sources, dict):
+            sources = list(sources)   # cohort replay re-distributes them
 
         alive = {n: True for n in self.nodes}
         # a fresh batch run starts from full liveness — clear placement marks
         # a previous run's (injected) deaths left on the shared store
         for n in self.nodes:
             self.store.mark_node_live(n)
-        self._execute(stage_plans, node_sources, faults, report, alive)
-        self.shuffle.drain()
+
+        # ---- cohort-replay guard (ROADMAP "batch shuffle cohort replay"):
+        # a DAG that consumes a shuffle stages its blocks under an epoch, so
+        # a node death at/after a shuffle-consuming stage — whose groups
+        # mixed other nodes' lineages and cannot be replayed from the dead
+        # node's own shards — can abort the staged blocks and replay the
+        # *whole run* on the survivors, exactly-once (the streaming engine's
+        # epoch-granular recovery applied to batch).
+        wrap = self._has_shuffle_consumer(stage_plans)
+        eid: Optional[int] = None
+        try:
+            while True:
+                live = [n for n in self.nodes if alive[n]]
+                if not live:
+                    raise RuntimeError("all nodes failed")
+                node_sources = self._distribute_sources(sources, live)
+                report.per_node_shards = {n: len(v)
+                                          for n, v in node_sources.items()}
+                if wrap:
+                    eid = self.store.next_epoch_id()
+                    self.store.begin_epoch(eid)
+                try:
+                    self._execute(stage_plans, node_sources, faults, report,
+                                  alive, epoch=eid)
+                    break
+                except _CohortReplay:
+                    self.store.abort_epoch(eid)
+                    self.invalidate_exchange(eid)
+                    report.cohort_replays += 1
+                    eid = None   # rolled back; the retry stages afresh
+            self.shuffle.drain()
+            if eid is not None:
+                self.store.commit_epoch(
+                    eid, n_items=sum(report.per_node_shards.values()))
+        except BaseException:
+            # don't strand a staging epoch: a stuck staging id would block
+            # every later commit on this store (the commit sequencer waits
+            # on smaller staging ids forever)
+            if eid is not None and not self.store.epoch_committed(eid):
+                self.store.abort_epoch(eid)
+                self.invalidate_exchange(eid)
+            raise
 
         report.wall_time_s = time.time() - t0
         self.store.flush_manifest()
         return report
+
+    def _redistribute(self, batch: Dict[str, List[IngestItem]],
+                      live: List[str]) -> Dict[str, List[IngestItem]]:
+        """Node affinity where the node is in the live set; round-robin onto
+        survivors otherwise — the one rebalancing policy shared by batch
+        cohort replay and the streaming engine's epoch replay."""
+        node_sources: Dict[str, List[IngestItem]] = {n: [] for n in self.nodes}
+        spill: List[IngestItem] = []
+        for n, its in batch.items():
+            (node_sources[n] if n in live else spill).extend(its)
+        for i, it in enumerate(spill):
+            node_sources[live[i % len(live)]].append(it)
+        return node_sources
+
+    def _distribute_sources(self, sources: Union[Dict[str, List[IngestItem]],
+                                                 List[IngestItem]],
+                            live: List[str]) -> Dict[str, List[IngestItem]]:
+        """Distribute source shards over the live nodes: node-local dict
+        (a dead node's shards move round-robin onto survivors), or a shared
+        queue (work stealing / straggler mitigation: slow nodes take fewer
+        shards)."""
+        if isinstance(sources, dict):
+            return self._redistribute(sources, live)
+        node_sources: Dict[str, List[IngestItem]] = {n: [] for n in self.nodes}
+        shared: "queue.Queue[IngestItem]" = queue.Queue()
+        for it in sources:
+            shared.put(it)
+        while True:
+            grabbed = False
+            for n in live:
+                try:
+                    node_sources[n].append(shared.get_nowait())
+                    grabbed = True
+                except queue.Empty:
+                    break
+            if not grabbed:
+                break
+        return node_sources
+
+    @staticmethod
+    def _has_shuffle_consumer(stage_plans: List[StagePlan],
+                              upto: Optional[int] = None) -> bool:
+        """True when some stage at index <= ``upto`` (whole DAG when None)
+        consumes a shuffle boundary — the condition under which a dead
+        node's state cannot be rebuilt from its own source shards.  Reads
+        the compiled per-edge metadata (``edge_kinds`` consumer map +
+        ``shuffle_key``), falling back to an upstream scan for hand-built
+        plans that never went through ``annotate_edges``."""
+        in_range = {sp.name for sp in (stage_plans if upto is None
+                                       else stage_plans[:upto + 1])}
+        for sp in stage_plans:
+            if not (sp.shuffle_key or sp.compute_shuffle_key()):
+                continue
+            consumers = (sp.edge_kinds.keys() if sp.edge_kinds else
+                         [sq.name for sq in stage_plans
+                          if sp.name in sq.upstream])
+            if any(c in in_range for c in consumers):
+                return True
+        return False
 
     # ----------------------------------------------------------- stage dataflow
     def _mark_dead(self, node: str, alive: Dict[str, bool], report: RunReport) -> None:
@@ -795,10 +943,15 @@ class RuntimeEngine:
         # dedicated lock for report mutation from worker threads
         rlock = threading.Lock()
 
-        # peer-exchange rounds still awaiting their consuming stage(s),
-        # keyed by producing stage name (DESIGN.md §4: rounds never outlive
-        # the slice — a cross-slice boundary takes the legacy barrier)
+        # peer-exchange rounds still awaiting consuming stage(s), keyed by
+        # producing stage name.  A slice starting mid-DAG (the store segment)
+        # first adopts the rounds an earlier slice pinned for it — node-
+        # resident buckets crossing the ingest/store boundary (ISSUE 5)
         active_rounds: Dict[str, ExchangeRound] = {}
+        if start_stage:
+            active_rounds = {
+                r.stage: r for r in self.shuffle.adopt_pinned(
+                    epoch, [sp.name for sp in stage_plans[start_stage:stop]])}
 
         for si in range(start_stage, stop):
             sp = stage_plans[si]
@@ -813,6 +966,15 @@ class RuntimeEngine:
                                               live_nodes, epoch)
             if produce is not None:
                 active_rounds[sp.name] = produce
+            # a terminal stage (no consumer anywhere in the DAG) is a sink:
+            # process workers reply a count instead of shipping the output
+            # items back over the coordinator pipe (zero-coordinator bytes
+            # end-to-end; the thread backend's outputs dict is in-process)
+            has_consumers = bool(sp.edge_kinds) or any(
+                sp.name in sq.upstream for sq in stage_plans[si + 1:])
+            sink = (use_proc and produce is None and not has_consumers
+                    and not self.shuffle.synchronous and bool(sp.ops))
+            sink_counts: Dict[str, int] = {}
 
             # -------------------------------------------------- stage barrier
             def run_stage_on(node: str, nsp: StagePlan,
@@ -906,7 +1068,7 @@ class RuntimeEngine:
                         max_retries=self.max_retries,
                         shuffle_ctx=(produce.worker_ctx(self.store.dfs_dir)
                                      if produce is not None else None),
-                        fetch_refs=fetch or None)
+                        fetch_refs=fetch or None, sink=sink)
             else:
                 for n in live_nodes:
                     nsp = node_plans[n][si]
@@ -923,6 +1085,16 @@ class RuntimeEngine:
                 except (NodeFailure, WorkerDeath):
                     failed.append(n)
                     continue
+                except Exception:
+                    # a SIGTERM'd worker can emit one garbled/partial reply
+                    # before the pipe EOF lands — if the worker is gone, the
+                    # failure IS the death, not a stage error.  (Exception,
+                    # not BaseException: a KeyboardInterrupt landing in this
+                    # wait must abort the run, not mark the node dead.)
+                    if use_proc and not getattr(self.executor(n), "alive", True):
+                        failed.append(n)
+                        continue
+                    raise
                 if use_proc:
                     payload, stats = res
                     with rlock:
@@ -934,20 +1106,36 @@ class RuntimeEngine:
                     payload = res
                 if (produce is not None and isinstance(payload, dict)
                         and payload.get("kind") == "xmanifest"):
-                    # partitions went peer-to-peer; only metadata came back
+                    # partitions went peer-to-peer (or stayed resident);
+                    # only metadata came back
                     outputs[n][sp.name] = []
                     self.shuffle.record_manifest(produce, n,
                                                  payload["manifest"])
+                elif isinstance(payload, dict) and payload.get("kind") == "sink":
+                    # terminal stage: the worker dropped its outputs locally
+                    # — only the count crossed the coordinator pipe
+                    outputs[n][sp.name] = []
+                    sink_counts[n] = int(payload.get("count", 0))
                 else:
                     outputs[n][sp.name] = payload
+                    if has_consumers:
+                        # legacy boundary: the stage output round-tripped
+                        # through the coordinator as item bytes
+                        report.stage_coordinator_bytes += items_nbytes(payload)
             if produce is not None:
-                report.shuffled_items += produce.total_count
-                report.shuffle_peer_bytes += produce.total_bytes
-                report.shuffle_exchange_rounds += 1
-                if produce.spilled:
-                    report.shuffle_spills += 1
+                report.stage_resident_bytes += produce.resident_bytes
+                if produce.key is None:        # narrow (identity) round
+                    report.stage_exchange_rounds += 1
+                    if produce.spilled:
+                        report.resident_spills += 1
                 else:
-                    report.shuffle_async_rounds += 1
+                    report.shuffled_items += produce.total_count
+                    report.shuffle_peer_bytes += produce.total_bytes
+                    report.shuffle_exchange_rounds += 1
+                    if produce.spilled:
+                        report.shuffle_spills += 1
+                    else:
+                        report.shuffle_async_rounds += 1
             for n in failed:
                 self._mark_dead(n, alive, report)
                 for rnd in incoming:
@@ -982,11 +1170,23 @@ class RuntimeEngine:
                     active_rounds.pop(rnd.stage, None)
 
             # ---- injected node deaths after this stage
+            died_here = list(failed)
             for n, after in faults.node_death_after_stage.items():
                 if after == sp.name and alive.get(n):
                     self._mark_dead(n, alive, report)
+                    died_here.append(n)
                     if on_node_death == "raise":
                         raise NodeFailure(n)
+
+            # ---- cohort-replay escalation (ROADMAP "batch shuffle cohort
+            # replay"): once a shuffle-consuming stage has run, a dead
+            # node's state mixed other nodes' lineages — replaying its own
+            # source shards would double-count or lose groups.  Escalate to
+            # whole-run replay (run() aborts the staged epoch and restarts
+            # on the survivors) instead of shard reassignment.
+            if (died_here and on_node_death == "reassign"
+                    and self._has_shuffle_consumer(stage_plans, upto=si)):
+                raise _CohortReplay(died_here[0])
 
             # ---- node-failure recovery: reassign dead nodes' shards to the
             # next live node in the slaves order and re-run stages 0..si for
@@ -1034,6 +1234,11 @@ class RuntimeEngine:
                             if desc["kind"] == "resident"}
                     if not lost:
                         return []
+                    if rnd.key is None:
+                        # narrow round: the whole output was the node's own
+                        # resident slice and died with it — recompute all of
+                        # it from the shards (self-contained lineage)
+                        return out
                     parts = partition_items(out, rnd.key, rnd.targets)
                     return [it for dst in lost for it in parts.get(dst, ())]
 
@@ -1078,6 +1283,13 @@ class RuntimeEngine:
                 # exchange stages keep their outputs worker-side; the
                 # manifests carry the count
                 total = produce.total_count
+            elif sink_counts:
+                # sink stages dropped their outputs worker-side; the counts
+                # came back as metadata.  Alive-filtered like the outputs
+                # sum: a node that died after replying gets its shards
+                # replayed (re-counted via the survivor's outputs)
+                total += sum(c for n2, c in sink_counts.items()
+                             if alive.get(n2))
             report.stage_items[sp.name] = total
 
         return outputs

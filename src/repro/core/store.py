@@ -527,11 +527,13 @@ class DataStore:
           *this* process are referenced by in-memory entries and are kept;
           after a crash, a fresh DataStore loads only the committed
           manifest, so the dead epoch's files become orphans here.
-        * shuffle spill files under ``dfs/`` — peer-exchange partition
-          files (``exchange_*.part``) and legacy barrier group dirs
-          (``shuffle_*``) of a round that died mid-exchange.  Live rounds
-          lease their paths (``lease_exchange_path``); a crash drops the
-          leases with the process, so a fresh store reclaims the files.
+        * exchange spill files under ``dfs/`` — peer partition files
+          (``exchange_*.part``), resident-bucket spills of narrow edges and
+          pinned cross-segment rounds (``resident_*.part``, a crash
+          mid-slice leaves them with no consumer), and legacy barrier group
+          dirs (``shuffle_*``).  Live rounds lease their paths
+          (``lease_exchange_path``); a crash drops the leases with the
+          process, so a fresh store reclaims the files.
 
         The ``.blk`` scan holds the store lock and ``put_block`` registers
         the entry under it *before* writing the file, so a concurrently

@@ -367,7 +367,13 @@ class FeedDistributor:
 # --------------------------------------------------------------------------
 @dataclass
 class _EpochJob:
-    """A cut epoch whose ingest segment has run, awaiting store + commit."""
+    """A cut epoch whose ingest segment has run, awaiting store + commit.
+
+    ``node_set`` is the live set the ingest segment executed on: the
+    segment's outputs live in *node-resident* exchange buckets pinned to
+    those nodes (ISSUE 5), so the store segment may consume them in place
+    only while every one of them is still alive — otherwise the committer
+    replays the whole epoch from the retained ``batch``."""
 
     eid: int
     epoch_index: int
@@ -379,6 +385,7 @@ class _EpochJob:
     attempts: int
     items_in: int
     t_cut: float
+    node_set: List[str] = field(default_factory=list)
 
 
 class _EpochCommitter:
@@ -440,11 +447,14 @@ class _EpochCommitter:
     def _commit_job(self, job: _EpochJob) -> None:
         """Run the epoch's store segment and commit.
 
-        The coordinator *retains* the epoch's ingest-segment outputs (like it
-        retains the raw batch) until the commit lands, so a node death never
-        loses them: dead contributors' retained outputs are rebalanced onto
-        the survivors and the store segment re-runs from the rolled-back
-        staging state.  The executing node set is pinned per attempt — a
+        The ingest segment's outputs live in node-resident exchange buckets
+        (pinned rounds, ISSUE 5): the first attempt adopts them and runs
+        only the store segment, in place, on the same node set.  If any
+        ingest contributor has died since — its resident buckets died with
+        it — or a later attempt is needed, the epoch's exchange state is
+        invalidated and the *whole epoch* replays from the retained raw
+        ``batch`` on the survivors (nothing committed yet, so the replay is
+        exactly-once).  The executing node set is pinned per attempt — a
         death flipping ``alive`` from the ingest thread mid-attempt cannot
         silently drop a node's inputs."""
         eng, store = self.engine, self.engine.store
@@ -452,13 +462,33 @@ class _EpochCommitter:
         while True:
             if not first:
                 job.attempts += 1
-            first = False
             if not any(eng.alive.values()):
                 raise RuntimeError("all nodes failed")
             live = [n for n in eng.nodes if eng.alive.get(n)]
-            self._rebalance_retained(job, live)
+            in_place = first and not (set(job.node_set) - set(live))
+            first = False
+            if not in_place:
+                # resident ingest outputs are stale or lost: drop the
+                # epoch's exchange rounds everywhere and recompute from the
+                # retained batch
+                eng.invalidate_exchange(job.eid)
+                job.node_sources = eng._redistribute(job.batch, live)
+                job.outputs = {n: defaultdict(list) for n in eng.nodes}
             store.begin_epoch(job.eid)
             try:
+                if not in_place and self.split > 0:
+                    # recompute the ingest segment on the *ingest* lanes —
+                    # the lane discipline of the original run: a stage's
+                    # resident operator state (its output generator) is only
+                    # ever driven by one lane, never concurrently from here
+                    # and a newer epoch's ingest.  Its rounds re-pin and the
+                    # store slice below adopts them, exactly like a clean run.
+                    eng._execute(self.stage_plans, job.node_sources,
+                                 job.faults, job.ereport, eng.alive,
+                                 on_node_death="raise", lane="ingest",
+                                 epoch=job.eid, outputs=job.outputs,
+                                 start_stage=0, end_stage=self.split,
+                                 node_set=live)
                 eng._execute(self.stage_plans, job.node_sources, job.faults,
                              job.ereport, eng.alive, on_node_death="raise",
                              lane="store", epoch=job.eid, outputs=job.outputs,
@@ -468,30 +498,6 @@ class _EpochCommitter:
             except NodeFailure as e:
                 store.abort_epoch(job.eid)
                 eng._note_death(str(e), job.eid, self.sreport, self.queues)
-                # drop the failed attempt's partial store-stage outputs; the
-                # retained ingest outputs are intact and get rebalanced
-                for n in eng.nodes:
-                    for sp in self.stage_plans[self.split:]:
-                        job.outputs[n][sp.name] = []
-
-    def _rebalance_retained(self, job: _EpochJob, live: List[str]) -> None:
-        """Move dead nodes' retained inputs (source shards + ingest-segment
-        outputs) round-robin onto the live set."""
-        ingest_names = [sp.name for sp in self.stage_plans[:self.split]]
-        for n in self.engine.nodes:
-            if n in live:
-                continue
-            shards = job.node_sources.get(n) or []
-            if shards:
-                job.node_sources[n] = []
-                for i, it in enumerate(shards):
-                    job.node_sources[live[i % len(live)]].append(it)
-            for sname in ingest_names:
-                items = job.outputs[n][sname]
-                if items:
-                    job.outputs[n][sname] = []
-                    for i, it in enumerate(items):
-                        job.outputs[live[i % len(live)]][sname].append(it)
 
     def _publish(self, job: _EpochJob) -> None:
         entry = self.engine.store.commit_epoch(job.eid, n_items=job.items_in)
@@ -689,7 +695,8 @@ class StreamingRuntimeEngine(RuntimeEngine):
             outputs = {n: defaultdict(list) for n in self.nodes}
             if split == 0:
                 return _EpochJob(eid, epoch_index, batch, node_sources, outputs,
-                                 ef, ereport, attempts, items_in, t_cut)
+                                 ef, ereport, attempts, items_in, t_cut,
+                                 node_set=live)
             try:
                 # epoch binds the segment's exchange rounds (no store writes
                 # happen before `split`, so the staging protocol is untouched)
@@ -701,20 +708,12 @@ class StreamingRuntimeEngine(RuntimeEngine):
                 self._note_death(str(e), eid, sreport, queues)
                 continue
             return _EpochJob(eid, epoch_index, batch, node_sources, outputs,
-                             ef, ereport, attempts, items_in, t_cut)
+                             ef, ereport, attempts, items_in, t_cut,
+                             node_set=live)
 
     # ------------------------------------------------------------------ epoch
-    def _redistribute(self, batch: Dict[str, List[IngestItem]],
-                      live: List[str]) -> Dict[str, List[IngestItem]]:
-        """Queue affinity where the node is in the live set; round-robin onto
-        survivors otherwise (first attempt after a death, or replay)."""
-        node_sources: Dict[str, List[IngestItem]] = {n: [] for n in self.nodes}
-        spill: List[IngestItem] = []
-        for n, its in batch.items():
-            (node_sources[n] if n in live else spill).extend(its)
-        for i, it in enumerate(spill):
-            node_sources[live[i % len(live)]].append(it)
-        return node_sources
+    # epoch batches rebalance with the engine-wide policy: RuntimeEngine
+    # ._redistribute (node affinity for live nodes, round-robin spill)
 
     def _note_death(self, dead: str, eid: int, sreport: StreamReport,
                     queues: IngestQueues) -> None:

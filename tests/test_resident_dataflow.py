@@ -1,0 +1,419 @@
+"""Node-resident dataflow (ISSUE 5): zero-coordinator item bytes end-to-end.
+
+The exchange plane now covers *every* stage edge, not just shuffles: a narrow
+edge keeps each node's output resident in its own ``PartitionExchange``
+bucket (identity routing), cross-segment edges pin their round across
+``_execute`` slices, and terminal stages reply sink counts — so item bytes
+cross a coordinator pipe only for the final store-stage registration
+metadata.  Covers the compiled edge taxonomy, the acceptance invariant
+(``RunReport.stage_coordinator_bytes == 0`` on a >=3-stage process-backend
+plan), resident-bucket recovery on node death (both backends, exactly-once,
+no leaked segments or spill files), the batch cohort-replay fix for
+post-shuffle deaths (injected + real SIGTERM), and resident-spill GC.
+"""
+import glob
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (DataAccess, DataStore, FaultInjection, IngestPlan,
+                        IngestionOptimizer, RuntimeEngine,
+                        StreamFaultInjection, StreamingRuntimeEngine,
+                        annotate_edges, chain_stage, create_stage,
+                        resident_file_name, resolve_op)
+from repro.core.exchange import is_exchange_file, write_partition_file
+from repro.core.items import IngestItem
+from repro.data.generators import gen_lineitem
+
+
+def narrow_plan(ds):
+    """Three stages chained by narrow edges only: parse -> chunk+serialize ->
+    upload.  No shuffle key anywhere — every boundary is identity-routed."""
+    p = IngestPlan("narrow3")
+    s1 = p.add_statement([resolve_op("identity_parser")], kind="select")
+    s2 = p.add_statement([resolve_op("chunk", target_rows=256),
+                          resolve_op("serialize", layout="columnar")],
+                         kind="format", inputs=[s1])
+    s3 = p.add_statement([resolve_op("upload", store=ds)],
+                         kind="store", inputs=[s2])
+    create_stage(p, using=[s1], name="a")
+    chain_stage(p, to=["a"], using=[s2], name="b")
+    chain_stage(p, to=["b"], using=[s3], name="c")
+    return p
+
+
+def shuffled_plan(ds):
+    """Shuffle at stage a, consumed by b, stored by c (all ops picklable)."""
+    p = IngestPlan("shuf")
+    s1 = p.add_statement([
+        resolve_op("identity_parser"),
+        resolve_op("partition", scheme="hash", key="orderkey",
+                   num_partitions=4),
+        resolve_op("map", fn="repro.core.ops_select:identity_columns",
+                   shuffle_by="partition"),
+    ], kind="select")
+    s2 = p.add_statement([resolve_op("chunk", target_rows=256),
+                          resolve_op("serialize", layout="columnar")],
+                         kind="format", inputs=[s1])
+    s3 = p.add_statement([resolve_op("upload", store=ds)],
+                         kind="store", inputs=[s2])
+    create_stage(p, using=[s1], name="a")
+    chain_stage(p, to=["a"], using=[s2], name="b")
+    chain_stage(p, to=["b"], using=[s3], name="c")
+    return p
+
+
+def shard_source(n_shards, rows=100, delay_s=0.0):
+    for i in range(n_shards):
+        if delay_s:
+            time.sleep(delay_s)
+        yield IngestItem(gen_lineitem(rows, seed=i))
+
+
+def shards(n_shards, rows=100):
+    return list(shard_source(n_shards, rows))
+
+
+def agg(rep, field):
+    return sum(getattr(e.run, field) for e in rep.epochs)
+
+
+def shm_segments():
+    """Live shared-memory segments on this host (leak detection)."""
+    return set(glob.glob("/dev/shm/psm_*"))
+
+
+# ---------------------------------------------------------------------------
+class TestEdgeTaxonomy:
+    def test_compile_marks_narrow_shuffle_cross_segment(self, store):
+        plans = shuffled_plan(store).compile()
+        # a shuffles into b; b's edge to the commit-side stage c crosses the
+        # ingest/store segment boundary
+        assert plans[0].edge_kinds == {"b": "shuffle"}
+        assert plans[1].edge_kinds == {"c": "cross-segment"}
+        assert plans[2].edge_kinds == {}
+        narrow = narrow_plan(store).compile()
+        assert narrow[0].edge_kinds == {"b": "narrow"}
+        assert narrow[1].edge_kinds == {"c": "cross-segment"}
+
+    def test_optimizer_recomputes_and_clone_preserves(self, store):
+        opt = IngestionOptimizer().optimize(shuffled_plan(store).compile())
+        assert opt[0].edge_kinds == {"b": "shuffle"}
+        assert opt[0].clone().edge_kinds == {"b": "shuffle"}
+        # annotate_edges is idempotent over rewritten plans
+        assert annotate_edges(opt)[1].edge_kinds == {"c": "cross-segment"}
+
+    def test_single_segment_shuffle_edge(self, store):
+        """With the upload fused into the consuming stage there is no
+        segment boundary — the edge is plain shuffle."""
+        p = IngestPlan("one")
+        s1 = p.add_statement([
+            resolve_op("identity_parser"),
+            resolve_op("partition", scheme="hash", key="orderkey",
+                       num_partitions=4),
+            resolve_op("map", fn="repro.core.ops_select:identity_columns",
+                       shuffle_by="partition"),
+        ], kind="select")
+        s2 = p.add_statement([resolve_op("chunk", target_rows=256),
+                              resolve_op("serialize", layout="columnar"),
+                              resolve_op("upload", store=store)],
+                             kind="store", inputs=[s1])
+        create_stage(p, using=[s1], name="a")
+        chain_stage(p, to=["a"], using=[s2], name="b")
+        plans = p.compile()
+        # stage a IS before the split (b is the first commit-side stage),
+        # so a->b crosses the segment boundary
+        assert plans[0].edge_kinds == {"b": "cross-segment"}
+
+
+# ---------------------------------------------------------------------------
+class TestZeroStageCoordinatorBytes:
+    """Acceptance: on a >=3-stage non-shuffle plan, zero item bytes cross
+    the coordinator pipes at stage boundaries — narrow edges stay resident,
+    the terminal stage replies a sink count."""
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_streaming_narrow_plan(self, tmp_path, backend):
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1", "n2", "n3"])
+        eng = StreamingRuntimeEngine(ds, epoch_items=4, queue_capacity=8,
+                                     backend=backend)
+        rep = eng.run_stream(narrow_plan(ds), shard_source(8, rows=100))
+        eng.close()
+        assert agg(rep, "stage_coordinator_bytes") == 0
+        assert agg(rep, "stage_resident_bytes") > 0
+        assert agg(rep, "stage_exchange_rounds") >= len(rep.epochs)
+        cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 8 * 100
+        assert not os.listdir(ds.dfs_dir)
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_batch_narrow_plan(self, tmp_path, backend):
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1"])
+        with RuntimeEngine(ds, backend=backend) as eng:
+            rep = eng.run(narrow_plan(ds), shards(6, rows=80))
+        assert rep.stage_coordinator_bytes == 0
+        assert rep.stage_exchange_rounds == 2          # a->b, b->c
+        assert rep.stage_items["a"] == 6 and rep.stage_items["c"] == 6
+        cols = DataAccess(ds).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 6 * 80
+
+    def test_shuffle_plan_is_zero_on_both_planes(self, store):
+        """A shuffle plan now keeps BOTH the shuffle edge (PR 4) and every
+        narrow/cross-segment edge (ISSUE 5) off the coordinator."""
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=8,
+                                     backend="process")
+        rep = eng.run_stream(shuffled_plan(store), shard_source(8, rows=100))
+        eng.close()
+        assert agg(rep, "shuffle_coordinator_bytes") == 0
+        assert agg(rep, "stage_coordinator_bytes") == 0
+        cols = DataAccess(store).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 8 * 100
+
+    def test_synchronous_mode_still_counts_stage_bytes(self, store):
+        """The legacy mode remains the counted coordinator data path for
+        stage boundaries too — the counter is live, not vacuous."""
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=8,
+                                     pipelined=False, shuffle_synchronous=True)
+        rep = eng.run_stream(narrow_plan(store), shard_source(4, rows=100))
+        eng.close()
+        assert agg(rep, "stage_coordinator_bytes") > 0
+        assert agg(rep, "stage_exchange_rounds") == 0
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_oversized_resident_buckets_spill(self, tmp_path, backend):
+        """A narrow output past the per-edge share spills to a resident_*
+        DFS file — consumed on read, still zero coordinator bytes."""
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1"])
+        eng = StreamingRuntimeEngine(ds, epoch_items=4, queue_capacity=8,
+                                     backend=backend, shuffle_spill_bytes=1)
+        rep = eng.run_stream(narrow_plan(ds), shard_source(8, rows=100))
+        eng.close()
+        assert agg(rep, "resident_spills") >= 1
+        assert agg(rep, "stage_coordinator_bytes") == 0
+        cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 8 * 100
+        assert not os.listdir(ds.dfs_dir)   # consumed on read
+
+
+# ---------------------------------------------------------------------------
+class TestResidentRecovery:
+    """Satellite: node death between two non-shuffle stages replays the
+    epoch exactly-once on both backends, with no leaked shm segments or
+    spill files."""
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_death_between_narrow_stages_replays_exactly_once(self, tmp_path,
+                                                              backend):
+        before = shm_segments()
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1", "n2", "n3"])
+        eng = StreamingRuntimeEngine(ds, epoch_items=4, queue_capacity=8,
+                                     backend=backend)
+        # the injected death fires after the epoch's first stage — between
+        # narrow stages a and b, while a's output sits in resident buckets
+        faults = StreamFaultInjection(node_death_in_epoch={"n2": 1})
+        rep = eng.run_stream(narrow_plan(ds), shard_source(16, rows=100),
+                             faults=faults)
+        eng.close()
+        assert rep.committed_epoch_ids() == [0, 1, 2, 3]
+        assert rep.replayed_epochs == [1]
+        assert agg(rep, "stage_coordinator_bytes") == 0
+        cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 16 * 100   # no loss, no duplication
+        assert not os.listdir(ds.dfs_dir)
+        assert ds.gc_orphans() == []
+        assert shm_segments() - before == set()    # no leaked segments
+
+    def test_worker_sigterm_between_narrow_stages(self, store):
+        """Real SIGTERM while narrow resident buckets are live: the epoch
+        invalidates its rounds everywhere and replays exactly-once."""
+        before = shm_segments()
+        eng = StreamingRuntimeEngine(store, epoch_items=4, queue_capacity=8,
+                                     backend="process")
+        eng.prewarm_executors()
+        killed = []
+
+        def kill_mid_round(rnd, src):
+            # first narrow manifest of epoch >= 1: resident buckets exist
+            if rnd.epoch >= 1 and rnd.key is None and not killed:
+                victim = next(t for t in rnd.targets if t != src)
+                killed.append(victim)
+                eng.executor(victim).kill()
+
+        eng.shuffle.test_on_manifest = kill_mid_round
+        rep = eng.run_stream(narrow_plan(store),
+                             shard_source(16, rows=100, delay_s=0.02))
+        ids = rep.committed_epoch_ids()
+        assert ids == list(range(len(ids))) and len(ids) == 4
+        assert killed and killed[0] in rep.node_failures
+        assert rep.replayed_epochs
+        cols = DataAccess(store).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 16 * 100
+        eng.close()
+        assert not os.listdir(store.dfs_dir)
+        assert store.gc_orphans() == []
+        assert shm_segments() - before == set()
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_dead_nodes_spilled_resident_bucket_is_reclaimed(self, tmp_path,
+                                                             backend):
+        """A node dying with a *spilled* resident bucket (resident_* file on
+        the DFS) must not leak it past the round: finish_round reclaims the
+        unfetched file even though the owning worker's bucket died with it."""
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1", "n2"])
+        faults = FaultInjection(node_death_after_stage={"n2": "a"})
+        with RuntimeEngine(ds, backend=backend, shuffle_spill_bytes=1) as eng:
+            rep = eng.run(narrow_plan(ds), shards(6, rows=100), faults=faults)
+        assert rep.node_failures == ["n2"]
+        assert rep.resident_spills >= 1
+        cols = DataAccess(ds).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 6 * 100
+        assert not os.listdir(ds.dfs_dir)   # no leaked resident_* files
+        assert ds.gc_orphans() == []
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_batch_death_between_narrow_stages_is_exact(self, tmp_path,
+                                                        backend):
+        """Batch (reassign) mode: narrow lineage is self-contained, so the
+        dead node's shards replay exactly — no cohort escalation needed."""
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1", "n2"])
+        faults = FaultInjection(node_death_after_stage={"n2": "a"})
+        with RuntimeEngine(ds, backend=backend) as eng:
+            rep = eng.run(narrow_plan(ds), shards(6, rows=100), faults=faults)
+        assert rep.node_failures == ["n2"]
+        assert rep.cohort_replays == 0
+        cols = DataAccess(ds).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 6 * 100
+        assert not os.listdir(ds.dfs_dir)
+
+
+# ---------------------------------------------------------------------------
+class TestBatchCohortReplay:
+    """Satellite: the pre-existing batch shuffle replay hole — a node dying
+    *after* a shuffle-consuming stage — now falls back to whole-run cohort
+    replay (the run is one epoch), restoring exactly-once."""
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_post_shuffle_death_triggers_cohort_replay(self, tmp_path,
+                                                       backend):
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1", "n2"])
+        # death after stage b — b consumed shuffled groups, so n2's state
+        # mixed other nodes' lineages (the ROADMAP hole)
+        faults = FaultInjection(node_death_after_stage={"n2": "b"})
+        with RuntimeEngine(ds, backend=backend) as eng:
+            rep = eng.run(shuffled_plan(ds), shards(6, rows=100),
+                          faults=faults)
+        assert rep.node_failures == ["n2"]
+        assert rep.cohort_replays == 1
+        cols = DataAccess(ds).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 6 * 100   # no loss, no double count
+        assert not os.listdir(ds.dfs_dir)
+        assert ds.gc_orphans() == []              # aborted attempt rolled back
+
+    def test_post_shuffle_sigterm_cohort_replay(self, store):
+        """Regression (satellite): a real SIGTERM after the shuffle-consuming
+        stage in batch mode — detected at the next stage's submission — must
+        cohort-replay, not double-count via shard reassignment."""
+        eng = RuntimeEngine(store, backend="process")
+        eng.prewarm_executors()
+        fired = []
+
+        def kill_after_consume(rnd, src):
+            # the b->c narrow manifest means stage b (the shuffle consumer)
+            # finished on src: SIGTERM it with its processed groups on board
+            if rnd.key is None and rnd.stage == "b" and not fired:
+                fired.append(src)
+                eng.executor(src).kill()
+                time.sleep(0.4)   # let the EOF sentinel land
+
+        eng.shuffle.test_on_manifest = kill_after_consume
+        rep = eng.run(shuffled_plan(store), shards(6, rows=100))
+        assert fired and fired[0] in rep.node_failures
+        assert rep.cohort_replays >= 1
+        cols = DataAccess(store).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 6 * 100
+        eng.close()
+        assert not os.listdir(store.dfs_dir)
+        assert store.gc_orphans() == []
+
+    def test_pre_consumer_death_keeps_cheap_reassignment(self, store):
+        """Death before any shuffle consumer ran still takes the exact
+        shard-reassignment path — cohort replay is the escalation, not the
+        default."""
+        faults = FaultInjection(node_death_after_stage={"n3": "a"})
+        with RuntimeEngine(store) as eng:
+            rep = eng.run(shuffled_plan(store), shards(6, rows=100),
+                          faults=faults)
+        assert rep.cohort_replays == 0
+        assert rep.node_failures == ["n3"]
+        cols = DataAccess(store).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 6 * 100
+
+
+# ---------------------------------------------------------------------------
+class TestResidentSpillGC:
+    """Satellite: ``DataStore.gc_orphans`` reclaims resident-bucket spill
+    files a crash left behind, while sparing leased (live-round) paths."""
+
+    def test_gc_reclaims_crashed_resident_spills(self, store):
+        dead = os.path.join(store.dfs_dir, resident_file_name(3, 7, "n0"))
+        write_partition_file(dead, [IngestItem({"x": np.arange(4)})])
+        live = os.path.join(store.dfs_dir, resident_file_name(4, 8, "n1"))
+        write_partition_file(live, [IngestItem({"x": np.arange(4)})])
+        torn = os.path.join(store.dfs_dir,
+                            resident_file_name(5, 9, "n2") + ".tmp")
+        with open(torn, "wb") as f:
+            f.write(b"half-written")
+        assert is_exchange_file(os.path.basename(dead))
+        assert is_exchange_file(os.path.basename(torn))
+        # a crash: a fresh DataStore on the same root holds no leases
+        fresh = DataStore(store.root, nodes=store.nodes)
+        fresh.lease_exchange_path(live)
+        removed = fresh.gc_orphans()
+        assert os.path.join("dfs", os.path.basename(dead)) in removed
+        assert os.path.join("dfs", os.path.basename(torn)) in removed
+        assert not os.path.exists(dead) and not os.path.exists(torn)
+        assert os.path.exists(live)            # leased: spared
+        fresh.release_exchange_path(live)
+        assert os.path.join("dfs", os.path.basename(live)) in fresh.gc_orphans()
+
+    def test_crash_restart_end_to_end(self, tmp_path):
+        """Fabricate what a crash mid-slice leaves (resident spills of a
+        pinned round nobody will ever consume) and assert a restarted
+        store reclaims them."""
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1"])
+        for node in ("n0", "n1"):
+            write_partition_file(
+                os.path.join(ds.dfs_dir, resident_file_name(2, 5, node)),
+                [IngestItem({"x": np.arange(16)})])
+        restarted = DataStore(str(tmp_path / "s"), nodes=["n0", "n1"])
+        removed = restarted.gc_orphans()
+        assert len([r for r in removed if "resident_" in r]) == 2
+        assert not any(f.startswith("resident_")
+                       for f in os.listdir(restarted.dfs_dir))
+
+
+# ---------------------------------------------------------------------------
+class TestPerfGateResidentMetric:
+    def test_resident_metric_is_gated_by_default(self, tmp_path):
+        import json
+        from benchmarks.perf_gate import DEFAULT_METRICS, main
+        assert "resident_rows_per_s" in DEFAULT_METRICS
+        traj = str(tmp_path / "t.json")
+        with open(traj, "w") as f:
+            json.dump([
+                {"scale": 1000, "pipelined_rows_per_s": 100.0,
+                 "shuffle_rows_per_s": 100.0, "resident_rows_per_s": 100.0},
+                {"scale": 1000, "pipelined_rows_per_s": 100.0,
+                 "shuffle_rows_per_s": 100.0, "resident_rows_per_s": 50.0},
+            ], f)
+        assert main(["--file", traj]) == 1      # resident regression gates
+        # histories that predate the metric skip cleanly
+        with open(traj, "w") as f:
+            json.dump([
+                {"scale": 1000, "pipelined_rows_per_s": 100.0},
+                {"scale": 1000, "pipelined_rows_per_s": 100.0,
+                 "resident_rows_per_s": 50.0},
+            ], f)
+        assert main(["--file", traj]) == 0

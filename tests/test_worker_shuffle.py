@@ -267,13 +267,13 @@ class TestMultiConsumer:
         assert not os.listdir(ds.dfs_dir)
 
     @pytest.mark.parametrize("backend", ["thread", "process"])
-    def test_cross_segment_consumer_takes_legacy_barrier(self, tmp_path,
-                                                         backend):
+    def test_cross_segment_consumer_rides_pinned_round(self, tmp_path,
+                                                       backend):
         """A shuffle stage with one consumer in the ingest segment and one
-        in the store segment must NOT open an exchange round: the pipelined
-        streaming engine executes the segments as separate slices, and the
-        store-segment consumer would read empty coordinator outputs.  The
-        legacy barrier keeps the items coordinator-side."""
+        in the store segment: since ISSUE 5 the exchange round is *pinned*
+        across the two ``_execute`` slices — the store-segment consumer
+        reads the node-resident buckets the ingest slice left behind, and
+        the legacy synchronous barrier is gone from this path entirely."""
         ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1"])
         p = IngestPlan("xseg")
         s1 = p.add_statement([
@@ -301,12 +301,15 @@ class TestMultiConsumer:
                                      backend=backend)
         rep = eng.run_stream(p, shard_source(4, rows=100))
         eng.close()
-        # the boundary fell back to the coordinator path (counted bytes)
-        assert agg(rep, "shuffle_exchange_rounds") == 0
-        assert agg(rep, "shuffle_coordinator_bytes") > 0
+        # the cross-segment boundary rode the pinned exchange round —
+        # zero item bytes through the coordinator, no legacy barrier
+        assert agg(rep, "shuffle_exchange_rounds") >= 1
+        assert agg(rep, "shuffle_coordinator_bytes") == 0
+        assert agg(rep, "stage_coordinator_bytes") == 0
         cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
         # both consumers stored every shuffled row: b->c and d
         assert len(cols["quantity"]) == 2 * 4 * 100
+        assert not os.listdir(ds.dfs_dir)   # pinned rounds fully reclaimed
 
     @pytest.mark.parametrize("backend", ["thread", "process"])
     def test_multi_consumer_survives_death_between_stages(self, tmp_path,
