@@ -6,8 +6,12 @@ incremental visibility.  The second group runs a shuffle-stage plan through
 the same engine with epoch pipelining off and on (ISSUE 2): epoch N+1's
 ingest segment (parse/partition/shuffle/serialize) overlaps epoch N's store
 segment (upload + commit), and the double-buffered shuffle moves the DFS
-journal write off the barrier.  Results are appended to the
-``BENCH_streaming.json`` trajectory file at the repo root.
+journal write off the barrier.  The source section (ISSUE 6) compares the
+pushed path (coordinator renders and ships every item) against worker-pull
+descriptor sources (coordinator ships metadata; workers materialize shards
+locally) and asserts the pulled run moves zero item bytes through the
+coordinator.  Results are appended to the ``BENCH_streaming.json``
+trajectory file at the repo root.
 """
 from __future__ import annotations
 
@@ -18,9 +22,9 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import (DataStore, IngestPlan, RuntimeEngine,
-                        StreamingRuntimeEngine, chain_stage, create_stage,
-                        format_, resolve_op, select)
+from repro.core import (DataStore, GeneratorSpecSource, IngestPlan,
+                        RuntimeEngine, StreamingRuntimeEngine, chain_stage,
+                        create_stage, format_, resolve_op, select)
 from repro.core import store as store_stmt
 from repro.core.items import IngestItem
 
@@ -217,6 +221,42 @@ def _run_shuffle_backend(shards, backend: str):
     return secs, rep
 
 
+def _run_source(scale: int, mode: str):
+    """One streaming run of the columnar plan on the process backend with the
+    item bytes either *pushed* (legacy path: a coordinator-side generator
+    renders every shard and feeds it through the coordinator) or *pulled*
+    (ISSUE 6: the coordinator distributes shard *descriptors*; each worker
+    materializes its own shards locally).  Both sides generate lazily from
+    the same spec — the pushed feeder is one thread, the pulled readers run
+    one per node.  Returns (seconds, report)."""
+    import tempfile
+    n_nodes = min(os.cpu_count() or 2, 4)
+    ds = DataStore(tempfile.mkdtemp(prefix="ibench_src_"),
+                   nodes=NODES[:n_nodes])
+    eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                 queue_capacity=2 * EPOCH_ITEMS,
+                                 backend="process")
+    eng.prewarm_executors()   # worker spawn is setup, not throughput
+    per = scale // SHARDS
+    if mode == "pulled":
+        source = GeneratorSpecSource("repro.data.generators:gen_lineitem",
+                                     shards=SHARDS, rows=per)
+    else:
+        from repro.data.generators import gen_lineitem
+
+        def gen():
+            for i in range(SHARDS):
+                yield IngestItem(gen_lineitem(per, seed=i))
+
+        source = gen()
+    t0 = time.perf_counter()
+    rep = eng.run_stream(_plan(ds), source)
+    secs = time.perf_counter() - t0
+    eng.close()
+    cleanup(ds)
+    return secs, rep
+
+
 def _sum_runs(rep, field: str) -> int:
     return sum(getattr(e.run, field) for e in rep.epochs)
 
@@ -355,6 +395,35 @@ def run(scale: int) -> List[Row]:
                  f"{parallel_ceiling:.2f}x; stage coordinator bytes "
                  f"{stage_coord_bytes}, resident {resident_bytes:,} B)"))
 
+    # ---- pushed vs worker-pull sources (ISSUE 6): same spec, same plan,
+    # same process backend.  Pushed renders every shard in the coordinator's
+    # feeder thread and ships the bytes down worker pipes; pulled ships
+    # shard DESCRIPTORS (metadata) and each worker materializes its own
+    # shards.  The acceptance invariant is asserted, not assumed: zero item
+    # bytes through the coordinator on the pulled run.  pull_rows_per_s is
+    # the nightly-gated metric.
+    src_rows = SHARDS * (scale // SHARDS)
+    push_s, push_rep = min((_run_source(scale, "pushed")
+                            for _ in range(REPEATS)), key=lambda t: t[0])
+    pull_s, pull_rep = min((_run_source(scale, "pulled")
+                            for _ in range(REPEATS)), key=lambda t: t[0])
+    pull_coord_bytes = _sum_runs(pull_rep, "source_coordinator_bytes")
+    push_coord_bytes = _sum_runs(push_rep, "source_coordinator_bytes")
+    n_descriptors = _sum_runs(pull_rep, "source_descriptors")
+    assert pull_coord_bytes == 0, (
+        f"worker-pull source leaked {pull_coord_bytes} B of item bytes "
+        f"through the coordinator")
+    assert push_coord_bytes > 0, (
+        "pushed-source baseline recorded zero coordinator bytes — the "
+        "legacy-path counter is broken")
+    rows.append(("streaming/source_pushed", push_s,
+                 f"{src_rows / push_s:,.0f} rows/s (coordinator-fed items, "
+                 f"{push_coord_bytes:,} B through coordinator)"))
+    rows.append(("streaming/source_pulled", pull_s,
+                 f"{src_rows / pull_s:,.0f} rows/s "
+                 f"({push_s / pull_s:.2f}x pushed; {n_descriptors} "
+                 f"descriptors, coordinator bytes {pull_coord_bytes})"))
+
     _append_trajectory({
         "ts": time.time(),
         "scale": scale,
@@ -386,6 +455,17 @@ def run(scale: int) -> List[Row]:
         "shuffle_thread_rows_per_s": scale / shuf_thread_s,
         "shuffle_coordinator_bytes": coord_bytes,
         "shuffle_peer_bytes": peer_bytes,
+        # ISSUE 6: worker-pull sources — pull_rows_per_s is gated; the
+        # pushed baseline rides along for the hop-deletion comparison.
+        "source_pushed_s": push_s,
+        "source_pulled_s": pull_s,
+        "push_rows_per_s": src_rows / push_s,
+        "pull_rows_per_s": src_rows / pull_s,
+        "pull_speedup": push_s / pull_s,
+        "source_coordinator_bytes": pull_coord_bytes,
+        "source_pushed_coordinator_bytes": push_coord_bytes,
+        "source_descriptors": n_descriptors,
+        "source_reissues": _sum_runs(pull_rep, "source_reissues"),
         "host_cores": host_cores,
         "process_workers": n_workers,
         "host_parallel_ceiling": parallel_ceiling,

@@ -6,9 +6,10 @@ fresh entry's throughput metrics against the previous entry *at the same
 benchmark scale* and fails the job (exit 1) on a regression beyond the
 threshold.  Gated metrics default to ``pipelined_rows_per_s`` (the
 pipelined-core throughput), ``shuffle_rows_per_s`` (the worker-side
-peer-exchange shuffle, ISSUE 4), and ``resident_rows_per_s`` (the
-node-resident dataflow on the process backend, ISSUE 5); ``--metric`` may
-be repeated to gate a custom set.  With fewer than two comparable entries
+peer-exchange shuffle, ISSUE 4), ``resident_rows_per_s`` (the
+node-resident dataflow on the process backend, ISSUE 5), and
+``pull_rows_per_s`` (worker-pull descriptor sources, ISSUE 6); ``--metric``
+may be repeated to gate a custom set.  With fewer than two comparable entries
 for a metric (first
 run, wiped trajectory, pre-metric history, unreadable file) that metric
 skips cleanly — a missing history must never fail the build.
@@ -31,7 +32,7 @@ DEFAULT_FILE = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_streaming.json")
 DEFAULT_METRIC = "pipelined_rows_per_s"
 DEFAULT_METRICS = (DEFAULT_METRIC, "shuffle_rows_per_s",
-                   "resident_rows_per_s")
+                   "resident_rows_per_s", "pull_rows_per_s")
 DEFAULT_THRESHOLD = 0.25
 
 

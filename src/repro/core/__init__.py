@@ -21,7 +21,8 @@ from .items import (Granularity, IngestItem, Label, ShmLease, decode_items,
                     encode_items)
 from .language import (FeedSpec, LanguageSession, chain_stage, create_stage,
                        format_, parse_feed_script, parse_ingestion_script,
-                       select, store, unparse_stream, with_epochs)
+                       select, store, unparse_source, unparse_stream,
+                       with_epochs, with_source)
 from .operators import (IngestOp, MaterializeOp, OperatorFailure, OpMode,
                         PassThroughOp, register_op, registered_ops,
                         resolve_callable, resolve_op)
@@ -35,6 +36,10 @@ from .runtime import (ExchangeRound, FaultInjection, NodeExecutor,
                       NodeFailure, RunReport, RuntimeEngine,
                       ShuffleCoordinator, ShuffleService, derive_spill_bytes,
                       ingest)
+from .sources import (SOURCE_KINDS, DirectoryTailSource, FileRangeSource,
+                      GeneratorSpecSource, ShardDescriptor, SocketLineSource,
+                      SourceAdapter, build_source, parse_numeric_lines,
+                      register_source, write_numeric_file)
 from .store import BlockEntry, DataStore, EpochEntry
 from .streaming import (EpochPolicy, EpochReport, FeedDistributor,
                         IngestQueues, StreamFaultInjection,
@@ -54,7 +59,7 @@ __all__ = [
     "encode_items",
     "FeedSpec", "LanguageSession", "chain_stage", "create_stage", "format_",
     "parse_feed_script", "parse_ingestion_script", "select", "store",
-    "unparse_stream", "with_epochs",
+    "unparse_source", "unparse_stream", "with_epochs", "with_source",
     "IngestOp", "MaterializeOp", "OperatorFailure", "OpMode", "PassThroughOp",
     "register_op", "registered_ops", "resolve_callable", "resolve_op",
     "FilterFusionRule", "IngestionOptimizer", "IngestOpExpr", "ParallelModeRule",
@@ -67,6 +72,10 @@ __all__ = [
     "ExchangeRound", "FaultInjection", "NodeExecutor", "NodeFailure",
     "RunReport", "RuntimeEngine", "ShuffleCoordinator", "ShuffleService",
     "derive_spill_bytes", "ingest",
+    "SOURCE_KINDS", "DirectoryTailSource", "FileRangeSource",
+    "GeneratorSpecSource", "ShardDescriptor", "SocketLineSource",
+    "SourceAdapter", "build_source", "parse_numeric_lines", "register_source",
+    "write_numeric_file",
     "BlockEntry", "DataStore", "EpochEntry",
     "EpochPolicy", "EpochReport", "FeedDistributor", "IngestQueues",
     "StreamFaultInjection", "StreamingRuntimeEngine", "StreamReport",

@@ -34,6 +34,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .operators import IngestOp, resolve_op
 from .plan import IngestPlan, coerce_bool
+from .sources import SOURCE_KINDS, build_source
 from .store import DataStore
 
 
@@ -191,6 +192,42 @@ def with_epochs(plan: IngestPlan, *, items: Optional[int] = None,
     return plan
 
 
+def with_source(plan: IngestPlan, kind: str, **spec: Any) -> IngestPlan:
+    """Declare a worker-pull source for the plan (``SOURCE kind(...)`` in the
+    textual language, ISSUE 6): the spec compiles to a
+    :class:`~repro.core.sources.SourceAdapter` at run time, so the coordinator
+    distributes shard descriptors and the workers read the bytes themselves.
+
+    The spec is validated eagerly by building a throwaway adapter — a typo'd
+    kind or kwarg fails at declaration time, not mid-stream."""
+    cfg: Dict[str, Any] = {"kind": kind.lower()}
+    cfg.update({k: v for k, v in spec.items() if v is not None})
+    try:
+        build_source(dict(cfg))
+    except (KeyError, TypeError, ValueError) as e:
+        raise LanguageError(f"SOURCE {kind}: {e}") from e
+    plan.source_spec = cfg
+    return plan
+
+
+def unparse_source(plan: IngestPlan) -> str:
+    """The textual ``SOURCE kind(...)`` statement equivalent to the plan's
+    source spec (parse -> unparse -> parse is stable)."""
+    cfg = getattr(plan, "source_spec", None)
+    if not cfg:
+        raise LanguageError("plan has no source spec to unparse")
+    kind = cfg["kind"]
+
+    def fmt(v: Any) -> str:
+        # field tuples unparse back to the a|b form the parser reads
+        if isinstance(v, (tuple, list)):
+            return "|".join(str(x) for x in v)
+        return str(v)
+
+    args = ", ".join(f"{k}={fmt(v)}" for k, v in cfg.items() if k != "kind")
+    return f"SOURCE {kind}({args});"
+
+
 def unparse_stream(plan: IngestPlan) -> str:
     """The textual ``STREAM WITH EPOCHS(...)`` statement equivalent to the
     plan's stream config (parse -> unparse -> parse is stable: the language
@@ -206,7 +243,8 @@ def unparse_stream(plan: IngestPlan) -> str:
 
 # ---------------------------------------------------------------- text parser
 _STMT_RE = re.compile(r"^\s*(?:(\w+)\s*=\s*)?(SELECT|FORMAT|STORE|CREATE\s+STAGE|"
-                      r"CHAIN\s+STAGE|STREAM|FEED)\b(.*)$", re.IGNORECASE | re.DOTALL)
+                      r"CHAIN\s+STAGE|STREAM|FEED|SOURCE)\b(.*)$",
+                      re.IGNORECASE | re.DOTALL)
 
 
 class LanguageError(ValueError):
@@ -299,6 +337,8 @@ class LanguageSession:
             self._chain_stage(rest)
         elif verb == "STREAM":
             self._stream(rest)
+        elif verb == "SOURCE":
+            self._source(rest)
         elif verb == "FEED":
             self._feed(rest)
 
@@ -422,6 +462,25 @@ class LanguageSession:
         if isinstance(kwargs.get("bytes"), str):
             kwargs["bytes"] = _parse_size(kwargs["bytes"])   # "4mb" literals
         with_epochs(self.plan, **kwargs)
+
+    def _source(self, rest: str) -> None:
+        """SOURCE files(paths='/data/*.csv', shard_bytes=4mb, fields=a|b);
+        — declares a worker-pull source adapter for the plan (ISSUE 6).
+        Kinds come from the source registry (files, tail, socket,
+        generator, plus any ``register_source`` extras)."""
+        m = re.match(r"(\w+)\s*\((?P<args>[^)]*)\)$", rest, re.IGNORECASE)
+        if not m:
+            raise LanguageError(
+                f"bad SOURCE (want SOURCE kind(...), kinds: "
+                f"{sorted(SOURCE_KINDS)}): {rest!r}")
+        kwargs = self._parse_args(m.group("args"))
+        if isinstance(kwargs.get("shard_bytes"), str):
+            kwargs["shard_bytes"] = _parse_size(kwargs["shard_bytes"])
+        if isinstance(kwargs.get("fields"), str):
+            # a|b|c — commas are the argument separator in this surface
+            kwargs["fields"] = tuple(
+                f.strip() for f in kwargs["fields"].split("|") if f.strip())
+        with_source(self.plan, m.group(1), **kwargs)
 
     def _feed(self, rest: str) -> None:
         """FEED <source> INTO plan1, plan2[, ...];  — plan names are IngestPlan

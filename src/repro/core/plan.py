@@ -173,6 +173,10 @@ class IngestPlan:
         # streaming epoch-cut config (None = batch-only plan); set by the
         # declarative ``STREAM WITH EPOCHS(...)`` / ``with_epochs`` surface
         self.stream_config: Optional[Dict[str, Any]] = None
+        # worker-pull source spec ({"kind": ..., **adapter kwargs}); set by
+        # the declarative ``SOURCE kind(...)`` / ``with_source`` surface and
+        # compiled to a SourceAdapter by the engines (ISSUE 6)
+        self.source_spec: Optional[Dict[str, Any]] = None
         self._auto_sid = 0
         self._auto_stage = 0
 
@@ -283,6 +287,7 @@ class IngestPlan:
         return {
             "name": self.name,
             "stream": dict(self.stream_config) if self.stream_config else None,
+            "source": dict(self.source_spec) if self.source_spec else None,
             "statements": {
                 sid: {"kind": s.kind, "inputs": s.inputs,
                       "ops": [o.signature() for o in s.ops]}

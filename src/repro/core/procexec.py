@@ -361,6 +361,19 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
                 raise KeyError(f"worker {node}: plan {plan_key!r} not installed")
             sp = installed[si]
             items, lease = decode_items(payload)   # zero-copy shm views
+            src = ctx.get("source")
+            src_stats: Optional[Tuple[int, int]] = None
+            if src is not None:
+                # worker-pull source (ISSUE 6): the coordinator shipped only
+                # shard descriptors — open/read/parse them here, then route
+                # with the source stage's predicates exactly as the
+                # coordinator would have routed pushed items
+                pulled: List[IngestItem] = []
+                for d in src["descs"]:
+                    pulled.extend(src["adapter"].read(d))
+                src_stats = (len(pulled), items_nbytes(pulled))
+                items = items + route_items(pulled, sp.predicates)
+                del pulled
             refs = ctx.get("fetch")
             if refs:
                 # incoming shuffle partitions merge with the pipe inputs;
@@ -378,6 +391,8 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
             finally:
                 client.set_epoch(prev)
             stats["worker_s"] = time.perf_counter() - t0
+            if src_stats is not None:
+                stats["source_items"], stats["source_bytes"] = src_stats
             xs = ctx.get("shuffle")
             if xs is not None:
                 # exchange boundary (shuffle or narrow): partitions go
@@ -564,14 +579,18 @@ class ProcessNodeExecutor:
                   max_retries: int = 3,
                   shuffle_ctx: Optional[Dict[str, Any]] = None,
                   fetch_refs: Optional[List[Dict[str, Any]]] = None,
-                  sink: bool = False) -> Future:
+                  sink: bool = False,
+                  source_ctx: Optional[Dict[str, Any]] = None) -> Future:
         """Run one stage over ``items`` on the worker; resolves to
         ``(output_items, stats)`` — or ``(manifest_payload, stats)`` when
         ``shuffle_ctx`` marks the stage a shuffle boundary (the worker dealt
         its partitions to the peers and replied metadata only).
         ``fetch_refs`` are the incoming partition descriptors the worker
-        must merge into the stage's inputs.  Fails with WorkerDeath if the
-        node dies mid-flight (mapped to NodeFailure by the runtime)."""
+        must merge into the stage's inputs.  ``source_ctx`` carries a
+        worker-pull source: ``{"adapter", "descs"}`` shard descriptors the
+        worker reads itself (ISSUE 6) — metadata on the pipe, never item
+        bytes.  Fails with WorkerDeath if the node dies mid-flight (mapped
+        to NodeFailure by the runtime)."""
         fut: Future = Future()
         if self._dead:
             fut.set_exception(WorkerDeath(self.node))
@@ -590,7 +609,8 @@ class ProcessNodeExecutor:
                "max_retries": max_retries,
                "shuffle": dict(shuffle_ctx) if shuffle_ctx else None,
                "fetch": list(fetch_refs) if fetch_refs else None,
-               "sink": sink}
+               "sink": sink,
+               "source": dict(source_ctx) if source_ctx else None}
         try:
             self._send(("run", jid, plan_key, stage_idx, lane, payload, ctx))
             if lease is not None:

@@ -48,6 +48,7 @@ from .operators import IngestOp, OperatorFailure, PassThroughOp
 from .optimizer import IngestionOptimizer
 from .plan import IngestPlan, StagePlan, failed_op_index, route_items
 from .procexec import ProcessNodeExecutor, WorkerDeath
+from .sources import ShardDescriptor, SourceAdapter, build_source
 from .store import DataStore
 
 
@@ -110,6 +111,15 @@ class RunReport:
     stage_resident_bytes: int = 0      # bytes kept node-resident across edges
     resident_spills: int = 0           # resident buckets spilled to the DFS
     cohort_replays: int = 0            # batch whole-run replays (post-shuffle death)
+    # --- worker-pull sources (ISSUE 6): the source hop ---------------------
+    # item bytes the coordinator routed on the source hop.  Descriptor-backed
+    # sources keep this at zero on both backends — the coordinator hands out
+    # shard descriptors, workers read the data; only the legacy pushed-
+    # iterator path (feed joints, raw iterators) still counts bytes here.
+    source_coordinator_bytes: int = 0
+    source_descriptors: int = 0        # shard descriptors issued to workers
+    source_reissues: int = 0           # descriptors re-issued after a reader death
+    source_items: int = 0              # items workers materialized from descriptors
     wall_time_s: float = 0.0
     per_node_shards: Dict[str, int] = field(default_factory=dict)
 
@@ -739,7 +749,8 @@ class RuntimeEngine:
 
     # --------------------------------------------------------------------- run
     def run(self, plan: IngestPlan,
-            sources: Union[Dict[str, List[IngestItem]], List[IngestItem]],
+            sources: Union[Dict[str, List[IngestItem]], List[IngestItem],
+                           "SourceAdapter", None] = None,
             faults: Optional[FaultInjection] = None,
             optimize: bool = True) -> RunReport:
         t0 = time.time()
@@ -752,7 +763,18 @@ class RuntimeEngine:
         if optimize:
             stage_plans = self.optimizer.optimize(stage_plans)
 
-        if not isinstance(sources, dict):
+        # worker-pull source (ISSUE 6): the coordinator distributes shard
+        # descriptors; workers read them.  Everything downstream treats the
+        # descriptors as opaque shards — reassignment/cohort replay move
+        # them between nodes exactly like items, but no item bytes ever
+        # exist coordinator-side.
+        adapter = sources if isinstance(sources, SourceAdapter) else None
+        if adapter is None and getattr(plan, "source_spec", None) and sources is None:
+            adapter = build_source(plan.source_spec)
+        if adapter is not None:
+            sources = adapter.describe()
+            report.source_descriptors = len(sources)
+        elif not isinstance(sources, dict):
             sources = list(sources)   # cohort replay re-distributes them
 
         alive = {n: True for n in self.nodes}
@@ -778,12 +800,17 @@ class RuntimeEngine:
                 node_sources = self._distribute_sources(sources, live)
                 report.per_node_shards = {n: len(v)
                                           for n, v in node_sources.items()}
+                if adapter is None:
+                    # legacy pushed path: the coordinator held and routed
+                    # every source item — count the hop it paid
+                    report.source_coordinator_bytes = sum(
+                        items_nbytes(v) for v in node_sources.values())
                 if wrap:
                     eid = self.store.next_epoch_id()
                     self.store.begin_epoch(eid)
                 try:
                     self._execute(stage_plans, node_sources, faults, report,
-                                  alive, epoch=eid)
+                                  alive, epoch=eid, source=adapter)
                     break
                 except _CohortReplay:
                     self.store.abort_epoch(eid)
@@ -884,7 +911,8 @@ class RuntimeEngine:
                  outputs: Optional[Dict[str, Dict[str, List[IngestItem]]]] = None,
                  start_stage: int = 0,
                  end_stage: Optional[int] = None,
-                 node_set: Optional[List[str]] = None
+                 node_set: Optional[List[str]] = None,
+                 source: Optional["SourceAdapter"] = None
                  ) -> Dict[str, Dict[str, List[IngestItem]]]:
         """Run (a slice of) the stage DAG over per-node shards — the body
         shared by the batch engine and the streaming engine's per-epoch
@@ -909,6 +937,13 @@ class RuntimeEngine:
         node whose inputs this epoch still holds.  Raise-mode callers pass
         their consistent snapshot; batch recomputes per stage (it owns
         ``alive`` exclusively and needs reassignment to see deaths).
+
+        ``source`` flips the source hop to worker-pull (ISSUE 6): the
+        source-stage entries of ``node_sources`` are :class:`ShardDescriptor`
+        lists, and each node opens/reads/parses its shards on its own lane
+        (thread backend) or inside its worker process (process backend,
+        ``ctx["source"]``) — no item bytes ever transit the coordinator.
+        Predicates of the source stage apply to the *read* items.
         """
         if on_node_death == "reassign" and (start_stage != 0 or end_stage is not None):
             raise ValueError("shard reassignment requires the full stage DAG")
@@ -943,6 +978,17 @@ class RuntimeEngine:
         # dedicated lock for report mutation from worker threads
         rlock = threading.Lock()
 
+        def read_descs(descs: List[Any]) -> List[IngestItem]:
+            """Worker-pull: materialize a node's shard descriptors (runs on
+            the node's own lane — the thread backend's equivalent of the
+            process worker's in-worker read)."""
+            pulled: List[IngestItem] = []
+            for d in descs:
+                pulled.extend(source.read(d))
+            with rlock:
+                report.source_items += len(pulled)
+            return pulled
+
         # peer-exchange rounds still awaiting consuming stage(s), keyed by
         # producing stage name.  A slice starting mid-DAG (the store segment)
         # first adopts the rounds an earlier slice pinned for it — node-
@@ -975,14 +1021,22 @@ class RuntimeEngine:
             sink = (use_proc and produce is None and not has_consumers
                     and not self.shuffle.synchronous and bool(sp.ops))
             sink_counts: Dict[str, int] = {}
+            # worker-pull: this stage's inputs are shard descriptors, read
+            # node-side (source stages only — stages with upstream consume
+            # prior outputs as usual)
+            src_mode = source is not None and not sp.upstream
 
             # -------------------------------------------------- stage barrier
             def run_stage_on(node: str, nsp: StagePlan,
-                             input_items: List[IngestItem],
+                             input_items: List[Any],
                              fetches: List[Tuple[int, bool]],
                              prnd: Optional[ExchangeRound]) -> Any:
                 with self.store.epoch_context(epoch):
-                    items = input_items
+                    if src_mode:
+                        items = route_items(read_descs(input_items),
+                                            nsp.predicates)
+                    else:
+                        items = input_items
                     for xid, last, owner in fetches:
                         # thread backend: partitions hand off in memory —
                         # collect on the node's own lane, route, and merge.
@@ -999,6 +1053,9 @@ class RuntimeEngine:
             def stage_inputs(node: str, nsp: StagePlan) -> List[IngestItem]:
                 if not nsp.upstream:
                     base = node_sources[node]
+                    if src_mode:
+                        # descriptors are routed post-read, node-side
+                        return list(base)
                 else:
                     base = []
                     for up in nsp.upstream:  # CHAIN = union all (Sec. IV-B)
@@ -1062,13 +1119,17 @@ class RuntimeEngine:
                         fetch.extend(self.shuffle.refs_for(rnd, n))
                     fetch.extend(redirects.get(n, []))
                     futs[n] = self.executor(n).run_stage(
-                        plan_keys[n], si, stage_inputs(n, sp), lane=lane,
+                        plan_keys[n], si,
+                        [] if src_mode else stage_inputs(n, sp), lane=lane,
                         epoch=epoch, live_nodes=live_nodes,
                         injections=injections if ni == 0 else None,
                         max_retries=self.max_retries,
                         shuffle_ctx=(produce.worker_ctx(self.store.dfs_dir)
                                      if produce is not None else None),
-                        fetch_refs=fetch or None, sink=sink)
+                        fetch_refs=fetch or None, sink=sink,
+                        source_ctx=({"adapter": source,
+                                     "descs": node_sources[n]}
+                                    if src_mode else None))
             else:
                 for n in live_nodes:
                     nsp = node_plans[n][si]
@@ -1102,6 +1163,7 @@ class RuntimeEngine:
                             report.op_failures[k] = max(
                                 report.op_failures.get(k, 0), v)
                         report.dummy_substitutions.extend(stats["dummy"])
+                        report.source_items += stats.get("source_items", 0)
                 else:
                     payload = res
                 if (produce is not None and isinstance(payload, dict)
@@ -1209,6 +1271,10 @@ class RuntimeEngine:
                 node_sources[n] = []
                 node_sources[target].extend(shards)
                 report.reassigned_shards += len(shards)
+                if source is not None:
+                    # the moved shards are descriptors: the reader died, the
+                    # survivor re-reads them (descriptor-granular re-issue)
+                    report.source_reissues += len(shards)
                 # re-run all stages so far for the moved shards on the target
                 replay_out: Dict[str, List[IngestItem]] = defaultdict(list)
                 target_died = False
@@ -1244,8 +1310,12 @@ class RuntimeEngine:
 
                 for sj in range(si + 1):
                     rp = stage_plans[sj] if use_proc else node_plans[target][sj]
+                    replay_src = source is not None and not rp.upstream
                     if not rp.upstream:
                         base = shards
+                        if replay_src and not use_proc:
+                            # descriptors: the survivor re-reads them here
+                            base = read_descs(shards)
                     else:
                         base = []
                         for up in rp.upstream:
@@ -1257,9 +1327,14 @@ class RuntimeEngine:
                         try:
                             rout, rstats = self.executor(
                                 target).run_stage(
-                                    plan_keys[target], sj, routed, lane=lane,
+                                    plan_keys[target], sj,
+                                    [] if replay_src else routed, lane=lane,
                                     epoch=epoch, live_nodes=live_nodes,
-                                    max_retries=self.max_retries).result()
+                                    max_retries=self.max_retries,
+                                    source_ctx=({"adapter": source,
+                                                 "descs": shards}
+                                                if replay_src else None)
+                                    ).result()
                         except (NodeFailure, WorkerDeath):
                             # the shards sit in node_sources[target]; the
                             # next loop pass moves them to a survivor

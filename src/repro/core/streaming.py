@@ -34,6 +34,15 @@ an *unbounded* source, in the shape of AsterixDB-style long-running feeds
 * **Feed fan-out** — ``FeedDistributor`` + ``stream_ingest_multi`` fan one
   source into several plans (the language's ``FEED ... INTO plan1, plan2``),
   AsterixDB-style feed joints: enrichment pipelines share a single ingest.
+* **Worker-pull sources** (ISSUE 6) — a ``SourceAdapter`` turns the source
+  into shard *descriptors* (byte ranges / endpoints / seeded specs); the
+  coordinator cuts epochs over descriptors and workers open/read/parse their
+  shards directly into their local lanes, so zero item bytes cross the
+  coordinator (``RunReport.source_coordinator_bytes == 0``).  A reader death
+  re-issues the dead node's unfinished descriptors to survivors
+  (``source_reissues``) before the usual invalidate-then-replay.  The pushed
+  feeder path above remains as fallback and oracle for sources that cannot
+  be described (feed joints, raw iterators).
 """
 from __future__ import annotations
 
@@ -41,7 +50,7 @@ import itertools
 import queue
 import threading
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
 from dataclasses import dataclass, field
 from typing import (Any, Dict, Iterable, Iterator, List, Optional, Sequence,
                     Tuple, Union)
@@ -51,6 +60,7 @@ from .optimizer import IngestionOptimizer, split_pipeline_segments
 from .plan import IngestPlan, StagePlan, coerce_bool
 from .runtime import (FaultInjection, NodeFailure, RunReport, RuntimeEngine,
                       derive_spill_bytes)
+from .sources import ShardDescriptor, SourceAdapter, build_source
 from .store import DataStore
 
 
@@ -169,6 +179,20 @@ class StreamReport:
     def items_per_sec(self) -> float:
         return self.total_items / self.wall_time_s if self.wall_time_s else 0.0
 
+    # --------------------------- worker-pull source aggregates (ISSUE 6) ---
+    def source_coordinator_bytes(self) -> int:
+        """Item bytes that crossed the coordinator on the source hop —
+        zero for descriptor-backed (worker-pull) sources."""
+        return sum(e.run.source_coordinator_bytes for e in self.epochs)
+
+    def source_descriptors(self) -> int:
+        """Shard descriptors issued to workers across all committed epochs."""
+        return sum(e.run.source_descriptors for e in self.epochs)
+
+    def source_reissues(self) -> int:
+        """Descriptors re-issued to survivors after a reader death."""
+        return sum(e.run.source_reissues for e in self.epochs)
+
 
 class IngestQueues:
     """Per-node bounded ingest queues fed from an unbounded source.
@@ -281,12 +305,17 @@ class IngestQueues:
         """Drain queues into one epoch: up to ``max_items`` total (and/or
         ``max_bytes`` of payload — the byte cut closes the epoch at the first
         item that reaches the threshold), or whatever arrived when ``tick_s``
-        elapses (needs >= 1 item — an empty tick waits for data or
-        end-of-stream)."""
+        elapses.
+
+        The tick deadline arms on **entry** (bugfix, ISSUE 6): it used to arm
+        only after the first item landed, so an idle stream never honored the
+        wall-clock cut and a slow trickle held the epoch open indefinitely.
+        An idle tick now returns an *empty* batch at the deadline — callers
+        distinguish it from end-of-stream via :meth:`at_eof`."""
         batch: Dict[str, List[IngestItem]] = {n: [] for n in self.nodes}
         count = 0
         nbytes = 0
-        deadline = None
+        deadline = (time.monotonic() + tick_s) if tick_s is not None else None
         while count < max_items and (max_bytes is None or nbytes < max_bytes):
             got = False
             for n in self.nodes:
@@ -302,15 +331,24 @@ class IngestQueues:
                 except queue.Empty:
                     continue
             if got:
-                if deadline is None and tick_s is not None:
-                    deadline = time.monotonic() + tick_s
                 continue
-            if self.exhausted.is_set() and all(q.empty() for q in self.queues.values()):
+            if self.at_eof():
                 break
             if deadline is not None and time.monotonic() >= deadline:
                 break
-            time.sleep(0.001)
+            # bounded wait, never past the tick deadline, waking early on
+            # end-of-stream (the old code slept a blind 1 ms per pass)
+            wait = 0.001
+            if deadline is not None:
+                wait = max(0.0005, min(wait, deadline - time.monotonic()))
+            self.exhausted.wait(wait)
         return batch
+
+    def at_eof(self) -> bool:
+        """End of stream: the producer is done and every queue is drained
+        (how callers tell an empty wall-clock tick from stream end)."""
+        return (self.exhausted.is_set()
+                and all(q.empty() for q in self.queues.values()))
 
     def mark_dead(self, node: str) -> None:
         self._live[node] = False
@@ -373,12 +411,17 @@ class _EpochJob:
     segment's outputs live in *node-resident* exchange buckets pinned to
     those nodes (ISSUE 5), so the store segment may consume them in place
     only while every one of them is still alive — otherwise the committer
-    replays the whole epoch from the retained ``batch``."""
+    replays the whole epoch from the retained ``batch``.
+
+    With a worker-pull ``source`` (ISSUE 6), ``batch``/``node_sources`` hold
+    :class:`~repro.core.sources.ShardDescriptor` assignments instead of
+    items — the retained descriptors are the replay unit: re-reading them is
+    deterministic, so a replayed epoch commits the same rows."""
 
     eid: int
     epoch_index: int
-    batch: Dict[str, List[IngestItem]]
-    node_sources: Dict[str, List[IngestItem]]
+    batch: Dict[str, List[Any]]          # items, or shard descriptors
+    node_sources: Dict[str, List[Any]]
     outputs: Dict[str, Dict[str, List[IngestItem]]]
     faults: FaultInjection           # this epoch's injection view
     ereport: RunReport
@@ -386,6 +429,7 @@ class _EpochJob:
     items_in: int
     t_cut: float
     node_set: List[str] = field(default_factory=list)
+    source: Optional[SourceAdapter] = None   # set => descriptor-backed epoch
 
 
 class _EpochCommitter:
@@ -401,7 +445,7 @@ class _EpochCommitter:
     def __init__(self, engine: "StreamingRuntimeEngine",
                  stage_plans: List[StagePlan], split: int,
                  faults: StreamFaultInjection, sreport: StreamReport,
-                 queues: IngestQueues, max_inflight: int = 2,
+                 queues: Optional[IngestQueues], max_inflight: int = 2,
                  policy: Optional[EpochPolicy] = None) -> None:
         self.engine = engine
         self.stage_plans = stage_plans
@@ -472,9 +516,16 @@ class _EpochCommitter:
                 # epoch's exchange rounds everywhere and recompute from the
                 # retained batch
                 eng.invalidate_exchange(job.eid)
+                if job.source is not None:
+                    # descriptor replay bookkeeping: the dead node's
+                    # unfinished shards are handed to survivors
+                    job.ereport.source_reissues += eng._count_lost(
+                        job.batch, live)
                 job.node_sources = eng._redistribute(job.batch, live)
+                job.batch = job.node_sources
                 job.outputs = {n: defaultdict(list) for n in eng.nodes}
             store.begin_epoch(job.eid)
+            base_items = job.ereport.source_items
             try:
                 if not in_place and self.split > 0:
                     # recompute the ingest segment on the *ingest* lanes —
@@ -488,11 +539,16 @@ class _EpochCommitter:
                                  on_node_death="raise", lane="ingest",
                                  epoch=job.eid, outputs=job.outputs,
                                  start_stage=0, end_stage=self.split,
-                                 node_set=live)
+                                 node_set=live, source=job.source)
                 eng._execute(self.stage_plans, job.node_sources, job.faults,
                              job.ereport, eng.alive, on_node_death="raise",
                              lane="store", epoch=job.eid, outputs=job.outputs,
-                             start_stage=self.split, node_set=live)
+                             start_stage=self.split, node_set=live,
+                             source=job.source)
+                if job.source is not None and self.split == 0:
+                    # single-segment DAG: the shards were read just now, on
+                    # the store lane — items_in is the worker-reported count
+                    job.items_in = job.ereport.source_items - base_items
                 self._publish(job)
                 return
             except NodeFailure as e:
@@ -579,16 +635,29 @@ class StreamingRuntimeEngine(RuntimeEngine):
 
     # -------------------------------------------------------------------- run
     def run_stream(self, plan: IngestPlan,
-                   source: Optional[Iterable[IngestItem]] = None,
+                   source: Union[Iterable[IngestItem], SourceAdapter,
+                                 None] = None,
                    faults: Optional[StreamFaultInjection] = None,
                    optimize: bool = True,
                    max_epochs: Optional[int] = None,
                    queues: Optional[IngestQueues] = None) -> StreamReport:
-        """Consume ``source`` (any iterator, possibly unbounded) until it is
-        exhausted or ``max_epochs`` epochs have committed.  Alternatively pass
-        pre-built ``queues`` (a feed joint) instead of a source."""
-        if (source is None) == (queues is None):
-            raise ValueError("run_stream needs exactly one of source/queues")
+        """Consume ``source`` until it is exhausted or ``max_epochs`` epochs
+        have committed.  ``source`` is either a plain item iterator (legacy
+        pushed path: a feeder thread routes items through coordinator-side
+        queues) or a :class:`~repro.core.sources.SourceAdapter` (worker-pull
+        path, ISSUE 6: epochs are cut over shard descriptors and workers read
+        their shards directly).  Alternatively pass pre-built ``queues`` (a
+        feed joint) instead of a source; with neither, a plan-level
+        ``SOURCE ...`` spec compiles to an adapter."""
+        adapter: Optional[SourceAdapter] = None
+        if isinstance(source, SourceAdapter):
+            adapter, source = source, None
+        elif (source is None and queues is None
+              and getattr(plan, "source_spec", None)):
+            adapter = build_source(plan.source_spec)
+        if sum(x is not None for x in (source, queues, adapter)) != 1:
+            raise ValueError("run_stream needs exactly one of source/queues "
+                             "(or a plan-level SOURCE spec)")
         t0 = time.time()
         faults = faults or StreamFaultInjection()
         sreport = StreamReport()
@@ -611,9 +680,20 @@ class StreamingRuntimeEngine(RuntimeEngine):
              else self.store.mark_node_dead)(n)
 
         policy = self._config(plan)
+        eid = self.store.next_epoch_id()
+        if adapter is not None:
+            # worker-pull path: no feeder thread, no coordinator queues —
+            # the coordinator only plans *where* data is read
+            try:
+                self._run_pulled(stage_plans, split, adapter, faults, sreport,
+                                 policy, max_epochs, eid)
+            finally:
+                self.shuffle.drain()
+                self.store.flush_manifest()
+            sreport.wall_time_s = time.time() - t0
+            return sreport
         if queues is None:
             queues = IngestQueues(source, self.nodes, policy.capacity)
-        eid = self.store.next_epoch_id()
         try:
             if self.pipelined:
                 self._run_pipelined(stage_plans, split, queues, faults, sreport,
@@ -625,7 +705,9 @@ class StreamingRuntimeEngine(RuntimeEngine):
                     batch = queues.cut_epoch(policy.items, policy.seconds,
                                              policy.bytes)
                     if not any(len(v) for v in batch.values()):
-                        break   # end of stream
+                        if queues.at_eof():
+                            break   # end of stream
+                        continue    # empty wall-clock tick: nothing to stage
                     ereport = self._run_epoch(eid, epoch_index, batch,
                                               stage_plans, faults, sreport, queues)
                     sreport.epochs.append(ereport)
@@ -659,7 +741,9 @@ class StreamingRuntimeEngine(RuntimeEngine):
                 batch = queues.cut_epoch(policy.items, policy.seconds,
                                          policy.bytes)
                 if not any(len(v) for v in batch.values()):
-                    break   # end of stream
+                    if queues.at_eof():
+                        break   # end of stream
+                    continue    # empty wall-clock tick: nothing to stage
                 t_cut = time.time()
                 job = self._ingest_segment(eid, epoch_index, batch, stage_plans,
                                            split, faults, sreport, queues, t_cut)
@@ -670,22 +754,142 @@ class StreamingRuntimeEngine(RuntimeEngine):
             committer.close()
         committer.raise_if_failed()
 
+    # ------------------------------------------------------------ worker-pull
+    @staticmethod
+    def _count_lost(batch: Dict[str, List[Any]], live: Sequence[str]) -> int:
+        """Descriptors assigned to nodes no longer in ``live`` — the shards a
+        replay re-issues to survivors (``source_reissues``)."""
+        live_set = set(live)
+        return sum(len(v) for n, v in batch.items() if v and n not in live_set)
+
+    def _cut_descriptors(self, pending: "deque[ShardDescriptor]",
+                         adapter: SourceAdapter,
+                         policy: EpochPolicy) -> List[ShardDescriptor]:
+        """Epoch cut over shard descriptors.
+
+        The coordinator never sees item bytes, so the cut budgets on the
+        adapter's *estimates* (``est_items``/``est_bytes``, each descriptor
+        counting at least one item); the authoritative per-epoch item count
+        is worker-reported after the reads (``RunReport.source_items``).
+        The ``seconds`` deadline arms on entry — an idle tick cuts whatever
+        descriptors are pending, exactly like the fixed ``cut_epoch``."""
+        deadline = (time.monotonic() + policy.seconds
+                    if policy.seconds is not None else None)
+        batch: List[ShardDescriptor] = []
+        est_items = 0
+        est_bytes = 0
+
+        def full() -> bool:
+            return (est_items >= policy.items
+                    or (policy.bytes is not None
+                        and est_bytes >= policy.bytes))
+
+        while True:
+            while pending and not full():
+                d = pending.popleft()
+                batch.append(d)
+                est_items += max(1, int(getattr(d, "est_items", 1)))
+                est_bytes += int(getattr(d, "est_bytes", 0))
+            if full():
+                break
+            more = adapter.poll()
+            if more:
+                pending.extend(more)
+                continue
+            if adapter.exhausted():
+                break
+            if deadline is not None and time.monotonic() >= deadline:
+                break
+            time.sleep(0.005)
+        return batch
+
+    def _run_pulled(self, stage_plans: List[StagePlan], split: int,
+                    adapter: SourceAdapter, faults: StreamFaultInjection,
+                    sreport: StreamReport, policy: EpochPolicy,
+                    max_epochs: Optional[int], eid: int) -> None:
+        """Descriptor-driven epochs (ISSUE 6): the coordinator distributes
+        shard descriptors round-robin over the live nodes and the workers
+        read them on their own lanes — zero source bytes cross here.  Reuses
+        the pipelined committer / sequential epoch machinery unchanged; the
+        retained descriptor batch is the replay unit after a reader death."""
+        pending: "deque[ShardDescriptor]" = deque(adapter.describe())
+        committer: Optional[_EpochCommitter] = None
+        if self.pipelined:
+            committer = _EpochCommitter(self, stage_plans, split, faults,
+                                        sreport, None,
+                                        max_inflight=self.max_inflight_epochs,
+                                        policy=policy)
+        epoch_index = 0
+        try:
+            while max_epochs is None or epoch_index < max_epochs:
+                if committer is not None:
+                    committer.raise_if_failed()
+                descs = self._cut_descriptors(pending, adapter, policy)
+                if not descs:
+                    if adapter.exhausted() and not pending:
+                        break   # end of stream
+                    continue    # empty tick: the adapter may yet poll more
+                live = [n for n in self.nodes if self.alive[n]]
+                if not live:
+                    raise RuntimeError("all nodes failed")
+                batch: Dict[str, List[Any]] = {n: [] for n in self.nodes}
+                for i, d in enumerate(descs):
+                    batch[live[i % len(live)]].append(d)
+                t_cut = time.time()
+                if committer is not None:
+                    job = self._ingest_segment(eid, epoch_index, batch,
+                                               stage_plans, split, faults,
+                                               sreport, None, t_cut,
+                                               source=adapter)
+                    committer.submit(job)
+                else:
+                    ereport = self._run_epoch(eid, epoch_index, batch,
+                                              stage_plans, faults, sreport,
+                                              None, source=adapter)
+                    sreport.epochs.append(ereport)
+                    sreport.total_items += ereport.items_in
+                    policy.observe_commit(ereport.commit_latency_s)
+                eid += 1
+                epoch_index += 1
+        finally:
+            if committer is not None:
+                committer.close()
+        if committer is not None:
+            committer.raise_if_failed()
+
     def _ingest_segment(self, eid: int, epoch_index: int,
-                        batch: Dict[str, List[IngestItem]],
+                        batch: Dict[str, List[Any]],
                         stage_plans: List[StagePlan], split: int,
                         faults: StreamFaultInjection, sreport: StreamReport,
-                        queues: IngestQueues, t_cut: float) -> _EpochJob:
+                        queues: Optional[IngestQueues], t_cut: float,
+                        source: Optional[SourceAdapter] = None) -> _EpochJob:
         """Run the epoch's ingest segment (stages [0, split)), replaying on
-        node death — nothing is staged yet, so recovery is pure recompute."""
+        node death — nothing is staged yet, so recovery is pure recompute.
+
+        With a worker-pull ``source`` the batch holds shard descriptors:
+        the workers read them inside the segment's first stage, the
+        committed item count is worker-reported (``source_items``), and a
+        replay attempt re-issues the dead node's descriptors to survivors."""
         attempts = 0
         ereport = RunReport()
-        items_in = sum(len(v) for v in batch.values())
+        if source is not None:
+            ereport.source_descriptors = sum(len(v) for v in batch.values())
+            items_in = 0   # worker-reported after the reads
+        else:
+            items_in = sum(len(v) for v in batch.values())
+            # the legacy pushed path: every one of these items crossed the
+            # coordinator's ingest queues — the hop the descriptor path deletes
+            ereport.source_coordinator_bytes = sum(
+                it.nbytes() for v in batch.values() for it in v)
         while True:
             attempts += 1
             live = [n for n in self.nodes if self.alive[n]]
             if not live:
                 raise RuntimeError("all nodes failed")
+            if source is not None:
+                ereport.source_reissues += self._count_lost(batch, live)
             node_sources = self._redistribute(batch, live)
+            batch = node_sources   # keep replay bookkeeping per-assignment
             ef = FaultInjection(op_failures=faults.op_failures)
             for n, at_epoch in faults.node_death_in_epoch.items():
                 if at_epoch == epoch_index and self.alive.get(n):
@@ -696,28 +900,32 @@ class StreamingRuntimeEngine(RuntimeEngine):
             if split == 0:
                 return _EpochJob(eid, epoch_index, batch, node_sources, outputs,
                                  ef, ereport, attempts, items_in, t_cut,
-                                 node_set=live)
+                                 node_set=live, source=source)
+            base_items = ereport.source_items
             try:
                 # epoch binds the segment's exchange rounds (no store writes
                 # happen before `split`, so the staging protocol is untouched)
                 self._execute(stage_plans, node_sources, ef, ereport, self.alive,
                               on_node_death="raise", lane="ingest",
                               outputs=outputs, start_stage=0, end_stage=split,
-                              node_set=live, epoch=eid)
+                              node_set=live, epoch=eid, source=source)
             except NodeFailure as e:
                 self._note_death(str(e), eid, sreport, queues)
                 continue
+            if source is not None:
+                items_in = ereport.source_items - base_items
             return _EpochJob(eid, epoch_index, batch, node_sources, outputs,
                              ef, ereport, attempts, items_in, t_cut,
-                             node_set=live)
+                             node_set=live, source=source)
 
     # ------------------------------------------------------------------ epoch
     # epoch batches rebalance with the engine-wide policy: RuntimeEngine
     # ._redistribute (node affinity for live nodes, round-robin spill)
 
     def _note_death(self, dead: str, eid: int, sreport: StreamReport,
-                    queues: IngestQueues) -> None:
-        queues.mark_dead(dead)
+                    queues: Optional[IngestQueues]) -> None:
+        if queues is not None:   # the worker-pull path has no ingest queues
+            queues.mark_dead(dead)
         sreport.node_failures.append(dead)
         if eid not in sreport.replayed_epochs:
             sreport.replayed_epochs.append(eid)
@@ -727,26 +935,34 @@ class StreamingRuntimeEngine(RuntimeEngine):
         self.invalidate_exchange(eid)
 
     def _run_epoch(self, eid: int, epoch_index: int,
-                   batch: Dict[str, List[IngestItem]],
+                   batch: Dict[str, List[Any]],
                    stage_plans: List[StagePlan], faults: StreamFaultInjection,
-                   sreport: StreamReport, queues: IngestQueues) -> EpochReport:
+                   sreport: StreamReport, queues: Optional[IngestQueues],
+                   source: Optional[SourceAdapter] = None) -> EpochReport:
         """Sequential mode: run one micro-batch through the full stage DAG and
         commit it atomically.
 
         Node death mid-attempt -> abort the staged blocks, mark the node dead,
         replay the *entire epoch* on the survivors.  The commit is the only
         publish point, so a replayed epoch can neither lose items (the full
-        input batch is retained until commit) nor double-commit
-        (``begin_epoch`` refuses committed ids)."""
+        input batch — items or shard descriptors — is retained until commit)
+        nor double-commit (``begin_epoch`` refuses committed ids)."""
         items_in = sum(len(v) for v in batch.values())
+        n_descs = items_in if source is not None else 0
+        pushed_bytes = (0 if source is not None else sum(
+            it.nbytes() for v in batch.values() for it in v))
         t_cut = time.time()
         attempts = 0
+        reissues = 0
         while True:
             attempts += 1
             live = [n for n in self.nodes if self.alive[n]]
             if not live:
                 raise RuntimeError("all nodes failed")
+            if source is not None:
+                reissues += self._count_lost(batch, live)
             node_sources = self._redistribute(batch, live)
+            batch = node_sources   # keep replay bookkeeping per-assignment
 
             # injected mid-epoch deaths for this epoch index -> die after the
             # first stage of the attempt (blocks already staged get aborted)
@@ -757,14 +973,21 @@ class StreamingRuntimeEngine(RuntimeEngine):
 
             self.store.begin_epoch(eid)
             ereport = RunReport()
+            if source is not None:
+                ereport.source_descriptors = n_descs
+                ereport.source_reissues = reissues
+            else:
+                ereport.source_coordinator_bytes = pushed_bytes
             try:
                 self._execute(stage_plans, node_sources, ef, ereport,
                               self.alive, on_node_death="raise", epoch=eid,
-                              node_set=live)
+                              node_set=live, source=source)
             except NodeFailure as e:
                 self.store.abort_epoch(eid)
                 self._note_death(str(e), eid, sreport, queues)
                 continue
+            if source is not None:
+                items_in = ereport.source_items
             entry = self.store.commit_epoch(eid, n_items=items_in)
             return EpochReport(epoch=eid, items_in=items_in,
                                n_blocks=entry.n_blocks, attempts=attempts,
@@ -772,7 +995,9 @@ class StreamingRuntimeEngine(RuntimeEngine):
                                run=ereport)
 
 
-def stream_ingest(plan: IngestPlan, source: Iterable[IngestItem], store: DataStore,
+def stream_ingest(plan: IngestPlan,
+                  source: Union[Iterable[IngestItem], SourceAdapter, None],
+                  store: DataStore,
                   *, optimize: bool = True,
                   faults: Optional[StreamFaultInjection] = None,
                   max_epochs: Optional[int] = None,

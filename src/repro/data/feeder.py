@@ -68,13 +68,20 @@ class BlockFeeder:
 
     def __init__(self, data_store: DataStore, *, num_tasks: int = 1, task: int = 0,
                  batch_rows: Optional[int] = None, seed: int = 0,
-                 fields: Sequence[str] = FIELDS, start_step: int = 0) -> None:
+                 fields: Sequence[str] = FIELDS, start_step: int = 0,
+                 start_offset: int = 0) -> None:
         self.store = data_store
         self.num_tasks, self.task = num_tasks, task
         self.batch_rows = batch_rows
         self.fields = tuple(fields)
         self.seed = seed
-        self.step = start_step  # resumable position (checkpoint/restart)
+        # resumable position (checkpoint/restart): ``step`` is the first
+        # block with unconsumed rows, ``offset`` how many of its rows earlier
+        # batches already consumed — without the offset, the carry rows left
+        # when batch_rows doesn't divide a block were dropped or replayed on
+        # restart (bugfix, ISSUE 6)
+        self.step = start_step
+        self.offset = start_offset
         self.my_blocks = self._assigned_blocks()
         # deterministic per-epoch order shared by all tasks
         self._order = np.random.default_rng(seed).permutation(len(self.my_blocks))
@@ -96,28 +103,53 @@ class BlockFeeder:
         return deserialize_block(block, projection=list(self.fields))
 
     def batches(self, num_steps: int) -> Iterator[Dict[str, np.ndarray]]:
-        """Sequential, resumable batch stream."""
+        """Sequential, resumable batch stream.
+
+        After every yielded batch, ``(self.step, self.offset)`` is the exact
+        resume point: a fresh feeder constructed with
+        ``start_step=step, start_offset=offset`` continues the stream with
+        identical batches — no carry rows are lost or replayed."""
         if not self.my_blocks:
             return
         buf: Dict[str, List[np.ndarray]] = {f: [] for f in self.fields}
         rows = 0
         produced = 0
         idx = self.step
+        skip = self.offset
+        # blocks backing ``buf``: [block index, rows consumed, total rows]
+        pending: List[List[int]] = []
         while produced < num_steps:
             cols = self._read(idx)
+            total = len(cols[self.fields[0]])
+            start = min(skip, total)
+            skip = 0
+            take = total - start
+            if take > 0:
+                for f in self.fields:
+                    buf[f].append(cols[f][start:] if start else cols[f])
+                pending.append([idx, start, total])
+                rows += take
             idx += 1
-            take = len(cols[self.fields[0]])
-            for f in self.fields:
-                buf[f].append(cols[f])
-            rows += take
             target = self.batch_rows or take
-            while rows >= target and produced < num_steps:
+            while target > 0 and rows >= target and produced < num_steps:
                 cat = {f: np.concatenate(buf[f]) for f in self.fields}
                 out = {f: cat[f][:target] for f in self.fields}
                 buf = {f: [cat[f][target:]] for f in self.fields}
                 rows -= target
+                # advance the consumed-row cursor through the backing blocks
+                need = target
+                while need > 0 and pending:
+                    blk = pending[0]
+                    used = min(blk[2] - blk[1], need)
+                    blk[1] += used
+                    need -= used
+                    if blk[1] >= blk[2]:
+                        pending.pop(0)
+                if pending:
+                    self.step, self.offset = pending[0][0], pending[0][1]
+                else:
+                    self.step, self.offset = idx, 0
                 produced += 1
-                self.step = idx
                 yield out
 
     # ------------------------------------------------------------- live tailing
@@ -162,21 +194,48 @@ class BlockFeeder:
     def stealing_queue(feeders: Sequence["BlockFeeder"], num_steps: int
                        ) -> "queue.Queue[Dict[str, np.ndarray]]":
         """Fan several feeder tasks into one queue; fast tasks pull more work —
-        a straggling feeder merely contributes fewer batches (DESIGN.md §5)."""
+        a straggling feeder merely contributes fewer batches (DESIGN.md §5).
+
+        The returned queue carries two extras: ``q.stop()`` — the shutdown
+        path a consumer abandoning the stream early MUST call so the workers
+        unblock and exit (bugfix, ISSUE 6: workers used to block forever on a
+        full queue, and the old ``done`` event was never set) — and
+        ``q.delivered()``, the number of batches actually enqueued (a permit
+        claimed for a batch that was never placed is returned, so the count
+        no longer includes undelivered batches)."""
         q: "queue.Queue[Dict[str, np.ndarray]]" = queue.Queue(maxsize=8)
         remaining = threading.Semaphore(num_steps)
         done = threading.Event()
+        lock = threading.Lock()
+        enqueued = [0]
 
         def work(f: "BlockFeeder") -> None:
             for b in f.batches(num_steps):
-                if not remaining.acquire(blocking=False):
-                    return
                 if done.is_set():
                     return
-                q.put(b)
+                if not remaining.acquire(blocking=False):
+                    return   # global quota claimed by faster tasks
+                placed = False
+                while not done.is_set():
+                    try:
+                        q.put(b, timeout=0.05)   # bounded: re-check shutdown
+                        placed = True
+                        break
+                    except queue.Full:
+                        continue
+                if not placed:
+                    remaining.release()   # never delivered: return the permit
+                    return
+                with lock:
+                    enqueued[0] += 1
+                    if enqueued[0] >= num_steps:
+                        done.set()   # quota delivered: stop every worker
 
         threads = [threading.Thread(target=work, args=(f,), daemon=True)
                    for f in feeders]
         for t in threads:
             t.start()
+        q.stop = done.set                    # type: ignore[attr-defined]
+        q.delivered = lambda: enqueued[0]    # type: ignore[attr-defined]
+        q.workers = threads                  # type: ignore[attr-defined]
         return q

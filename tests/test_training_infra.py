@@ -141,6 +141,28 @@ class TestFeeder:
         replay = [b["tokens"].sum() for b in f3.batches(5)]
         assert replay[:4] == first
 
+    def test_resume_equivalence_at_every_step(self, tmp_path):
+        """Stop/restart at EVERY step yields the exact reference stream.
+
+        batch_rows=3 never divides the 8-row blocks, so every batch leaves
+        carry rows; before the (step, offset) cursor those rows were dropped
+        or replayed on restart (bugfix, ISSUE 6)."""
+        from repro.data.feeder import BlockFeeder
+        ds = self._ingest(tmp_path)
+        n = 12
+        ref = list(BlockFeeder(ds, batch_rows=3, seed=7).batches(n))
+        assert len(ref) == n
+        for stop in range(n):
+            f1 = BlockFeeder(ds, batch_rows=3, seed=7)
+            head = list(f1.batches(stop))
+            f2 = BlockFeeder(ds, batch_rows=3, seed=7,
+                             start_step=f1.step, start_offset=f1.offset)
+            stream = head + list(f2.batches(n - stop))
+            assert len(stream) == n, stop
+            for want, got in zip(ref, stream):
+                for field in want:
+                    np.testing.assert_array_equal(want[field], got[field])
+
     def test_work_stealing_queue_yields_all(self, tmp_path):
         from repro.data.feeder import BlockFeeder
         ds = self._ingest(tmp_path)
@@ -149,6 +171,30 @@ class TestFeeder:
         q = BlockFeeder.stealing_queue(feeders, num_steps=6)
         got = [q.get(timeout=10) for _ in range(6)]
         assert len(got) == 6
+        for t in q.workers:
+            t.join(timeout=5)
+        assert not any(t.is_alive() for t in q.workers)
+        assert q.delivered() == 6
+
+    def test_work_stealing_queue_consumer_abandons(self, tmp_path):
+        """A consumer that walks away mid-stream must not strand the workers.
+
+        Before the fix the done event was never set and workers blocked
+        forever on q.put() into the full queue (bugfix, ISSUE 6)."""
+        from repro.data.feeder import BlockFeeder
+        ds = self._ingest(tmp_path)
+        feeders = [BlockFeeder(ds, num_tasks=2, task=t, batch_rows=4)
+                   for t in range(2)]
+        q = BlockFeeder.stealing_queue(feeders, num_steps=50)
+        for _ in range(3):
+            q.get(timeout=10)
+        q.stop()   # the consumer abandons the stream
+        for t in q.workers:
+            t.join(timeout=5)
+        assert not any(t.is_alive() for t in q.workers)
+        # delivered counts only batches actually placed: at most the 3 we
+        # consumed + the queue capacity (8) + one in-flight put per worker
+        assert q.delivered() <= 3 + 8 + len(feeders)
 
 
 # --------------------------------------------------------- dry-run utilities

@@ -1,0 +1,475 @@
+"""Worker-pull sources (ISSUE 6): descriptors instead of item pushes.
+
+Covers the adapter units (file ranges, directory tail, socket lines, seeded
+generators), the acceptance invariant (``source_coordinator_bytes == 0`` on
+both backends, with the legacy pushed path keeping the counter live), the
+``SOURCE ...`` language surface, the fixed wall-clock epoch cutter (deadline
+arms on entry; an empty tick no longer ends the stream), and the descriptor
+replay fault matrix — injected deaths and real SIGTERMs mid-shard-read and
+mid-parse must stay exactly-once, observe ``source_reissues``, and leak no
+shm segments or spill files.
+"""
+import glob
+import os
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (DataAccess, DataStore, DirectoryTailSource,
+                        FileRangeSource, GeneratorSpecSource, IngestPlan,
+                        IngestQueues, LanguageSession, ShardDescriptor,
+                        SocketLineSource, StreamFaultInjection,
+                        StreamingRuntimeEngine, build_source, chain_stage,
+                        create_stage, parse_numeric_lines, resolve_op,
+                        stream_ingest, unparse_source, with_epochs,
+                        with_source, write_numeric_file)
+from repro.core.language import LanguageError, format_, select
+from repro.core.language import store as store_stmt
+from repro.core.items import IngestItem
+from repro.data.generators import gen_lineitem
+
+GEN = "repro.data.generators:gen_lineitem"
+
+
+def columnar_plan(ds, *, epoch_items=4):
+    """Single-stage parse -> chunk -> serialize -> store plan."""
+    p = IngestPlan("pull")
+    s1 = select(p, parser="identity_parser")
+    s2 = format_(p, s1, chunk={"target_rows": 64}, serialize="columnar")
+    s3 = store_stmt(p, s2, locate="roundrobin", upload=ds)
+    create_stage(p, using=[s1, s2, s3], name="main")
+    return with_epochs(p, items=epoch_items)
+
+
+def narrow3_plan(ds, *, epoch_items=4):
+    """Three narrow stages (a -> b -> c): the read happens in stage a, the
+    parse/serialize pipeline in b — a kill between them lands mid-parse."""
+    p = IngestPlan("pull3")
+    s1 = p.add_statement([resolve_op("identity_parser")], kind="select")
+    s2 = p.add_statement([resolve_op("chunk", target_rows=256),
+                          resolve_op("serialize", layout="columnar")],
+                         kind="format", inputs=[s1])
+    s3 = p.add_statement([resolve_op("upload", store=ds)],
+                         kind="store", inputs=[s2])
+    create_stage(p, using=[s1], name="a")
+    chain_stage(p, to=["a"], using=[s2], name="b")
+    chain_stage(p, to=["b"], using=[s3], name="c")
+    return with_epochs(p, items=epoch_items)
+
+
+def agg(rep, field):
+    return sum(getattr(e.run, field) for e in rep.epochs)
+
+
+def shm_segments():
+    return set(glob.glob("/dev/shm/psm_*"))
+
+
+def lineitem_file(path, rows, seed=0):
+    cols = gen_lineitem(rows, seed=seed)
+    size = write_numeric_file(str(path), cols)
+    return cols, size
+
+
+# ---------------------------------------------------------------------------
+class TestAdapters:
+    def test_file_range_split_preserves_every_row(self, tmp_path):
+        """Hadoop-style splits: each range owns lines starting inside it, so
+        any shard_bytes reassembles the exact row set."""
+        cols, size = lineitem_file(tmp_path / "d.csv", 300, seed=3)
+        for shard_bytes in (size, size // 2, size // 7, 64):
+            src = FileRangeSource(str(tmp_path / "d.csv"), fields=list(cols),
+                                  shard_bytes=shard_bytes)
+            descs = src.describe()
+            assert [d.spec["start"] for d in descs] == sorted(
+                d.spec["start"] for d in descs)
+            got = np.concatenate([it.data["quantity"]
+                                  for d in descs for it in src.read(d)])
+            assert sorted(got.tolist()) == sorted(cols["quantity"].tolist())
+
+    def test_file_range_read_is_deterministic(self, tmp_path):
+        cols, size = lineitem_file(tmp_path / "d.csv", 100)
+        src = FileRangeSource(str(tmp_path / "d.csv"), fields=list(cols),
+                              shard_bytes=size // 3)
+        d = src.describe()[1]
+        a, b = src.read(d), src.read(d)   # replay must re-yield the same rows
+        np.testing.assert_array_equal(a[0].data["quantity"],
+                                      b[0].data["quantity"])
+
+    def test_generator_spec_descriptors_and_replay(self):
+        src = GeneratorSpecSource(GEN, shards=5, rows=40, seed=9)
+        descs = src.describe()
+        assert len(descs) == 5
+        assert all(isinstance(d, ShardDescriptor) for d in descs)
+        assert [d.spec["seed"] for d in descs] == [9, 10, 11, 12, 13]
+        a, b = src.read(descs[2]), src.read(descs[2])
+        np.testing.assert_array_equal(a[0].data["quantity"],
+                                      b[0].data["quantity"])
+        assert a[0].nrows() == 40
+
+    def test_generator_spec_fails_fast_on_bad_import(self):
+        with pytest.raises(Exception):
+            GeneratorSpecSource("no.such.module:fn", shards=1, rows=1)
+
+    def test_directory_tail_polls_new_files_then_exhausts(self, tmp_path):
+        d = tmp_path / "landing"
+        d.mkdir()
+        cols, _ = lineitem_file(d / "a.csv", 50)
+        src = DirectoryTailSource(str(d), pattern="*.csv", fields=list(cols),
+                                  idle_timeout_s=0.2)
+        first = src.describe()
+        assert len(first) == 1 and not src.exhausted()
+        assert src.poll() == []                      # nothing new yet
+        lineitem_file(d / "b.csv", 50, seed=1)
+        fresh = src.poll()
+        assert len(fresh) == 1 and fresh[0].spec["path"].endswith("b.csv")
+        time.sleep(0.25)
+        assert src.exhausted()                       # idle window elapsed
+        got = sum(it.nrows() for ds_ in (first, fresh)
+                  for dd in ds_ for it in src.read(dd))
+        assert got == 100
+
+    def test_socket_line_source_drains_endpoint(self):
+        cols = gen_lineitem(30, seed=4)
+        payload = "\n".join(
+            ",".join(repr(cols[c][i].item()) for c in cols)
+            for i in range(30)).encode() + b"\n"
+        srv = socket.create_server(("127.0.0.1", 0))
+        port = srv.getsockname()[1]
+
+        def serve():
+            conn, _ = srv.accept()
+            conn.sendall(payload)
+            conn.close()
+
+        t = threading.Thread(target=serve, daemon=True)
+        t.start()
+        src = SocketLineSource([f"127.0.0.1:{port}"], fields=list(cols))
+        descs = src.describe()
+        assert descs[0].spec == {"host": "127.0.0.1", "port": port}
+        items = src.read(descs[0])
+        t.join(timeout=5)
+        srv.close()
+        assert items[0].nrows() == 30
+        np.testing.assert_array_equal(items[0].data["quantity"],
+                                      cols["quantity"])
+
+    def test_parse_numeric_lines_integral_columns_stay_int(self):
+        out = parse_numeric_lines(["1,2.5", "3,4.5"], ["a", "b"])
+        assert out["a"].dtype == np.int64 and out["b"].dtype == np.float64
+
+    def test_build_source_rejects_unknown_kind(self):
+        with pytest.raises(ValueError, match="unknown source kind"):
+            build_source({"kind": "nope"})
+
+
+# ---------------------------------------------------------------------------
+class TestLanguageSurface:
+    def test_source_statement_sets_plan_spec(self):
+        sess = LanguageSession()
+        sess.execute(f"""
+            s1 = SELECT * FROM input;
+            CREATE STAGE main USING s1;
+            STREAM WITH EPOCHS(items=4);
+            SOURCE generator(spec={GEN}, shards=4, rows=5);
+        """)
+        spec = sess.plan.source_spec
+        assert spec == {"kind": "generator", "spec": GEN,
+                        "shards": 4, "rows": 5}
+        assert sess.plan.signature()["source"] == spec
+
+    def test_source_unparse_roundtrip(self):
+        p = IngestPlan("rt")
+        with_source(p, "generator", spec=GEN, shards=3, rows=7)
+        text = unparse_source(p)
+        sess = LanguageSession()
+        sess.execute("s1 = SELECT * FROM input; " + text)
+        assert sess.plan.source_spec == p.source_spec
+
+    def test_source_unparse_roundtrip_fields_tuple(self, tmp_path):
+        lineitem_file(tmp_path / "rt.csv", 10)
+        p = IngestPlan("rt2")
+        with_source(p, "files", paths=str(tmp_path / "rt.csv"),
+                    shard_bytes=2048, fields=("orderkey", "quantity"))
+        text = unparse_source(p)
+        assert "fields=orderkey|quantity" in text
+        sess = LanguageSession()
+        sess.execute("s1 = SELECT * FROM input; " + text)
+        assert sess.plan.source_spec == p.source_spec
+
+    def test_source_statement_size_literals_and_fields(self, tmp_path):
+        lineitem_file(tmp_path / "d.csv", 10)
+        sess = LanguageSession()
+        sess.execute(f"SOURCE files(paths={tmp_path}/d.csv, shard_bytes=1kb, "
+                     f"fields=orderkey|quantity);")
+        assert sess.plan.source_spec["shard_bytes"] == 1024
+        assert sess.plan.source_spec["fields"] == ("orderkey", "quantity")
+
+    def test_bad_source_fails_at_declaration(self):
+        with pytest.raises(LanguageError, match="SOURCE"):
+            LanguageSession().execute("SOURCE nosuchkind(x=1);")
+        with pytest.raises(LanguageError):
+            # known kind, bad kwarg: the eager validation build catches it
+            IngestPlan("x") and with_source(IngestPlan("x"), "generator",
+                                            bogus=1)
+
+
+# ---------------------------------------------------------------------------
+class TestZeroSourceCoordinatorBytes:
+    """Acceptance: descriptor-backed sources move zero item bytes through
+    the coordinator on BOTH backends; the pushed path keeps the counter
+    live (it is a measurement, not a vacuous zero)."""
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_generator_source_is_zero(self, tmp_path, backend):
+        ds = DataStore(str(tmp_path / backend), nodes=["n0", "n1", "n2", "n3"])
+        src = GeneratorSpecSource(GEN, shards=8, rows=50)
+        rep = stream_ingest(columnar_plan(ds), src, ds, backend=backend)
+        assert rep.source_coordinator_bytes() == 0
+        assert rep.source_descriptors() == 8
+        assert rep.source_reissues() == 0
+        assert rep.total_items == 8          # worker-reported counts
+        cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 8 * 50
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_file_source_is_zero(self, tmp_path, backend):
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1", "n2", "n3"])
+        cols, size = lineitem_file(tmp_path / "d.csv", 400)
+        src = FileRangeSource(str(tmp_path / "d.csv"), fields=list(cols),
+                              shard_bytes=max(1, size // 10))
+        rep = stream_ingest(columnar_plan(ds), src, ds, backend=backend)
+        assert rep.source_coordinator_bytes() == 0
+        assert rep.source_descriptors() >= 10
+        got = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert sorted(got["quantity"].tolist()) == sorted(
+            cols["quantity"].tolist())
+
+    def test_plan_level_source_spec_compiles_to_adapter(self, tmp_path):
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1", "n2", "n3"])
+        p = columnar_plan(ds)
+        with_source(p, "generator", spec=GEN, shards=6, rows=20)
+        rep = stream_ingest(p, None, ds)     # no source arg: the plan has one
+        assert rep.source_coordinator_bytes() == 0
+        assert rep.total_items == 6
+        cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 6 * 20
+
+    def test_sequential_mode_pulls_too(self, tmp_path):
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1", "n2", "n3"])
+        src = GeneratorSpecSource(GEN, shards=7, rows=10)
+        rep = stream_ingest(columnar_plan(ds, epoch_items=3), src, ds,
+                            pipelined=False)
+        assert rep.source_coordinator_bytes() == 0
+        assert rep.source_descriptors() == 7
+        assert [e.items_in for e in rep.epochs] == [3, 3, 1]
+
+    def test_pushed_path_counts_coordinator_bytes(self, tmp_path):
+        """The legacy oracle: pushed iterators still cross the coordinator
+        and the new counter observes every byte of it."""
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1", "n2", "n3"])
+        items = [IngestItem(gen_lineitem(50, seed=i)) for i in range(6)]
+        rep = stream_ingest(columnar_plan(ds), iter(items), ds)
+        assert rep.source_coordinator_bytes() == sum(
+            it.nbytes() for it in items)
+        assert rep.source_descriptors() == 0
+
+    def test_directory_tail_streams_arrivals(self, tmp_path):
+        """Unbounded intake: files landing mid-stream become descriptors via
+        poll(); the stream ends at the idle timeout."""
+        d = tmp_path / "landing"
+        d.mkdir()
+        cols, _ = lineitem_file(d / "a.csv", 60)
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1", "n2", "n3"])
+        src = DirectoryTailSource(str(d), pattern="*.csv", fields=list(cols),
+                                  idle_timeout_s=1.2)
+
+        def land_late():
+            time.sleep(0.1)
+            lineitem_file(d / "b.csv", 60, seed=1)
+
+        t = threading.Thread(target=land_late, daemon=True)
+        t.start()
+        rep = stream_ingest(columnar_plan(ds, epoch_items=1), src, ds)
+        t.join()
+        assert rep.source_coordinator_bytes() == 0
+        got = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(got["quantity"]) == 120
+
+
+# ---------------------------------------------------------------------------
+class TestEpochCutterFix:
+    """Satellite: cut_epoch's tick deadline arms on entry, so idle streams
+    honor wall-clock cuts — and an empty tick no longer terminates the
+    stream (at_eof distinguishes the two)."""
+
+    def test_idle_queue_honors_wallclock_cut(self):
+        q = IngestQueues.manual(["n0", "n1"])
+        t0 = time.monotonic()
+        batch = q.cut_epoch(1000, tick_s=0.05)
+        elapsed = time.monotonic() - t0
+        assert all(not v for v in batch.values())
+        assert 0.04 <= elapsed < 1.0       # returned at the deadline, no hang
+        assert not q.at_eof()              # empty tick is NOT end-of-stream
+        q.close()
+        assert q.at_eof()
+
+    def test_trickle_does_not_hold_epoch_open(self, tmp_path):
+        """A source whose first item arrives well after the tick: the old
+        cutter waited forever for item #1 before arming; empty ticks must
+        now spin through until data lands, then cut — without ending the
+        stream early."""
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1", "n2", "n3"])
+
+        def late_source():
+            time.sleep(0.2)                 # several empty 0.03 s ticks
+            for i in range(3):
+                yield IngestItem(gen_lineitem(20, seed=i))
+
+        p = columnar_plan(ds, epoch_items=100)
+        p.stream_config["seconds"] = 0.03
+        rep = stream_ingest(p, late_source(), ds)
+        assert rep.total_items == 3         # nothing lost to the empty ticks
+        cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 60
+
+    def test_wallclock_cut_splits_slow_pull_stream(self, tmp_path):
+        """Descriptor cutter: with a seconds policy, a slow unbounded-ish
+        adapter cuts multiple small epochs instead of one giant one."""
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1", "n2", "n3"])
+        src = GeneratorSpecSource(GEN, shards=6, rows=10, delay_s=0.02)
+        p = columnar_plan(ds, epoch_items=1000)
+        p.stream_config["seconds"] = 0.01
+        rep = stream_ingest(p, src, ds)
+        assert len(rep.epochs) >= 1
+        assert rep.total_items == 6
+        assert agg(rep, "source_coordinator_bytes") == 0
+
+
+# ---------------------------------------------------------------------------
+class TestDescriptorReplayFaultMatrix:
+    """Satellite: reader death — injected and real SIGTERM, mid-shard-read
+    and mid-parse — re-issues the dead node's descriptors to survivors and
+    commits exactly-once, with no leaked shm segments or spill files."""
+
+    def test_injected_death_reissues_descriptors(self, tmp_path):
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1", "n2", "n3"])
+        src = GeneratorSpecSource(GEN, shards=16, rows=50)
+        faults = StreamFaultInjection(node_death_in_epoch={"n2": 1})
+        rep = stream_ingest(columnar_plan(ds), src, ds, faults=faults)
+        assert rep.committed_epoch_ids() == [0, 1, 2, 3]
+        assert rep.replayed_epochs == [1]
+        assert rep.node_failures == ["n2"]
+        assert rep.source_reissues() >= 1
+        assert rep.source_coordinator_bytes() == 0
+        cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 16 * 50    # no loss, no duplication
+        assert ds.gc_orphans() == []
+
+    def test_sigterm_mid_shard_read_process_backend(self, tmp_path):
+        """Kill a process worker while it sleeps inside adapter.read — the
+        epoch's descriptors re-issue to survivors, commits stay gap-free."""
+        before = shm_segments()
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1", "n2", "n3"])
+        src = GeneratorSpecSource(GEN, shards=16, rows=50, delay_s=0.05)
+        eng = StreamingRuntimeEngine(ds, epoch_items=4, backend="process")
+        eng.prewarm_executors()
+        killed = []
+
+        def killer():
+            time.sleep(0.15)                 # mid-stream, mid-read
+            killed.append("n1")
+            eng.executor("n1").kill()
+
+        t = threading.Thread(target=killer, daemon=True)
+        t.start()
+        rep = eng.run_stream(columnar_plan(ds), src)
+        t.join()
+        eng.close()
+        ids = rep.committed_epoch_ids()
+        assert ids == list(range(len(ids))) and len(ids) == 4
+        assert "n1" in rep.node_failures
+        assert rep.source_reissues() >= 1
+        assert rep.source_coordinator_bytes() == 0
+        cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 16 * 50
+        assert not os.listdir(ds.dfs_dir)
+        assert ds.gc_orphans() == []         # any torn source spill reclaimed
+        assert shm_segments() - before == set()
+
+    def test_sigterm_mid_parse_process_backend(self, tmp_path):
+        """Kill after the read stage's manifest (stage a done, parse pipeline
+        b mid-flight) on a file-range source: the replay re-reads the dead
+        node's byte ranges on survivors, exactly-once."""
+        before = shm_segments()
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1", "n2", "n3"])
+        cols, size = lineitem_file(tmp_path / "d.csv", 800)
+        src = FileRangeSource(str(tmp_path / "d.csv"), fields=list(cols),
+                              shard_bytes=max(1, size // 16), delay_s=0.01)
+        eng = StreamingRuntimeEngine(ds, epoch_items=4, backend="process")
+        eng.prewarm_executors()
+        killed = []
+
+        def kill_mid_parse(rnd, src_node):
+            # a narrow manifest of epoch >= 1 means the sender finished the
+            # read stage: SIGTERM a peer with its parse stage still pending
+            if rnd.epoch >= 1 and rnd.key is None and not killed:
+                victim = next(n for n in rnd.targets if n != src_node)
+                killed.append(victim)
+                eng.executor(victim).kill()
+
+        eng.shuffle.test_on_manifest = kill_mid_parse
+        rep = eng.run_stream(narrow3_plan(ds), src)
+        eng.close()
+        ids = rep.committed_epoch_ids()
+        assert ids == list(range(len(ids)))
+        assert killed and killed[0] in rep.node_failures
+        assert rep.source_reissues() >= 1
+        assert rep.source_coordinator_bytes() == 0
+        got = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert sorted(got["quantity"].tolist()) == sorted(
+            cols["quantity"].tolist())
+        assert not os.listdir(ds.dfs_dir)
+        assert ds.gc_orphans() == []
+        assert shm_segments() - before == set()
+
+    def test_thread_backend_death_mid_pull(self, tmp_path):
+        """Same replay discipline on the thread backend (injected death in a
+        multi-stage pulled plan: the read ran in the ingest segment)."""
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1", "n2", "n3"])
+        src = GeneratorSpecSource(GEN, shards=12, rows=40)
+        faults = StreamFaultInjection(node_death_in_epoch={"n3": 0})
+        rep = stream_ingest(narrow3_plan(ds), src, ds, faults=faults)
+        assert rep.node_failures == ["n3"]
+        assert rep.source_reissues() >= 1
+        cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+        assert len(cols["quantity"]) == 12 * 40
+        assert ds.gc_orphans() == []
+
+
+# ---------------------------------------------------------------------------
+class TestPerfGatePullMetric:
+    def test_pull_metric_is_gated_by_default(self, tmp_path):
+        import json
+        from benchmarks.perf_gate import DEFAULT_METRICS, main
+        assert "pull_rows_per_s" in DEFAULT_METRICS
+        traj = str(tmp_path / "t.json")
+        with open(traj, "w") as f:
+            json.dump([
+                {"scale": 1000, "pipelined_rows_per_s": 100.0,
+                 "pull_rows_per_s": 100.0},
+                {"scale": 1000, "pipelined_rows_per_s": 100.0,
+                 "pull_rows_per_s": 50.0},
+            ], f)
+        assert main(["--file", traj]) == 1      # pull regression gates
+        # histories that predate the metric skip cleanly
+        with open(traj, "w") as f:
+            json.dump([
+                {"scale": 1000, "pipelined_rows_per_s": 100.0},
+                {"scale": 1000, "pipelined_rows_per_s": 100.0,
+                 "pull_rows_per_s": 50.0},
+            ], f)
+        assert main(["--file", traj]) == 0
