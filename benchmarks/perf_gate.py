@@ -8,11 +8,14 @@ threshold.  Gated metrics default to ``pipelined_rows_per_s`` (the
 pipelined-core throughput), ``shuffle_rows_per_s`` (the worker-side
 peer-exchange shuffle, ISSUE 4), ``resident_rows_per_s`` (the
 node-resident dataflow on the process backend, ISSUE 5), and
-``pull_rows_per_s`` (worker-pull descriptor sources, ISSUE 6); ``--metric``
-may be repeated to gate a custom set.  With fewer than two comparable entries
-for a metric (first
-run, wiped trajectory, pre-metric history, unreadable file) that metric
-skips cleanly — a missing history must never fail the build.
+``pull_rows_per_s`` (worker-pull descriptor sources, ISSUE 6), and
+``erasure_mb_per_s`` (the batched erasure encode tier, ISSUE 7 — read from
+``BENCH_storage.json``); ``--metric`` may be repeated to gate a custom set.
+Each metric reads the trajectory file in ``METRIC_FILES`` unless an explicit
+``--file`` overrides it for all metrics.  With fewer than two comparable
+entries for a metric (first run, wiped trajectory, pre-metric history,
+unreadable file) that metric skips cleanly — a missing history must never
+fail the build.
 
 Usage::
 
@@ -30,9 +33,14 @@ from typing import Tuple
 
 DEFAULT_FILE = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_streaming.json")
+STORAGE_FILE = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_storage.json")
 DEFAULT_METRIC = "pipelined_rows_per_s"
 DEFAULT_METRICS = (DEFAULT_METRIC, "shuffle_rows_per_s",
-                   "resident_rows_per_s", "pull_rows_per_s")
+                   "resident_rows_per_s", "pull_rows_per_s",
+                   "erasure_mb_per_s")
+# per-metric trajectory files; metrics not listed read DEFAULT_FILE
+METRIC_FILES = {"erasure_mb_per_s": STORAGE_FILE}
 DEFAULT_THRESHOLD = 0.25
 
 
@@ -80,7 +88,9 @@ def check(path: str, metric: str = DEFAULT_METRIC,
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--file", default=DEFAULT_FILE)
+    ap.add_argument("--file", default=None,
+                    help="trajectory file for ALL metrics (default: the "
+                         "per-metric METRIC_FILES map)")
     ap.add_argument("--metric", action="append", default=None,
                     help="gated metric; repeatable (default: "
                          + ", ".join(DEFAULT_METRICS) + ")")
@@ -88,7 +98,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     worst = 0
     for metric in (args.metric or list(DEFAULT_METRICS)):
-        code, msg = check(args.file, metric, args.threshold)
+        path = args.file or METRIC_FILES.get(metric, DEFAULT_FILE)
+        code, msg = check(path, metric, args.threshold)
         print(msg)
         worst = max(worst, code)
     return worst

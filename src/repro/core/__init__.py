@@ -17,18 +17,20 @@ from .exchange import (PartitionExchange, decode_partition, encode_partition,
                        partition_items, resident_file_name, stable_group_hash)
 from .fault import (ErasureRecovery, FaultToleranceDaemon, RecoveryUDF,
                     ReplicationRecovery, TransformationRecovery)
-from .items import (Granularity, IngestItem, Label, ShmLease, decode_items,
+from .items import (Granularity, IngestItem, Label, ShmLease,
+                    as_device_array, as_device_columns, decode_items,
                     encode_items)
 from .language import (FeedSpec, LanguageSession, chain_stage, create_stage,
                        format_, parse_feed_script, parse_ingestion_script,
                        select, store, unparse_source, unparse_stream,
                        with_epochs, with_source)
-from .operators import (IngestOp, MaterializeOp, OperatorFailure, OpMode,
-                        PassThroughOp, register_op, registered_ops,
-                        resolve_callable, resolve_op)
+from .operators import (BatchFallback, IngestOp, MaterializeOp,
+                        OperatorFailure, OpMode, PassThroughOp, register_op,
+                        registered_ops, resolve_callable, resolve_op,
+                        run_ops_batched)
 from .optimizer import (FilterFusionRule, IngestionOptimizer, IngestOpExpr,
                         ParallelModeRule, PipelineRule, ReorderRule, Rule,
-                        split_pipeline_segments)
+                        VectorizeRule, split_pipeline_segments)
 from .plan import (IngestPlan, Stage, StagePlan, Statement, annotate_edges,
                    serialize_plans)
 from .procexec import ProcessNodeExecutor, WorkerDeath
@@ -55,15 +57,17 @@ __all__ = [
     "DataAccess", "Split", "Catalog",
     "ErasureRecovery", "FaultToleranceDaemon", "RecoveryUDF",
     "ReplicationRecovery", "TransformationRecovery",
-    "Granularity", "IngestItem", "Label", "ShmLease", "decode_items",
-    "encode_items",
+    "Granularity", "IngestItem", "Label", "ShmLease", "as_device_array",
+    "as_device_columns", "decode_items", "encode_items",
     "FeedSpec", "LanguageSession", "chain_stage", "create_stage", "format_",
     "parse_feed_script", "parse_ingestion_script", "select", "store",
     "unparse_source", "unparse_stream", "with_epochs", "with_source",
-    "IngestOp", "MaterializeOp", "OperatorFailure", "OpMode", "PassThroughOp",
-    "register_op", "registered_ops", "resolve_callable", "resolve_op",
+    "BatchFallback", "IngestOp", "MaterializeOp", "OperatorFailure", "OpMode",
+    "PassThroughOp", "register_op", "registered_ops", "resolve_callable",
+    "resolve_op", "run_ops_batched",
     "FilterFusionRule", "IngestionOptimizer", "IngestOpExpr", "ParallelModeRule",
-    "PipelineRule", "ReorderRule", "Rule", "split_pipeline_segments",
+    "PipelineRule", "ReorderRule", "Rule", "VectorizeRule",
+    "split_pipeline_segments",
     "IngestPlan", "Stage", "StagePlan", "Statement", "annotate_edges",
     "serialize_plans",
     "PartitionExchange", "decode_partition", "encode_partition",

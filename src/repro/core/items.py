@@ -52,6 +52,33 @@ def take_rows(columns: Columns, idx: np.ndarray) -> Columns:
     return {k: v[idx] for k, v in columns.items()}
 
 
+# ------------------------------------------------------------------ device I/O
+def as_device_array(arr: np.ndarray) -> Any:
+    """Map a host array into a JAX device array for a kernel-backed stage,
+    without a copy where the backend allows (ISSUE 7).
+
+    The shm item codec lands contiguous buffers, so on the CPU backend the
+    DLPack import aliases the segment directly — decoded batch -> device
+    array with zero copies.  Read-only views (``np.frombuffer`` of a bytes
+    payload) and accelerator backends fall back to a ``device_put`` copy.
+    JAX itself is imported lazily: the scalar tier never pays for it.
+    """
+    import jax
+    a = np.ascontiguousarray(arr)
+    try:
+        return jax.dlpack.from_dlpack(a)
+    except Exception:
+        return jax.device_put(a)
+
+
+def as_device_columns(columns: Columns) -> Dict[str, Any]:
+    """``as_device_array`` over a decoded batch's columnar dict; non-array
+    values (object columns) pass through untouched."""
+    return {k: as_device_array(v) if isinstance(v, np.ndarray)
+            and v.dtype != object else v
+            for k, v in columns.items()}
+
+
 @dataclass(frozen=True)
 class Label:
     """One lineage entry: the operator that touched the item and the value it assigned."""

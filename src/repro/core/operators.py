@@ -21,8 +21,10 @@ from __future__ import annotations
 
 import enum
 import threading
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence
+from typing import (Any, Deque, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Tuple)
 
 from .items import Granularity, IngestItem
 
@@ -34,6 +36,13 @@ class OpMode(enum.Enum):
 
 class OperatorFailure(RuntimeError):
     """Raised by an operator when processing fails (drives in-flight FT)."""
+
+
+class BatchFallback(RuntimeError):
+    """Raised by ``process_batch`` when a batch cannot run vectorized (e.g. a
+    payload type the kernel path does not cover).  The caller falls back to
+    the scalar iterator path for that operator — the batch tier degrades, it
+    never fails (ISSUE 7)."""
 
 
 class IngestOp:
@@ -51,18 +60,29 @@ class IngestOp:
     #: operators that publish into the DataStore; stages containing one form
     #: the commit-side segment the epoch pipeliner may overlap (DESIGN.md §4)
     commit_side: bool = False
+    #: operators with a vectorized ``process_batch`` the VectorizeRule may
+    #: select into a batch-mode pipeline block (ISSUE 7); the scalar iterator
+    #: path stays as the fallback and correctness oracle
+    batch_capable: bool = False
 
     def __init__(self, **params: Any) -> None:
         self.params: Dict[str, Any] = params
         self.mode: OpMode = OpMode.PARALLEL if self.cpu_heavy else OpMode.SERIAL
-        self.num_threads: int = params.pop("num_threads", 4) if "num_threads" in params else 4
+        # num_threads stays IN params: clone() and the process-backend
+        # __reduce__ rebuild from params, so popping it here silently reset
+        # cloned/shipped operators to the default pool width
+        self.num_threads: int = int(params.get("num_threads", 4))
         self._inputs: List[IngestItem] = []
         self._outputs: Iterator[IngestItem] = iter(())
-        self._pending: List[IngestItem] = []
+        self._pending: Deque[IngestItem] = deque()
+        self._pool: Optional[ThreadPoolExecutor] = None
         self._initialized = False
         self._finalized_ok = False  # runtime FT tracks finalize success (Sec. VI-C)
         # test hook: fail the next N process() calls (fault injection)
         self._fail_next: int = 0
+        # milliseconds spent inside vectorized kernels (batch tier); the
+        # runtime diffs this around a batch block to charge RunReport.kernel_ms
+        self.kernel_ms_total: float = 0.0
 
     # ------------------------------------------------------------ iterator API
     def initialize(self) -> None:
@@ -94,13 +114,16 @@ class IngestOp:
     def next(self) -> IngestItem:
         if not self.has_next():
             raise StopIteration
-        return self._pending.pop(0)
+        return self._pending.popleft()
 
     def finalize(self) -> None:
         """Cleanup; parallel-mode threads are joined here (paper Sec. VI-A)."""
         self._inputs = []
-        self._pending = []
+        self._pending = deque()
         self._outputs = iter(())
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
         self._finalized_ok = True
 
     # --------------------------------------------------------------- execution
@@ -113,13 +136,21 @@ class IngestOp:
         for item in self._inputs:
             yield from self._process_guarded(item)
 
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        """Lazily-created worker pool, reused across ``set_input`` calls and
+        joined in ``finalize()`` — one pool per run instead of one per batch
+        (pool churn on every epoch x stage x node)."""
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(max_workers=self.num_threads)
+        return self._pool
+
     def _parallel_iter(self) -> Iterator[IngestItem]:
         """Thread-pool processing of independent items; order preserved."""
-        with ThreadPoolExecutor(max_workers=self.num_threads) as pool:
-            futures = [pool.submit(lambda it=item: list(self._process_guarded(it)))
-                       for item in self._inputs]
-            for fut in futures:
-                yield from fut.result()
+        pool = self._ensure_pool()
+        futures = [pool.submit(lambda it=item: list(self._process_guarded(it)))
+                   for item in self._inputs]
+        for fut in futures:
+            yield from fut.result()
 
     def _process_guarded(self, item: IngestItem) -> Iterable[IngestItem]:
         if self._fail_next > 0:
@@ -131,6 +162,31 @@ class IngestOp:
     def process(self, item: IngestItem) -> Iterable[IngestItem]:
         """Transform one labelled ingest data item into zero or more outputs."""
         raise NotImplementedError
+
+    # ------------------------------------------------------- batch tier (ISSUE 7)
+    def process_batch(self, items: Sequence[IngestItem]) -> List[IngestItem]:
+        """Transform a whole batch at once.  ``batch_capable`` operators
+        override this with a vectorized implementation (and may raise
+        ``BatchFallback`` for inputs the vectorized path does not cover);
+        the default is the scalar loop, so a dummy substituted into a
+        batch-mode block still runs correctly."""
+        out: List[IngestItem] = []
+        for item in items:
+            out.extend(self.process(item))
+        return out
+
+    def run_batch(self, items: Sequence[IngestItem]) -> List[IngestItem]:
+        """Batch-mode twin of ``run``: one ``process_batch`` call instead of
+        the per-item iterator drain.  Same lifecycle (initialize/finalize,
+        ``_fail_next`` fault hook) so the runtime's retry-from-checkpoint and
+        dummy-substitution machinery treat both paths identically."""
+        self.initialize()
+        if self._fail_next > 0:
+            self._fail_next -= 1
+            raise OperatorFailure(f"{self.name}: injected failure")
+        out = list(self.process_batch(list(items)))
+        self.finalize()
+        return out
 
     # ------------------------------------------------------------------- misc
     def run(self, items: Sequence[IngestItem]) -> List[IngestItem]:
@@ -228,6 +284,36 @@ class MaterializeOp(IngestOp):
     def process(self, item: IngestItem) -> Iterable[IngestItem]:
         self.buffer.append(item)
         yield item
+
+
+def run_ops_batched(ops: Sequence[IngestOp], items: Sequence[IngestItem]
+                    ) -> Tuple[List[IngestItem], Dict[str, Any]]:
+    """Execute one batch-mode pipeline block (ISSUE 7).
+
+    Shared by the thread backend (``RuntimeEngine._run_stage``) and the
+    process backend's worker (``procexec._run_stage_ops``).  Each op runs
+    ``run_batch``; a ``BatchFallback`` drops that op back to the scalar
+    iterator path (counted — the block as a whole still succeeds).
+    ``OperatorFailure`` propagates so both backends' retry-from-checkpoint
+    machinery applies unchanged.
+
+    Returns ``(out, stats)`` with ``vectorized_rows`` (rows entering the
+    block), ``batch_fallbacks`` and ``kernel_ms`` (vectorized-kernel time the
+    block's ops accumulated).
+    """
+    rows = sum(it.nrows() for it in items)
+    kernel_before = sum(op.kernel_ms_total for op in ops)
+    fallbacks = 0
+    out: List[IngestItem] = list(items)
+    for op in ops:
+        try:
+            out = op.run_batch(out)
+        except BatchFallback:
+            fallbacks += 1
+            out = op.run(out)
+    return out, {"vectorized_rows": rows, "batch_fallbacks": fallbacks,
+                 "kernel_ms": sum(op.kernel_ms_total for op in ops)
+                 - kernel_before}
 
 
 # ----------------------------------------------------------------------------

@@ -12,7 +12,7 @@ import numpy as np
 
 from ..layouts import serialize_block
 from .items import Columns, Granularity, IngestItem, concat_columns, num_rows, take_rows
-from .operators import IngestOp, register_op
+from .operators import IngestOp, OpMode, register_op
 
 
 # ------------------------------------------------------------------- partition
@@ -156,6 +156,7 @@ class SerializeOp(IngestOp):
     granularity_in = Granularity.CHUNK
     granularity_out = Granularity.BLOCK
     cpu_heavy = True
+    batch_capable = True
 
     def __init__(self, layout: str = "columnar",
                  layouts: Optional[Sequence[str]] = None, **layout_kw: Any) -> None:
@@ -177,6 +178,29 @@ class SerializeOp(IngestOp):
         out = IngestItem(block, Granularity.BLOCK, item.labels, dict(item.meta))
         yield out.with_label(self.name, layout)
 
+    def process_batch(self, items: Sequence[IngestItem]) -> List[IngestItem]:
+        """Batch serialize over the columnar chunk dicts (ISSUE 7): layout
+        assignment is computed up front (the hybrid-layout cycle becomes
+        deterministic, matching the serial iterator's order), then the
+        per-chunk encodes fan out over the shared pool."""
+        items = list(items)
+        if self.layouts:
+            layouts = [self.layouts[(self._idx + i) % len(self.layouts)]
+                       for i in range(len(items))]
+            self._idx += len(items)
+        else:
+            layouts = [self.layout] * len(items)
+        if self.mode is OpMode.PARALLEL and len(items) > 1:
+            blocks = list(self._ensure_pool().map(
+                lambda p: serialize_block(p[0].data, p[1], **self.layout_kw),
+                zip(items, layouts)))
+        else:
+            blocks = [serialize_block(it.data, ly, **self.layout_kw)
+                      for it, ly in zip(items, layouts)]
+        return [IngestItem(b, Granularity.BLOCK, it.labels, dict(it.meta))
+                .with_label(self.name, ly)
+                for b, it, ly in zip(blocks, items, layouts)]
+
 
 # ------------------------------------------------------------------- pack (LM)
 @register_op("pack")
@@ -195,6 +219,7 @@ class PackOp(IngestOp):
     granularity_in = Granularity.CHUNK
     granularity_out = Granularity.CHUNK
     cpu_heavy = True
+    batch_capable = True
 
     def __init__(self, seq_len: int = 2048, rows_per_block: int = 64, pad_id: int = 0,
                  **kw: Any) -> None:
@@ -210,7 +235,10 @@ class PackOp(IngestOp):
             return [toks[i, : cols["length"][i]].astype(np.int32) for i in range(len(toks))]
         return [t.astype(np.int32) for t in toks]
 
-    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+    def _pack_rows(self, item: IngestItem) -> List[Dict[str, np.ndarray]]:
+        """Stateless packing of one chunk's sequences into row dicts — the
+        CPU-heavy half of ``process``, shared with the batch path so both can
+        fan it out without racing on ``_block_idx``."""
         seqs = self._sequences(item.data)
         S = self.seq_len
         rows: List[Dict[str, np.ndarray]] = []
@@ -248,10 +276,32 @@ class PackOp(IngestOp):
                     flush_row()
         if fill > 0:
             flush_row()
+        return rows
 
+    def _emit_blocks(self, item: IngestItem,
+                     rows: List[Dict[str, np.ndarray]]) -> Iterable[IngestItem]:
         for start in range(0, len(rows), self.rows_per_block):
             batch = rows[start : start + self.rows_per_block]
             out = {k: np.stack([r[k] for r in batch]) for k in batch[0]}
             yield IngestItem(out, Granularity.CHUNK, item.labels, dict(item.meta)).with_label(
                 self.name, self._block_idx)
             self._block_idx += 1
+
+    def process(self, item: IngestItem) -> Iterable[IngestItem]:
+        yield from self._emit_blocks(item, self._pack_rows(item))
+
+    def process_batch(self, items: Sequence[IngestItem]) -> List[IngestItem]:
+        """Batch pack (ISSUE 7): the stateless row packing fans out over the
+        shared pool; block labels are assigned serially afterwards, so the
+        output (and ``_block_idx`` order) is byte-identical to the serial
+        iterator — unlike scalar parallel mode, where threads race on the
+        block counter."""
+        items = list(items)
+        if self.mode is OpMode.PARALLEL and len(items) > 1:
+            packed = list(self._ensure_pool().map(self._pack_rows, items))
+        else:
+            packed = [self._pack_rows(it) for it in items]
+        out: List[IngestItem] = []
+        for item, rows in zip(items, packed):
+            out.extend(self._emit_blocks(item, rows))
+        return out

@@ -15,7 +15,7 @@ import numpy as np
 from ..erasure import ReedSolomon
 from ..layouts import SerializedBlock, serialize_block
 from .items import Granularity, IngestItem
-from .operators import IngestOp, register_op
+from .operators import BatchFallback, IngestOp, register_op
 from .store import DataStore
 
 
@@ -83,6 +83,9 @@ class ErasureOp(IngestOp):
     # stateful (self._stripe) — thread-pool processing interleaved items
     # from different stripes (found by benchmarks/bench_recovery)
     cpu_heavy = False
+    # the batch path keeps stripes in arrival order, so it IS safe to
+    # vectorize: one stacked GF(256) matmul over all of a batch's stripes
+    batch_capable = True
     expansion = 1.3
 
     def __init__(self, k: int = 10, m: int = 3, use_pallas: bool = False, **kw: Any) -> None:
@@ -107,29 +110,69 @@ class ErasureOp(IngestOp):
             return d.tobytes()
         raise TypeError(f"erasure needs BLOCK payloads, got {type(d)}")
 
-    def _emit_stripe(self) -> Iterable[IngestItem]:
+    def _emit_encoded(self, stripe: List[IngestItem], parity: np.ndarray,
+                      pad_len: int) -> Iterable[IngestItem]:
+        """Emit one encoded stripe: the data items labelled in place plus the
+        ``m`` parity items.  Shared by the scalar and batch paths — the only
+        difference between them is who computed ``parity``."""
         stripe_id = f"stripe-{self._nonce}-{self._stripe_idx}"
         self._stripe_idx += 1
-        payloads = [self._payload(it) for it in self._stripe]
-        parity, pad_len = self.rs.encode_payloads(payloads)
-        for pos, it in enumerate(self._stripe):
+        for pos, it in enumerate(stripe):
             out = it.with_label(self.name, f"d{pos}")
             out.meta.update(stripe_id=stripe_id, stripe_pos=pos, is_parity=False,
                             stripe_k=self.k, stripe_m=self.m, stripe_pad=pad_len)
             yield out
         for j in range(self.m):
             pit = IngestItem(parity[j].tobytes(), Granularity.BLOCK,
-                             self._stripe[0].labels, {})
+                             stripe[0].labels, {})
             pit = pit.with_label(self.name, f"p{j}")
             pit.meta.update(stripe_id=stripe_id, stripe_pos=self.k + j, is_parity=True,
                             stripe_k=self.k, stripe_m=self.m, stripe_pad=pad_len)
             yield pit
+
+    def _emit_stripe(self) -> Iterable[IngestItem]:
+        payloads = [self._payload(it) for it in self._stripe]
+        parity, pad_len = self.rs.encode_payloads(payloads)
+        yield from self._emit_encoded(self._stripe, parity, pad_len)
         self._stripe = []
 
     def process(self, item: IngestItem) -> Iterable[IngestItem]:
         self._stripe.append(item)
         if len(self._stripe) == self.k:
             yield from self._emit_stripe()
+
+    # ------------------------------------------------- batch tier (ISSUE 7)
+    def _payload_view(self, item: IngestItem) -> np.ndarray:
+        """Flat uint8 view of a BLOCK payload, without a copy where the
+        buffer protocol allows (bytes, contiguous arrays)."""
+        d = item.data
+        if isinstance(d, (bytes, bytearray)):
+            return np.frombuffer(d, dtype=np.uint8)
+        if isinstance(d, np.ndarray):
+            return np.ascontiguousarray(d).view(np.uint8).ravel()
+        if isinstance(d, SerializedBlock):
+            return np.frombuffer(d.tobytes(), dtype=np.uint8)
+        raise BatchFallback(f"erasure batch: unsupported payload {type(d)}")
+
+    def process_batch(self, items: Sequence[IngestItem]) -> List[IngestItem]:
+        """Encode S stripes in one stacked GF(256) matmul (``(m x k) @
+        (k x sum L_s)``) instead of S per-stripe encodes.  Stripe grouping,
+        per-stripe padding, labels, and metadata are byte-identical to the
+        scalar iterator path; a trailing partial stripe is drained with
+        virtual zero blocks exactly like the scalar ``set_input`` drain."""
+        pending = self._stripe + list(items)
+        self._stripe = []
+        if not pending:
+            return []
+        stripes = [pending[i:i + self.k]
+                   for i in range(0, len(pending), self.k)]
+        views = [[self._payload_view(it) for it in s] for s in stripes]
+        encoded = self.rs.encode_payload_batch(views)
+        self.kernel_ms_total += self.rs.last_kernel_s * 1000.0
+        out: List[IngestItem] = []
+        for stripe, (parity, pad_len) in zip(stripes, encoded):
+            out.extend(self._emit_encoded(stripe, parity, pad_len))
+        return out
 
     def finalize(self) -> None:
         # NOTE: trailing partial stripe is encoded with the same (k, m) by

@@ -199,6 +199,32 @@ class PipelineRule:
         return sp
 
 
+@dataclass
+class VectorizeRule:
+    """Not an expression rule: selects batch-mode pipeline blocks (ISSUE 7).
+
+    A pipeline block is rewritten to batch mode only when *every* operator in
+    it is ``batch_capable`` — one non-capable op keeps the whole block on the
+    scalar iterator path, so existing plans are untouched.  The runtime still
+    falls back per-op at execution time on ``BatchFallback`` (and a dummy
+    substituted into a batch block runs through the default scalar-loop
+    ``process_batch``), so batch selection can never change results — the
+    scalar path remains the correctness oracle.
+    """
+
+    enabled: bool = True
+    name: str = "vectorize"
+
+    def rewrite(self, sp: StagePlan) -> StagePlan:
+        blocks = sp.pipeline_blocks or [[i] for i in range(len(sp.ops))]
+        sp.batch_blocks = [
+            bool(self.enabled and blk
+                 and all(getattr(sp.ops[i], "batch_capable", False)
+                         for i in blk))
+            for blk in blocks]
+        return sp
+
+
 def split_pipeline_segments(stage_plans: Sequence[StagePlan]) -> int:
     """Index of the first commit-side stage in the topologically-ordered DAG.
 
@@ -221,10 +247,14 @@ class IngestionOptimizer:
     MAX_PASSES = 32
 
     def __init__(self, rules: Optional[Sequence[Rule]] = None,
-                 pipeline: Optional[PipelineRule] = None) -> None:
+                 pipeline: Optional[PipelineRule] = None,
+                 vectorize: Optional[VectorizeRule] = None) -> None:
         self.rules: List[Rule] = list(rules) if rules is not None else [
             FilterFusionRule(), ReorderRule(), ParallelModeRule()]
         self.pipeline = pipeline or PipelineRule()
+        # batch-mode selection runs after pipelining (it is per-block);
+        # pass VectorizeRule(enabled=False) to force all-scalar execution
+        self.vectorize = vectorize or VectorizeRule()
 
     def add_rule(self, rule: Rule, front: bool = False) -> None:
         """Extensibility hook (paper: "users could provide additional rules")."""
@@ -262,7 +292,7 @@ class IngestionOptimizer:
             # rule rewrites may reorder/fuse ops: recompute the shuffle
             # boundary metadata so workers partition by the surviving key
             nsp.shuffle_key = nsp.compute_shuffle_key()
-            out.append(self.pipeline.rewrite(nsp))
+            out.append(self.vectorize.rewrite(self.pipeline.rewrite(nsp)))
         # rewrites may change shuffle/commit metadata: recompile the
         # per-edge routing taxonomy (narrow / shuffle / cross-segment)
         return annotate_edges(out)
@@ -274,6 +304,10 @@ class IngestionOptimizer:
             lines.append("  before: " + " -> ".join(type(o).__name__ for o in b.ops))
             lines.append("  after : " + " -> ".join(type(o).__name__ for o in a.ops))
             lines.append(f"  pipeline blocks: {a.pipeline_blocks}")
+            if any(a.batch_blocks):
+                lines.append("  batch blocks : " + ", ".join(
+                    str(blk) for blk, on in zip(a.pipeline_blocks,
+                                                a.batch_blocks) if on))
             if a.edge_kinds:
                 # the compiled routing taxonomy (DESIGN.md §4): narrow edges
                 # stay node-resident, shuffle edges partition across peers,

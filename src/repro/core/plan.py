@@ -79,6 +79,11 @@ class StagePlan:
     commit_side: bool = False
     shuffle_key: Optional[str] = None
     edge_kinds: Dict[str, str] = field(default_factory=dict)
+    # per-pipeline-block batch-mode selection (ISSUE 7): ``batch_blocks[b]``
+    # is True when the VectorizeRule rewrote block ``b`` to run through the
+    # operators' vectorized ``process_batch`` path; empty = all-scalar (plans
+    # that never went through the optimizer are untouched)
+    batch_blocks: List[bool] = field(default_factory=list)
 
     def block_of(self, op_idx: int) -> int:
         for b, idxs in enumerate(self.pipeline_blocks):
@@ -95,7 +100,8 @@ class StagePlan:
                          [list(b) for b in self.pipeline_blocks],
                          commit_side=self.commit_side,
                          shuffle_key=self.shuffle_key,
-                         edge_kinds=dict(self.edge_kinds))
+                         edge_kinds=dict(self.edge_kinds),
+                         batch_blocks=list(self.batch_blocks))
 
     def compute_commit_side(self) -> bool:
         """A stage is commit-side iff any of its operators writes the store."""

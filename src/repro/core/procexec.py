@@ -66,7 +66,7 @@ from .exchange import (PartitionExchange, build_manifest, decode_partition,
                        read_partition_file, resident_file_name,
                        write_partition_file)
 from .items import IngestItem, ShmLease, decode_items, encode_items, items_nbytes
-from .operators import OperatorFailure, PassThroughOp
+from .operators import OperatorFailure, PassThroughOp, run_ops_batched
 from .plan import StagePlan, failed_op_index, route_items, serialize_plans
 from .store import BlockEntry, DataStore, prepare_block_payload
 
@@ -228,19 +228,40 @@ def _run_stage_ops(sp: StagePlan, items: List[IngestItem],
     substitution after ``max_retries`` (paper Sec. VI-C1).  Substitutions
     mutate the worker's resident plan, so they persist across epochs exactly
     like the thread backend's node clones."""
-    stats: Dict[str, Any] = {"op_failures": {}, "dummy": []}
+    stats: Dict[str, Any] = {"op_failures": {}, "dummy": [],
+                             "vectorized_rows": 0, "batch_fallbacks": 0,
+                             "kernel_ms": 0.0}
     counts: Dict[int, int] = defaultdict(int)
     current = items
-    for block in sp.pipeline_blocks or [[i] for i in range(len(sp.ops))]:
+    blocks = sp.pipeline_blocks or [[i] for i in range(len(sp.ops))]
+    for bi, block in enumerate(blocks):
+        batched = (bool(sp.batch_blocks[bi])
+                   if bi < len(sp.batch_blocks) else False)
         checkpoint = current
         while True:
             try:
                 out = checkpoint
-                for oi in block:
-                    if injections.get(oi, 0) > 0:
-                        injections[oi] -= 1
-                        raise OperatorFailure(f"injected @ {sp.name}[{oi}]")
-                    out = sp.ops[oi].run(out)
+                if batched:
+                    # batch tier (ISSUE 7): same vectorized block execution
+                    # as the thread backend; counters ride back to the
+                    # coordinator in the stage stats payload
+                    for oi in block:
+                        if injections.get(oi, 0) > 0:
+                            injections[oi] -= 1
+                            raise OperatorFailure(
+                                f"injected @ {sp.name}[{oi}]")
+                    out, bstats = run_ops_batched(
+                        [sp.ops[oi] for oi in block], out)
+                    stats["vectorized_rows"] += bstats["vectorized_rows"]
+                    stats["batch_fallbacks"] += bstats["batch_fallbacks"]
+                    stats["kernel_ms"] += bstats["kernel_ms"]
+                else:
+                    for oi in block:
+                        if injections.get(oi, 0) > 0:
+                            injections[oi] -= 1
+                            raise OperatorFailure(
+                                f"injected @ {sp.name}[{oi}]")
+                        out = sp.ops[oi].run(out)
                 current = out
                 break
             except OperatorFailure as e:

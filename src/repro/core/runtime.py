@@ -44,7 +44,8 @@ from .exchange import (PartitionExchange, build_manifest, exchange_file_name,
                        partition_items, resident_file_name, unlink_segment,
                        write_partition_file)
 from .items import IngestItem, items_nbytes
-from .operators import IngestOp, OperatorFailure, PassThroughOp
+from .operators import (IngestOp, OperatorFailure, PassThroughOp,
+                        run_ops_batched)
 from .optimizer import IngestionOptimizer
 from .plan import IngestPlan, StagePlan, failed_op_index, route_items
 from .procexec import ProcessNodeExecutor, WorkerDeath
@@ -120,6 +121,10 @@ class RunReport:
     source_descriptors: int = 0        # shard descriptors issued to workers
     source_reissues: int = 0           # descriptors re-issued after a reader death
     source_items: int = 0              # items workers materialized from descriptors
+    # --- batch operator tier (ISSUE 7): optimizer-selected vectorization ----
+    vectorized_rows: int = 0           # rows that entered batch-mode blocks
+    batch_fallbacks: int = 0           # ops that dropped back to the scalar path
+    kernel_ms: float = 0.0             # time inside vectorized encode kernels
     wall_time_s: float = 0.0
     per_node_shards: Dict[str, int] = field(default_factory=dict)
 
@@ -1164,6 +1169,11 @@ class RuntimeEngine:
                                 report.op_failures.get(k, 0), v)
                         report.dummy_substitutions.extend(stats["dummy"])
                         report.source_items += stats.get("source_items", 0)
+                        report.vectorized_rows += stats.get(
+                            "vectorized_rows", 0)
+                        report.batch_fallbacks += stats.get(
+                            "batch_fallbacks", 0)
+                        report.kernel_ms += stats.get("kernel_ms", 0.0)
                 else:
                     payload = res
                 if (produce is not None and isinstance(payload, dict)
@@ -1382,19 +1392,41 @@ class RuntimeEngine:
         pass-through (paper Sec. VI-C1).
         """
         current = items
-        for block in sp.pipeline_blocks or [[i] for i in range(len(sp.ops))]:
+        for bi, block in enumerate(
+                sp.pipeline_blocks or [[i] for i in range(len(sp.ops))]):
+            batched = bool(sp.batch_blocks[bi]) if bi < len(sp.batch_blocks) \
+                else False
             checkpoint = current  # materialized input of this block
             while True:
                 try:
                     out = checkpoint
-                    for oi in block:
-                        op = sp.ops[oi]
-                        # injected failures (tests)
-                        key = (sp.name, oi)
-                        if faults.op_failures.get(key, 0) > 0:
-                            faults.op_failures[key] -= 1
-                            raise OperatorFailure(f"injected @ {sp.name}[{oi}]")
-                        out = op.run(out)
+                    if batched:
+                        # batch tier (ISSUE 7): the whole block runs through
+                        # the ops' vectorized process_batch path; injected
+                        # failures fire up front (the retry reruns the block
+                        # from its checkpoint either way)
+                        for oi in block:
+                            key = (sp.name, oi)
+                            if faults.op_failures.get(key, 0) > 0:
+                                faults.op_failures[key] -= 1
+                                raise OperatorFailure(
+                                    f"injected @ {sp.name}[{oi}]")
+                        out, bstats = run_ops_batched(
+                            [sp.ops[oi] for oi in block], out)
+                        with rlock:
+                            report.vectorized_rows += bstats["vectorized_rows"]
+                            report.batch_fallbacks += bstats["batch_fallbacks"]
+                            report.kernel_ms += bstats["kernel_ms"]
+                    else:
+                        for oi in block:
+                            op = sp.ops[oi]
+                            # injected failures (tests)
+                            key = (sp.name, oi)
+                            if faults.op_failures.get(key, 0) > 0:
+                                faults.op_failures[key] -= 1
+                                raise OperatorFailure(
+                                    f"injected @ {sp.name}[{oi}]")
+                            out = op.run(out)
                     current = out
                     break
                 except OperatorFailure as e:

@@ -189,6 +189,18 @@ class StreamReport:
         """Shard descriptors issued to workers across all committed epochs."""
         return sum(e.run.source_descriptors for e in self.epochs)
 
+    def vectorized_rows(self) -> int:
+        """Rows that went through the batch operator tier (ISSUE 7)."""
+        return sum(e.run.vectorized_rows for e in self.epochs)
+
+    def batch_fallbacks(self) -> int:
+        """Batched blocks that fell back to the scalar iterator path."""
+        return sum(e.run.batch_fallbacks for e in self.epochs)
+
+    def kernel_ms(self) -> float:
+        """Milliseconds spent inside erasure/encode kernels across epochs."""
+        return sum(e.run.kernel_ms for e in self.epochs)
+
     def source_reissues(self) -> int:
         """Descriptors re-issued to survivors after a reader death."""
         return sum(e.run.source_reissues for e in self.epochs)
