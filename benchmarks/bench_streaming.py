@@ -23,8 +23,9 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core import (DataStore, GeneratorSpecSource, IngestPlan,
-                        RuntimeEngine, StreamingRuntimeEngine, chain_stage,
-                        create_stage, format_, resolve_op, select)
+                        RuntimeEngine, StreamFaultInjection,
+                        StreamingRuntimeEngine, chain_stage, create_stage,
+                        format_, resolve_op, select)
 from repro.core import store as store_stmt
 from repro.core.items import IngestItem
 
@@ -83,6 +84,44 @@ def _shuffled_plan(ds):
     chain_stage(p, to=["a"], using=[s2], name="b")
     chain_stage(p, to=["b"], using=[s3], name="c")
     return p
+
+
+def _narrow_plan(ds):
+    """Cone-capable 3-stage chain (ISSUE 8): no shuffle before the segment
+    split, every ingest stage's replay cone is ``self`` — a mid-epoch node
+    death replays only the dead node's shards instead of the whole epoch."""
+    p = IngestPlan("recovery_bench")
+    s1 = p.add_statement([resolve_op("identity_parser")], kind="select")
+    s2 = p.add_statement([
+        resolve_op("chunk", target_rows=8192),
+        resolve_op("serialize", layout="columnar"),
+    ], kind="format", inputs=[s1])
+    s3 = p.add_statement([
+        resolve_op("locate", scheme="roundrobin", num_locations=len(ds.nodes)),
+        resolve_op("upload", store=ds),
+    ], kind="store", inputs=[s2])
+    create_stage(p, using=[s1], name="a")
+    chain_stage(p, to=["a"], using=[s2], name="b")
+    chain_stage(p, to=["b"], using=[s3], name="c")
+    return p
+
+
+def _run_recovery(shards, cone: bool):
+    """One streaming run of the narrow plan with a node death injected at
+    epoch 1's last ingest stage — the deterministic cone scenario of the
+    recovery tests, at benchmark scale.  Returns the stream report; the
+    faulted epoch's commit latency (cut -> manifest rename, replay included)
+    is the recovery cost."""
+    ds = fresh_store()
+    eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                 queue_capacity=2 * EPOCH_ITEMS,
+                                 cone_recovery=cone)
+    faults = StreamFaultInjection(node_death_at={(ds.nodes[2], 1): "b"})
+    rep = eng.run_stream(_narrow_plan(ds), _fresh_shards(shards),
+                         faults=faults)
+    eng.close()
+    cleanup(ds)
+    return rep
 
 
 def _cpu_heavy_plan(ds):
@@ -424,6 +463,32 @@ def run(scale: int) -> List[Row]:
                  f"({push_s / pull_s:.2f}x pushed; {n_descriptors} "
                  f"descriptors, coordinator bytes {pull_coord_bytes})"))
 
+    # ---- lineage-cone recovery (ISSUE 8): the same injected mid-epoch
+    # death on the narrow plan, cone recovery on vs the whole-epoch
+    # fallback.  The faulted epoch's commit latency (epoch cut -> manifest
+    # rename, replay included) is the recovery cost; the cone replays only
+    # the dead node's shards where the fallback recomputes the whole epoch.
+    # recovery_ms (the cone road) is nightly-gated LOWER-is-better.
+    def _faulted_latency(cone: bool):
+        rep = _run_recovery(shards, cone)
+        faulted = next(e for e in rep.epochs if e.epoch == 1)
+        return faulted.commit_latency_s, rep
+
+    cone_lat, cone_rep = min((_faulted_latency(True)
+                              for _ in range(REPEATS)), key=lambda t: t[0])
+    whole_lat, whole_rep = min((_faulted_latency(False)
+                                for _ in range(REPEATS)), key=lambda t: t[0])
+    assert cone_rep.cone_replays() >= 1, "injected death missed the cone road"
+    assert cone_rep.replayed_rows() < whole_rep.replayed_rows(), (
+        "cone replay recomputed as many rows as the whole-epoch fallback")
+    rows.append(("streaming/recovery_cone", cone_lat,
+                 f"{cone_lat * 1e3:.1f} ms faulted-epoch commit "
+                 f"({cone_rep.replayed_rows()} rows replayed)"))
+    rows.append(("streaming/recovery_whole_epoch", whole_lat,
+                 f"{whole_lat * 1e3:.1f} ms faulted-epoch commit "
+                 f"({whole_rep.replayed_rows()} rows replayed, "
+                 f"{whole_lat / cone_lat:.2f}x cone)"))
+
     _append_trajectory({
         "ts": time.time(),
         "scale": scale,
@@ -466,6 +531,13 @@ def run(scale: int) -> List[Row]:
         "source_pushed_coordinator_bytes": push_coord_bytes,
         "source_descriptors": n_descriptors,
         "source_reissues": _sum_runs(pull_rep, "source_reissues"),
+        # ISSUE 8: lineage-cone recovery — recovery_ms is gated (LOWER is
+        # better: fresh/base - 1 in perf_gate); the whole-epoch fallback
+        # latency and replayed-row counts ride along for the comparison.
+        "recovery_ms": cone_lat * 1e3,
+        "recovery_whole_epoch_ms": whole_lat * 1e3,
+        "recovery_replayed_rows": cone_rep.replayed_rows(),
+        "recovery_whole_epoch_replayed_rows": whole_rep.replayed_rows(),
         "host_cores": host_cores,
         "process_workers": n_workers,
         "host_parallel_ceiling": parallel_ceiling,

@@ -8,9 +8,12 @@ threshold.  Gated metrics default to ``pipelined_rows_per_s`` (the
 pipelined-core throughput), ``shuffle_rows_per_s`` (the worker-side
 peer-exchange shuffle, ISSUE 4), ``resident_rows_per_s`` (the
 node-resident dataflow on the process backend, ISSUE 5), and
-``pull_rows_per_s`` (worker-pull descriptor sources, ISSUE 6), and
+``pull_rows_per_s`` (worker-pull descriptor sources, ISSUE 6),
 ``erasure_mb_per_s`` (the batched erasure encode tier, ISSUE 7 — read from
-``BENCH_storage.json``); ``--metric`` may be repeated to gate a custom set.
+``BENCH_storage.json``), and ``recovery_ms`` (the lineage-cone faulted-epoch
+commit latency, ISSUE 8 — in ``LOWER_IS_BETTER``, so the regression
+direction inverts: a *rise* beyond the threshold fails); ``--metric`` may
+be repeated to gate a custom set.
 Each metric reads the trajectory file in ``METRIC_FILES`` unless an explicit
 ``--file`` overrides it for all metrics.  With fewer than two comparable
 entries for a metric (first run, wiped trajectory, pre-metric history,
@@ -38,9 +41,12 @@ STORAGE_FILE = os.path.join(os.path.dirname(__file__), "..",
 DEFAULT_METRIC = "pipelined_rows_per_s"
 DEFAULT_METRICS = (DEFAULT_METRIC, "shuffle_rows_per_s",
                    "resident_rows_per_s", "pull_rows_per_s",
-                   "erasure_mb_per_s")
+                   "erasure_mb_per_s", "recovery_ms")
 # per-metric trajectory files; metrics not listed read DEFAULT_FILE
 METRIC_FILES = {"erasure_mb_per_s": STORAGE_FILE}
+# latency-style metrics regress by RISING: drop = fresh/base - 1 instead of
+# 1 - fresh/base, so the same threshold bounds the allowed increase
+LOWER_IS_BETTER = {"recovery_ms"}
 DEFAULT_THRESHOLD = 0.25
 
 
@@ -79,7 +85,10 @@ def check(path: str, metric: str = DEFAULT_METRIC,
     base, fresh = float(prev[metric]), float(last[metric])
     if base <= 0:
         return 0, f"perf gate: baseline {metric}={base} — skipping"
-    drop = 1.0 - fresh / base
+    if metric in LOWER_IS_BETTER:
+        drop = fresh / base - 1.0
+    else:
+        drop = 1.0 - fresh / base
     detail = f"{metric}: {fresh:,.0f} vs {base:,.0f} baseline ({-drop:+.1%})"
     if drop > threshold:
         return 1, f"perf gate: REGRESSION {detail} exceeds {threshold:.0%} budget"

@@ -13,6 +13,8 @@ Typical flow::
 """
 from .access import DataAccess, Split
 from .catalog import Catalog
+from .chaos import (ChaosController, ChaosEvent, ChaosPlan, SoakResult,
+                    chaos_soak)
 from .exchange import (PartitionExchange, decode_partition, encode_partition,
                        partition_items, resident_file_name, stable_group_hash)
 from .fault import (ErasureRecovery, FaultToleranceDaemon, RecoveryUDF,
@@ -24,6 +26,7 @@ from .language import (FeedSpec, LanguageSession, chain_stage, create_stage,
                        format_, parse_feed_script, parse_ingestion_script,
                        select, store, unparse_source, unparse_stream,
                        with_epochs, with_source)
+from .liveness import LivenessMonitor, retry_call
 from .operators import (BatchFallback, IngestOp, MaterializeOp,
                         OperatorFailure, OpMode, PassThroughOp, register_op,
                         registered_ops, resolve_callable, resolve_op,
@@ -32,7 +35,7 @@ from .optimizer import (FilterFusionRule, IngestionOptimizer, IngestOpExpr,
                         ParallelModeRule, PipelineRule, ReorderRule, Rule,
                         VectorizeRule, split_pipeline_segments)
 from .plan import (IngestPlan, Stage, StagePlan, Statement, annotate_edges,
-                   serialize_plans)
+                   cone_replay_capable, segment_split, serialize_plans)
 from .procexec import ProcessNodeExecutor, WorkerDeath
 from .runtime import (ExchangeRound, FaultInjection, NodeExecutor,
                       NodeFailure, RunReport, RuntimeEngine,
@@ -55,6 +58,8 @@ from . import ops_store as _ops_store    # noqa: F401
 
 __all__ = [
     "DataAccess", "Split", "Catalog",
+    "ChaosController", "ChaosEvent", "ChaosPlan", "SoakResult", "chaos_soak",
+    "LivenessMonitor", "retry_call",
     "ErasureRecovery", "FaultToleranceDaemon", "RecoveryUDF",
     "ReplicationRecovery", "TransformationRecovery",
     "Granularity", "IngestItem", "Label", "ShmLease", "as_device_array",
@@ -69,7 +74,7 @@ __all__ = [
     "PipelineRule", "ReorderRule", "Rule", "VectorizeRule",
     "split_pipeline_segments",
     "IngestPlan", "Stage", "StagePlan", "Statement", "annotate_edges",
-    "serialize_plans",
+    "cone_replay_capable", "segment_split", "serialize_plans",
     "PartitionExchange", "decode_partition", "encode_partition",
     "partition_items", "resident_file_name", "stable_group_hash",
     "ProcessNodeExecutor", "WorkerDeath",

@@ -1,0 +1,420 @@
+"""Deterministic chaos harness (ISSUE 8): seeded fault plans + soak runs.
+
+Fault machinery accreted in three disconnected dialects: the batch
+engine's :class:`~repro.core.runtime.FaultInjection` (op failures, death
+after a named stage), the streaming engine's
+:class:`~repro.core.streaming.StreamFaultInjection` (op failures, death
+keyed to an epoch index), and the raw per-operator ``_fail_next`` test
+counter.  Each chaos test hand-rolled its own schedule, so no two
+exercised the same interleavings and none composed kill + hang + garble
+in one run.
+
+This module puts one seeded DSL over all of them.  A :class:`ChaosPlan`
+is a schedule of :class:`ChaosEvent`\\ s keyed to **epoch · stage ·
+node** — generated deterministically from a seed, so a failing soak run
+reproduces from its seed alone — and *renders* into whichever hook a
+runtime consumes:
+
+* ``stream_faults()`` -> ``StreamFaultInjection`` (kills become
+  ``node_death_at`` placements; garbles become ``op_failures``);
+* ``batch_faults()`` -> ``FaultInjection`` for the batch engine;
+* ``arm_fail_next()`` drives the legacy per-operator counter;
+* ``ChaosController`` fires the events that must be *real OS signals*
+  (SIGSTOP hangs, coordinator-side delays) from the exchange manifest
+  hook, at exactly the scheduled epoch·stage·node.
+
+:func:`chaos_soak` is the regression entry point every later multi-host
+PR runs against: N chaotic epochs on a backend, then the full
+exactly-once audit — committed epoch ids gap-free, every input row read
+back exactly once, ``gc_orphans()`` empty, no leaked shared-memory
+segments or exchange spill files.  ``python -m repro.core.chaos`` runs it
+from CI (see nightly.yml).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import random
+import sys
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .items import IngestItem
+from .operators import resolve_op
+from .plan import IngestPlan, StagePlan
+from .runtime import FaultInjection
+from .streaming import StreamFaultInjection
+
+KINDS = ("kill", "hang", "delay", "garble")
+
+
+@dataclass(frozen=True)
+class ChaosEvent:
+    """One scheduled fault, keyed to epoch index · stage name · node.
+
+    ``kill``   — the node dies right after ``stage`` completes in epoch
+                 ``epoch`` (rendered as an injected death for both
+                 backends; deterministic by construction).
+    ``hang``   — SIGSTOP the node's worker at the moment its ``stage``
+                 manifest lands in ``epoch`` (process backend only; needs
+                 the heartbeat monitor armed to be observed).
+    ``delay``  — stall the coordinator's manifest handling for
+                 ``seconds`` at the keyed point (a slow node, simulated).
+    ``garble`` — operator ``op_index`` of ``stage`` raises
+                 ``OperatorFailure`` ``count`` times (absorbed by
+                 retry-from-checkpoint while ``count < max_retries``).
+    """
+
+    kind: str
+    epoch: int
+    stage: str
+    node: str
+    op_index: int = 0
+    count: int = 1
+    seconds: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown chaos kind {self.kind!r}")
+
+
+@dataclass
+class ChaosPlan:
+    """A seeded schedule of chaos events plus its renderers."""
+
+    events: List[ChaosEvent] = field(default_factory=list)
+    seed: int = 0
+
+    @classmethod
+    def generate(cls, seed: int, *, epochs: int, nodes: Sequence[str],
+                 stages: Sequence[str], kills: int = 1, hangs: int = 0,
+                 delays: int = 2, garbles: int = 2,
+                 delay_s: float = 0.05,
+                 max_dead: Optional[int] = None) -> "ChaosPlan":
+        """Deterministically draw a schedule from ``seed``.
+
+        Kills (and hangs — a hang becomes a death once liveness declares
+        it) pick *distinct* victims, at most ``max_dead`` of them
+        (default: all but two nodes stay alive, so the stream always has
+        survivors to replay on).  Garbles keep per-(stage, op) counts
+        below the runtime's default ``max_retries`` so they are absorbed
+        by retry, never by dummy substitution — a substituted operator
+        would silently drop rows and break the exactly-once audit the
+        soak exists to run."""
+        rng = random.Random(seed)
+        nodes = list(nodes)
+        stages = list(stages)
+        if max_dead is None:
+            max_dead = max(0, len(nodes) - 2)
+        lethal = min(kills + hangs, max_dead)
+        victims = rng.sample(nodes, lethal) if lethal else []
+        events: List[ChaosEvent] = []
+        for i, victim in enumerate(victims):
+            # hangs schedule first: when max_dead clips the lethal budget
+            # the rarer event (SIGSTOP + liveness declaration) must survive
+            kind = "hang" if i < min(hangs, lethal) else "kill"
+            events.append(ChaosEvent(
+                kind=kind, epoch=rng.randrange(epochs),
+                stage=rng.choice(stages), node=victim))
+        for _ in range(delays):
+            events.append(ChaosEvent(
+                kind="delay", epoch=rng.randrange(epochs),
+                stage=rng.choice(stages), node=rng.choice(nodes),
+                seconds=delay_s))
+        garble_budget: Dict[Tuple[str, int], int] = {}
+        for _ in range(garbles):
+            key = (rng.choice(stages), 0)
+            if garble_budget.get(key, 0) >= 2:   # < max_retries default (3)
+                continue
+            garble_budget[key] = garble_budget.get(key, 0) + 1
+            events.append(ChaosEvent(
+                kind="garble", epoch=rng.randrange(epochs),
+                stage=key[0], node=rng.choice(nodes), op_index=key[1]))
+        events.sort(key=lambda e: (e.epoch, e.stage, e.kind, e.node))
+        return cls(events=events, seed=seed)
+
+    # -------------------------------------------------------------- renderers
+    def stream_faults(self, backend: str = "thread") -> StreamFaultInjection:
+        """Render for the streaming engine.  Kills become precise
+        ``node_death_at`` placements; on the thread backend hangs render as
+        kills too (a thread cannot be SIGSTOP'd independently — the
+        injected death is the closest deterministic equivalent).  Garbles
+        land in the shared ``op_failures`` map."""
+        sf = StreamFaultInjection()
+        for ev in self.events:
+            if ev.kind == "kill" or (ev.kind == "hang"
+                                     and backend != "process"):
+                sf.node_death_at[(ev.node, ev.epoch)] = ev.stage
+            elif ev.kind == "garble":
+                key = (ev.stage, ev.op_index)
+                sf.op_failures[key] = sf.op_failures.get(key, 0) + ev.count
+        return sf
+
+    def batch_faults(self) -> FaultInjection:
+        """Render for the batch engine (no epochs: the first kill becomes a
+        death after its stage, garbles map unchanged)."""
+        bf = FaultInjection()
+        for ev in self.events:
+            if ev.kind in ("kill", "hang"):
+                bf.node_death_after_stage.setdefault(ev.node, ev.stage)
+            elif ev.kind == "garble":
+                key = (ev.stage, ev.op_index)
+                bf.op_failures[key] = bf.op_failures.get(key, 0) + ev.count
+        return bf
+
+    def arm_fail_next(self, stage_plans: Sequence[StagePlan]) -> int:
+        """Drive the legacy per-operator ``_fail_next`` counters from the
+        same schedule (for harnesses that bypass the engines' injection
+        plumbing).  Returns how many operators were armed."""
+        armed = 0
+        by_stage = {sp.name: sp for sp in stage_plans}
+        for ev in self.events:
+            if ev.kind != "garble":
+                continue
+            sp = by_stage.get(ev.stage)
+            if sp is not None and ev.op_index < len(sp.ops):
+                sp.ops[ev.op_index]._fail_next += ev.count
+                armed += 1
+        return armed
+
+    def signal_events(self, backend: str) -> List[ChaosEvent]:
+        """The events a :class:`ChaosController` must fire as real OS
+        signals / coordinator stalls: delays always, hangs only where a
+        worker process exists to stop."""
+        out = [e for e in self.events if e.kind == "delay"]
+        if backend == "process":
+            out += [e for e in self.events if e.kind == "hang"]
+        return out
+
+
+class ChaosController:
+    """Fires a plan's real-signal events from the exchange manifest hook.
+
+    ``attach()`` wraps ``engine.shuffle.test_on_manifest``; every manifest
+    arrival is matched against the plan's unfired signal events by
+    (epoch index, producing stage, producer node) and fired at most once:
+    ``hang`` SIGSTOPs that node's worker (the pipe stays open — only the
+    heartbeat monitor can notice), ``delay`` sleeps the coordinator's
+    manifest path.  ``detach()`` restores the previous hook."""
+
+    def __init__(self, plan: ChaosPlan, engine: Any, base_eid: int = 0,
+                 backend: Optional[str] = None) -> None:
+        self.engine = engine
+        self.base_eid = base_eid
+        backend = backend or getattr(engine, "backend", "thread")
+        self._pending = list(plan.signal_events(backend))
+        self.fired: List[ChaosEvent] = []
+        self._prev_hook: Any = None
+        self._attached = False
+
+    def attach(self) -> "ChaosController":
+        if not self._attached:
+            self._prev_hook = self.engine.shuffle.test_on_manifest
+            self.engine.shuffle.test_on_manifest = self._on_manifest
+            self._attached = True
+        return self
+
+    def detach(self) -> None:
+        if self._attached:
+            self.engine.shuffle.test_on_manifest = self._prev_hook
+            self._attached = False
+
+    def _on_manifest(self, rnd: Any, node: str) -> None:
+        idx = rnd.epoch - self.base_eid
+        for ev in list(self._pending):
+            if (ev.epoch, ev.stage, ev.node) != (idx, rnd.stage, node):
+                continue
+            self._pending.remove(ev)
+            self.fired.append(ev)
+            if ev.kind == "hang":
+                ex = self.engine.executor(ev.node)
+                hang = getattr(ex, "hang", None)
+                if hang is not None:
+                    hang()
+            elif ev.kind == "delay":
+                time.sleep(ev.seconds)
+        if self._prev_hook is not None:
+            self._prev_hook(rnd, node)
+
+
+# ---------------------------------------------------------------------------
+# Soak entry point
+# ---------------------------------------------------------------------------
+@dataclass
+class SoakResult:
+    """One chaos-soak run's audit: inputs vs. committed outputs + leaks."""
+
+    backend: str
+    seed: int
+    epochs_committed: int
+    rows_in: int
+    rows_out: int
+    node_failures: int
+    cone_replays: int
+    replayed_rows: int
+    liveness_deaths: int
+    orphans: List[str]
+    shm_leaked: List[str]
+    spill_leaked: List[str]
+    errors: List[str]
+    wall_s: float
+
+    @property
+    def ok(self) -> bool:
+        return (not self.errors and not self.orphans and not self.shm_leaked
+                and not self.spill_leaked and self.rows_in == self.rows_out)
+
+    def to_json(self) -> Dict[str, Any]:
+        d = dict(self.__dict__)
+        d["ok"] = self.ok
+        return d
+
+
+def _soak_plan(store: Any) -> IngestPlan:
+    """The soak's 3-stage narrow pipeline (parse -> chunk+serialize ->
+    upload): cone-capable by construction, so kills exercise lineage-cone
+    replay and everything else falls back to whole-epoch replay."""
+    p = IngestPlan("chaos-soak")
+    s1 = p.add_statement([resolve_op("identity_parser")], kind="select")
+    s2 = p.add_statement([resolve_op("chunk", target_rows=256),
+                          resolve_op("serialize", layout="columnar")],
+                         kind="format", inputs=[s1])
+    s3 = p.add_statement([resolve_op("upload", store=store)],
+                         kind="store", inputs=[s2])
+    p.create_stage(using=[s1], name="a")
+    p.chain_stage(to=["a"], using=[s2], name="b")
+    p.chain_stage(to=["b"], using=[s3], name="c")
+    return p
+
+
+def _shm_segments() -> set:
+    return set(glob.glob("/dev/shm/psm_*"))
+
+
+def chaos_soak(backend: str = "thread", seed: int = 9, epochs: int = 20,
+               rows_per_shard: int = 40, epoch_items: int = 4,
+               nodes: int = 4, kills: int = 2, hangs: Optional[int] = None,
+               delays: int = 2, garbles: int = 2,
+               heartbeat_interval_s: float = 0.05, heartbeat_miss: int = 3,
+               root: Optional[str] = None) -> SoakResult:
+    """Run ``epochs`` chaotic epochs on ``backend`` and audit the result.
+
+    Deterministic given (seed, backend, scale): the chaos schedule, the
+    input rows, and the epoch cuts all derive from the arguments.  Hangs
+    default to 1 on the process backend (where SIGSTOP is real and the
+    heartbeat monitor — armed here — must declare the death) and 0 on the
+    thread backend (they render as kills anyway)."""
+    from .access import DataAccess
+    from .store import DataStore
+    from .streaming import StreamingRuntimeEngine
+    from repro.data.generators import gen_lineitem
+
+    if hangs is None:
+        hangs = 1 if backend == "process" else 0
+    node_names = [f"n{i}" for i in range(nodes)]
+    n_shards = epochs * epoch_items
+    shards = [IngestItem(gen_lineitem(rows_per_shard, seed=seed * 10007 + i))
+              for i in range(n_shards)]
+    rows_in = sum(it.nrows() for it in shards)
+
+    tmp = None
+    if root is None:
+        tmp = tempfile.TemporaryDirectory(prefix="chaos-soak-")
+        root = tmp.name
+    t0 = time.time()
+    errors: List[str] = []
+    shm_before = _shm_segments()
+    store = DataStore(os.path.join(root, f"store-{backend}-{seed}"),
+                     nodes=node_names)
+    plan = _soak_plan(store)
+    stage_names = ["a", "b"]   # the terminal store stage produces no round
+    cplan = ChaosPlan.generate(seed, epochs=epochs, nodes=node_names,
+                               stages=stage_names, kills=kills, hangs=hangs,
+                               delays=delays, garbles=garbles)
+    eng = StreamingRuntimeEngine(
+        store, epoch_items=epoch_items, backend=backend,
+        heartbeat_interval_s=(heartbeat_interval_s
+                              if backend == "process" else None),
+        heartbeat_miss=heartbeat_miss)
+    controller = ChaosController(cplan, eng, base_eid=store.next_epoch_id(),
+                                 backend=backend).attach()
+    rep = None
+    try:
+        rep = eng.run_stream(plan, iter(shards),
+                             faults=cplan.stream_faults(backend))
+    except BaseException as e:
+        errors.append(f"{type(e).__name__}: {e}")
+    finally:
+        controller.detach()
+        eng.close()
+
+    rows_out = 0
+    committed: List[int] = []
+    n_failures = cone = replayed = live_deaths = 0
+    orphans: List[str] = []
+    spill_leaked: List[str] = []
+    if rep is not None:
+        committed = rep.committed_epoch_ids()
+        if committed and committed != list(range(committed[0],
+                                                 committed[0] + len(committed))):
+            errors.append(f"epoch ids not gap-free: {committed}")
+        if len(committed) != epochs:
+            errors.append(f"committed {len(committed)}/{epochs} epochs")
+        n_failures = len(rep.node_failures)
+        cone = rep.cone_replays()
+        replayed = rep.replayed_rows()
+        live_deaths = len(rep.liveness_deaths)
+        try:
+            rows_out = len(DataAccess(store).since_epoch(-1).read_all(
+                projection=["quantity"])["quantity"])
+        except BaseException as e:
+            errors.append(f"read-back failed: {type(e).__name__}: {e}")
+        orphans = store.gc_orphans()
+        for dirpath, _dirs, files in os.walk(store.dfs_dir):
+            spill_leaked.extend(os.path.join(dirpath, f) for f in files)
+    shm_leaked = sorted(_shm_segments() - shm_before)
+
+    result = SoakResult(
+        backend=backend, seed=seed, epochs_committed=len(committed),
+        rows_in=rows_in, rows_out=rows_out, node_failures=n_failures,
+        cone_replays=cone, replayed_rows=replayed,
+        liveness_deaths=live_deaths, orphans=orphans,
+        shm_leaked=shm_leaked, spill_leaked=spill_leaked, errors=errors,
+        wall_s=round(time.time() - t0, 3))
+    if tmp is not None:
+        tmp.cleanup()
+    return result
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="seeded chaos soak: N chaotic epochs + exactly-once audit")
+    ap.add_argument("--backend", default="both",
+                    choices=["thread", "process", "both"])
+    # default seed chosen so the schedule exercises BOTH recovery roads:
+    # one kill after the segment's last ingest stage (lineage-cone replay)
+    # and one mid-segment (whole-epoch fallback)
+    ap.add_argument("--seed", type=int, default=9)
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--rows", type=int, default=40,
+                    help="rows per source shard")
+    ap.add_argument("--kills", type=int, default=2)
+    ap.add_argument("--delays", type=int, default=2)
+    ap.add_argument("--garbles", type=int, default=2)
+    args = ap.parse_args(argv)
+    backends = (["thread", "process"] if args.backend == "both"
+                else [args.backend])
+    results = [chaos_soak(backend=b, seed=args.seed, epochs=args.epochs,
+                          rows_per_shard=args.rows, kills=args.kills,
+                          delays=args.delays, garbles=args.garbles)
+               for b in backends]
+    print(json.dumps([r.to_json() for r in results], indent=2))
+    return 0 if all(r.ok for r in results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,7 +43,7 @@ import zlib
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from .items import IngestItem, ShmLease, _materialize_item
+from .items import IngestItem, ShmLease, _materialize_item, create_segment
 
 #: manifest/file naming shared with DataStore.gc_orphans
 EXCHANGE_PREFIX = "exchange_"
@@ -146,8 +146,7 @@ def encode_partition(items: Sequence[IngestItem]
                         buffer_callback=buffers.append)
     views = [b.raw() for b in buffers]
     total = sum(v.nbytes for v in views) + len(meta)
-    from multiprocessing import shared_memory
-    shm = shared_memory.SharedMemory(create=True, size=max(total, 1))
+    shm = create_segment(max(total, 1))
     offsets: List[Tuple[int, int]] = []
     off = 0
     for v in views:
@@ -323,6 +322,21 @@ class PartitionExchange:
         with self._lock:
             victims = [k for k in self._buckets if k[0] in want]
             dropped = [self._buckets.pop(k) for k in victims]
+        self._reclaim(dropped)
+
+    def drop_node(self, xids: Sequence[int], node: str) -> None:
+        """Per-producer invalidation (ISSUE 8 lineage-cone recovery): forget
+        only the buckets addressed to ``node`` in the given rounds.  On a
+        narrow (identity-routed) edge the producer's output lives solely in
+        its own bucket, so this removes exactly the dead node's contribution
+        while every survivor's partition stays live."""
+        want = {(x, node) for x in xids}
+        with self._lock:
+            victims = [k for k in self._buckets if k in want]
+            dropped = [self._buckets.pop(k) for k in victims]
+        self._reclaim(dropped)
+
+    def _reclaim(self, dropped: Sequence[_Bucket]) -> None:
         for b in dropped:
             for lease in b.leases:
                 lease.release()

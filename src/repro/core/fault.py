@@ -152,6 +152,10 @@ class RecoveryReport:
     recovered: List[Tuple[str, str]] = field(default_factory=list)  # (block, udf)
     unrecoverable: List[str] = field(default_factory=list)
     per_block_seconds: Dict[str, float] = field(default_factory=dict)
+    # set by stop() when the poller outlived its join timeout (a recovery
+    # UDF still running); the daemon thread is daemonic so the process can
+    # exit, but callers must see the overrun rather than assume quiescence
+    stop_overrun: bool = False
 
 
 class FaultToleranceDaemon:
@@ -176,6 +180,11 @@ class FaultToleranceDaemon:
     # -------------------------------------------------------------- one sweep
     def sweep(self) -> RecoveryReport:
         for bid in self.store.failed_blocks():
+            # a stop request aborts the sweep between blocks: without this,
+            # stop() could wait out its whole join timeout behind a long
+            # recovery backlog and leak the poller thread mid-recovery
+            if self._stop.is_set() and self._thread is not None:
+                break
             entry = self.store.entries[bid]
             t0 = time.time()
             for udf in self.udfs:
@@ -219,7 +228,18 @@ class FaultToleranceDaemon:
         self._thread = threading.Thread(target=loop, daemon=True)
         self._thread.start()
 
-    def stop(self) -> None:
+    def stop(self, timeout_s: float = 5.0) -> bool:
+        """Stop the poller and join it.  Returns True when the thread exited
+        within ``timeout_s``; on timeout the overrun is recorded in
+        ``report.stop_overrun`` (never swallowed — the thread is mid-recovery
+        and will exit at its next between-block stop check)."""
         self._stop.set()
-        if self._thread:
-            self._thread.join(timeout=5)
+        t = self._thread
+        if t is None:
+            return True
+        t.join(timeout=timeout_s)
+        if t.is_alive():
+            self.report.stop_overrun = True
+            return False
+        self._thread = None
+        return True

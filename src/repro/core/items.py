@@ -13,12 +13,39 @@ from __future__ import annotations
 
 import enum
 import hashlib
+import itertools
+import os
 import pickle
 import threading
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+# ---------------------------------------------------------------------------
+# Attributable shared-memory segments (ISSUE 8)
+# ---------------------------------------------------------------------------
+_SEG_SEQ = itertools.count()
+
+
+def create_segment(size: int):
+    """Create a shared-memory segment named ``psm_ing<pid>_<seq>``.
+
+    The default anonymous ``psm_<random>`` names are unattributable: when
+    the liveness monitor SIGKILLs a wedged worker (the only signal a
+    SIGSTOP'd process cannot hold off), any segment it created but had not
+    yet announced to the coordinator would leak forever.  Encoding the
+    creating pid into the name lets the coordinator sweep a dead worker's
+    leftovers by prefix (see ``ProcessNodeExecutor._sweep_segments``).
+    The ``psm_`` prefix is kept so existing leak detectors still match."""
+    from multiprocessing import shared_memory
+    while True:
+        name = f"psm_ing{os.getpid()}_{next(_SEG_SEQ)}"
+        try:
+            return shared_memory.SharedMemory(create=True, size=size,
+                                              name=name)
+        except FileExistsError:
+            continue   # stale leftover from a recycled pid: try the next seq
 
 
 class Granularity(enum.IntEnum):
@@ -285,8 +312,7 @@ def encode_items(items: Sequence["IngestItem"],
         for b in buffers:
             b.release()
         return {"kind": "pickle", "meta": meta, "buffers": inline}, None
-    from multiprocessing import shared_memory
-    shm = shared_memory.SharedMemory(create=True, size=max(total, 1))
+    shm = create_segment(max(total, 1))
     offsets: List[Tuple[int, int]] = []
     off = 0
     for v in views:

@@ -1,0 +1,152 @@
+"""Heartbeat liveness + bounded-retry helpers (ISSUE 8).
+
+Death detection used to rest on a single signal: the worker pipe's EOF.
+A crashed worker closes its pipe and the receiver thread fails every
+pending job — but a *wedged* worker (SIGSTOP, a runaway C extension, or,
+on a future multi-host fabric, a silently dropped connection) keeps the
+pipe open forever and the stream stalls with it.  AsterixDB's
+fault-tolerant feeds (arXiv:1405.1705) track liveness explicitly for this
+reason; this module adds the same second signal:
+
+* :class:`LivenessMonitor` — a coordinator-side thread that pings every
+  watched process worker over its existing control pipe each
+  ``interval_s``.  The worker's receive loop answers ``("pong", seq)``
+  immediately (stage jobs run on lanes, so a busy worker still answers);
+  any traffic on the pipe — pongs, job results — refreshes the worker's
+  heartbeat.  A worker silent for ``miss_threshold`` consecutive
+  intervals is declared dead: the monitor SIGKILLs it (SIGKILL, not
+  SIGTERM — a stopped process never delivers SIGTERM) and fails its
+  in-flight futures, which feeds the runtime's ordinary NodeFailure
+  recovery path (lineage-cone replay where capable).
+* :func:`retry_call` — bounded retry with exponential backoff and
+  deterministic jitter for spawn/connect paths, so one transient fork or
+  shared-memory hiccup no longer aborts a whole run on first try.
+
+The thread backend needs no monitor: its executors share the coordinator
+process, so a wedge there stalls the coordinator itself and every death
+already surfaces as a stage failure.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple, Type
+
+
+def retry_call(fn: Callable[[], Any], *,
+               attempts: int = 3,
+               base_delay_s: float = 0.05,
+               factor: float = 2.0,
+               max_delay_s: float = 1.0,
+               jitter: float = 0.25,
+               retry_on: Tuple[Type[BaseException], ...] = (OSError,),
+               seed: Optional[int] = None,
+               sleep: Callable[[float], None] = time.sleep
+               ) -> Tuple[Any, int]:
+    """Call ``fn`` with bounded retry + exponential backoff and jitter.
+
+    Returns ``(result, attempts_used)``; re-raises the last exception once
+    ``attempts`` are exhausted.  Only exceptions in ``retry_on`` retry —
+    anything else (a programming error) propagates immediately.  The
+    jitter fraction desynchronizes concurrent retriers (every node
+    executor spawning at once should not re-collide on the same
+    millisecond); ``seed`` pins it for deterministic tests.
+    """
+    if attempts < 1:
+        raise ValueError("retry_call needs attempts >= 1")
+    rng = random.Random(seed)
+    delay = base_delay_s
+    used = 0
+    while True:
+        used += 1
+        try:
+            return fn(), used
+        except retry_on:
+            if used >= attempts:
+                raise
+            pause = delay * (1.0 + jitter * rng.random())
+            sleep(pause)
+            delay = min(delay * factor, max_delay_s)
+
+
+class LivenessMonitor:
+    """Coordinator-side heartbeat monitor over the workers' control pipes.
+
+    ``watch(node, executor)`` registers any executor exposing the process
+    backend's liveness surface — ``send_ping()``, ``heartbeat_age()``,
+    ``fail_unresponsive()`` and the ``alive`` property; executors without
+    it (the thread backend) are skipped: their deaths surface as stage
+    failures already.  The monitor thread pings each watched worker every
+    ``interval_s`` and declares one dead when its heartbeat age exceeds
+    ``interval_s * miss_threshold`` — the pipe may well still be open
+    (SIGSTOP leaves it so), which is precisely the gap this closes.
+
+    Declared deaths are recorded in ``deaths`` as ``(node, waited_s)``
+    where ``waited_s`` is the heartbeat age at declaration — the
+    acceptance bound is ``waited_s <= 2 * interval_s * miss_threshold``.
+    ``on_death(node, waited_s)`` fires after the worker has been failed.
+    """
+
+    def __init__(self, interval_s: float = 0.5, miss_threshold: int = 4,
+                 on_death: Optional[Callable[[str, float], None]] = None
+                 ) -> None:
+        if interval_s <= 0:
+            raise ValueError("heartbeat interval must be positive")
+        if miss_threshold < 1:
+            raise ValueError("miss threshold must be >= 1")
+        self.interval_s = interval_s
+        self.miss_threshold = miss_threshold
+        self.on_death = on_death
+        self.deaths: List[Tuple[str, float]] = []
+        self._watched: Dict[str, Any] = {}
+        self._declared: set = set()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ---------------------------------------------------------------- control
+    def watch(self, node: str, executor: Any) -> bool:
+        """Register ``executor`` for monitoring; False (and ignored) when it
+        exposes no heartbeat surface."""
+        if not callable(getattr(executor, "send_ping", None)):
+            return False
+        with self._lock:
+            self._watched[node] = executor
+        return True
+
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="liveness-monitor")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        t, self._thread = self._thread, None
+        if t is not None:
+            t.join(timeout=5)
+
+    # ------------------------------------------------------------------- loop
+    def _loop(self) -> None:
+        limit = self.interval_s * self.miss_threshold
+        while not self._stop.is_set():
+            with self._lock:
+                watched = dict(self._watched)
+            for node, ex in watched.items():
+                if node in self._declared or not getattr(ex, "alive", False):
+                    continue
+                age = ex.heartbeat_age()
+                if age > limit:
+                    self._declare(node, ex, age)
+                else:
+                    ex.send_ping()
+            self._stop.wait(self.interval_s)
+
+    def _declare(self, node: str, ex: Any, waited_s: float) -> None:
+        self._declared.add(node)
+        ex.fail_unresponsive()
+        self.deaths.append((node, waited_s))
+        if self.on_death is not None:
+            self.on_death(node, waited_s)

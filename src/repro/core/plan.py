@@ -69,6 +69,14 @@ class StagePlan:
     (the consumer lies in the other pipeline segment, so the exchange round
     is pinned across ``_execute`` slices).  Set by ``compile()`` and
     recomputed by the optimizer after rule rewrites.
+
+    ``replay_cone`` classifies this stage's recovery lineage (ISSUE 8):
+    ``"self"`` means a node's partial state at this stage derives only from
+    its own input shards (every ancestor edge is identity-routed), so on
+    that node's death the minimal replay cone is just its shards;
+    ``"peers"`` means a shuffle edge somewhere upstream mixed other nodes'
+    lineages into this stage — the cone widens to the shuffle consumers'
+    inputs, i.e. in practice the whole-epoch fallback.
     """
 
     name: str
@@ -79,6 +87,7 @@ class StagePlan:
     commit_side: bool = False
     shuffle_key: Optional[str] = None
     edge_kinds: Dict[str, str] = field(default_factory=dict)
+    replay_cone: str = "self"
     # per-pipeline-block batch-mode selection (ISSUE 7): ``batch_blocks[b]``
     # is True when the VectorizeRule rewrote block ``b`` to run through the
     # operators' vectorized ``process_batch`` path; empty = all-scalar (plans
@@ -101,6 +110,7 @@ class StagePlan:
                          commit_side=self.commit_side,
                          shuffle_key=self.shuffle_key,
                          edge_kinds=dict(self.edge_kinds),
+                         replay_cone=self.replay_cone,
                          batch_blocks=list(self.batch_blocks))
 
     def compute_commit_side(self) -> bool:
@@ -139,16 +149,29 @@ def annotate_edges(stage_plans: Sequence["StagePlan"]) -> List["StagePlan"]:
 
     Runs after optimizer rewrites too (rules can fuse/reorder the op that
     carries ``shuffle_by``), so the runtime always sees current metadata.
+
+    Alongside the edge taxonomy the per-stage ``replay_cone`` is compiled
+    (ISSUE 8): walking the DAG in topological order, a stage is ``"peers"``
+    if any upstream edge carries a shuffle key or any upstream stage is
+    already ``"peers"`` — a shuffle ancestor mixed other nodes' lineages
+    into it — and ``"self"`` otherwise (the node's partials derive from its
+    own shards alone, so death recovery can replay just that node's cone).
     """
     plans = list(stage_plans)
-    split = len(plans)
-    for i, sp in enumerate(plans):
-        if sp.commit_side or sp.compute_commit_side():
-            split = i
-            break
+    split = segment_split(plans)
+    cones: Dict[str, str] = {}
     for i, sp in enumerate(plans):
         kinds: Dict[str, str] = {}
         shuffles = bool(sp.shuffle_key or sp.compute_shuffle_key())
+        cone = "self"
+        for up in sp.upstream:
+            producer = next((p for p in plans if p.name == up), None)
+            if producer is None:
+                continue
+            if (cones.get(up) == "peers"
+                    or producer.shuffle_key or producer.compute_shuffle_key()):
+                cone = "peers"
+        cones[sp.name] = sp.replay_cone = cone
         for j in range(i + 1, len(plans)):
             if sp.name not in plans[j].upstream:
                 continue
@@ -158,6 +181,41 @@ def annotate_edges(stage_plans: Sequence["StagePlan"]) -> List["StagePlan"]:
                 kinds[plans[j].name] = "shuffle" if shuffles else "narrow"
         sp.edge_kinds = kinds
     return plans
+
+
+def segment_split(stage_plans: Sequence["StagePlan"]) -> int:
+    """Index of the first commit-side stage — the ingest/store segment
+    boundary the pipelined streaming engine overlaps across (DESIGN.md §4).
+    ``len(stage_plans)`` when no stage publishes to the store."""
+    for i, sp in enumerate(stage_plans):
+        if sp.commit_side or sp.compute_commit_side():
+            return i
+    return len(stage_plans)
+
+
+def cone_replay_capable(stage_plans: Sequence["StagePlan"],
+                        split: Optional[int] = None) -> bool:
+    """Can a single node death during the ingest segment be repaired by
+    replaying only that node's lineage cone (ISSUE 8)?
+
+    True iff every ingest-segment stage is identity-routed: no stage before
+    the segment split carries a shuffle key and every such stage's
+    ``replay_cone`` is ``"self"``.  A shuffle anywhere in the segment
+    commingles producers inside one exchange round, so per-producer
+    invalidation cannot separate the dead node's contribution — the
+    whole-epoch fallback handles those plans.
+    """
+    plans = list(stage_plans)
+    if split is None:
+        split = segment_split(plans)
+    if split <= 0:
+        return False
+    for sp in plans[:split]:
+        if sp.shuffle_key or sp.compute_shuffle_key():
+            return False
+        if getattr(sp, "replay_cone", "peers") != "self":
+            return False
+    return True
 
 
 def shuffle_key_of(ops: Sequence[IngestOp]) -> Optional[str]:

@@ -47,6 +47,7 @@ CPU-heavy operator throughput (DESIGN.md §6).  This module realizes the
 """
 from __future__ import annotations
 
+import glob
 import itertools
 import os
 import pickle
@@ -66,6 +67,7 @@ from .exchange import (PartitionExchange, build_manifest, decode_partition,
                        read_partition_file, resident_file_name,
                        write_partition_file)
 from .items import IngestItem, ShmLease, decode_items, encode_items, items_nbytes
+from .liveness import retry_call
 from .operators import OperatorFailure, PassThroughOp, run_ops_batched
 from .plan import StagePlan, failed_op_index, route_items, serialize_plans
 from .store import BlockEntry, DataStore, prepare_block_payload
@@ -484,7 +486,13 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
         kind = msg[0]
         if kind == "stop":
             break
-        if kind == "install":
+        if kind == "ping":
+            # heartbeat (ISSUE 8): answered inline from the recv loop — stage
+            # jobs run on lanes, so a *busy* worker still pongs; only a dead
+            # or wedged (SIGSTOP'd) process goes silent, which is exactly the
+            # condition the coordinator's LivenessMonitor wants to observe
+            send(("pong", msg[1]))
+        elif kind == "install":
             _, key, blob = msg
             try:
                 sps = pickle.loads(blob)
@@ -524,22 +532,45 @@ class ProcessNodeExecutor:
     flush) against the coordinator's ``DataStore``.
     """
 
+    #: test hook (ISSUE 8): called once per spawn attempt before the fork —
+    #: raising OSError from here simulates a transient fork/shm failure
+    spawn_fault: Optional[Callable[[str, int], None]] = None
+    #: spawn retry policy (bounded backoff + jitter via liveness.retry_call)
+    spawn_attempts: int = 3
+    spawn_base_delay_s: float = 0.05
+
     def __init__(self, node: str, store: DataStore) -> None:
         self.node = node
         self.store = store
         ctx = _mp_context()
-        self._conn, child_conn = ctx.Pipe()
-        self._store_conn, child_store = ctx.Pipe()
         spec = {"root": store.root, "nodes": list(store.nodes),
                 "durable": store.durable, "compress": store.compress,
                 "compress_level": store.compress_level,
                 "journal_commits": store.journal_commits}
-        self._proc = ctx.Process(target=_worker_main,
-                                 args=(node, child_conn, child_store, spec),
-                                 daemon=True, name=f"ingest-node-{node}")
-        self._proc.start()
-        child_conn.close()
-        child_store.close()
+        attempt_no = itertools.count(1)
+
+        def spawn() -> None:
+            """One spawn attempt: pipes + fork + start, atomically retried —
+            a transient fork/pipe failure used to abort the whole run on
+            first try (satellite of ISSUE 8)."""
+            n = next(attempt_no)
+            if ProcessNodeExecutor.spawn_fault is not None:
+                ProcessNodeExecutor.spawn_fault(node, n)
+            self._conn, child_conn = ctx.Pipe()
+            self._store_conn, child_store = ctx.Pipe()
+            self._proc = ctx.Process(target=_worker_main,
+                                     args=(node, child_conn, child_store, spec),
+                                     daemon=True, name=f"ingest-node-{node}")
+            self._proc.start()
+            child_conn.close()
+            child_store.close()
+
+        _, used = retry_call(spawn, attempts=self.spawn_attempts,
+                             base_delay_s=self.spawn_base_delay_s,
+                             retry_on=(OSError,))
+        self.spawn_retries = used - 1   # attempts beyond the first
+        self._last_beat = time.monotonic()
+        self._ping_seq = itertools.count()
         self._send_lock = threading.Lock()
         self._lock = threading.Lock()
         self._pending: Dict[int, Future] = {}
@@ -564,6 +595,49 @@ class ProcessNodeExecutor:
     def kill(self) -> None:
         """Test hook: simulated machine failure (SIGTERM the worker)."""
         self._proc.terminate()
+
+    def hang(self) -> None:
+        """Test hook: wedge the worker (SIGSTOP) — the process freezes with
+        its pipe still open, the exact blind spot heartbeat liveness covers."""
+        import signal
+        os.kill(self._proc.pid, signal.SIGSTOP)
+
+    def resume(self) -> None:
+        """Undo :meth:`hang` (SIGCONT).  No-op on an exited process."""
+        import signal
+        try:
+            os.kill(self._proc.pid, signal.SIGCONT)
+        except (ProcessLookupError, OSError):
+            pass
+
+    # ------------------------------------------------- heartbeats (ISSUE 8)
+    def send_ping(self) -> None:
+        """Best-effort heartbeat probe.  Any reply — the pong, or whatever
+        job traffic beats it — refreshes ``heartbeat_age``.  Send failures
+        are swallowed: a closed pipe is the EOF path's business."""
+        if self._dead:
+            return
+        try:
+            self._send(("ping", next(self._ping_seq)))
+        except WorkerDeath:
+            pass
+
+    def heartbeat_age(self) -> float:
+        """Seconds since the worker last said anything on its pipe."""
+        return time.monotonic() - self._last_beat
+
+    def fail_unresponsive(self) -> None:
+        """Declare a silent worker dead: SIGKILL (a SIGSTOP'd process never
+        delivers SIGTERM — kill is the only signal a stopped process cannot
+        hold off) and fail every in-flight future with WorkerDeath so the
+        runtime's NodeFailure recovery takes over immediately instead of
+        waiting on an EOF that may never come."""
+        try:
+            self._proc.kill()
+        except (ProcessLookupError, OSError):
+            pass
+        self._mark_dead()
+        self._sweep_segments()
 
     # ------------------------------------------------------------------- send
     def _send(self, msg: Any) -> None:
@@ -653,7 +727,10 @@ class ProcessNodeExecutor:
         try:
             while True:
                 msg = self._conn.recv()
+                self._last_beat = time.monotonic()   # any traffic is a beat
                 kind = msg[0]
+                if kind == "pong":
+                    continue
                 if kind == "done":
                     _, jid, payload, stats = msg
                     with self._lock:
@@ -708,6 +785,30 @@ class ProcessNodeExecutor:
         for fut in pending:
             fut.set_exception(WorkerDeath(self.node))
 
+    def _sweep_segments(self) -> None:
+        """Reclaim every segment the dead worker *created* (named
+        ``psm_ing<pid>_*``, see ``items.create_segment``), announced or not.
+        A SIGKILLed worker cannot clean up after itself, and a segment it
+        created mid-produce was never registered anywhere the coordinator's
+        bookkeeping could find it.  Two callers, both past the point where a
+        live reader could race the unlink: the liveness declaration path
+        (the worker was frozen for the whole miss window, so consumers of
+        its announced segments have long attached) and ``shutdown`` (the
+        engine is closing — no jobs in flight, nothing will attach again).
+        The latter also catches survivors' orphans: a job result carrying a
+        manifest can be preempted by a peer's NodeFailure before the
+        coordinator records it, leaving segments only the producing worker's
+        pid prefix still names."""
+        pid = getattr(self._proc, "pid", None)
+        if pid is None:
+            return
+        self._proc.join(timeout=2)   # let the SIGKILL land first
+        for path in glob.glob(f"/dev/shm/psm_ing{pid}_*"):
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+
     def _store_loop(self) -> None:
         try:
             while True:
@@ -755,6 +856,7 @@ class ProcessNodeExecutor:
             self._proc.terminate()
             self._proc.join(timeout=5)
         self._mark_dead()
+        self._sweep_segments()
         for conn in (self._conn, self._store_conn):
             try:
                 conn.close()

@@ -54,7 +54,14 @@ from .store import DataStore
 
 
 class NodeFailure(RuntimeError):
-    """Simulated machine failure during ingestion."""
+    """Simulated machine failure during ingestion.
+
+    ``stage_index`` records which stage the death surfaced at (None when it
+    happened outside stage execution, e.g. at plan install): the streaming
+    engine's lineage-cone recovery needs to know whether the survivors had
+    already completed the ingest segment when the node died (ISSUE 8)."""
+
+    stage_index: Optional[int] = None
 
 
 class _CohortReplay(RuntimeError):
@@ -112,6 +119,10 @@ class RunReport:
     stage_resident_bytes: int = 0      # bytes kept node-resident across edges
     resident_spills: int = 0           # resident buckets spilled to the DFS
     cohort_replays: int = 0            # batch whole-run replays (post-shuffle death)
+    # --- lineage-cone recovery + liveness (ISSUE 8) -------------------------
+    cone_replays: int = 0              # deaths repaired by a cone patch alone
+    replayed_rows: int = 0             # rows re-executed by recovery (cone or epoch)
+    spawn_retries: int = 0             # worker spawn attempts beyond the first
     # --- worker-pull sources (ISSUE 6): the source hop ---------------------
     # item bytes the coordinator routed on the source hop.  Descriptor-backed
     # sources keep this at zero on both backends — the coordinator hands out
@@ -283,6 +294,39 @@ class ExchangeRound:
                 "spill_share": self.spill_share, "spill_dir": spill_dir}
 
 
+def _desc_paths(desc: Dict[str, Any]) -> List[str]:
+    """Every spill path a partition descriptor references: the primary
+    ``path``/``spilled`` plus the ``extra_paths`` a manifest merge stacked
+    (ISSUE 8 cone patches deal into an already-recorded round)."""
+    paths: List[str] = []
+    p = desc.get("path") or desc.get("spilled")
+    if p:
+        paths.append(p)
+    paths.extend(desc.get("extra_paths", ()))
+    return paths
+
+
+def _merge_manifest(prev: Dict[str, Any], fresh: Dict[str, Any]) -> None:
+    """Fold a producer's second manifest for the same round into its first
+    (the node-side buckets extended on deposit, so the union is what the
+    consumers will actually collect)."""
+    prev["total_count"] = (int(prev.get("total_count", 0))
+                           + int(fresh.get("total_count", 0)))
+    parts = prev.setdefault("parts", {})
+    for dst, desc in fresh.get("parts", {}).items():
+        have = parts.get(dst)
+        if have is None:
+            parts[dst] = desc
+            continue
+        have["count"] = int(have.get("count", 0)) + int(desc.get("count", 0))
+        have["nbytes"] = (int(have.get("nbytes", 0))
+                          + int(desc.get("nbytes", 0)))
+        known = set(_desc_paths(have))
+        for p in _desc_paths(desc):
+            if p not in known:
+                have.setdefault("extra_paths", []).append(p)
+
+
 class ShuffleCoordinator:
     """The shuffle's *control plane* (DESIGN.md §4).
 
@@ -377,12 +421,30 @@ class ShuffleCoordinator:
         if not consumers:
             return None
         in_slice = {stage_plans[j].name for j in range(si + 1, stop)}
+        pinned = any(c not in in_slice for c in consumers)
+        e = -1 if epoch is None else epoch
+        if pinned:
+            with self._lock:
+                existing = self._pinned.get((e, sp.name))
+            if existing is not None:
+                # a lineage-cone replay (ISSUE 8) re-runs the ingest segment
+                # for a patch of shards: the survivors' partitions already
+                # live in this pinned round, so the patch producers merge
+                # into it (deposits extend node-side buckets, manifests
+                # merge in record_manifest) instead of opening a second
+                # round the store slice would never adopt.  Whole-epoch
+                # replay never reuses: it invalidates the epoch (clearing
+                # the pinned registry) before re-executing.
+                for n in live:
+                    if n not in existing.targets:
+                        existing.targets.append(n)
+                return existing
         rnd = ExchangeRound(
             xid=next(self._xids), stage=sp.name, key=self._shuffle_key(sp),
-            epoch=-1 if epoch is None else epoch, targets=list(live),
+            epoch=e, targets=list(live),
             consumers=consumers,
             spill_share=max(1, self.spill_bytes // max(1, len(live))),
-            pinned=any(c not in in_slice for c in consumers))
+            pinned=pinned)
         with self._lock:
             self._rounds[rnd.xid] = rnd
             self._epoch_rounds.setdefault(rnd.epoch, set()).add(rnd.xid)
@@ -420,7 +482,16 @@ class ShuffleCoordinator:
                 # the node's own slice: stayed resident (narrow edges keep
                 # the entire output here — zero-coordinator dataflow)
                 rnd.resident_bytes += int(desc.get("nbytes", 0))
-        rnd.manifests[node] = manifest
+        prev = rnd.manifests.get(node)
+        if prev is not None:
+            # a cone replay's patch producer (ISSUE 8) dealt a second time
+            # into the same pinned round: node-side deposits extend the
+            # bucket, so the manifests merge — counts and sizes sum, and a
+            # second spill path stacks under "extra_paths" so every cleanup
+            # walk still reaches it
+            _merge_manifest(prev, manifest)
+        else:
+            rnd.manifests[node] = manifest
         rnd.total_count += int(manifest.get("total_count", 0))
         if self.test_on_manifest is not None:
             self.test_on_manifest(rnd, node)
@@ -478,8 +549,7 @@ class ShuffleCoordinator:
             for dst, desc in m.get("parts", {}).items():
                 kind = desc["kind"]
                 fetched = rnd.served.get(dst, 0) > 0
-                path = desc.get("path") or desc.get("spilled")
-                if path:
+                for path in _desc_paths(desc):
                     if not fetched and kind in ("file", "resident"):
                         # an unfetched resident spill's owning worker may be
                         # dead (its bucket died with it) — reclaim the file
@@ -511,14 +581,56 @@ class ShuffleCoordinator:
                 for dst, desc in m.get("parts", {}).items():
                     if desc["kind"] == "shm":
                         unlink_segment(desc["shm"])
-                    path = desc.get("path") or desc.get("spilled")
-                    if path:
+                    for path in _desc_paths(desc):
                         try:
                             os.remove(path)
                         except OSError:
                             pass
                         self.store.release_exchange_path(path)
         return xids
+
+    def invalidate_producer(self, epoch: Optional[int], node: str) -> List[int]:
+        """Lineage-cone recovery (ISSUE 8): strip ONE dead producer's
+        contribution from the epoch's live rounds, leaving every survivor's
+        partitions intact.  Sound only when the epoch's rounds are
+        identity-routed (``key=None``) — then a producer's output lives
+        solely in its own bucket and separates cleanly; a shuffle round
+        commingles producers per target, which is why callers gate on
+        ``plan.cone_replay_capable``.  The dead node's unconsumed segments
+        and spill files are reclaimed, its manifests and delivery cursors
+        forgotten, and it leaves the rounds' target sets (a later cone
+        patch re-deals over the survivors).  Returns the touched round ids
+        so the engine can drop the matching node-side buckets."""
+        e = -1 if epoch is None else epoch
+        with self._lock:
+            xids = sorted(self._epoch_rounds.get(e, ()))
+            rounds = [self._rounds[x] for x in xids if x in self._rounds]
+        touched: List[int] = []
+        for rnd in rounds:
+            if node in rnd.targets:
+                rnd.targets.remove(node)
+            rnd.served.pop(node, None)
+            rnd.delivered.discard(node)
+            m = rnd.manifests.pop(node, None)
+            if m is None:
+                continue
+            touched.append(rnd.xid)
+            rnd.total_count -= int(m.get("total_count", 0))
+            for dst, desc in m.get("parts", {}).items():
+                if desc["kind"] == "shm":
+                    unlink_segment(desc["shm"])
+                nb = int(desc.get("nbytes", 0))
+                if dst != node:
+                    rnd.total_bytes -= nb
+                else:
+                    rnd.resident_bytes -= nb
+                for path in _desc_paths(desc):
+                    try:
+                        os.remove(path)
+                    except OSError:
+                        pass
+                    self.store.release_exchange_path(path)
+        return touched
 
     # --------------------------------------------------------------- barrier
     def barrier(self, sp: StagePlan,
@@ -703,6 +815,18 @@ class RuntimeEngine:
         buckets — a replay of the epoch starts from clean rounds."""
         self._drop_rounds(self.shuffle.invalidate_epoch(epoch))
 
+    def invalidate_producer(self, epoch: Optional[int], node: str) -> None:
+        """Per-producer exchange invalidation (ISSUE 8 cone recovery): the
+        coordinator strips the dead node's manifests from the epoch's live
+        rounds, then the engine-side exchange forgets only that node's
+        buckets.  Survivors' partitions stay live for the store segment.  A
+        process worker's resident buckets died with the worker itself, and
+        identity-routed rounds never placed the producer's data on a peer —
+        so no worker drop message is needed."""
+        xids = self.shuffle.invalidate_producer(epoch, node)
+        if xids:
+            self._exchange.drop_node(xids, node)
+
     def _drop_rounds(self, xids: Sequence[int]) -> None:
         """Clear node-side exchange buckets for dead rounds — the engine's
         own exchange (thread backend) and every live worker process (their
@@ -836,8 +960,16 @@ class RuntimeEngine:
             raise
 
         report.wall_time_s = time.time() - t0
+        report.spawn_retries = self._spawn_retry_total()
         self.store.flush_manifest()
         return report
+
+    def _spawn_retry_total(self) -> int:
+        """Process-worker spawn attempts beyond the first, over every
+        executor this engine created (ISSUE 8 bounded spawn retry)."""
+        with self._exec_lock:
+            execs = list(self._executors.values())
+        return sum(getattr(ex, "spawn_retries", 0) for ex in execs)
 
     def _redistribute(self, batch: Dict[str, List[IngestItem]],
                       live: List[str]) -> Dict[str, List[IngestItem]]:
@@ -1216,7 +1348,9 @@ class RuntimeEngine:
                     # double-unlink of a ref it did consume is a no-op)
                     rnd.served.pop(n, None)
             if failed and on_node_death == "raise":
-                raise NodeFailure(failed[0])
+                err = NodeFailure(failed[0])
+                err.stage_index = si
+                raise err
 
             # ---- legacy shuffle barrier (Sec. VI-B) for boundaries the
             # exchange does not cover: synchronous mode, or the consuming
@@ -1248,7 +1382,9 @@ class RuntimeEngine:
                     self._mark_dead(n, alive, report)
                     died_here.append(n)
                     if on_node_death == "raise":
-                        raise NodeFailure(n)
+                        err = NodeFailure(n)
+                        err.stage_index = si
+                        raise err
 
             # ---- cohort-replay escalation (ROADMAP "batch shuffle cohort
             # replay"): once a shuffle-consuming stage has run, a dead

@@ -56,12 +56,28 @@ from typing import (Any, Dict, Iterable, Iterator, List, Optional, Sequence,
                     Tuple, Union)
 
 from .items import IngestItem
+from .liveness import LivenessMonitor
 from .optimizer import IngestionOptimizer, split_pipeline_segments
-from .plan import IngestPlan, StagePlan, coerce_bool
+from .plan import IngestPlan, StagePlan, coerce_bool, cone_replay_capable
 from .runtime import (FaultInjection, NodeFailure, RunReport, RuntimeEngine,
                       derive_spill_bytes)
 from .sources import ShardDescriptor, SourceAdapter, build_source
 from .store import DataStore
+
+
+def _unit_rows(vals: Iterable[Any]) -> int:
+    """Rows carried by a list of replay units — items report their actual
+    row count, shard descriptors their estimate (at least one row each).
+    This is the unit of ``RunReport.replayed_rows``: the cone-vs-whole-epoch
+    comparison the death-matrix tests assert on (ISSUE 8)."""
+    total = 0
+    for v in vals:
+        nr = getattr(v, "nrows", None)
+        if callable(nr):
+            total += int(nr())
+        else:
+            total += max(1, int(getattr(v, "est_items", 1)))
+    return total
 
 
 @dataclass
@@ -141,11 +157,16 @@ class StreamFaultInjection:
     ``op_failures`` uses the batch engine's (stage, op_index) -> count format
     and is shared across epochs; ``node_death_in_epoch`` kills a node while
     the given epoch index is mid-flight (after its first stage, before
-    commit) — exercising abort + replay.
+    commit) — exercising abort + replay.  ``node_death_at`` places the death
+    precisely: ``(node, epoch_index) -> stage name`` dies right after that
+    stage completes on the node, which is how the chaos harness (ISSUE 8)
+    keys kill events to epoch·stage·node — a death after the ingest
+    segment's *last* stage exercises the lineage-cone replay path.
     """
 
     op_failures: Dict[Tuple[str, int], int] = field(default_factory=dict)
     node_death_in_epoch: Dict[str, int] = field(default_factory=dict)
+    node_death_at: Dict[Tuple[str, int], str] = field(default_factory=dict)
 
 
 @dataclass
@@ -169,6 +190,9 @@ class StreamReport:
     replayed_epochs: List[int] = field(default_factory=list)
     total_items: int = 0
     wall_time_s: float = 0.0
+    spawn_retries: int = 0        # process-worker spawn attempts beyond the first
+    liveness_deaths: List[Tuple[str, float]] = field(default_factory=list)
+    # ^ (node, seconds-to-detection) for deaths the heartbeat monitor declared
 
     def committed_epoch_ids(self) -> List[int]:
         return [e.epoch for e in self.epochs]
@@ -204,6 +228,17 @@ class StreamReport:
     def source_reissues(self) -> int:
         """Descriptors re-issued to survivors after a reader death."""
         return sum(e.run.source_reissues for e in self.epochs)
+
+    # ------------------------------------- lineage-cone recovery (ISSUE 8) ---
+    def cone_replays(self) -> int:
+        """Deaths recovered by replaying only the dead node's lineage cone
+        (zero when every recovery fell back to whole-epoch replay)."""
+        return sum(e.run.cone_replays for e in self.epochs)
+
+    def replayed_rows(self) -> int:
+        """Rows recomputed by recovery — a cone replay contributes only the
+        dead node's share, a whole-epoch replay the full epoch."""
+        return sum(e.run.replayed_rows for e in self.epochs)
 
 
 class IngestQueues:
@@ -512,16 +547,52 @@ class _EpochCommitter:
         ``batch`` on the survivors (nothing committed yet, so the replay is
         exactly-once).  The executing node set is pinned per attempt — a
         death flipping ``alive`` from the ingest thread mid-attempt cannot
-        silently drop a node's inputs."""
+        silently drop a node's inputs.
+
+        Before falling back, an ingest-contributor death on a cone-capable
+        plan (ISSUE 8) first tries the narrower repair: strip only the dead
+        node's exchange contribution and re-run the ingest segment for just
+        its retained shards — survivors' resident buckets stay live and the
+        store segment proceeds in place."""
         eng, store = self.engine, self.engine.store
         first = True
         while True:
             if not first:
                 job.attempts += 1
+            # a SIGTERM'd worker whose death never surfaced as a stage
+            # failure (it finished its segment work, then died) is caught
+            # here by its pipe EOF, before the store slice is submitted to it
+            for n in eng._probe_executors():
+                eng._record_death(n, job.eid, self.sreport, self.queues)
             if not any(eng.alive.values()):
                 raise RuntimeError("all nodes failed")
             live = [n for n in eng.nodes if eng.alive.get(n)]
             in_place = first and not (set(job.node_set) - set(live))
+            if (not in_place and first and eng.cone_recovery
+                    and self.split > 0
+                    and not getattr(eng.shuffle, "synchronous", False)
+                    and cone_replay_capable(self.stage_plans, self.split)):
+                dead = [n for n in job.node_set if n not in live]
+                patch = eng._cone_patch(job.eid, dead, job.batch,
+                                        self.stage_plans, self.split,
+                                        job.faults, job.ereport, job.source)
+                if patch is not None:
+                    for n in dead:
+                        job.batch[n] = []
+                    for n, extra in patch.items():
+                        job.batch.setdefault(n, []).extend(extra)
+                    job.node_sources = job.batch
+                    job.node_set = live
+                    if job.eid not in self.sreport.replayed_epochs:
+                        self.sreport.replayed_epochs.append(job.eid)
+                    in_place = True
+                else:
+                    # the patch itself lost a node; its partial merge was
+                    # torn down with the epoch's exchange state — recompute
+                    # the live set and take the whole-epoch road
+                    live = [n for n in eng.nodes if eng.alive.get(n)]
+                    if not live:
+                        raise RuntimeError("all nodes failed")
             first = False
             if not in_place:
                 # resident ingest outputs are stale or lost: drop the
@@ -536,6 +607,8 @@ class _EpochCommitter:
                 job.node_sources = eng._redistribute(job.batch, live)
                 job.batch = job.node_sources
                 job.outputs = {n: defaultdict(list) for n in eng.nodes}
+                job.ereport.replayed_rows += _unit_rows(
+                    it for v in job.node_sources.values() for it in v)
             store.begin_epoch(job.eid)
             base_items = job.ereport.source_items
             try:
@@ -579,6 +652,8 @@ class _EpochCommitter:
             # adaptive epoch sizing: the cut loop reads the rescaled
             # thresholds at its next epoch cut
             self.policy.observe_commit(latency)
+        with self.engine._progress:
+            self.engine._progress.notify_all()   # wake idle cut loops
 
 
 class StreamingRuntimeEngine(RuntimeEngine):
@@ -606,7 +681,10 @@ class StreamingRuntimeEngine(RuntimeEngine):
                  backend: str = "thread",
                  memory_budget_bytes: Optional[int] = None,
                  epoch_adaptive: bool = False,
-                 epoch_target_commit_s: Optional[float] = None) -> None:
+                 epoch_target_commit_s: Optional[float] = None,
+                 cone_recovery: bool = True,
+                 heartbeat_interval_s: Optional[float] = None,
+                 heartbeat_miss: int = 4) -> None:
         super().__init__(store, optimizer, max_retries,
                          shuffle_spill_bytes=shuffle_spill_bytes,
                          shuffle_synchronous=shuffle_synchronous,
@@ -621,6 +699,20 @@ class StreamingRuntimeEngine(RuntimeEngine):
         self.pipelined = pipelined
         self.max_inflight_epochs = max_inflight_epochs
         self.alive = {n: True for n in self.nodes}
+        # ----------------------------------------------- robustness (ISSUE 8)
+        # cone_recovery=False forces every node death down the whole-epoch
+        # replay road — the correctness oracle the death-matrix tests compare
+        # cone-replayed stores against byte-for-byte
+        self.cone_recovery = cone_recovery
+        # heartbeat_interval_s arms the liveness monitor (process backend):
+        # a worker that stops answering pings for heartbeat_miss intervals is
+        # declared dead even though its pipe never closed (SIGSTOP / wedge)
+        self.heartbeat_interval_s = heartbeat_interval_s
+        self.heartbeat_miss = heartbeat_miss
+        self.liveness: Optional[LivenessMonitor] = None
+        # progress pulse: committers notify on publish/death so idle waiters
+        # (the descriptor cut loop) sleep on a condition instead of spinning
+        self._progress = threading.Condition()
 
     # ----------------------------------------------------------------- config
     def _config(self, plan: IngestPlan) -> EpochPolicy:
@@ -633,6 +725,27 @@ class StreamingRuntimeEngine(RuntimeEngine):
             default.target_commit_s = self.epoch_target_commit_s
         return EpochPolicy.from_stream_config(
             getattr(plan, "stream_config", None), default)
+
+    # ------------------------------------------------- liveness (ISSUE 8)
+    def _start_liveness(self) -> None:
+        """Arm the heartbeat monitor over the process workers' control
+        pipes.  No-op for the thread backend (an in-process executor cannot
+        wedge independently of the coordinator) or when no interval is
+        configured — pipe-EOF detection then remains the only death signal."""
+        if self.heartbeat_interval_s is None or self.backend != "process":
+            return
+        mon = LivenessMonitor(interval_s=self.heartbeat_interval_s,
+                              miss_threshold=self.heartbeat_miss)
+        for n in self.nodes:
+            mon.watch(n, self.executor(n))
+        mon.start()
+        self.liveness = mon
+
+    def _stop_liveness(self, sreport: StreamReport) -> None:
+        mon, self.liveness = self.liveness, None
+        if mon is not None:
+            mon.stop()
+            sreport.liveness_deaths.extend(mon.deaths)
 
     def _update_spill_budget(self, queues: IngestQueues) -> None:
         """Spill-aware shuffle sizing: re-derive ``spill_bytes`` from the
@@ -676,6 +789,7 @@ class StreamingRuntimeEngine(RuntimeEngine):
         if self.backend == "process":
             # fork the node workers before the feeder/committer threads exist
             self.prewarm_executors()
+        self._start_liveness()
 
         # compile + optimize ONCE; every epoch reuses the same stage plans —
         # and the node executors keep their clone for the whole stream
@@ -700,8 +814,10 @@ class StreamingRuntimeEngine(RuntimeEngine):
                 self._run_pulled(stage_plans, split, adapter, faults, sreport,
                                  policy, max_epochs, eid)
             finally:
+                self._stop_liveness(sreport)
                 self.shuffle.drain()
                 self.store.flush_manifest()
+            sreport.spawn_retries = self._spawn_retry_total()
             sreport.wall_time_s = time.time() - t0
             return sreport
         if queues is None:
@@ -728,9 +844,11 @@ class StreamingRuntimeEngine(RuntimeEngine):
                     eid += 1
                     epoch_index += 1
         finally:
+            self._stop_liveness(sreport)
             queues.stop()
             self.shuffle.drain()
             self.store.flush_manifest()   # compact the epoch journal
+        sreport.spawn_retries = self._spawn_retry_total()
         sreport.wall_time_s = time.time() - t0
         return sreport
 
@@ -790,6 +908,7 @@ class StreamingRuntimeEngine(RuntimeEngine):
         batch: List[ShardDescriptor] = []
         est_items = 0
         est_bytes = 0
+        idle_wait = 0.005
 
         def full() -> bool:
             return (est_items >= policy.items
@@ -807,12 +926,23 @@ class StreamingRuntimeEngine(RuntimeEngine):
             more = adapter.poll()
             if more:
                 pending.extend(more)
+                idle_wait = 0.005
                 continue
             if adapter.exhausted():
                 break
             if deadline is not None and time.monotonic() >= deadline:
                 break
-            time.sleep(0.005)
+            # idle wait on the engine's progress condition instead of the old
+            # 5 ms busy sleep (satellite of ISSUE 8): commit/death events wake
+            # us immediately, and pure adapter polling backs off to 50 ms so
+            # an idle stream doesn't spin a core.  The tick deadline caps the
+            # wait so an armed wall-clock cut still fires on time.
+            wait = idle_wait
+            if deadline is not None:
+                wait = max(0.0005, min(wait, deadline - time.monotonic()))
+            with self._progress:
+                self._progress.wait(wait)
+            idle_wait = min(idle_wait * 2, 0.05)
         return batch
 
     def _run_pulled(self, stage_plans: List[StagePlan], split: int,
@@ -902,12 +1032,20 @@ class StreamingRuntimeEngine(RuntimeEngine):
                 ereport.source_reissues += self._count_lost(batch, live)
             node_sources = self._redistribute(batch, live)
             batch = node_sources   # keep replay bookkeeping per-assignment
+            if attempts > 1:
+                # whole-segment retry: every retained unit recomputes
+                ereport.replayed_rows += _unit_rows(
+                    it for v in node_sources.values() for it in v)
             ef = FaultInjection(op_failures=faults.op_failures)
             for n, at_epoch in faults.node_death_in_epoch.items():
                 if at_epoch == epoch_index and self.alive.get(n):
                     # die after the epoch's first stage — in the ingest
                     # segment if one exists, else at the store segment's head
                     ef.node_death_after_stage[n] = stage_plans[0].name
+            for (n, at_epoch), stname in faults.node_death_at.items():
+                if at_epoch == epoch_index and self.alive.get(n):
+                    # chaos-harness placement: die right after `stname`
+                    ef.node_death_after_stage[n] = stname
             outputs = {n: defaultdict(list) for n in self.nodes}
             if split == 0:
                 return _EpochJob(eid, epoch_index, batch, node_sources, outputs,
@@ -922,6 +1060,40 @@ class StreamingRuntimeEngine(RuntimeEngine):
                               outputs=outputs, start_stage=0, end_stage=split,
                               node_set=live, epoch=eid, source=source)
             except NodeFailure as e:
+                # lineage-cone site (ISSUE 8): a death surfacing at the
+                # segment's LAST stage means every survivor completed the
+                # whole ingest segment and dealt into the pinned rounds —
+                # the minimal repair is to strip the victim and re-run only
+                # its retained shards, leaving the survivors' work standing
+                if (self.cone_recovery and split > 0
+                        and getattr(e, "stage_index", None) == split - 1
+                        # source epochs need the read stage (0) strictly
+                        # before the death stage, so the victim's item count
+                        # is known to have been worker-reported already
+                        and (source is None or split >= 2)
+                        and not getattr(self.shuffle, "synchronous", False)
+                        and cone_replay_capable(stage_plans, split)):
+                    before_patch = ereport.source_items
+                    dead = [n for n in live if not self.alive.get(n)]
+                    patch = self._cone_patch(eid, dead, batch, stage_plans,
+                                             split, ef, ereport, source)
+                    if patch is not None:
+                        for n in dead:
+                            self._record_death(n, eid, sreport, queues)
+                            batch[n] = []
+                        for n, extra in patch.items():
+                            batch.setdefault(n, []).extend(extra)
+                        if source is not None:
+                            # the victim fully read its shards before dying
+                            # (its last-stage completion is what raised) and
+                            # the patch re-read them identically — the
+                            # pre-patch counter already equals the epoch total
+                            items_in = before_patch - base_items
+                        survivors = [n for n in self.nodes if self.alive[n]]
+                        return _EpochJob(eid, epoch_index, batch, batch,
+                                         outputs, ef, ereport, attempts,
+                                         items_in, t_cut, node_set=survivors,
+                                         source=source)
                 self._note_death(str(e), eid, sreport, queues)
                 continue
             if source is not None:
@@ -934,17 +1106,90 @@ class StreamingRuntimeEngine(RuntimeEngine):
     # epoch batches rebalance with the engine-wide policy: RuntimeEngine
     # ._redistribute (node affinity for live nodes, round-robin spill)
 
-    def _note_death(self, dead: str, eid: int, sreport: StreamReport,
-                    queues: Optional[IngestQueues]) -> None:
+    def _record_death(self, dead: str, eid: int, sreport: StreamReport,
+                      queues: Optional[IngestQueues]) -> None:
+        """Death bookkeeping alone — routing, failure list, replay list.
+        The cone path uses this directly: it must NOT invalidate the whole
+        epoch's exchange state, only the producer it strips itself."""
         if queues is not None:   # the worker-pull path has no ingest queues
             queues.mark_dead(dead)
         sreport.node_failures.append(dead)
         if eid not in sreport.replayed_epochs:
             sreport.replayed_epochs.append(eid)
+        with self._progress:
+            self._progress.notify_all()
+
+    def _note_death(self, dead: str, eid: int, sreport: StreamReport,
+                    queues: Optional[IngestQueues]) -> None:
+        self._record_death(dead, eid, sreport, queues)
         # the epoch replays wholesale: its in-flight exchange partitions
         # (peer segments, spill files, worker-resident buckets) are invalid
         # — reclaim them everywhere before the replay opens fresh rounds
         self.invalidate_exchange(eid)
+
+    def _probe_executors(self) -> List[str]:
+        """Flip ``alive`` for nodes whose process worker already died (pipe
+        EOF seen by its receive thread) without any stage future surfacing
+        the failure — e.g. a SIGTERM landing after the node finished its
+        ingest-segment work.  Thread executors expose no liveness and are
+        skipped (their deaths always surface as stage failures)."""
+        with self._exec_lock:
+            execs = dict(self._executors)
+        dead: List[str] = []
+        for n, ex in execs.items():
+            if self.alive.get(n) and not getattr(ex, "alive", True):
+                self.alive[n] = False
+                self.store.mark_node_dead(n)
+                dead.append(n)
+        return dead
+
+    def _cone_patch(self, eid: int, dead_nodes: Sequence[str],
+                    batch: Dict[str, List[Any]],
+                    stage_plans: List[StagePlan], split: int,
+                    ef: FaultInjection, ereport: RunReport,
+                    source: Optional[SourceAdapter]
+                    ) -> Optional[Dict[str, List[Any]]]:
+        """Lineage-cone recovery (ISSUE 8): replay ONLY the dead nodes' cone.
+
+        On a cone-capable plan (no shuffle in the ingest segment: every
+        node's resident partitions derive solely from its own retained
+        shards) the dead nodes' exchange contribution is stripped
+        (``invalidate_producer``) and their shards re-run through the ingest
+        segment on survivor targets.  The patch producers merge into the
+        epoch's still-pinned rounds — deposits extend node-side buckets,
+        manifests merge — so the store segment later adopts a complete
+        round, with the survivors' work untouched.
+
+        Returns the patch assignment (shards added per target) on success,
+        or None when the patch itself lost a node — the caller falls back
+        to whole-epoch replay, whose ``invalidate_exchange`` also cleans up
+        the half-merged patch."""
+        live = [n for n in self.nodes if self.alive[n]]
+        if not live:
+            return None
+        shards = {n: list(batch.get(n) or []) for n in dead_nodes}
+        total_units = sum(len(v) for v in shards.values())
+        for n in dead_nodes:
+            self.invalidate_producer(eid, n)
+        if total_units == 0:
+            ereport.cone_replays += 1
+            return {}   # the dead node held no inputs: stripping sufficed
+        if source is not None:
+            ereport.source_reissues += total_units
+        patch = {n: v for n, v in self._redistribute(shards, live).items()
+                 if v}
+        outputs = {n: defaultdict(list) for n in self.nodes}
+        try:
+            self._execute(stage_plans, patch, ef, ereport, self.alive,
+                          on_node_death="raise", lane="ingest",
+                          outputs=outputs, start_stage=0, end_stage=split,
+                          node_set=list(patch), epoch=eid, source=source)
+        except NodeFailure:
+            return None
+        ereport.cone_replays += 1
+        ereport.replayed_rows += _unit_rows(
+            it for v in shards.values() for it in v)
+        return patch
 
     def _run_epoch(self, eid: int, epoch_index: int,
                    batch: Dict[str, List[Any]],
@@ -982,9 +1227,17 @@ class StreamingRuntimeEngine(RuntimeEngine):
             for n, at_epoch in faults.node_death_in_epoch.items():
                 if at_epoch == epoch_index and self.alive.get(n):
                     ef.node_death_after_stage[n] = stage_plans[0].name
+            for (n, at_epoch), stname in faults.node_death_at.items():
+                if at_epoch == epoch_index and self.alive.get(n):
+                    ef.node_death_after_stage[n] = stname
 
             self.store.begin_epoch(eid)
             ereport = RunReport()
+            if attempts > 1:
+                # sequential mode always replays wholesale: the full DAG ran
+                # under one _execute, so a death loses the epoch's exchange
+                ereport.replayed_rows = _unit_rows(
+                    it for v in node_sources.values() for it in v)
             if source is not None:
                 ereport.source_descriptors = n_descs
                 ereport.source_reissues = reissues

@@ -1,0 +1,584 @@
+"""Lineage-cone recovery, heartbeat liveness, chaos harness (ISSUE 8).
+
+Covers the tentpole's three layers plus its satellites:
+
+* cone compilation (``replay_cone`` / ``cone_replay_capable``) and the two
+  runtime trigger sites — a death surfacing at the ingest segment's last
+  stage and an ingest contributor found dead at commit;
+* the death matrix: kill (SIGTERM) and hang (SIGSTOP) at each edge kind on
+  both backends, asserting exactly-once, ``replayed_rows`` strictly below
+  the epoch's rows on narrow-edge deaths, and no leaked shm segments or
+  spill files;
+* the whole-epoch path retained as a correctness *oracle*: the same death
+  with ``cone_recovery=False`` must produce byte-identical committed data;
+* heartbeat liveness: a SIGSTOP'd worker (pipe still open) is declared
+  dead within twice the miss window and the stream completes;
+* bounded spawn retry, ``retry_call`` semantics, and the
+  ``FaultToleranceDaemon.stop()`` overrun fix;
+* the seeded chaos soak on both backends with zero orphans.
+"""
+import glob
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import (DataAccess, DataStore, IngestPlan,
+                        StreamFaultInjection, StreamingRuntimeEngine,
+                        chain_stage, create_stage, resolve_op)
+from repro.core.chaos import ChaosController, ChaosEvent, ChaosPlan, chaos_soak
+from repro.core.fault import (FaultToleranceDaemon, RecoveryError,
+                              RecoveryUDF)
+from repro.core.items import IngestItem
+from repro.core.liveness import LivenessMonitor, retry_call
+from repro.core.plan import cone_replay_capable, segment_split
+from repro.core.procexec import ProcessNodeExecutor
+from repro.data.generators import gen_lineitem
+
+NODES = ["n0", "n1", "n2", "n3"]
+ROWS = 100
+EPOCH_ITEMS = 4                       # 1 shard per node per epoch
+EPOCH_ROWS = EPOCH_ITEMS * ROWS
+
+
+def narrow_plan(ds):
+    """parse -> chunk+serialize -> upload, all narrow edges (cone-capable)."""
+    p = IngestPlan("narrow3")
+    s1 = p.add_statement([resolve_op("identity_parser")], kind="select")
+    s2 = p.add_statement([resolve_op("chunk", target_rows=256),
+                          resolve_op("serialize", layout="columnar")],
+                         kind="format", inputs=[s1])
+    s3 = p.add_statement([resolve_op("upload", store=ds)],
+                         kind="store", inputs=[s2])
+    create_stage(p, using=[s1], name="a")
+    chain_stage(p, to=["a"], using=[s2], name="b")
+    chain_stage(p, to=["b"], using=[s3], name="c")
+    return p
+
+
+def shuffled_plan(ds):
+    """Shuffle at stage a: cone-incapable — deaths must take whole-epoch."""
+    p = IngestPlan("shuf")
+    s1 = p.add_statement([
+        resolve_op("identity_parser"),
+        resolve_op("partition", scheme="hash", key="orderkey",
+                   num_partitions=4),
+        resolve_op("map", fn="repro.core.ops_select:identity_columns",
+                   shuffle_by="partition"),
+    ], kind="select")
+    s2 = p.add_statement([resolve_op("chunk", target_rows=256),
+                          resolve_op("serialize", layout="columnar")],
+                         kind="format", inputs=[s1])
+    s3 = p.add_statement([resolve_op("upload", store=ds)],
+                         kind="store", inputs=[s2])
+    create_stage(p, using=[s1], name="a")
+    chain_stage(p, to=["a"], using=[s2], name="b")
+    chain_stage(p, to=["b"], using=[s3], name="c")
+    return p
+
+
+def shard_source(n_shards, rows=ROWS, delay_s=0.0):
+    for i in range(n_shards):
+        if delay_s:
+            time.sleep(delay_s)
+        yield IngestItem(gen_lineitem(rows, seed=i))
+
+
+def shm_segments():
+    return set(glob.glob("/dev/shm/psm_*"))
+
+
+def assert_clean(ds, before_shm):
+    assert not os.listdir(ds.dfs_dir)
+    assert ds.gc_orphans() == []
+    assert shm_segments() - before_shm == set()
+
+
+def read_rows(ds):
+    cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+    return len(cols["quantity"])
+
+
+def payload_hashes(ds):
+    """Placement-independent content fingerprint: the multiset of committed
+    block payload checksums (cone replay may land the dead node's blocks on
+    a different survivor, but their bytes must be identical)."""
+    import hashlib
+    return sorted(hashlib.sha256(ds.read_payload(e.block_id)).hexdigest()
+                  for e in ds.blocks() if not e.is_parity)
+
+
+def arm_signal(eng, fault, stage, state):
+    """Fire ``fault`` on the node whose own ``stage`` manifest just landed
+    (epoch >= 1, once).  The victim has finished that stage's work — the
+    death surfaces at its *next* dispatch, which pins the edge under test."""
+    def hook(rnd, src):
+        if rnd.stage == stage and rnd.epoch >= 1 and not state.get("victim"):
+            state["victim"] = src
+            ex = eng.executor(src)
+            (ex.kill if fault == "kill" else ex.hang)()
+    eng.shuffle.test_on_manifest = hook
+
+
+# ---------------------------------------------------------------------------
+class TestConeCompilation:
+    def test_narrow_plan_is_cone_capable(self, store):
+        plans = narrow_plan(store).compile()
+        split = segment_split(plans)
+        assert split == 2
+        assert cone_replay_capable(plans, split)
+
+    def test_shuffled_plan_is_not(self, store):
+        plans = shuffled_plan(store).compile()
+        assert not cone_replay_capable(plans, segment_split(plans))
+
+
+# ---------------------------------------------------------------------------
+class TestLineageCone:
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_death_after_last_ingest_stage_replays_only_the_cone(
+            self, tmp_path, backend):
+        """The acceptance scenario: a death surfacing at the ingest
+        segment's last stage replays ONLY the dead node's shards —
+        strictly fewer rows than the whole epoch — exactly-once."""
+        before = shm_segments()
+        ds = DataStore(str(tmp_path / backend), nodes=NODES)
+        eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                     queue_capacity=8, backend=backend)
+        faults = StreamFaultInjection(node_death_at={("n2", 1): "b"})
+        rep = eng.run_stream(narrow_plan(ds), shard_source(16), faults=faults)
+        eng.close()
+        assert rep.committed_epoch_ids() == [0, 1, 2, 3]
+        assert "n2" in rep.node_failures
+        assert rep.cone_replays() == 1
+        # the cone: n2 held 1 of the epoch's 4 shards
+        assert 0 < rep.replayed_rows() < EPOCH_ROWS
+        assert read_rows(ds) == 16 * ROWS          # no loss, no duplication
+        assert_clean(ds, before)
+
+    @pytest.mark.parametrize("backend", ["thread", "process"])
+    def test_mid_segment_death_falls_back_to_whole_epoch(self, tmp_path,
+                                                         backend):
+        """A death at stage a (NOT the segment's last stage) leaves the
+        victim's stage-b work unknowable — the whole-epoch road runs."""
+        before = shm_segments()
+        ds = DataStore(str(tmp_path / backend), nodes=NODES)
+        eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                     queue_capacity=8, backend=backend)
+        faults = StreamFaultInjection(node_death_at={("n2", 1): "a"})
+        rep = eng.run_stream(narrow_plan(ds), shard_source(16), faults=faults)
+        eng.close()
+        assert rep.committed_epoch_ids() == [0, 1, 2, 3]
+        assert rep.cone_replays() == 0
+        assert rep.replayed_epochs == [1]
+        assert rep.replayed_rows() == EPOCH_ROWS   # full epoch recomputed
+        assert read_rows(ds) == 16 * ROWS
+        assert_clean(ds, before)
+
+    def test_cone_disabled_is_byte_identical_oracle(self, tmp_path):
+        """Same inputs, same injected death: the cone road's committed
+        bytes must equal the whole-epoch oracle's (``cone_recovery=False``)
+        — placement aside, block for block."""
+        results = {}
+        for mode in (True, False):
+            ds = DataStore(str(tmp_path / f"cone-{mode}"), nodes=NODES)
+            eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                         queue_capacity=8, backend="thread",
+                                         cone_recovery=mode)
+            faults = StreamFaultInjection(node_death_at={("n2", 1): "b"})
+            rep = eng.run_stream(narrow_plan(ds), shard_source(16),
+                                 faults=faults)
+            eng.close()
+            assert rep.committed_epoch_ids() == [0, 1, 2, 3]
+            assert rep.cone_replays() == (1 if mode else 0)
+            results[mode] = payload_hashes(ds)
+            assert read_rows(ds) == 16 * ROWS
+        assert results[True] == results[False]
+
+
+# ---------------------------------------------------------------------------
+class TestDeathMatrix:
+    """kill (SIGTERM) / hang (SIGSTOP) x edge kind x backend.
+
+    The signal fires at the victim's own manifest for the stage *feeding*
+    the edge under test, so the death surfaces while that edge's round is
+    the live dependency.  A thread executor cannot be stopped or killed
+    independently of the coordinator, so on the thread backend the matrix
+    runs with injected deaths at the same surface (hang == kill there, see
+    ``ChaosPlan.stream_faults``)."""
+
+    MATRIX = [(edge, fault, backend)
+              for edge in ("narrow", "shuffle", "cross-segment")
+              for fault in ("kill", "hang")
+              for backend in ("thread", "process")]
+
+    @pytest.mark.parametrize("edge,fault,backend", MATRIX)
+    def test_death_matrix(self, tmp_path, edge, fault, backend):
+        if backend == "thread" and fault == "hang":
+            pytest.skip("thread executors cannot wedge independently of the "
+                        "coordinator; hang renders as kill (chaos DSL)")
+        before = shm_segments()
+        ds = DataStore(str(tmp_path / f"{edge}-{fault}-{backend}"),
+                       nodes=NODES)
+        plan = shuffled_plan(ds) if edge == "shuffle" else narrow_plan(ds)
+        hb = dict(heartbeat_interval_s=0.05, heartbeat_miss=3) \
+            if (backend == "process" and fault == "hang") else {}
+        eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                     queue_capacity=8, backend=backend, **hb)
+        state = {}
+        faults = None
+        if backend == "thread":
+            # injected death after the stage feeding the edge's consumer
+            stage = {"narrow": "b", "shuffle": "b", "cross-segment": "c"}[edge]
+            state["victim"] = "n2"
+            faults = StreamFaultInjection(node_death_at={("n2", 1): stage})
+        else:
+            eng.prewarm_executors()
+            # narrow/shuffle: die right after stage a (next dispatch = the
+            # consumer across the a->b edge); cross-segment: after stage b
+            # (next dispatch = the store slice across the segment boundary)
+            stage = "b" if edge == "cross-segment" else "a"
+            arm_signal(eng, fault, stage, state)
+        rep = eng.run_stream(plan, shard_source(16, delay_s=0.01),
+                             faults=faults)
+        eng.close()
+        ids = rep.committed_epoch_ids()
+        assert ids == list(range(len(ids))) and len(ids) == 4
+        victim = state["victim"]
+        assert victim and victim in rep.node_failures
+        assert read_rows(ds) == 16 * ROWS          # exactly-once, always
+        if edge == "narrow" and backend == "thread":
+            # deterministic cone road: strictly fewer rows than the epoch
+            assert rep.cone_replays() >= 1
+            assert 0 < rep.replayed_rows() < EPOCH_ROWS
+        if edge == "shuffle":
+            assert rep.cone_replays() == 0         # cone-incapable plan
+        if backend == "process" and fault == "hang":
+            assert [d for d in rep.liveness_deaths if d[0] == victim]
+        assert_clean(ds, before)
+
+    def test_sigterm_after_stage_a_takes_cone_road(self, store):
+        """Real SIGTERM, narrow plan: the victim dies having finished
+        stage a; its stage-b dispatch fails and only its cone replays."""
+        before = shm_segments()
+        eng = StreamingRuntimeEngine(store, epoch_items=EPOCH_ITEMS,
+                                     queue_capacity=8, backend="process")
+        eng.prewarm_executors()
+        state = {}
+        arm_signal(eng, "kill", "a", state)
+        rep = eng.run_stream(narrow_plan(store),
+                             shard_source(16, delay_s=0.01))
+        eng.close()
+        ids = rep.committed_epoch_ids()
+        assert ids == list(range(len(ids))) and len(ids) == 4
+        assert state["victim"] in rep.node_failures
+        assert rep.cone_replays() >= 1
+        assert 0 < rep.replayed_rows() < EPOCH_ROWS
+        assert read_rows(store) == 16 * ROWS
+        assert_clean(store, before)
+
+
+# ---------------------------------------------------------------------------
+class TestHeartbeatLiveness:
+    def test_sigstop_worker_declared_dead_within_miss_window(self, store):
+        """A SIGSTOP'd worker keeps its pipe open — only the heartbeat can
+        see it.  It must be declared dead within twice the miss window and
+        the stream must still commit every epoch exactly-once."""
+        before = shm_segments()
+        interval, miss = 0.05, 3
+        eng = StreamingRuntimeEngine(store, epoch_items=EPOCH_ITEMS,
+                                     queue_capacity=8, backend="process",
+                                     heartbeat_interval_s=interval,
+                                     heartbeat_miss=miss)
+        eng.prewarm_executors()
+        state = {}
+        arm_signal(eng, "hang", "a", state)
+        rep = eng.run_stream(narrow_plan(store),
+                             shard_source(16, delay_s=0.01))
+        eng.close()
+        ids = rep.committed_epoch_ids()
+        assert ids == list(range(len(ids))) and len(ids) == 4
+        victim = state["victim"]
+        deaths = [d for d in rep.liveness_deaths if d[0] == victim]
+        assert deaths, "liveness monitor never declared the stopped worker"
+        assert deaths[0][1] <= 2 * interval * miss
+        assert victim in rep.node_failures
+        assert read_rows(store) == 16 * ROWS
+        assert_clean(store, before)
+
+    def test_monitor_skips_executors_without_heartbeat_surface(self):
+        mon = LivenessMonitor(interval_s=0.05, miss_threshold=2)
+        assert mon.watch("n0", object()) is False
+        mon.start()
+        mon.stop()
+        assert mon.deaths == []
+
+    def test_retry_call_retries_then_succeeds(self):
+        calls = []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise OSError("transient")
+            return "ok"
+
+        out, used = retry_call(flaky, attempts=3, base_delay_s=0.001)
+        assert out == "ok" and used == 3
+
+    def test_retry_call_reraises_after_budget(self):
+        with pytest.raises(OSError):
+            retry_call(lambda: (_ for _ in ()).throw(OSError("x")),
+                       attempts=2, base_delay_s=0.001)
+
+    def test_retry_call_only_retries_declared_exceptions(self):
+        calls = []
+
+        def broken():
+            calls.append(1)
+            raise ValueError("programming error")
+
+        with pytest.raises(ValueError):
+            retry_call(broken, attempts=3, base_delay_s=0.001)
+        assert len(calls) == 1
+
+    def test_spawn_retry_bounded_and_reported(self, tmp_path):
+        """First spawn attempt of every worker fails with a transient
+        OSError; the bounded retry recovers and the report counts it."""
+        failed = set()
+
+        def fault(node, attempt):
+            if attempt == 1:
+                failed.add(node)
+                raise OSError(f"transient fork failure on {node}")
+
+        ds = DataStore(str(tmp_path / "s"), nodes=NODES)
+        eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                     queue_capacity=8, backend="process")
+        ProcessNodeExecutor.spawn_fault = fault
+        try:
+            rep = eng.run_stream(narrow_plan(ds), shard_source(8))
+        finally:
+            ProcessNodeExecutor.spawn_fault = None
+            eng.close()
+        assert rep.committed_epoch_ids() == [0, 1]
+        assert len(failed) == len(NODES)
+        assert rep.spawn_retries == len(NODES)
+        assert read_rows(ds) == 8 * ROWS
+
+    def test_spawn_gives_up_after_budget(self, tmp_path):
+        def always(node, attempt):
+            raise OSError("persistent")
+
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0"])
+        ProcessNodeExecutor.spawn_fault = always
+        try:
+            with pytest.raises(OSError):
+                ProcessNodeExecutor("n0", ds)
+        finally:
+            ProcessNodeExecutor.spawn_fault = None
+
+
+# ---------------------------------------------------------------------------
+class TestDaemonStop:
+    """Satellite: stop() used to join(timeout=5) and silently leak the
+    poller when a recovery backlog outlived the timeout."""
+
+    class _SlowUDF(RecoveryUDF):
+        name = "slow"
+
+        def __init__(self, delay_s):
+            self.delay_s = delay_s
+
+        def detect(self, store, failed):
+            time.sleep(self.delay_s)
+            raise RecoveryError("never recovers")
+
+    def _corrupt_some(self, ds, n=4):
+        from repro.core import RuntimeEngine
+        eng = RuntimeEngine(ds)
+        eng.run(narrow_plan(ds), list(shard_source(8)))
+        eng.close()
+        victims = [e.block_id for e in ds.blocks()][:n]
+        for bid in victims:
+            ds.corrupt_block(bid)
+        return victims
+
+    def test_stop_aborts_backlogged_sweep(self, tmp_path):
+        """A stop request lands mid-sweep: the per-block stop check aborts
+        the backlog promptly instead of riding out every slow block."""
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1"])
+        victims = self._corrupt_some(ds, n=4)
+        daemon = FaultToleranceDaemon(ds, [self._SlowUDF(0.15)],
+                                      poll_interval_s=0.01)
+        daemon.start()
+        time.sleep(0.05)               # poller is inside block 1 of 4
+        t = daemon._thread
+        assert daemon.stop(timeout_s=1.0) is True
+        assert not t.is_alive()
+        assert daemon.report.stop_overrun is False
+        # the sweep aborted early: the full backlog would need ~0.6s
+        handled = (len(daemon.report.recovered)
+                   + len(daemon.report.unrecoverable))
+        assert handled < len(victims)
+
+    def test_stop_overrun_is_surfaced_not_swallowed(self, tmp_path):
+        """When the join deadline expires while a UDF is still running,
+        stop() reports the overrun instead of pretending quiescence."""
+        ds = DataStore(str(tmp_path / "s"), nodes=["n0", "n1"])
+        self._corrupt_some(ds, n=2)
+        daemon = FaultToleranceDaemon(ds, [self._SlowUDF(0.5)],
+                                      poll_interval_s=0.01)
+        daemon.start()
+        time.sleep(0.05)               # inside the first slow detect()
+        t = daemon._thread
+        assert daemon.stop(timeout_s=0.05) is False
+        assert daemon.report.stop_overrun is True
+        t.join(timeout=2)              # exits at its next stop check
+        assert not t.is_alive()
+
+
+# ---------------------------------------------------------------------------
+class TestChaosPlan:
+    def test_generation_is_deterministic(self):
+        kw = dict(epochs=10, nodes=NODES, stages=["a", "b"], kills=2,
+                  hangs=1, delays=2, garbles=3)
+        assert (ChaosPlan.generate(5, **kw).events
+                == ChaosPlan.generate(5, **kw).events)
+        assert (ChaosPlan.generate(5, **kw).events
+                != ChaosPlan.generate(6, **kw).events)
+
+    def test_lethal_budget_keeps_survivors(self):
+        p = ChaosPlan.generate(1, epochs=5, nodes=NODES, stages=["a"],
+                               kills=10, hangs=10)
+        lethal = [e for e in p.events if e.kind in ("kill", "hang")]
+        assert len(lethal) == len(NODES) - 2
+        assert len({e.node for e in lethal}) == len(lethal)
+
+    def test_garbles_stay_under_dummy_substitution(self):
+        p = ChaosPlan.generate(3, epochs=5, nodes=NODES, stages=["a", "b"],
+                               kills=0, hangs=0, delays=0, garbles=50)
+        per_op = {}
+        for e in p.events:
+            assert e.kind == "garble"
+            key = (e.stage, e.op_index)
+            per_op[key] = per_op.get(key, 0) + e.count
+        # < default max_retries=3: absorbed by retry, never dummy-substituted
+        assert all(c <= 2 for c in per_op.values())
+
+    def test_render_kills_and_garbles_for_stream(self):
+        p = ChaosPlan([ChaosEvent("kill", 2, "b", "n1"),
+                       ChaosEvent("hang", 3, "a", "n2"),
+                       ChaosEvent("garble", 0, "a", "n0", count=2)])
+        sf = p.stream_faults("thread")
+        assert sf.node_death_at == {("n1", 2): "b", ("n2", 3): "a"}
+        assert sf.op_failures == {("a", 0): 2}
+        sfp = p.stream_faults("process")     # hang stays a real signal
+        assert sfp.node_death_at == {("n1", 2): "b"}
+
+    def test_render_for_batch_engine(self):
+        p = ChaosPlan([ChaosEvent("kill", 0, "a", "n1"),
+                       ChaosEvent("garble", 0, "b", "n0")])
+        bf = p.batch_faults()
+        assert bf.node_death_after_stage == {"n1": "a"}
+        assert bf.op_failures == {("b", 0): 1}
+
+    def test_arm_fail_next_drives_legacy_hook(self, store):
+        plans = narrow_plan(store).compile()
+        p = ChaosPlan([ChaosEvent("garble", 0, "b", "n0", op_index=0,
+                                  count=2)])
+        assert p.arm_fail_next(plans) == 1
+        assert plans[1].ops[0]._fail_next == 2
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            ChaosEvent("explode", 0, "a", "n0")
+
+
+# ---------------------------------------------------------------------------
+class TestChaosSoak:
+    def test_soak_thread_backend(self):
+        res = chaos_soak(backend="thread", epochs=20)
+        assert res.ok, res.errors
+        assert res.rows_in == res.rows_out
+        assert res.node_failures >= 2
+        assert res.cone_replays >= 1       # default seed covers the cone road
+        assert res.orphans == [] and res.shm_leaked == []
+
+    def test_soak_process_backend(self):
+        res = chaos_soak(backend="process", epochs=20)
+        assert res.ok, res.errors
+        assert res.rows_in == res.rows_out
+        assert res.liveness_deaths >= 1    # the scheduled SIGSTOP was caught
+        assert res.orphans == [] and res.shm_leaked == []
+
+    def test_controller_fires_each_signal_event_once(self, store):
+        eng = StreamingRuntimeEngine(store, epoch_items=EPOCH_ITEMS,
+                                     queue_capacity=8, backend="thread")
+        plan = ChaosPlan([ChaosEvent("delay", 1, "a", "n1", seconds=0.0)])
+        ctl = ChaosController(plan, eng, base_eid=store.next_epoch_id(),
+                              backend="thread").attach()
+        rep = eng.run_stream(narrow_plan(store), shard_source(8))
+        ctl.detach()
+        eng.close()
+        assert rep.committed_epoch_ids() == [0, 1]
+        assert [e.kind for e in ctl.fired] == ["delay"]
+
+
+# ---------------------------------------------------------------------------
+class TestRecoveryPerfGate:
+    """recovery_ms gates LOWER-is-better: a latency *rise* beyond the
+    threshold is the regression (perf_gate inverts the drop to
+    ``fresh/base - 1`` for metrics in ``LOWER_IS_BETTER``)."""
+
+    def _write(self, path, entries):
+        import json
+        with open(path, "w") as f:
+            json.dump(entries, f)
+
+    def test_latency_rise_is_a_regression(self, tmp_path):
+        from benchmarks.perf_gate import check
+        traj = str(tmp_path / "t.json")
+        self._write(traj, [
+            {"scale": 1000, "recovery_ms": 10.0},
+            {"scale": 1000, "recovery_ms": 20.0},
+        ])
+        code, msg = check(traj, metric="recovery_ms")
+        assert code == 1 and "REGRESSION" in msg
+
+    def test_latency_drop_passes(self, tmp_path):
+        from benchmarks.perf_gate import check
+        traj = str(tmp_path / "t.json")
+        self._write(traj, [
+            {"scale": 1000, "recovery_ms": 20.0},
+            {"scale": 1000, "recovery_ms": 10.0},
+        ])
+        code, msg = check(traj, metric="recovery_ms")
+        assert code == 0 and "OK" in msg
+
+    def test_throughput_direction_unchanged(self, tmp_path):
+        """The inversion applies ONLY to LOWER_IS_BETTER metrics — a
+        throughput rise must still pass."""
+        from benchmarks.perf_gate import check
+        traj = str(tmp_path / "t.json")
+        self._write(traj, [
+            {"scale": 1000, "pipelined_rows_per_s": 100.0},
+            {"scale": 1000, "pipelined_rows_per_s": 200.0},
+        ])
+        code, msg = check(traj, metric="pipelined_rows_per_s")
+        assert code == 0 and "OK" in msg
+
+    def test_recovery_ms_in_default_metric_set(self):
+        from benchmarks.perf_gate import DEFAULT_METRICS, LOWER_IS_BETTER
+        assert "recovery_ms" in DEFAULT_METRICS
+        assert "recovery_ms" in LOWER_IS_BETTER
+
+    def test_missing_recovery_history_skips_cleanly(self, tmp_path):
+        from benchmarks.perf_gate import main
+        traj = str(tmp_path / "t.json")
+        self._write(traj, [
+            {"scale": 1000, "pipelined_rows_per_s": 100.0},
+            {"scale": 1000, "pipelined_rows_per_s": 101.0,
+             "recovery_ms": 12.0},
+        ])
+        assert main(["--file", traj]) == 0
