@@ -238,18 +238,20 @@ def _fresh_shards(shards, delay_s: float = 0.0):
     return gen()
 
 
-def _run_shuffle_backend(shards, backend: str):
+def _run_shuffle_backend(shards, backend: str, transport: str = "pipe"):
     """One streaming run of the shuffle-stage plan with the worker-side
     partition exchange (ISSUE 4), on the given node backend.  Returns
     (seconds, report) — the report carries the coordinator-vs-peer byte
-    counters the trajectory records."""
+    counters the trajectory records.  ``transport="socket"`` (ISSUE 9)
+    runs the same plan over the framed loopback TCP fabric instead of
+    multiprocessing pipes — the gated cost of the multi-host transport."""
     import tempfile
     n_nodes = min(os.cpu_count() or 2, 4)
     ds = DataStore(tempfile.mkdtemp(prefix="ibench_shuf_"),
                    nodes=NODES[:n_nodes])
     eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
                                  queue_capacity=2 * EPOCH_ITEMS,
-                                 backend=backend)
+                                 backend=backend, transport=transport)
     if backend == "process":
         eng.prewarm_executors()   # worker spawn is setup, not throughput
     t0 = time.perf_counter()
@@ -399,6 +401,20 @@ def run(scale: int) -> List[Row]:
                  f"({shuf_thread_s / shuf_proc_s:.2f}x thread; "
                  f"coordinator {coord_bytes} B, peer {peer_bytes:,} B)"))
 
+    # ---- socket fabric (ISSUE 9): the SAME shuffle plan + process backend,
+    # but control and store channels ride the framed loopback TCP transport
+    # instead of multiprocessing pipes.  socket_rows_per_s is nightly-gated
+    # against its own trajectory; the pipe run above is the in-record
+    # baseline — framing + CRC + a loopback hop is the whole price of
+    # multi-host capability, and it should stay a modest constant factor.
+    sock_s, sock_rep = min((_run_shuffle_backend(shards, "process",
+                                                 transport="socket")
+                            for _ in range(REPEATS)), key=lambda t: t[0])
+    rows.append(("streaming/shuffle_socket_transport", sock_s,
+                 f"{scale / sock_s:,.0f} rows/s "
+                 f"({sock_s / shuf_proc_s:.2f}x pipe transport; framed "
+                 f"TCP loopback)"))
+
     # ---- thread vs process node backend on the CPU-heavy plan (ISSUE 3):
     # regex parse is interpreter-bound (GIL-held), so thread-backend nodes
     # serialize on one core while process-backend workers use them all.
@@ -520,6 +536,12 @@ def run(scale: int) -> List[Row]:
         "shuffle_thread_rows_per_s": scale / shuf_thread_s,
         "shuffle_coordinator_bytes": coord_bytes,
         "shuffle_peer_bytes": peer_bytes,
+        # ISSUE 9: the framed loopback TCP fabric on the same shuffle plan —
+        # socket_rows_per_s is gated; socket_vs_pipe rides along so the
+        # transport tax stays visible next to its pipe baseline.
+        "socket_s": sock_s,
+        "socket_rows_per_s": scale / sock_s,
+        "socket_vs_pipe": sock_s / shuf_proc_s,
         # ISSUE 6: worker-pull sources — pull_rows_per_s is gated; the
         # pushed baseline rides along for the hop-deletion comparison.
         "source_pushed_s": push_s,

@@ -16,7 +16,8 @@ from .catalog import Catalog
 from .chaos import (ChaosController, ChaosEvent, ChaosPlan, SoakResult,
                     chaos_soak)
 from .exchange import (PartitionExchange, decode_partition, encode_partition,
-                       partition_items, resident_file_name, stable_group_hash)
+                       fetch_stream_partition, partition_items,
+                       resident_file_name, stable_group_hash)
 from .fault import (ErasureRecovery, FaultToleranceDaemon, RecoveryUDF,
                     ReplicationRecovery, TransformationRecovery)
 from .items import (Granularity, IngestItem, Label, ShmLease,
@@ -35,7 +36,8 @@ from .optimizer import (FilterFusionRule, IngestionOptimizer, IngestOpExpr,
                         ParallelModeRule, PipelineRule, ReorderRule, Rule,
                         VectorizeRule, split_pipeline_segments)
 from .plan import (IngestPlan, Stage, StagePlan, Statement, annotate_edges,
-                   cone_replay_capable, segment_split, serialize_plans)
+                   cone_replay_capable, segment_split, serialize_plans,
+                   stage_consumers)
 from .procexec import ProcessNodeExecutor, WorkerDeath
 from .runtime import (ExchangeRound, FaultInjection, NodeExecutor,
                       NodeFailure, RunReport, RuntimeEngine,
@@ -46,6 +48,9 @@ from .sources import (SOURCE_KINDS, DirectoryTailSource, FileRangeSource,
                       SourceAdapter, build_source, parse_numeric_lines,
                       register_source, write_numeric_file)
 from .store import BlockEntry, DataStore, EpochEntry
+from .transport import (ChaosProxy, FramedConnection, FrameError,
+                        FrameListener, PartitionStreamServer, SendTimeout,
+                        connect_framed, fetch_stream_bytes)
 from .streaming import (EpochPolicy, EpochReport, FeedDistributor,
                         IngestQueues, StreamFaultInjection,
                         StreamingRuntimeEngine, StreamReport, stream_ingest,
@@ -75,8 +80,10 @@ __all__ = [
     "split_pipeline_segments",
     "IngestPlan", "Stage", "StagePlan", "Statement", "annotate_edges",
     "cone_replay_capable", "segment_split", "serialize_plans",
+    "stage_consumers",
     "PartitionExchange", "decode_partition", "encode_partition",
-    "partition_items", "resident_file_name", "stable_group_hash",
+    "fetch_stream_partition", "partition_items", "resident_file_name",
+    "stable_group_hash",
     "ProcessNodeExecutor", "WorkerDeath",
     "ExchangeRound", "FaultInjection", "NodeExecutor", "NodeFailure",
     "RunReport", "RuntimeEngine", "ShuffleCoordinator", "ShuffleService",
@@ -86,6 +93,9 @@ __all__ = [
     "SourceAdapter", "build_source", "parse_numeric_lines", "register_source",
     "write_numeric_file",
     "BlockEntry", "DataStore", "EpochEntry",
+    "ChaosProxy", "FramedConnection", "FrameError", "FrameListener",
+    "PartitionStreamServer", "SendTimeout", "connect_framed",
+    "fetch_stream_bytes",
     "EpochPolicy", "EpochReport", "FeedDistributor", "IngestQueues",
     "StreamFaultInjection", "StreamingRuntimeEngine", "StreamReport",
     "stream_ingest", "stream_ingest_multi",

@@ -49,7 +49,12 @@ from .plan import IngestPlan, StagePlan
 from .runtime import FaultInjection
 from .streaming import StreamFaultInjection
 
-KINDS = ("kill", "hang", "delay", "garble")
+KINDS = ("kill", "hang", "delay", "garble",
+         "drop", "delay_conn", "partition")
+#: the kinds rendered on the socket fabric's ChaosProxy shim (ISSUE 9) —
+#: they need a real network pair to act on: process backend + socket
+#: transport only
+NET_KINDS = ("drop", "delay_conn", "partition")
 
 
 @dataclass(frozen=True)
@@ -67,6 +72,23 @@ class ChaosEvent:
     ``garble`` — operator ``op_index`` of ``stage`` raises
                  ``OperatorFailure`` ``count`` times (absorbed by
                  retry-from-checkpoint while ``count < max_retries``).
+
+    Network events (ISSUE 9, socket transport only — rendered on the
+    ChaosProxy shim in front of each worker's socket pair):
+
+    ``drop``       — discard ``count`` * 64 bytes mid-stream on the node's
+                     worker->coordinator direction: the next frame fails
+                     CRC/magic (FrameError -> WorkerDeath), so this is
+                     *lethal* and draws from the same victim budget as
+                     kills.
+    ``delay_conn`` — one-shot ``seconds`` forwarding stall on the node's
+                     link (a slow network, simulated; non-lethal as long
+                     as it stays under the liveness miss window).
+    ``partition``  — the link to every worker of ``host`` goes silent in
+                     both directions at the keyed epoch·stage: heartbeats
+                     die together and the liveness monitor's per-host
+                     quorum declares the host partitioned as a unit
+                     (``node`` is unused — the host is the victim).
     """
 
     kind: str
@@ -76,10 +98,13 @@ class ChaosEvent:
     op_index: int = 0
     count: int = 1
     seconds: float = 0.0
+    host: str = ""
 
     def __post_init__(self) -> None:
         if self.kind not in KINDS:
             raise ValueError(f"unknown chaos kind {self.kind!r}")
+        if self.kind == "partition" and not self.host:
+            raise ValueError("partition events need a host")
 
 
 @dataclass
@@ -94,7 +119,10 @@ class ChaosPlan:
                  stages: Sequence[str], kills: int = 1, hangs: int = 0,
                  delays: int = 2, garbles: int = 2,
                  delay_s: float = 0.05,
-                 max_dead: Optional[int] = None) -> "ChaosPlan":
+                 max_dead: Optional[int] = None,
+                 partitions: int = 0, drops: int = 0,
+                 conn_delays: int = 0,
+                 hosts: Optional[Dict[str, str]] = None) -> "ChaosPlan":
         """Deterministically draw a schedule from ``seed``.
 
         Kills (and hangs — a hang becomes a death once liveness declares
@@ -104,22 +132,63 @@ class ChaosPlan:
         below the runtime's default ``max_retries`` so they are absorbed
         by retry, never by dummy substitution — a substituted operator
         would silently drop rows and break the exactly-once audit the
-        soak exists to run."""
+        soak exists to run.
+
+        Network events (ISSUE 9) need ``hosts`` (node -> host label) and a
+        socket-transport run to render.  A ``partition`` kills a whole
+        host, so it is budgeted first — every member counts against
+        ``max_dead``, and a host whose loss would leave no survivors is
+        skipped.  ``drops`` are lethal too (a garbled stream is a dead
+        worker) and share the same distinct-victim pool as kills/hangs;
+        ``conn_delays`` are benign slow-link stalls."""
         rng = random.Random(seed)
         nodes = list(nodes)
         stages = list(stages)
         if max_dead is None:
             max_dead = max(0, len(nodes) - 2)
-        lethal = min(kills + hangs, max_dead)
-        victims = rng.sample(nodes, lethal) if lethal else []
         events: List[ChaosEvent] = []
+        budget = max_dead
+        parted_hosts: List[str] = []
+        if partitions and hosts:
+            by_host: Dict[str, List[str]] = {}
+            for n in nodes:
+                if hosts.get(n):
+                    by_host.setdefault(hosts[n], []).append(n)
+            cand = sorted(by_host)
+            rng.shuffle(cand)
+            for h in cand[:partitions]:
+                members = by_host[h]
+                if len(members) > budget or len(members) >= len(nodes):
+                    continue   # would starve the survivors
+                budget -= len(members)
+                parted_hosts.append(h)
+                events.append(ChaosEvent(
+                    kind="partition", epoch=rng.randrange(epochs),
+                    stage=rng.choice(stages), node="", host=h))
+        # lethal point faults share one distinct-victim pool, drawn from
+        # nodes OUTSIDE partitioned hosts (those die as a unit already)
+        pool = [n for n in nodes
+                if not hosts or hosts.get(n) not in parted_hosts]
+        lethal = min(kills + hangs + drops, budget, len(pool))
+        victims = rng.sample(pool, lethal) if lethal > 0 else []
         for i, victim in enumerate(victims):
-            # hangs schedule first: when max_dead clips the lethal budget
-            # the rarer event (SIGSTOP + liveness declaration) must survive
-            kind = "hang" if i < min(hangs, lethal) else "kill"
+            # hangs schedule first, then drops: when max_dead clips the
+            # lethal budget the rarer events (SIGSTOP + liveness
+            # declaration; garbled-frame death) must survive the clip
+            if i < min(hangs, lethal):
+                kind = "hang"
+            elif i < min(hangs + drops, lethal):
+                kind = "drop"
+            else:
+                kind = "kill"
             events.append(ChaosEvent(
                 kind=kind, epoch=rng.randrange(epochs),
                 stage=rng.choice(stages), node=victim))
+        for _ in range(conn_delays):
+            events.append(ChaosEvent(
+                kind="delay_conn", epoch=rng.randrange(epochs),
+                stage=rng.choice(stages), node=rng.choice(nodes),
+                seconds=delay_s))
         for _ in range(delays):
             events.append(ChaosEvent(
                 kind="delay", epoch=rng.randrange(epochs),
@@ -181,13 +250,17 @@ class ChaosPlan:
                 armed += 1
         return armed
 
-    def signal_events(self, backend: str) -> List[ChaosEvent]:
+    def signal_events(self, backend: str,
+                      transport: str = "pipe") -> List[ChaosEvent]:
         """The events a :class:`ChaosController` must fire as real OS
         signals / coordinator stalls: delays always, hangs only where a
-        worker process exists to stop."""
+        worker process exists to stop, network events only where a
+        ChaosProxy shim exists to render them (process + socket)."""
         out = [e for e in self.events if e.kind == "delay"]
         if backend == "process":
             out += [e for e in self.events if e.kind == "hang"]
+            if transport == "socket":
+                out += [e for e in self.events if e.kind in NET_KINDS]
         return out
 
 
@@ -199,14 +272,21 @@ class ChaosController:
     (epoch index, producing stage, producer node) and fired at most once:
     ``hang`` SIGSTOPs that node's worker (the pipe stays open — only the
     heartbeat monitor can notice), ``delay`` sleeps the coordinator's
-    manifest path.  ``detach()`` restores the previous hook."""
+    manifest path.  Network events render on the executors' ChaosProxy
+    shims: ``drop`` garbles a node's stream (lethal), ``delay_conn``
+    stalls its link, ``partition`` silences every executor whose host
+    matches (the partition matches on epoch·stage + *host*, not node —
+    any member's manifest at the keyed point trips it).  ``detach()``
+    restores the previous hook."""
 
     def __init__(self, plan: ChaosPlan, engine: Any, base_eid: int = 0,
-                 backend: Optional[str] = None) -> None:
+                 backend: Optional[str] = None,
+                 transport: Optional[str] = None) -> None:
         self.engine = engine
         self.base_eid = base_eid
         backend = backend or getattr(engine, "backend", "thread")
-        self._pending = list(plan.signal_events(backend))
+        transport = transport or getattr(engine, "transport", "pipe")
+        self._pending = list(plan.signal_events(backend, transport))
         self.fired: List[ChaosEvent] = []
         self._prev_hook: Any = None
         self._attached = False
@@ -225,8 +305,15 @@ class ChaosController:
 
     def _on_manifest(self, rnd: Any, node: str) -> None:
         idx = rnd.epoch - self.base_eid
+        hosts = getattr(self.engine, "node_hosts", {}) or {}
         for ev in list(self._pending):
-            if (ev.epoch, ev.stage, ev.node) != (idx, rnd.stage, node):
+            if ev.kind == "partition":
+                # host-keyed: any member of the host reaching the keyed
+                # epoch·stage trips the whole-host silence
+                if (ev.epoch, ev.stage) != (idx, rnd.stage) or \
+                        hosts.get(node) != ev.host:
+                    continue
+            elif (ev.epoch, ev.stage, ev.node) != (idx, rnd.stage, node):
                 continue
             self._pending.remove(ev)
             self.fired.append(ev)
@@ -237,6 +324,24 @@ class ChaosController:
                     hang()
             elif ev.kind == "delay":
                 time.sleep(ev.seconds)
+            elif ev.kind == "partition":
+                for n, h in hosts.items():
+                    if h != ev.host:
+                        continue
+                    part = getattr(self.engine.executor(n),
+                                   "net_partition", None)
+                    if part is not None:
+                        part()
+            elif ev.kind == "drop":
+                drop = getattr(self.engine.executor(ev.node),
+                               "net_drop", None)
+                if drop is not None:
+                    drop(64 * ev.count)
+            elif ev.kind == "delay_conn":
+                dly = getattr(self.engine.executor(ev.node),
+                              "net_delay", None)
+                if dly is not None:
+                    dly(ev.seconds)
         if self._prev_hook is not None:
             self._prev_hook(rnd, node)
 
@@ -262,6 +367,12 @@ class SoakResult:
     spill_leaked: List[str]
     errors: List[str]
     wall_s: float
+    # socket fabric (ISSUE 9) — defaults keep older callers' positional
+    # construction working
+    transport: str = "pipe"
+    host_partitions: int = 0
+    degraded_rounds: int = 0
+    partitions_fired: int = 0
 
     @property
     def ok(self) -> bool:
@@ -300,22 +411,43 @@ def chaos_soak(backend: str = "thread", seed: int = 9, epochs: int = 20,
                nodes: int = 4, kills: int = 2, hangs: Optional[int] = None,
                delays: int = 2, garbles: int = 2,
                heartbeat_interval_s: float = 0.05, heartbeat_miss: int = 3,
-               root: Optional[str] = None) -> SoakResult:
+               root: Optional[str] = None, transport: str = "pipe",
+               partitions: int = 0, drops: int = 0,
+               conn_delays: int = 0) -> SoakResult:
     """Run ``epochs`` chaotic epochs on ``backend`` and audit the result.
 
     Deterministic given (seed, backend, scale): the chaos schedule, the
     input rows, and the epoch cuts all derive from the arguments.  Hangs
     default to 1 on the process backend (where SIGSTOP is real and the
     heartbeat monitor — armed here — must declare the death) and 0 on the
-    thread backend (they render as kills anyway)."""
+    thread backend (they render as kills anyway).
+
+    ``transport="socket"`` (process backend only) runs the workers on the
+    framed TCP fabric behind ChaosProxy shims, splits the nodes across
+    two simulated hosts (so the shuffle crosses a "network" boundary and
+    exercises the degraded streamed exchange), and enables the network
+    event kinds: ``partitions`` whole-host silences, ``drops`` lethal
+    stream garbles, ``conn_delays`` benign link stalls."""
     from .access import DataAccess
     from .store import DataStore
     from .streaming import StreamingRuntimeEngine
     from repro.data.generators import gen_lineitem
 
+    if transport == "socket" and backend != "process":
+        raise ValueError("socket transport needs the process backend "
+                         f"(got backend={backend!r})")
     if hangs is None:
         hangs = 1 if backend == "process" else 0
     node_names = [f"n{i}" for i in range(nodes)]
+    node_hosts: Dict[str, str] = {}
+    if transport == "socket":
+        # two simulated hosts: first half on hostA, rest on hostB — the
+        # shuffle between them rides the degraded streamed exchange, and a
+        # partition can take out either side while the other survives
+        node_hosts = {n: ("hostA" if i < len(node_names) // 2 else "hostB")
+                      for i, n in enumerate(node_names)}
+    else:
+        partitions = drops = conn_delays = 0
     n_shards = epochs * epoch_items
     shards = [IngestItem(gen_lineitem(rows_per_shard, seed=seed * 10007 + i))
               for i in range(n_shards)]
@@ -334,14 +466,19 @@ def chaos_soak(backend: str = "thread", seed: int = 9, epochs: int = 20,
     stage_names = ["a", "b"]   # the terminal store stage produces no round
     cplan = ChaosPlan.generate(seed, epochs=epochs, nodes=node_names,
                                stages=stage_names, kills=kills, hangs=hangs,
-                               delays=delays, garbles=garbles)
+                               delays=delays, garbles=garbles,
+                               partitions=partitions, drops=drops,
+                               conn_delays=conn_delays,
+                               hosts=node_hosts or None)
     eng = StreamingRuntimeEngine(
         store, epoch_items=epoch_items, backend=backend,
         heartbeat_interval_s=(heartbeat_interval_s
                               if backend == "process" else None),
-        heartbeat_miss=heartbeat_miss)
+        heartbeat_miss=heartbeat_miss, transport=transport,
+        node_hosts=node_hosts or None,
+        network_chaos=(transport == "socket"))
     controller = ChaosController(cplan, eng, base_eid=store.next_epoch_id(),
-                                 backend=backend).attach()
+                                 backend=backend, transport=transport).attach()
     rep = None
     try:
         rep = eng.run_stream(plan, iter(shards),
@@ -355,8 +492,15 @@ def chaos_soak(backend: str = "thread", seed: int = 9, epochs: int = 20,
     rows_out = 0
     committed: List[int] = []
     n_failures = cone = replayed = live_deaths = 0
+    host_parts = degraded = 0
     orphans: List[str] = []
     spill_leaked: List[str] = []
+    parts_fired = sum(1 for e in controller.fired if e.kind == "partition")
+    parts_planned = sum(1 for e in cplan.events if e.kind == "partition")
+    if partitions and not parts_planned:
+        errors.append("partition requested but none fit the victim budget")
+    if parts_planned and not parts_fired:
+        errors.append("planned partition never fired")
     if rep is not None:
         committed = rep.committed_epoch_ids()
         if committed and committed != list(range(committed[0],
@@ -368,6 +512,11 @@ def chaos_soak(backend: str = "thread", seed: int = 9, epochs: int = 20,
         cone = rep.cone_replays()
         replayed = rep.replayed_rows()
         live_deaths = len(rep.liveness_deaths)
+        host_parts = len(rep.host_partitions)
+        degraded = rep.degraded_exchange_rounds()
+        if parts_fired and not host_parts:
+            errors.append("partition fired but liveness never declared "
+                          "a host as a unit")
         try:
             rows_out = len(DataAccess(store).since_epoch(-1).read_all(
                 projection=["quantity"])["quantity"])
@@ -384,7 +533,9 @@ def chaos_soak(backend: str = "thread", seed: int = 9, epochs: int = 20,
         cone_replays=cone, replayed_rows=replayed,
         liveness_deaths=live_deaths, orphans=orphans,
         shm_leaked=shm_leaked, spill_leaked=spill_leaked, errors=errors,
-        wall_s=round(time.time() - t0, 3))
+        wall_s=round(time.time() - t0, 3), transport=transport,
+        host_partitions=host_parts, degraded_rounds=degraded,
+        partitions_fired=parts_fired)
     if tmp is not None:
         tmp.cleanup()
     return result
@@ -405,12 +556,29 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--kills", type=int, default=2)
     ap.add_argument("--delays", type=int, default=2)
     ap.add_argument("--garbles", type=int, default=2)
+    ap.add_argument("--transport", default="pipe",
+                    choices=["pipe", "socket"])
+    ap.add_argument("--partitions", type=int, default=None,
+                    help="whole-host partition events "
+                         "(default: 1 on socket, 0 on pipe)")
+    ap.add_argument("--drops", type=int, default=0,
+                    help="lethal mid-stream byte drops (socket only)")
+    ap.add_argument("--conn-delays", type=int, default=0,
+                    help="benign link stalls (socket only)")
     args = ap.parse_args(argv)
     backends = (["thread", "process"] if args.backend == "both"
                 else [args.backend])
+    if args.transport == "socket":
+        # the socket fabric only exists on the process backend
+        backends = ["process"]
+    partitions = args.partitions
+    if partitions is None:
+        partitions = 1 if args.transport == "socket" else 0
     results = [chaos_soak(backend=b, seed=args.seed, epochs=args.epochs,
                           rows_per_shard=args.rows, kills=args.kills,
-                          delays=args.delays, garbles=args.garbles)
+                          delays=args.delays, garbles=args.garbles,
+                          transport=args.transport, partitions=partitions,
+                          drops=args.drops, conn_delays=args.conn_delays)
                for b in backends]
     print(json.dumps([r.to_json() for r in results], indent=2))
     return 0 if all(r.ok for r in results) else 1

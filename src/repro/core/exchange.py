@@ -247,6 +247,31 @@ def read_partition_file(path: str, remove: bool = True) -> List[IngestItem]:
     return items
 
 
+def fetch_stream_partition(ref: Dict[str, Any]) -> List[IngestItem]:
+    """Degraded-mode fetch (ISSUE 9): pull a partition whose producer is not
+    shm-reachable.  The descriptor carries both the producer's stream
+    endpoint and the spill path; the socket fetch is tried first (the server
+    deletes the file after a successful send — consume-on-read over the
+    wire), and a ``None`` reply (endpoint unreachable, or the file already
+    served/GC'd server-side) falls back to reading the spill directly — on a
+    single host the "remote" producer's DFS dir is this filesystem.  Both
+    gone is an honest ``OSError`` (→ NodeFailure replay), never a silently
+    empty partition."""
+    from .transport import fetch_stream_bytes
+    path = ref["path"]
+    endpoint = ref.get("endpoint")
+    if endpoint:
+        data = fetch_stream_bytes((endpoint[0], int(endpoint[1])), path)
+        if data is not None:
+            return pickle.loads(data)
+    try:
+        return read_partition_file(path, remove=True)
+    except FileNotFoundError:
+        raise OSError(
+            f"degraded exchange: partition {path!r} unavailable from "
+            f"endpoint {endpoint!r} and the shared dir — producer lost")
+
+
 # ---------------------------------------------------------------------------
 # Node-side partition buffers
 # ---------------------------------------------------------------------------

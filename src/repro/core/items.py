@@ -48,6 +48,28 @@ def create_segment(size: int):
             continue   # stale leftover from a recycled pid: try the next seq
 
 
+def sweep_pid_segments(pid: int) -> int:
+    """Unlink every ``/dev/shm`` segment a (dead) worker pid created —
+    the coordinator-side safety net behind the attributable naming above.
+    Returns how many segments were reclaimed.
+
+    This glob only sees the *local* host's ``/dev/shm``: a worker running
+    on another machine leaves its segments in that machine's tmpfs, where
+    this sweep cannot reach.  Callers with remote workers must therefore
+    not call this and pretend the sweep happened — see
+    ``ProcessNodeExecutor._sweep_segments``, which counts the skip into
+    the run report instead (ISSUE 9 satellite)."""
+    import glob
+    swept = 0
+    for path in glob.glob(f"/dev/shm/psm_ing{pid}_*"):
+        try:
+            os.unlink(path)
+            swept += 1
+        except OSError:
+            pass
+    return swept
+
+
 class Granularity(enum.IntEnum):
     """Granularity ladder of ingest data items (paper Sec. III)."""
 

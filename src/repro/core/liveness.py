@@ -86,10 +86,25 @@ class LivenessMonitor:
     where ``waited_s`` is the heartbeat age at declaration — the
     acceptance bound is ``waited_s <= 2 * interval_s * miss_threshold``.
     ``on_death(node, waited_s)`` fires after the worker has been failed.
+
+    **Per-host quorum** (ISSUE 9): ``watch(node, executor, host=...)``
+    groups workers by the host they run on.  When *every* watched worker
+    of one host misses its window together, the likeliest cause is not N
+    simultaneous process wedges but the link to that host — a network
+    partition.  The host is then declared partitioned *as a unit*: all
+    its workers are failed in one pass (recorded in ``partitions`` as
+    ``(host, nodes, waited_s)``, plus the usual per-node ``deaths``
+    entries), so recovery sees the whole host gone before the first
+    replay starts instead of rediscovering it one serial death at a
+    time.  A host with surviving heartbeats keeps per-node declaration:
+    one silent worker there is a worker problem, not a link problem.
+    ``host=None`` (the default, and every pre-ISSUE-9 caller) opts out.
     """
 
     def __init__(self, interval_s: float = 0.5, miss_threshold: int = 4,
-                 on_death: Optional[Callable[[str, float], None]] = None
+                 on_death: Optional[Callable[[str, float], None]] = None,
+                 on_partition: Optional[Callable[[str, List[str], float],
+                                                 None]] = None
                  ) -> None:
         if interval_s <= 0:
             raise ValueError("heartbeat interval must be positive")
@@ -98,21 +113,28 @@ class LivenessMonitor:
         self.interval_s = interval_s
         self.miss_threshold = miss_threshold
         self.on_death = on_death
+        self.on_partition = on_partition
         self.deaths: List[Tuple[str, float]] = []
+        #: (host, member nodes, heartbeat age) per unit declaration
+        self.partitions: List[Tuple[str, List[str], float]] = []
         self._watched: Dict[str, Any] = {}
+        self._hosts: Dict[str, Optional[str]] = {}
         self._declared: set = set()
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
     # ---------------------------------------------------------------- control
-    def watch(self, node: str, executor: Any) -> bool:
+    def watch(self, node: str, executor: Any,
+              host: Optional[str] = None) -> bool:
         """Register ``executor`` for monitoring; False (and ignored) when it
-        exposes no heartbeat surface."""
+        exposes no heartbeat surface.  ``host`` opts the node into the
+        per-host partition quorum."""
         if not callable(getattr(executor, "send_ping", None)):
             return False
         with self._lock:
             self._watched[node] = executor
+            self._hosts[node] = host
         return True
 
     def start(self) -> None:
@@ -134,14 +156,55 @@ class LivenessMonitor:
         while not self._stop.is_set():
             with self._lock:
                 watched = dict(self._watched)
+                hosts = dict(self._hosts)
+            ages: Dict[str, float] = {}
             for node, ex in watched.items():
                 if node in self._declared or not getattr(ex, "alive", False):
                     continue
-                age = ex.heartbeat_age()
+                ages[node] = ex.heartbeat_age()
+            # ---- host quorum first: a host whose every live worker missed
+            # together dies as a unit, before any per-node bookkeeping
+            by_host: Dict[str, List[str]] = {}
+            for node in ages:
+                h = hosts.get(node)
+                if h is not None:
+                    by_host.setdefault(h, []).append(node)
+            unit_declared: set = set()
+            for h, members in sorted(by_host.items()):
+                if not all(ages[m] > limit for m in members):
+                    continue
+                members = sorted(members)
+                waited = max(ages[m] for m in members)
+                for m in members:
+                    self._declare(m, watched[m], ages[m])
+                unit_declared.update(members)
+                self.partitions.append((h, members, waited))
+                if self.on_partition is not None:
+                    self.on_partition(h, members, waited)
+            # ---- per-node path: hosts with surviving heartbeats, and every
+            # node watched without host information
+            for node, age in ages.items():
+                if node in unit_declared:
+                    continue
                 if age > limit:
-                    self._declare(node, ex, age)
+                    h = hosts.get(node)
+                    if h is not None:
+                        peers = [m for m in by_host.get(h, ())
+                                 if m != node]
+                        # beat-skew grace: last beats land a tick apart,
+                        # so one member can cross the limit first.  Every
+                        # peer within one interval of missing points at
+                        # the link, not this worker — hold one tick and
+                        # let the quorum declare the host as a unit.  A
+                        # silent peer's age only grows, so this converges
+                        # next tick either way.
+                        if peers and all(ages[m] > limit - self.interval_s
+                                         for m in peers):
+                            watched[node].send_ping()
+                            continue
+                    self._declare(node, watched[node], age)
                 else:
-                    ex.send_ping()
+                    watched[node].send_ping()
             self._stop.wait(self.interval_s)
 
     def _declare(self, node: str, ex: Any, waited_s: float) -> None:

@@ -227,6 +227,22 @@ def shuffle_key_of(ops: Sequence[IngestOp]) -> Optional[str]:
     return key
 
 
+def stage_consumers(stage_plans: Sequence["StagePlan"], si: int,
+                    downstream_only: bool = True) -> List[str]:
+    """Names of the stages consuming stage ``si``'s output: the compiled
+    ``edge_kinds`` consumer map when :func:`annotate_edges` ran, an
+    ``upstream`` scan for hand-built plans that never did.  The runtime's
+    exchange planner and its cohort-replay gate both need this — one
+    definition, so they can never disagree about who consumes an edge.
+    ``downstream_only=False`` scans the whole DAG (malformed hand-built
+    plans may declare a backward edge; the replay gate must still see it)."""
+    sp = stage_plans[si]
+    if sp.edge_kinds:
+        return list(sp.edge_kinds)
+    pool = stage_plans[si + 1:] if downstream_only else stage_plans
+    return [sq.name for sq in pool if sp.name in sq.upstream]
+
+
 class IngestPlan:
     """The full ingestion plan: statements + stages, compiled to a stage DAG."""
 

@@ -47,7 +47,6 @@ CPU-heavy operator throughput (DESIGN.md §6).  This module realizes the
 """
 from __future__ import annotations
 
-import glob
 import itertools
 import os
 import pickle
@@ -64,10 +63,13 @@ import multiprocessing as mp
 
 from .exchange import (PartitionExchange, build_manifest, decode_partition,
                        encode_partition, exchange_file_name,
-                       read_partition_file, resident_file_name,
-                       write_partition_file)
-from .items import IngestItem, ShmLease, decode_items, encode_items, items_nbytes
+                       fetch_stream_partition, read_partition_file,
+                       resident_file_name, write_partition_file)
+from .items import (IngestItem, ShmLease, decode_items, encode_items,
+                    items_nbytes, sweep_pid_segments)
 from .liveness import retry_call
+from .transport import (ChaosProxy, FrameListener, PartitionStreamServer,
+                        connect_framed)
 from .operators import OperatorFailure, PassThroughOp, run_ops_batched
 from .plan import StagePlan, failed_op_index, route_items, serialize_plans
 from .store import BlockEntry, DataStore, prepare_block_payload
@@ -76,6 +78,11 @@ from .store import BlockEntry, DataStore, prepare_block_payload
 class WorkerDeath(RuntimeError):
     """Raised coordinator-side when a node's worker process is gone; the
     runtime maps it onto ``NodeFailure`` (the existing fault path)."""
+
+
+#: the host label meaning "this machine" — executors without an explicit
+#: host, and every pre-ISSUE-9 caller, run here
+LOCAL_HOST = "local"
 
 
 class _StoreToken:
@@ -280,8 +287,18 @@ def _run_stage_ops(sp: StagePlan, items: List[IngestItem],
 
 
 def _worker_main(node: str, conn: Any, store_conn: Any,
-                 store_spec: Dict[str, Any]) -> None:
-    """Worker process entry: recv loop dispatching stage jobs onto lanes."""
+                 store_spec: Dict[str, Any],
+                 stream_server: Optional[PartitionStreamServer] = None
+                 ) -> None:
+    """Worker process entry: recv loop dispatching stage jobs onto lanes.
+
+    ``conn``/``store_conn`` are duck-typed (``send``/``recv``/``close``):
+    ``multiprocessing.Connection`` pipes on the default transport, framed
+    sockets (``transport.FramedConnection``) on the socket fabric — the
+    loop below is medium-agnostic.  ``stream_server`` is the socket
+    transport's degraded-exchange endpoint: when a peer is not
+    shm-reachable (another host), this worker's spill files stream to it
+    from here (ISSUE 9)."""
     client = _WorkerStoreClient(node, store_conn, store_spec)
     exchange = PartitionExchange()   # resident partitions + fetch caches
     plans: Dict[str, Any] = {}
@@ -331,6 +348,16 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
                 if keep:
                     exchange.deposit(ref["xid"], node, got,
                                      int(ref.get("nbytes", 0)))
+            elif kind == "stream":
+                # degraded exchange (ISSUE 9): the producer is not
+                # shm-reachable — stream its spill file worker-to-worker
+                # over the framed protocol (the server deletes on a
+                # successful send; the shared-dir direct read is the
+                # single-host fallback, also consume-on-read)
+                got = fetch_stream_partition(ref)
+                if keep:
+                    exchange.deposit(ref["xid"], node, got,
+                                     int(ref.get("nbytes", 0)))
             else:
                 raise ValueError(f"unknown exchange ref kind {kind!r}")
             fetched.extend(got)
@@ -346,6 +373,9 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
         segment or, past the per-edge spill share, a DFS spill file; an
         oversized resident slice spills under the ``resident_*`` naming.
         Returns the metadata-only manifest."""
+        hosts = xs.get("hosts") or {}
+        my_host = hosts.get(node)
+
         def part_fn(dst: str, its: List[IngestItem], nb: int) -> Dict[str, Any]:
             if dst == node:
                 if nb > xs["spill_share"]:
@@ -359,6 +389,21 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
                 shares = [l.share() for l in input_leases]
                 exchange.deposit(xs["xid"], node, its, nb, leases=shares)
                 return {"kind": "resident", "count": len(its), "nbytes": nb}
+            if (my_host is not None and hosts.get(dst) is not None
+                    and hosts.get(dst) != my_host):
+                # degraded mode (ISSUE 9): the consumer cannot map this
+                # worker's shm segments — write the partition as an
+                # ordinary exchange spill (same naming, same gc_orphans
+                # coverage) and advertise the stream endpoint so the peer
+                # pulls the bytes worker-to-worker over the framed fabric
+                path = os.path.join(
+                    xs["spill_dir"],
+                    exchange_file_name(xs["epoch"], xs["xid"], node, dst))
+                desc = write_partition_file(path, its)
+                if stream_server is not None:
+                    desc = {**desc, "kind": "stream",
+                            "endpoint": list(stream_server.endpoint)}
+                return desc
             if nb > xs["spill_share"]:
                 path = os.path.join(
                     xs["spill_dir"],
@@ -507,6 +552,24 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
         elif kind == "drop":
             # epoch invalidation: clear resident/cached exchange rounds
             exchange.drop(msg[1])
+        elif kind == "stall":
+            # test hook (ISSUE 9 satellite): block THIS recv loop for
+            # ``seconds`` — the exact starvation a long decode or a fork of
+            # the GIL inflicts on a healthy worker — while (optionally)
+            # issuing store RPCs every ``rpc_every`` seconds, the way a busy
+            # stage job does.  Store traffic must keep the worker alive even
+            # though no pong can be answered here.
+            _, seconds, rpc_every = msg
+            deadline = time.monotonic() + seconds
+            while time.monotonic() < deadline:
+                step = min(rpc_every or 0.05,
+                           max(deadline - time.monotonic(), 0.0))
+                time.sleep(step)
+                if rpc_every:
+                    try:
+                        client.staging_epoch_ids()
+                    except RuntimeError:
+                        break
         elif kind == "run":
             _, jid, plan_key, si, lane, payload, ctx = msg
             ln = lanes.get(lane)
@@ -517,6 +580,33 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
     exchange.close()
     for ln in lanes.values():
         ln.jobs.put(None)
+
+
+def _socket_worker_main(node: str, address: Tuple[str, int], token: str,
+                        store_spec: Dict[str, Any]) -> None:
+    """Socket-transport worker entry (ISSUE 9): instead of inheriting pipe
+    ends, the worker *dials back* to its executor's listener — twice, once
+    per channel (``role="ctrl"`` / ``"store"``), authenticated by the
+    per-executor token — then runs the identical ``_worker_main`` loop over
+    the framed connections.  It also stands up its own
+    ``PartitionStreamServer`` over the exchange spill dir and advertises
+    the endpoint in the ctrl hello, so peers on other hosts can pull this
+    worker's partitions in degraded mode."""
+    stream_server = PartitionStreamServer(
+        store_spec.get("dfs_dir") or store_spec["root"])
+    conn = store_conn = None
+    try:
+        conn = connect_framed(
+            address, role="ctrl", node=node, token=token,
+            info={"exchange_endpoint": list(stream_server.endpoint)})
+        store_conn = connect_framed(address, role="store", node=node,
+                                    token=token)
+        _worker_main(node, conn, store_conn, store_spec, stream_server)
+    finally:
+        for c in (conn, store_conn):
+            if c is not None:
+                c.close()
+        stream_server.close()
 
 
 # ---------------------------------------------------------------------------
@@ -538,18 +628,45 @@ class ProcessNodeExecutor:
     #: spawn retry policy (bounded backoff + jitter via liveness.retry_call)
     spawn_attempts: int = 3
     spawn_base_delay_s: float = 0.05
+    #: socket-transport handshake window (both channels must dial back)
+    accept_timeout_s: float = 15.0
 
-    def __init__(self, node: str, store: DataStore) -> None:
+    def __init__(self, node: str, store: DataStore, *,
+                 transport: str = "pipe",
+                 host: Optional[str] = None,
+                 chaos_shim: bool = False,
+                 local_worker: bool = True) -> None:
+        if transport not in ("pipe", "socket"):
+            raise ValueError(f"unknown transport {transport!r} "
+                             f"(expected 'pipe' or 'socket')")
         self.node = node
         self.store = store
+        self.transport = transport
+        #: which machine the worker runs on — drives the liveness monitor's
+        #: per-host quorum and the degraded-exchange routing (ISSUE 9);
+        #: purely a label here, the fork is local either way in this repo
+        self.host = host if host is not None else LOCAL_HOST
+        #: whether THIS coordinator spawned the worker pid locally — only
+        #: then may the pid-prefix /dev/shm sweep run (ISSUE 9 satellite:
+        #: a remote worker's pid names some unrelated local process)
+        self.local_worker = local_worker
+        #: sweep passes skipped because the worker is not local (reported
+        #: as ``sweep_skipped_remote`` — we cannot see a remote /dev/shm,
+        #: so we count the skip honestly instead of pretending we swept)
+        self.sweep_skips = 0
+        #: the worker's PartitionStreamServer address (socket transport)
+        self.exchange_endpoint: Optional[Tuple[str, int]] = None
+        self._listener: Optional[FrameListener] = None
+        self._proxy: Optional[ChaosProxy] = None
         ctx = _mp_context()
         spec = {"root": store.root, "nodes": list(store.nodes),
                 "durable": store.durable, "compress": store.compress,
                 "compress_level": store.compress_level,
-                "journal_commits": store.journal_commits}
+                "journal_commits": store.journal_commits,
+                "dfs_dir": store.dfs_dir}
         attempt_no = itertools.count(1)
 
-        def spawn() -> None:
+        def spawn_pipe() -> None:
             """One spawn attempt: pipes + fork + start, atomically retried —
             a transient fork/pipe failure used to abort the whole run on
             first try (satellite of ISSUE 8)."""
@@ -565,9 +682,58 @@ class ProcessNodeExecutor:
             child_conn.close()
             child_store.close()
 
-        _, used = retry_call(spawn, attempts=self.spawn_attempts,
-                             base_delay_s=self.spawn_base_delay_s,
-                             retry_on=(OSError,))
+        def spawn_socket() -> None:
+            """One socket-fabric spawn attempt: bind a listener, fork the
+            worker with the dial-back address + token, accept both framed
+            channels.  Any failure tears the half-built transport down and
+            re-raises OSError so ``retry_call`` retries the whole attempt.
+            With ``chaos_shim`` the worker dials a :class:`ChaosProxy` in
+            front of the listener — the seam the chaos harness's network
+            events (partition/drop/delay_conn) render onto."""
+            n = next(attempt_no)
+            if ProcessNodeExecutor.spawn_fault is not None:
+                ProcessNodeExecutor.spawn_fault(node, n)
+            self._listener = FrameListener()
+            worker_addr = self._listener.address
+            if chaos_shim:
+                self._proxy = ChaosProxy(self._listener.address)
+                worker_addr = self._proxy.address
+            token = uuid.uuid4().hex
+            self._proc = ctx.Process(target=_socket_worker_main,
+                                     args=(node, worker_addr, token, spec),
+                                     daemon=True, name=f"ingest-node-{node}")
+            self._proc.start()
+            try:
+                conns: Dict[str, Any] = {}
+                deadline = time.monotonic() + self.accept_timeout_s
+                while not ("ctrl" in conns and "store" in conns):
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        raise TimeoutError(
+                            f"worker {node}: handshake incomplete "
+                            f"(got {sorted(conns)})")
+                    c, role, _n, info = self._listener.accept_framed(
+                        token, timeout_s=left)
+                    conns[role] = c
+                    if role == "ctrl":
+                        ep = info.get("exchange_endpoint")
+                        if ep:
+                            self.exchange_endpoint = (ep[0], int(ep[1]))
+                self._conn = conns["ctrl"]
+                self._store_conn = conns["store"]
+            except (OSError, TimeoutError) as e:
+                self._close_transport()
+                try:
+                    self._proc.kill()
+                except (ProcessLookupError, OSError):
+                    pass
+                raise OSError(f"socket spawn of {node} failed: {e}") from e
+
+        _, used = retry_call(
+            spawn_socket if transport == "socket" else spawn_pipe,
+            attempts=self.spawn_attempts,
+            base_delay_s=self.spawn_base_delay_s,
+            retry_on=(OSError,))
         self.spawn_retries = used - 1   # attempts beyond the first
         self._last_beat = time.monotonic()
         self._ping_seq = itertools.count()
@@ -631,13 +797,52 @@ class ProcessNodeExecutor:
         delivers SIGTERM — kill is the only signal a stopped process cannot
         hold off) and fail every in-flight future with WorkerDeath so the
         runtime's NodeFailure recovery takes over immediately instead of
-        waiting on an EOF that may never come."""
+        waiting on an EOF that may never come.  The transport is closed
+        too: under a network partition the proxy never forwards the dead
+        worker's EOF, so a blocked receiver thread must be unblocked from
+        this side."""
         try:
             self._proc.kill()
         except (ProcessLookupError, OSError):
             pass
         self._mark_dead()
+        self._close_transport()
         self._sweep_segments()
+
+    # ------------------------------------------------ network chaos (ISSUE 9)
+    def net_partition(self) -> None:
+        """Chaos hook: go dark on this worker's link — the proxy stops
+        pumping both directions, heartbeats die, and the liveness monitor's
+        per-host quorum declares the host partitioned.  No-op without the
+        chaos shim (pipe transport, or shim disabled)."""
+        if self._proxy is not None:
+            self._proxy.partition()
+
+    def net_heal(self) -> None:
+        if self._proxy is not None:
+            self._proxy.heal()
+
+    def net_drop(self, n: int = 64) -> None:
+        """Chaos hook: discard the next ``n`` bytes worker->coordinator —
+        the next coordinator recv sees a garbled/torn frame (FrameError ->
+        WorkerDeath), never a hang."""
+        if self._proxy is not None:
+            self._proxy.drop_bytes(n)
+
+    def net_delay(self, seconds: float) -> None:
+        """Chaos hook: one-shot forwarding stall (slow link)."""
+        if self._proxy is not None:
+            self._proxy.delay(seconds)
+
+    def stall_recv(self, seconds: float, rpc_every: float = 0.0) -> None:
+        """Test hook (ISSUE 9 satellite): make the worker's recv loop go
+        silent for ``seconds`` — no pongs — while issuing store RPCs every
+        ``rpc_every`` seconds, reproducing a saturated-but-healthy worker
+        deterministically."""
+        try:
+            self._send(("stall", float(seconds), float(rpc_every)))
+        except WorkerDeath:
+            pass
 
     # ------------------------------------------------------------------- send
     def _send(self, msg: Any) -> None:
@@ -798,21 +1003,33 @@ class ProcessNodeExecutor:
         The latter also catches survivors' orphans: a job result carrying a
         manifest can be preempted by a peer's NodeFailure before the
         coordinator records it, leaving segments only the producing worker's
-        pid prefix still names."""
+        pid prefix still names.
+
+        Remote workers (``local_worker=False``) are *skipped*, not swept:
+        their ``/dev/shm`` is another machine's, and their pid can name an
+        unrelated local process — unlinking by that prefix here would be
+        both useless and dangerous.  The skip is counted (``sweep_skips``,
+        surfaced as ``sweep_skipped_remote`` in run reports) so the old
+        silent no-op can't masquerade as a clean sweep."""
+        if not self.local_worker:
+            self.sweep_skips += 1
+            return
         pid = getattr(self._proc, "pid", None)
         if pid is None:
             return
         self._proc.join(timeout=2)   # let the SIGKILL land first
-        for path in glob.glob(f"/dev/shm/psm_ing{pid}_*"):
-            try:
-                os.unlink(path)
-            except OSError:
-                pass
+        sweep_pid_segments(pid)
 
     def _store_loop(self) -> None:
         try:
             while True:
                 msg = self._store_conn.recv()
+                # satellite fix (ISSUE 9): store RPCs are proof of life too.
+                # A worker saturated in a long batch block starves its ctrl
+                # recv loop (no pongs) while actively committing blocks —
+                # without this refresh the liveness monitor would SIGKILL a
+                # healthy, working node.
+                self._last_beat = time.monotonic()
                 kind = msg[0]
                 try:
                     if kind == "put":
@@ -832,6 +1049,12 @@ class ProcessNodeExecutor:
                 self._store_conn.send(reply)
         except (EOFError, OSError):
             pass
+        finally:
+            # the worker never closes its store channel while alive, so a
+            # dead store loop means a dead (or garbled-link) worker: fail
+            # in-flight work now instead of waiting for the ctrl channel
+            # to notice.  Idempotent, so the orderly-shutdown call is free.
+            self._mark_dead()
 
     # --------------------------------------------------------------- exchange
     def drop_exchange(self, xids: Sequence[int]) -> None:
@@ -845,6 +1068,23 @@ class ProcessNodeExecutor:
             pass
 
     # --------------------------------------------------------------- shutdown
+    def _close_transport(self) -> None:
+        """Close both channels plus the socket fabric's listener/proxy.
+        Safe on a half-built executor (spawn-attempt cleanup) and
+        idempotent; closing unblocks receiver threads whose peer is
+        partitioned and will never deliver an EOF."""
+        for conn in (getattr(self, "_conn", None),
+                     getattr(self, "_store_conn", None)):
+            if conn is not None:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+        if self._proxy is not None:
+            self._proxy.close()
+        if self._listener is not None:
+            self._listener.close()
+
     def shutdown(self) -> None:
         if not self._dead:
             try:
@@ -857,8 +1097,4 @@ class ProcessNodeExecutor:
             self._proc.join(timeout=5)
         self._mark_dead()
         self._sweep_segments()
-        for conn in (self._conn, self._store_conn):
-            try:
-                conn.close()
-            except OSError:
-                pass
+        self._close_transport()

@@ -47,7 +47,8 @@ from .items import IngestItem, items_nbytes
 from .operators import (IngestOp, OperatorFailure, PassThroughOp,
                         run_ops_batched)
 from .optimizer import IngestionOptimizer
-from .plan import IngestPlan, StagePlan, failed_op_index, route_items
+from .plan import (IngestPlan, StagePlan, failed_op_index, route_items,
+                   stage_consumers)
 from .procexec import ProcessNodeExecutor, WorkerDeath
 from .sources import ShardDescriptor, SourceAdapter, build_source
 from .store import DataStore
@@ -136,6 +137,10 @@ class RunReport:
     vectorized_rows: int = 0           # rows that entered batch-mode blocks
     batch_fallbacks: int = 0           # ops that dropped back to the scalar path
     kernel_ms: float = 0.0             # time inside vectorized encode kernels
+    # --- socket fabric + degraded exchange (ISSUE 9) ------------------------
+    degraded_exchange_rounds: int = 0  # rounds with >=1 streamed (cross-host) part
+    degraded_peer_bytes: int = 0       # partition bytes that crossed host-to-host
+    sweep_skipped_remote: int = 0      # shm sweeps skipped: worker not local
     wall_time_s: float = 0.0
     per_node_shards: Dict[str, int] = field(default_factory=dict)
 
@@ -286,12 +291,21 @@ class ExchangeRound:
     delivered: Set[str] = field(default_factory=set)
     consumers_done: int = 0
     spilled: bool = False
+    degraded_parts: int = 0           # cross-host (streamed) partitions
+    degraded_bytes: int = 0           # their bytes (subset of total_bytes)
 
-    def worker_ctx(self, spill_dir: str) -> Dict[str, Any]:
-        """The shuffle instruction shipped to a producing worker."""
-        return {"xid": self.xid, "key": self.key,
-                "targets": list(self.targets), "epoch": self.epoch,
-                "spill_share": self.spill_share, "spill_dir": spill_dir}
+    def worker_ctx(self, spill_dir: str,
+                   hosts: Optional[Dict[str, str]] = None) -> Dict[str, Any]:
+        """The shuffle instruction shipped to a producing worker.  ``hosts``
+        (node -> host label, ISSUE 9) tells the worker which targets are NOT
+        shm-reachable: partitions for another host go degraded (spill file +
+        stream endpoint) instead of a shared-memory segment."""
+        ctx = {"xid": self.xid, "key": self.key,
+               "targets": list(self.targets), "epoch": self.epoch,
+               "spill_share": self.spill_share, "spill_dir": spill_dir}
+        if hosts:
+            ctx["hosts"] = dict(hosts)
+        return ctx
 
 
 def _desc_paths(desc: Dict[str, Any]) -> List[str]:
@@ -414,10 +428,7 @@ class ShuffleCoordinator:
         sp = stage_plans[si]
         if self.synchronous or not sp.ops or not live:
             return None
-        consumers = ([c for c in sp.edge_kinds]
-                     if sp.edge_kinds else
-                     [sq.name for sq in stage_plans[si + 1:]
-                      if sp.name in sq.upstream])
+        consumers = stage_consumers(stage_plans, si)
         if not consumers:
             return None
         in_slice = {stage_plans[j].name for j in range(si + 1, stop)}
@@ -476,6 +487,11 @@ class ShuffleCoordinator:
             if path:
                 rnd.spilled = True
                 self.store.lease_exchange_path(path)
+            if desc.get("kind") == "stream":
+                # degraded mode (ISSUE 9): this partition crosses hosts as
+                # a streamed spill file, not a shared-memory segment
+                rnd.degraded_parts += 1
+                rnd.degraded_bytes += int(desc.get("nbytes", 0))
             if dst != node:
                 rnd.total_bytes += int(desc.get("nbytes", 0))
             else:
@@ -550,7 +566,7 @@ class ShuffleCoordinator:
                 kind = desc["kind"]
                 fetched = rnd.served.get(dst, 0) > 0
                 for path in _desc_paths(desc):
-                    if not fetched and kind in ("file", "resident"):
+                    if not fetched and kind in ("file", "resident", "stream"):
                         # an unfetched resident spill's owning worker may be
                         # dead (its bucket died with it) — reclaim the file
                         # here; a live holder's later drop no-ops on it
@@ -740,7 +756,10 @@ class RuntimeEngine:
                  max_retries: int = 3, shuffle_spill_bytes: Optional[int] = None,
                  shuffle_synchronous: bool = False,
                  backend: str = "thread",
-                 memory_budget_bytes: Optional[int] = None) -> None:
+                 memory_budget_bytes: Optional[int] = None,
+                 transport: str = "pipe",
+                 node_hosts: Optional[Dict[str, str]] = None,
+                 network_chaos: bool = False) -> None:
         """``backend`` selects the node substrate: ``"thread"`` (default —
         in-process ``NodeExecutor`` lanes) or ``"process"`` (one long-lived
         worker process per node, real CPU parallelism; DESIGN.md §6).
@@ -748,14 +767,29 @@ class RuntimeEngine:
         ``memory_budget_bytes`` is the engine's shared memory budget: when
         set and no explicit ``shuffle_spill_bytes`` is given, the shuffle
         spill threshold is derived from it (minus the ingest queues' share,
-        for the streaming engine) instead of the static default."""
+        for the streaming engine) instead of the static default.
+
+        ``transport`` (process backend, ISSUE 9) selects the control/store
+        medium: ``"pipe"`` (default — ``multiprocessing.Pipe``, the
+        byte-identical oracle) or ``"socket"`` (the framed TCP fabric,
+        DESIGN.md §7).  ``node_hosts`` maps node -> host label; nodes on
+        different hosts are treated as not shm-reachable — their shuffle
+        partitions cross in degraded mode (streamed spill files) and the
+        liveness monitor applies the per-host partition quorum.
+        ``network_chaos`` inserts the ChaosProxy shim on each socket pair
+        so the chaos harness can render partition/drop/delay events."""
         if backend not in ("thread", "process"):
             raise ValueError(f"unknown backend {backend!r} (thread|process)")
+        if transport not in ("pipe", "socket"):
+            raise ValueError(f"unknown transport {transport!r} (pipe|socket)")
         self.store = store
         self.nodes = list(store.nodes)
         self.optimizer = optimizer or IngestionOptimizer()
         self.max_retries = max_retries
         self.backend = backend
+        self.transport = transport
+        self.node_hosts = dict(node_hosts) if node_hosts else {}
+        self.network_chaos = network_chaos
         self.memory_budget_bytes = memory_budget_bytes
         self._explicit_spill = shuffle_spill_bytes is not None
         if shuffle_spill_bytes is None:
@@ -787,8 +821,18 @@ class RuntimeEngine:
         with self._exec_lock:
             ex = self._executors.get(node)
             if ex is None:
-                ex = (ProcessNodeExecutor(node, self.store)
-                      if self.backend == "process" else NodeExecutor(node))
+                if self.backend == "process":
+                    # the fork is always local in this repo — ``host`` is
+                    # the *placement label* driving quorum grouping and
+                    # degraded exchange, so local_worker stays True and
+                    # shm sweeps keep running (no leaked segments in the
+                    # simulated-multi-host soaks)
+                    ex = ProcessNodeExecutor(
+                        node, self.store, transport=self.transport,
+                        host=self.node_hosts.get(node),
+                        chaos_shim=self.network_chaos)
+                else:
+                    ex = NodeExecutor(node)
                 self._executors[node] = ex
             return ex
 
@@ -961,6 +1005,7 @@ class RuntimeEngine:
 
         report.wall_time_s = time.time() - t0
         report.spawn_retries = self._spawn_retry_total()
+        report.sweep_skipped_remote = self._sweep_skip_total()
         self.store.flush_manifest()
         return report
 
@@ -970,6 +1015,14 @@ class RuntimeEngine:
         with self._exec_lock:
             execs = list(self._executors.values())
         return sum(getattr(ex, "spawn_retries", 0) for ex in execs)
+
+    def _sweep_skip_total(self) -> int:
+        """Shm sweep passes skipped because a worker was remote (ISSUE 9
+        satellite): reported instead of silently pretending the remote
+        host's segments were reclaimed."""
+        with self._exec_lock:
+            execs = list(self._executors.values())
+        return sum(getattr(ex, "sweep_skips", 0) for ex in execs)
 
     def _redistribute(self, batch: Dict[str, List[IngestItem]],
                       live: List[str]) -> Dict[str, List[IngestItem]]:
@@ -1020,12 +1073,11 @@ class RuntimeEngine:
         plans that never went through ``annotate_edges``."""
         in_range = {sp.name for sp in (stage_plans if upto is None
                                        else stage_plans[:upto + 1])}
-        for sp in stage_plans:
+        for si, sp in enumerate(stage_plans):
             if not (sp.shuffle_key or sp.compute_shuffle_key()):
                 continue
-            consumers = (sp.edge_kinds.keys() if sp.edge_kinds else
-                         [sq.name for sq in stage_plans
-                          if sp.name in sq.upstream])
+            consumers = stage_consumers(stage_plans, si,
+                                        downstream_only=False)
             if any(c in in_range for c in consumers):
                 return True
         return False
@@ -1229,7 +1281,7 @@ class RuntimeEngine:
                             if t in rnd.delivered:
                                 continue
                             refs = [r for r in self.shuffle.refs_for(rnd, t)
-                                    if r["kind"] in ("shm", "file")]
+                                    if r["kind"] in ("shm", "file", "stream")]
                             redirects.setdefault(tgt, []).extend(refs)
                         else:
                             # thread buckets outlive the node (peek keeps
@@ -1261,7 +1313,8 @@ class RuntimeEngine:
                         epoch=epoch, live_nodes=live_nodes,
                         injections=injections if ni == 0 else None,
                         max_retries=self.max_retries,
-                        shuffle_ctx=(produce.worker_ctx(self.store.dfs_dir)
+                        shuffle_ctx=(produce.worker_ctx(self.store.dfs_dir,
+                                                        self.node_hosts)
                                      if produce is not None else None),
                         fetch_refs=fetch or None, sink=sink,
                         source_ctx=({"adapter": source,
@@ -1328,6 +1381,9 @@ class RuntimeEngine:
                         report.stage_coordinator_bytes += items_nbytes(payload)
             if produce is not None:
                 report.stage_resident_bytes += produce.resident_bytes
+                if produce.degraded_parts:
+                    report.degraded_exchange_rounds += 1
+                    report.degraded_peer_bytes += produce.degraded_bytes
                 if produce.key is None:        # narrow (identity) round
                     report.stage_exchange_rounds += 1
                     if produce.spilled:

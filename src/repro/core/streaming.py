@@ -193,6 +193,10 @@ class StreamReport:
     spawn_retries: int = 0        # process-worker spawn attempts beyond the first
     liveness_deaths: List[Tuple[str, float]] = field(default_factory=list)
     # ^ (node, seconds-to-detection) for deaths the heartbeat monitor declared
+    host_partitions: List[Tuple[str, List[str], float]] = field(
+        default_factory=list)
+    # ^ (host, member nodes, age) for hosts the quorum declared as one unit
+    sweep_skipped_remote: int = 0  # shm sweeps skipped: worker not local
 
     def committed_epoch_ids(self) -> List[int]:
         return [e.epoch for e in self.epochs]
@@ -239,6 +243,16 @@ class StreamReport:
         """Rows recomputed by recovery — a cone replay contributes only the
         dead node's share, a whole-epoch replay the full epoch."""
         return sum(e.run.replayed_rows for e in self.epochs)
+
+    # ----------------------------------------- degraded exchange (ISSUE 9) ---
+    def degraded_exchange_rounds(self) -> int:
+        """Exchange rounds that moved at least one partition cross-host in
+        degraded mode (streamed spill files instead of shm segments)."""
+        return sum(e.run.degraded_exchange_rounds for e in self.epochs)
+
+    def degraded_peer_bytes(self) -> int:
+        """Partition bytes that crossed host-to-host over the stream path."""
+        return sum(e.run.degraded_peer_bytes for e in self.epochs)
 
 
 class IngestQueues:
@@ -684,12 +698,17 @@ class StreamingRuntimeEngine(RuntimeEngine):
                  epoch_target_commit_s: Optional[float] = None,
                  cone_recovery: bool = True,
                  heartbeat_interval_s: Optional[float] = None,
-                 heartbeat_miss: int = 4) -> None:
+                 heartbeat_miss: int = 4,
+                 transport: str = "pipe",
+                 node_hosts: Optional[Dict[str, str]] = None,
+                 network_chaos: bool = False) -> None:
         super().__init__(store, optimizer, max_retries,
                          shuffle_spill_bytes=shuffle_spill_bytes,
                          shuffle_synchronous=shuffle_synchronous,
                          backend=backend,
-                         memory_budget_bytes=memory_budget_bytes)
+                         memory_budget_bytes=memory_budget_bytes,
+                         transport=transport, node_hosts=node_hosts,
+                         network_chaos=network_chaos)
         self.epoch_items = epoch_items
         self.epoch_seconds = epoch_seconds
         self.epoch_bytes = epoch_bytes
@@ -737,7 +756,10 @@ class StreamingRuntimeEngine(RuntimeEngine):
         mon = LivenessMonitor(interval_s=self.heartbeat_interval_s,
                               miss_threshold=self.heartbeat_miss)
         for n in self.nodes:
-            mon.watch(n, self.executor(n))
+            # the host label opts the node into the per-host partition
+            # quorum (ISSUE 9): a host whose workers all go silent together
+            # is declared partitioned as one unit
+            mon.watch(n, self.executor(n), host=self.node_hosts.get(n))
         mon.start()
         self.liveness = mon
 
@@ -746,6 +768,7 @@ class StreamingRuntimeEngine(RuntimeEngine):
         if mon is not None:
             mon.stop()
             sreport.liveness_deaths.extend(mon.deaths)
+            sreport.host_partitions.extend(mon.partitions)
 
     def _update_spill_budget(self, queues: IngestQueues) -> None:
         """Spill-aware shuffle sizing: re-derive ``spill_bytes`` from the
@@ -818,6 +841,7 @@ class StreamingRuntimeEngine(RuntimeEngine):
                 self.shuffle.drain()
                 self.store.flush_manifest()
             sreport.spawn_retries = self._spawn_retry_total()
+            sreport.sweep_skipped_remote = self._sweep_skip_total()
             sreport.wall_time_s = time.time() - t0
             return sreport
         if queues is None:
@@ -849,6 +873,7 @@ class StreamingRuntimeEngine(RuntimeEngine):
             self.shuffle.drain()
             self.store.flush_manifest()   # compact the epoch journal
         sreport.spawn_retries = self._spawn_retry_total()
+        sreport.sweep_skipped_remote = self._sweep_skip_total()
         sreport.wall_time_s = time.time() - t0
         return sreport
 

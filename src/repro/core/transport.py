@@ -1,0 +1,559 @@
+"""Socket fabric: framed, versioned message transport for the process
+backend (ISSUE 9).
+
+The process backend's control and store channels used to be
+``multiprocessing.Pipe`` objects — single-host by construction.  This
+module supplies the multi-host substitute behind the same duck-typed
+surface (``send(obj)`` / ``recv()`` / ``close()``), so ``procexec``'s
+worker loop, receiver threads, and store-RPC client run unchanged on
+either medium (``transport="pipe"|"socket"``):
+
+* :class:`FramedConnection` — length-prefixed frames over TCP.  Every
+  frame carries a magic, a protocol version, the payload length, a CRC
+  of the payload, and a CRC of the header itself.  A clean peer close
+  surfaces as ``EOFError`` (exactly what a pipe does), while a torn,
+  truncated, or garbled frame raises :class:`FrameError` — an
+  ``OSError`` subclass, so every existing ``except (EOFError, OSError)``
+  death path catches it instead of a bare ``struct.error`` escaping or,
+  worse, ``recv`` blocking forever on a half-frame.  Sends run under a
+  bounded ``send_timeout_s`` (a partitioned peer with full TCP buffers
+  fails the sender instead of wedging the coordinator) and a partial
+  frame that stops making progress for ``idle_timeout_s`` is declared
+  torn.
+* :func:`connect_framed` / :class:`FrameListener` — connect and accept
+  wrapped in ``liveness.retry_call`` bounded backoff, with a hello
+  handshake (role + node + shared token) so one listener serves both the
+  control and the store channel of a worker.
+* :class:`ChaosProxy` — a byte-level TCP shim the chaos harness renders
+  network events onto: ``partition()`` stops pumping both directions
+  (silence -> the liveness monitor declares the host dead as a unit),
+  ``drop_bytes()`` discards bytes mid-stream (the receiver sees a
+  garbled frame -> CRC failure -> death path), ``delay()`` stalls
+  forwarding once.  Deterministic by construction: events fire from the
+  seeded chaos schedule, not from timers.
+* :class:`PartitionStreamServer` — the degraded-mode exchange endpoint
+  (DESIGN.md §7): every socket-transport worker serves its own spill
+  files to peers over the same framed protocol, consume-on-read, so two
+  workers that do not share ``/dev/shm`` (different hosts) still exchange
+  partitions worker-to-worker.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import socket
+import struct
+import threading
+import time
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .liveness import retry_call
+
+#: frame magic — never a prefix of a pickle stream, so a raw-pickle peer
+#: (or trash bytes after a dropped range) fails the magic check instantly
+FRAME_MAGIC = b"IGB\xa9"
+#: protocol version: bump on any wire-incompatible frame change; a peer
+#: speaking another version is garbled by definition (FrameError, death)
+FRAME_VERSION = 1
+
+#: magic(4s) version(B) flags(B) reserved(H) payload_len(I) payload_crc(I)
+_HDR = struct.Struct("!4sBBHII")
+#: crc32 of the preceding header bytes
+_HDR_CRC = struct.Struct("!I")
+HEADER_SIZE = _HDR.size + _HDR_CRC.size
+
+#: ceiling on a single frame — control traffic is metadata (manifests,
+#: refs, store records) and degraded-mode partition payloads; anything
+#: past this is a corrupt length field, not a real message
+MAX_FRAME_BYTES = 1 << 30
+
+#: socket-level tick: blocked recv/send wake this often to re-check the
+#: closed flag and their deadlines (close() from another thread must
+#: unblock a receiver whose peer is partitioned, not crashed)
+_TICK_S = 0.2
+
+
+class FrameError(OSError):
+    """A torn or garbled frame: bad magic/version, a CRC mismatch, an
+    insane length, or EOF mid-frame.  Subclasses ``OSError`` so the
+    process backend's existing ``except (EOFError, OSError)`` death
+    paths convert it to WorkerDeath instead of hanging or crashing on an
+    unhandled ``struct.error``."""
+
+
+class SendTimeout(FrameError):
+    """A send made no progress for ``send_timeout_s`` — the peer is
+    partitioned or wedged with full buffers.  The connection is poisoned
+    (frame boundaries are lost mid-``sendall``), so it also maps to the
+    death path."""
+
+
+def pack_frame(payload: bytes) -> bytes:
+    """One wire frame for ``payload``: header + header CRC + payload."""
+    hdr = _HDR.pack(FRAME_MAGIC, FRAME_VERSION, 0, 0, len(payload),
+                    zlib.crc32(payload))
+    return hdr + _HDR_CRC.pack(zlib.crc32(hdr)) + payload
+
+
+def unpack_header(raw: bytes) -> Tuple[int, int]:
+    """Validate a ``HEADER_SIZE`` block; returns (payload_len, payload_crc).
+
+    Raises :class:`FrameError` on any mismatch — never ``struct.error``
+    (the block length is fixed by the caller)."""
+    if len(raw) != HEADER_SIZE:
+        raise FrameError(f"torn frame header: {len(raw)}/{HEADER_SIZE} bytes")
+    magic, version, _flags, _rsv, length, payload_crc = _HDR.unpack(
+        raw[:_HDR.size])
+    (hdr_crc,) = _HDR_CRC.unpack(raw[_HDR.size:])
+    if zlib.crc32(raw[:_HDR.size]) != hdr_crc:
+        raise FrameError("garbled frame header (CRC mismatch)")
+    if magic != FRAME_MAGIC:
+        raise FrameError(f"bad frame magic {magic!r}")
+    if version != FRAME_VERSION:
+        raise FrameError(f"frame version {version} != {FRAME_VERSION}")
+    if length > MAX_FRAME_BYTES:
+        raise FrameError(f"insane frame length {length}")
+    return length, payload_crc
+
+
+class FramedConnection:
+    """A ``multiprocessing.Connection``-shaped wrapper over one TCP socket.
+
+    ``send(obj)`` pickles and writes one frame; ``recv()`` reads one frame
+    and unpickles.  Failure mapping (the whole point — see module doc):
+    clean close -> ``EOFError``; torn/garbled frame, send timeout, reset
+    -> ``FrameError``/``OSError``.  ``close()`` from any thread unblocks
+    a pending ``recv()`` within one tick even when the peer never sends
+    EOF (a partitioned, not crashed, peer)."""
+
+    def __init__(self, sock: socket.socket, *,
+                 send_timeout_s: float = 10.0,
+                 idle_timeout_s: float = 30.0) -> None:
+        self._sock = sock
+        self.send_timeout_s = send_timeout_s
+        self.idle_timeout_s = idle_timeout_s
+        self._closed = False
+        self._send_lock = threading.Lock()
+        self._recv_lock = threading.Lock()
+        sock.settimeout(_TICK_S)
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass
+
+    # ------------------------------------------------------------------ send
+    def send(self, obj: Any) -> None:
+        payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+        frame = pack_frame(payload)
+        with self._send_lock:
+            if self._closed:
+                raise OSError("connection closed")
+            view = memoryview(frame)
+            deadline = time.monotonic() + self.send_timeout_s
+            while view:
+                try:
+                    n = self._sock.send(view)
+                except socket.timeout:
+                    if self._closed:
+                        raise OSError("connection closed") from None
+                    if time.monotonic() > deadline:
+                        self.close()
+                        raise SendTimeout(
+                            f"send stalled > {self.send_timeout_s}s "
+                            f"(partitioned peer?)") from None
+                    continue
+                except InterruptedError:
+                    continue
+                view = view[n:]
+
+    # ------------------------------------------------------------------ recv
+    def _read_exact(self, n: int, *, mid_frame: bool) -> bytes:
+        """Exactly ``n`` bytes.  At a frame boundary (``mid_frame=False``)
+        silence is legal for as long as the peer lives — heartbeat gaps are
+        the liveness monitor's business, not ours.  Once the first byte of
+        a frame has arrived, the rest must follow within ``idle_timeout_s``
+        or the frame is torn."""
+        buf = bytearray()
+        deadline: Optional[float] = (
+            time.monotonic() + self.idle_timeout_s if mid_frame else None)
+        while len(buf) < n:
+            try:
+                chunk = self._sock.recv(min(1 << 16, n - len(buf)))
+            except socket.timeout:
+                if self._closed:
+                    raise EOFError("connection closed")
+                if deadline is not None and time.monotonic() > deadline:
+                    raise FrameError(
+                        f"torn frame: {len(buf)}/{n} bytes then "
+                        f"{self.idle_timeout_s}s of silence")
+                continue
+            except InterruptedError:
+                continue
+            if not chunk:
+                if buf or mid_frame:
+                    raise FrameError(
+                        f"torn frame: EOF after {len(buf)}/{n} bytes")
+                raise EOFError("peer closed")
+            buf += chunk
+            if deadline is None:
+                # first byte of the frame: the rest is now on the clock
+                deadline = time.monotonic() + self.idle_timeout_s
+        return bytes(buf)
+
+    def recv(self) -> Any:
+        with self._recv_lock:
+            if self._closed:
+                raise EOFError("connection closed")
+            hdr = self._read_exact(HEADER_SIZE, mid_frame=False)
+            length, payload_crc = unpack_header(hdr)
+            payload = self._read_exact(length, mid_frame=True)
+        if zlib.crc32(payload) != payload_crc:
+            raise FrameError("garbled frame payload (CRC mismatch)")
+        try:
+            return pickle.loads(payload)
+        except Exception as e:
+            # a CRC collision over corrupt bytes still must not escape as
+            # an unpickling crash — garbled is garbled
+            raise FrameError(f"garbled frame payload: {e}") from e
+
+    # ----------------------------------------------------------------- admin
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def fileno(self) -> int:
+        return self._sock.fileno()
+
+
+# ---------------------------------------------------------------------------
+# Listener / connect with bounded retry + hello handshake
+# ---------------------------------------------------------------------------
+def _hello(role: str, node: str, token: str,
+           info: Optional[Dict[str, Any]]) -> Tuple[str, str, str, dict]:
+    return ("hello", role, node, token, dict(info or {}))  # type: ignore
+
+
+class FrameListener:
+    """Accept side of the fabric: one loopback listener per executor,
+    serving the worker's control and store connections (distinguished by
+    the hello's role) and authenticated by a per-executor token."""
+
+    def __init__(self, host: str = "127.0.0.1") -> None:
+        self._sock = socket.create_server((host, 0))
+        self._sock.settimeout(_TICK_S)
+        self._closed = False
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self._sock.getsockname()[:2]
+
+    def accept_framed(self, token: str, *, timeout_s: float = 30.0,
+                      send_timeout_s: float = 10.0,
+                      idle_timeout_s: float = 30.0
+                      ) -> Tuple[FramedConnection, str, str, Dict[str, Any]]:
+        """One authenticated connection: ``(conn, role, node, info)``.
+
+        A connection with a bad token or a garbled hello is dropped and
+        the accept keeps waiting (within ``timeout_s``) — a stray dialer
+        must not poison the worker's slot."""
+        deadline = time.monotonic() + timeout_s
+        while True:
+            if self._closed:
+                raise OSError("listener closed")
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"no authenticated peer in {timeout_s}s")
+            try:
+                sock, _addr = self._sock.accept()
+            except socket.timeout:
+                continue
+            conn = FramedConnection(sock, send_timeout_s=send_timeout_s,
+                                    idle_timeout_s=idle_timeout_s)
+            try:
+                msg = conn.recv()
+                if (isinstance(msg, tuple) and len(msg) == 5
+                        and msg[0] == "hello" and msg[3] == token):
+                    return conn, msg[1], msg[2], msg[4]
+            except (EOFError, OSError):
+                pass
+            conn.close()
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+def connect_framed(address: Tuple[str, int], *,
+                   role: str = "", node: str = "", token: str = "",
+                   info: Optional[Dict[str, Any]] = None,
+                   attempts: int = 5, base_delay_s: float = 0.05,
+                   connect_timeout_s: float = 5.0,
+                   send_timeout_s: float = 10.0,
+                   idle_timeout_s: float = 30.0) -> FramedConnection:
+    """Dial ``address`` with bounded backoff (``retry_call``) and present
+    the hello handshake.  A flaky accept or a listener that is still a few
+    milliseconds from binding retries instead of failing the spawn."""
+
+    def dial() -> FramedConnection:
+        sock = socket.create_connection(tuple(address),
+                                        timeout=connect_timeout_s)
+        conn = FramedConnection(sock, send_timeout_s=send_timeout_s,
+                                idle_timeout_s=idle_timeout_s)
+        if token:
+            try:
+                conn.send(_hello(role, node, token, info))
+            except OSError:
+                conn.close()
+                raise
+        return conn
+
+    conn, _used = retry_call(dial, attempts=attempts,
+                             base_delay_s=base_delay_s,
+                             retry_on=(OSError,))
+    return conn
+
+
+# ---------------------------------------------------------------------------
+# Chaos proxy: deterministic network faults on a socket pair
+# ---------------------------------------------------------------------------
+class ChaosProxy:
+    """Byte-level TCP shim between a worker and its executor's listener.
+
+    The worker dials the proxy; each inbound connection gets its own
+    outbound dial to ``target`` and two pump threads.  Faults apply to
+    every pumped pair:
+
+    * ``partition()`` — stop *reading* both directions: the link goes
+      silent (heartbeats die -> per-host quorum declares) and a sender
+      eventually fills its buffers (``SendTimeout``).  ``heal()`` undoes.
+    * ``drop_bytes(n)`` — discard the next ``n`` bytes worker->coordinator:
+      frame boundaries are lost, the coordinator's next recv fails CRC or
+      magic (FrameError -> death path).
+    * ``delay(seconds)`` — one-shot stall before the next forward in
+      either direction (a slow link, simulated deterministically).
+    """
+
+    def __init__(self, target: Tuple[str, int],
+                 host: str = "127.0.0.1") -> None:
+        self.target = tuple(target)
+        self._listener = socket.create_server((host, 0))
+        self._listener.settimeout(_TICK_S)
+        self._partitioned = threading.Event()
+        self._closed = threading.Event()
+        self._lock = threading.Lock()
+        self._drop_pending = 0          # bytes to discard, inbound->target
+        self._delay_pending = 0.0       # one-shot stall, either direction
+        self._threads: List[threading.Thread] = []
+        self._socks: List[socket.socket] = []
+        t = threading.Thread(target=self._accept_loop, daemon=True,
+                             name="chaos-proxy-accept")
+        t.start()
+        self._threads.append(t)
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self._listener.getsockname()[:2]
+
+    # ----------------------------------------------------------------- faults
+    def partition(self) -> None:
+        self._partitioned.set()
+
+    def heal(self) -> None:
+        self._partitioned.clear()
+
+    def drop_bytes(self, n: int = 64) -> None:
+        with self._lock:
+            self._drop_pending += int(n)
+
+    def delay(self, seconds: float) -> None:
+        with self._lock:
+            self._delay_pending = max(self._delay_pending, float(seconds))
+
+    # ------------------------------------------------------------------ pumps
+    def _accept_loop(self) -> None:
+        while not self._closed.is_set():
+            try:
+                inbound, _addr = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            try:
+                outbound = socket.create_connection(self.target, timeout=5.0)
+            except OSError:
+                inbound.close()
+                continue
+            for s in (inbound, outbound):
+                s.settimeout(_TICK_S)
+            self._socks += [inbound, outbound]
+            for src, dst, lossy in ((inbound, outbound, True),
+                                    (outbound, inbound, False)):
+                t = threading.Thread(target=self._pump, daemon=True,
+                                     args=(src, dst, lossy),
+                                     name="chaos-proxy-pump")
+                t.start()
+                self._threads.append(t)
+
+    def _pump(self, src: socket.socket, dst: socket.socket,
+              lossy: bool) -> None:
+        """Forward src->dst; ``lossy`` marks the worker->coordinator
+        direction where ``drop_bytes`` applies."""
+        while not self._closed.is_set():
+            if self._partitioned.is_set():
+                # a partition drops packets on the floor: stop reading, so
+                # the receiver sees silence and the sender backs up
+                time.sleep(_TICK_S)
+                continue
+            try:
+                data = src.recv(1 << 16)
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            if not data:
+                try:
+                    dst.shutdown(socket.SHUT_WR)
+                except OSError:
+                    pass
+                break
+            with self._lock:
+                delay, self._delay_pending = self._delay_pending, 0.0
+                if lossy and self._drop_pending > 0:
+                    dropped = min(len(data), self._drop_pending)
+                    self._drop_pending -= dropped
+                    data = data[dropped:]
+            if delay:
+                time.sleep(delay)
+            if not data:
+                continue
+            try:
+                dst.sendall(data)
+            except OSError:
+                break
+
+    def close(self) -> None:
+        self._closed.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        for s in self._socks:
+            try:
+                s.close()
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# Degraded-mode exchange: worker-to-worker partition streaming
+# ---------------------------------------------------------------------------
+class PartitionStreamServer:
+    """Per-worker endpoint serving the worker's own spill files to peers.
+
+    When producer and consumer are not shm-reachable (different hosts),
+    the producer writes the partition as an ordinary exchange spill file
+    — same naming, same ``gc_orphans`` coverage — and advertises this
+    endpoint in the ref (``kind="stream"``).  The consumer fetches the
+    raw file bytes over one framed request/response; a successful send
+    deletes the file (consume-on-read, exactly like the direct-read
+    path).  Requests outside ``root`` are refused."""
+
+    def __init__(self, root: str, host: str = "127.0.0.1") -> None:
+        self.root = os.path.realpath(root)
+        self._listener = socket.create_server((host, 0))
+        self._listener.settimeout(_TICK_S)
+        self._closed = threading.Event()
+        self.served = 0          # partitions streamed (observability)
+        self.served_bytes = 0
+        self._thread = threading.Thread(target=self._serve_loop, daemon=True,
+                                        name="partition-stream-server")
+        self._thread.start()
+
+    @property
+    def endpoint(self) -> Tuple[str, int]:
+        return self._listener.getsockname()[:2]
+
+    def _serve_loop(self) -> None:
+        while not self._closed.is_set():
+            try:
+                sock, _addr = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            threading.Thread(target=self._handle, args=(sock,), daemon=True,
+                             name="partition-stream-req").start()
+
+    def _handle(self, sock: socket.socket) -> None:
+        conn = FramedConnection(sock, idle_timeout_s=10.0)
+        try:
+            msg = conn.recv()
+            if (not isinstance(msg, tuple) or len(msg) != 2
+                    or msg[0] != "fetch"):
+                conn.send(("err", "bad request"))
+                return
+            path = os.path.realpath(str(msg[1]))
+            if not path.startswith(self.root + os.sep):
+                conn.send(("err", f"path outside exchange root: {path}"))
+                return
+            try:
+                with open(path, "rb") as f:
+                    data = f.read()
+            except FileNotFoundError:
+                # already consumed (direct read, a replayed round's cleanup)
+                conn.send(("gone", None))
+                return
+            conn.send(("ok", data))
+            # consume-on-read: the bytes are on the wire; the consumer's
+            # death mid-read aborts its epoch, which re-deals everything
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            self.served += 1
+            self.served_bytes += len(data)
+        except (EOFError, OSError):
+            pass
+        finally:
+            conn.close()
+
+    def close(self) -> None:
+        self._closed.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+
+
+def fetch_stream_bytes(endpoint: Tuple[str, int], path: str, *,
+                       attempts: int = 2,
+                       timeout_s: float = 10.0) -> Optional[bytes]:
+    """Client half of the degraded exchange: fetch a spill file's bytes
+    from a peer's :class:`PartitionStreamServer`.  Returns ``None`` when
+    the peer is unreachable or the file is gone — callers fall back to
+    the shared-dir direct read, which stays correct on a single host."""
+    try:
+        conn = connect_framed(tuple(endpoint), attempts=attempts,
+                              connect_timeout_s=timeout_s,
+                              send_timeout_s=timeout_s,
+                              idle_timeout_s=timeout_s)
+    except OSError:
+        return None
+    try:
+        conn.send(("fetch", path))
+        status, data = conn.recv()
+    except (EOFError, OSError, ValueError, TypeError):
+        return None
+    finally:
+        conn.close()
+    return data if status == "ok" else None

@@ -1,0 +1,616 @@
+"""Socket fabric (ISSUE 9): framed transport, partitions, degraded exchange.
+
+Covers the tentpole's five layers plus its satellites:
+
+* the framed wire protocol: round-trip, truncation at every byte offset
+  and garbled headers map to ``EOFError``/``FrameError`` (an ``OSError``
+  subclass — the process backend's existing death path), never a raw
+  ``struct.error`` (property-tested under hypothesis when available);
+* the PR-8 death matrix (kill/hang x narrow/shuffle/cross-segment) re-run
+  on ``transport="socket"``, with the pipe transport retained as a
+  byte-identical oracle;
+* per-host partition quorum: a ChaosProxy partition silences a whole
+  host, the liveness monitor declares it as a unit, the stream replays on
+  survivors exactly-once;
+* degraded-mode exchange: a shuffle whose producer and consumer sit on
+  different simulated hosts rides the streamed peer-fetch path
+  (``kind="stream"`` refs, consume-on-read) and still commits bytes
+  identical to the pipe oracle;
+* satellites: store-RPC traffic refreshes the heartbeat (a saturated
+  worker is NOT a dead worker), remote-host executors skip the local shm
+  sweep and count it, and the socket chaos soak with a scheduled
+  partition passes the full exactly-once audit.
+"""
+import glob
+import os
+import socket
+import time
+import zlib
+
+import pytest
+
+from repro.core import (DataAccess, DataStore, IngestPlan,
+                        StreamingRuntimeEngine, chain_stage, create_stage,
+                        resolve_op)
+from repro.core.chaos import ChaosEvent, ChaosPlan, chaos_soak
+from repro.core.exchange import write_partition_file
+from repro.core.items import IngestItem, sweep_pid_segments
+from repro.core.procexec import ProcessNodeExecutor
+from repro.core.transport import (HEADER_SIZE, ChaosProxy, FramedConnection,
+                                  FrameError, FrameListener,
+                                  PartitionStreamServer, SendTimeout,
+                                  connect_framed, fetch_stream_bytes,
+                                  pack_frame, unpack_header)
+from repro.data.generators import gen_lineitem
+
+NODES = ["n0", "n1", "n2", "n3"]
+HOSTS = {"n0": "hostA", "n1": "hostA", "n2": "hostB", "n3": "hostB"}
+ROWS = 100
+EPOCH_ITEMS = 4
+EPOCH_ROWS = EPOCH_ITEMS * ROWS
+
+
+def narrow_plan(ds):
+    p = IngestPlan("narrow3")
+    s1 = p.add_statement([resolve_op("identity_parser")], kind="select")
+    s2 = p.add_statement([resolve_op("chunk", target_rows=256),
+                          resolve_op("serialize", layout="columnar")],
+                         kind="format", inputs=[s1])
+    s3 = p.add_statement([resolve_op("upload", store=ds)],
+                         kind="store", inputs=[s2])
+    create_stage(p, using=[s1], name="a")
+    chain_stage(p, to=["a"], using=[s2], name="b")
+    chain_stage(p, to=["b"], using=[s3], name="c")
+    return p
+
+
+def shuffled_plan(ds):
+    p = IngestPlan("shuf")
+    s1 = p.add_statement([
+        resolve_op("identity_parser"),
+        resolve_op("partition", scheme="hash", key="orderkey",
+                   num_partitions=4),
+        resolve_op("map", fn="repro.core.ops_select:identity_columns",
+                   shuffle_by="partition"),
+    ], kind="select")
+    s2 = p.add_statement([resolve_op("chunk", target_rows=256),
+                          resolve_op("serialize", layout="columnar")],
+                         kind="format", inputs=[s1])
+    s3 = p.add_statement([resolve_op("upload", store=ds)],
+                         kind="store", inputs=[s2])
+    create_stage(p, using=[s1], name="a")
+    chain_stage(p, to=["a"], using=[s2], name="b")
+    chain_stage(p, to=["b"], using=[s3], name="c")
+    return p
+
+
+def shard_source(n_shards, rows=ROWS, delay_s=0.0):
+    for i in range(n_shards):
+        if delay_s:
+            time.sleep(delay_s)
+        yield IngestItem(gen_lineitem(rows, seed=i))
+
+
+def shm_segments():
+    return set(glob.glob("/dev/shm/psm_*"))
+
+
+def assert_clean(ds, before_shm):
+    assert not os.listdir(ds.dfs_dir)
+    assert ds.gc_orphans() == []
+    assert shm_segments() - before_shm == set()
+
+
+def read_rows(ds):
+    cols = DataAccess(ds).since_epoch(-1).read_all(projection=["quantity"])
+    return len(cols["quantity"])
+
+
+def payload_hashes(ds):
+    import hashlib
+    return sorted(hashlib.sha256(ds.read_payload(e.block_id)).hexdigest()
+                  for e in ds.blocks() if not e.is_parity)
+
+
+def arm_signal(eng, fault, stage, state):
+    def hook(rnd, src):
+        if rnd.stage == stage and rnd.epoch >= 1 and not state.get("victim"):
+            state["victim"] = src
+            ex = eng.executor(src)
+            (ex.kill if fault == "kill" else ex.hang)()
+    eng.shuffle.test_on_manifest = hook
+
+
+def recv_of(frame_bytes, idle_timeout_s=0.5):
+    """Feed raw bytes to a FramedConnection and return what recv() does:
+    the object, or the exception instance it raised."""
+    a, b = socket.socketpair()
+    conn = FramedConnection(b, idle_timeout_s=idle_timeout_s)
+    try:
+        a.sendall(frame_bytes)
+        a.close()
+        try:
+            return conn.recv()
+        except Exception as e:       # noqa: BLE001 — the type IS the assert
+            return e
+    finally:
+        conn.close()
+
+
+# ---------------------------------------------------------------------------
+class TestFrameProtocol:
+    def test_round_trip(self):
+        payload = b"x" * 57
+        frame = pack_frame(payload)
+        length, crc = unpack_header(frame[:HEADER_SIZE])
+        assert length == 57 and crc == zlib.crc32(payload)
+        assert frame[HEADER_SIZE:] == payload
+
+    def test_connection_round_trips_objects(self):
+        obj = {"job": ("stage", ["a", "b"]), "n": 3}
+        assert recv_of(pack_frame(__import__("pickle").dumps(obj))) == obj
+
+    def test_frame_error_is_oserror(self):
+        """The whole failure mapping rests on this: the process backend's
+        ``except (EOFError, OSError)`` death path must catch every frame
+        fault, send timeouts included."""
+        assert issubclass(FrameError, OSError)
+        assert issubclass(SendTimeout, FrameError)
+
+    def test_truncation_at_every_offset_never_structerror(self):
+        """A peer dying mid-frame at ANY byte offset maps to EOFError (a
+        clean boundary) or FrameError (mid-frame) — the torn frame can
+        never surface as an unhandled struct.error or a hang."""
+        frame = pack_frame(b"hello world, framed")
+        for cut in range(len(frame)):
+            out = recv_of(frame[:cut])
+            if cut == 0:
+                assert isinstance(out, EOFError)
+            else:
+                assert isinstance(out, FrameError), (cut, out)
+
+    def test_garbled_header_every_byte_maps_to_frame_error(self):
+        frame = bytearray(pack_frame(b"payload-bytes"))
+        for i in range(HEADER_SIZE):
+            bad = bytearray(frame)
+            bad[i] ^= 0xFF
+            with pytest.raises(FrameError):
+                unpack_header(bytes(bad[:HEADER_SIZE]))
+
+    def test_garbled_payload_fails_crc(self):
+        frame = bytearray(pack_frame(b"payload-bytes"))
+        frame[-1] ^= 0xFF
+        assert isinstance(recv_of(bytes(frame)), FrameError)
+
+    def test_insane_length_rejected_before_allocation(self):
+        from repro.core.transport import (FRAME_MAGIC, FRAME_VERSION,
+                                          MAX_FRAME_BYTES, _HDR, _HDR_CRC)
+        hdr = _HDR.pack(FRAME_MAGIC, FRAME_VERSION, 0, 0,
+                        MAX_FRAME_BYTES + 1, 0)
+        raw = hdr + _HDR_CRC.pack(zlib.crc32(hdr))
+        with pytest.raises(FrameError):
+            unpack_header(raw)
+
+    def test_property_truncation_and_bitflips(self):
+        hyp = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=60, deadline=None)
+        @given(payload=st.binary(min_size=0, max_size=200),
+               data=st.data())
+        def prop(payload, data):
+            frame = pack_frame(payload)
+            cut = data.draw(st.integers(0, len(frame)))
+            out = recv_of(frame[:cut])
+            if cut == len(frame):
+                assert not isinstance(out, Exception) or payload == b""
+            elif cut == 0:
+                assert isinstance(out, EOFError)
+            else:
+                assert isinstance(out, (EOFError, FrameError))
+            flip = data.draw(st.integers(0, HEADER_SIZE - 1))
+            bad = bytearray(frame[:HEADER_SIZE])
+            bad[flip] ^= data.draw(st.integers(1, 255))
+            with pytest.raises(FrameError):
+                unpack_header(bytes(bad))
+
+        prop()
+
+
+# ---------------------------------------------------------------------------
+class TestHandshake:
+    def test_hello_round_trip_carries_role_node_info(self):
+        lst = FrameListener()
+        try:
+            conn = connect_framed(lst.address, role="ctrl", node="n7",
+                                  token="tok", info={"k": 1})
+            acc, role, node, info = lst.accept_framed("tok", timeout_s=5)
+            assert (role, node, info) == ("ctrl", "n7", {"k": 1})
+            conn.send({"x": 2})
+            assert acc.recv() == {"x": 2}
+            conn.close()
+            acc.close()
+        finally:
+            lst.close()
+
+    def test_bad_token_dropped_not_accepted(self):
+        lst = FrameListener()
+        try:
+            c = connect_framed(lst.address, role="ctrl", node="n0",
+                               token="WRONG")
+            with pytest.raises(TimeoutError):
+                lst.accept_framed("right", timeout_s=0.6)
+            c.close()
+        finally:
+            lst.close()
+
+    def test_connect_gives_up_after_bounded_attempts(self):
+        # reserve a port, release it, dial it while nothing listens
+        probe = socket.create_server(("127.0.0.1", 0))
+        addr = probe.getsockname()[:2]
+        probe.close()
+        with pytest.raises(OSError):
+            connect_framed(addr, token="t", attempts=2, base_delay_s=0.01,
+                           connect_timeout_s=0.2)
+
+
+# ---------------------------------------------------------------------------
+class TestPartitionStreamServer:
+    def test_fetch_consumes_the_spill(self, tmp_path):
+        root = str(tmp_path)
+        srv = PartitionStreamServer(root)
+        try:
+            path = os.path.join(root, "part.bin")
+            items = [IngestItem(gen_lineitem(10, seed=1))]
+            write_partition_file(path, items)
+            raw = open(path, "rb").read()
+            got = fetch_stream_bytes(srv.endpoint, path)
+            assert got == raw
+            assert not os.path.exists(path)      # consume-on-read
+            assert fetch_stream_bytes(srv.endpoint, path) is None
+            assert srv.served == 1 and srv.served_bytes == len(raw)
+        finally:
+            srv.close()
+
+    def test_paths_outside_root_refused(self, tmp_path):
+        inner = tmp_path / "inner"
+        inner.mkdir()
+        secret = tmp_path / "secret.txt"
+        secret.write_bytes(b"no")
+        srv = PartitionStreamServer(str(inner))
+        try:
+            assert fetch_stream_bytes(srv.endpoint, str(secret)) is None
+            assert secret.exists()
+        finally:
+            srv.close()
+
+    def test_unreachable_endpoint_returns_none(self, tmp_path):
+        probe = socket.create_server(("127.0.0.1", 0))
+        addr = probe.getsockname()[:2]
+        probe.close()
+        assert fetch_stream_bytes(addr, str(tmp_path / "x"),
+                                  attempts=1, timeout_s=0.3) is None
+
+
+# ---------------------------------------------------------------------------
+class TestSocketTransportBasic:
+    def test_socket_run_byte_identical_to_pipe_oracle(self, tmp_path):
+        """Same shards, same plan: the socket fabric must commit exactly
+        the pipe transport's bytes — the fabric moves messages, it never
+        touches data."""
+        results = {}
+        for transport in ("pipe", "socket"):
+            ds = DataStore(str(tmp_path / transport), nodes=NODES)
+            eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                         queue_capacity=8, backend="process",
+                                         transport=transport)
+            rep = eng.run_stream(narrow_plan(ds), shard_source(8))
+            eng.close()
+            assert rep.committed_epoch_ids() == [0, 1]
+            assert read_rows(ds) == 8 * ROWS
+            results[transport] = payload_hashes(ds)
+        assert results["socket"] == results["pipe"]
+
+    def test_executor_exposes_worker_exchange_endpoint(self, store):
+        ex = ProcessNodeExecutor("n0", store, transport="socket")
+        try:
+            assert ex.exchange_endpoint is not None
+            host, port = ex.exchange_endpoint
+            assert host == "127.0.0.1" and port > 0
+            ex.send_ping()
+            deadline = time.monotonic() + 5
+            while ex.heartbeat_age() > 0.5 and time.monotonic() < deadline:
+                time.sleep(0.02)
+            assert ex.heartbeat_age() < 5      # the pong came back framed
+        finally:
+            ex.shutdown()
+
+    def test_invalid_transport_rejected(self, store):
+        with pytest.raises(ValueError):
+            ProcessNodeExecutor("n0", store, transport="carrier-pigeon")
+        with pytest.raises(ValueError):
+            StreamingRuntimeEngine(store, transport="carrier-pigeon")
+
+
+# ---------------------------------------------------------------------------
+class TestSocketDeathMatrix:
+    """The PR-8 matrix, re-run on the socket fabric: a worker death must
+    surface through the framed protocol (EOF / FrameError -> WorkerDeath)
+    exactly as it did through the pipe, with the same exactly-once
+    guarantees and zero leaks."""
+
+    MATRIX = [(edge, fault)
+              for edge in ("narrow", "shuffle", "cross-segment")
+              for fault in ("kill", "hang")]
+
+    @pytest.mark.parametrize("edge,fault", MATRIX)
+    def test_death_matrix_on_socket(self, tmp_path, edge, fault):
+        before = shm_segments()
+        ds = DataStore(str(tmp_path / f"{edge}-{fault}"), nodes=NODES)
+        plan = shuffled_plan(ds) if edge == "shuffle" else narrow_plan(ds)
+        hb = dict(heartbeat_interval_s=0.05, heartbeat_miss=3) \
+            if fault == "hang" else {}
+        eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                     queue_capacity=8, backend="process",
+                                     transport="socket", **hb)
+        eng.prewarm_executors()
+        state = {}
+        stage = "b" if edge == "cross-segment" else "a"
+        arm_signal(eng, fault, stage, state)
+        rep = eng.run_stream(plan, shard_source(16, delay_s=0.01))
+        eng.close()
+        ids = rep.committed_epoch_ids()
+        assert ids == list(range(len(ids))) and len(ids) == 4
+        victim = state["victim"]
+        assert victim and victim in rep.node_failures
+        assert read_rows(ds) == 16 * ROWS
+        if edge == "shuffle":
+            assert rep.cone_replays() == 0
+        if fault == "hang":
+            assert [d for d in rep.liveness_deaths if d[0] == victim]
+        assert_clean(ds, before)
+
+    def test_kill_recovery_byte_identical_to_pipe_oracle(self, tmp_path):
+        """A SIGTERM mid-stream on each transport: recovery replays may
+        place blocks differently, but the committed payload multiset must
+        be identical — the socket fabric's death path loses nothing the
+        pipe's kept."""
+        results = {}
+        for transport in ("pipe", "socket"):
+            ds = DataStore(str(tmp_path / f"kill-{transport}"), nodes=NODES)
+            eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                         queue_capacity=8, backend="process",
+                                         transport=transport)
+            eng.prewarm_executors()
+            state = {}
+            arm_signal(eng, "kill", "a", state)
+            rep = eng.run_stream(narrow_plan(ds),
+                                 shard_source(16, delay_s=0.01))
+            eng.close()
+            assert state["victim"] in rep.node_failures
+            assert read_rows(ds) == 16 * ROWS
+            results[transport] = payload_hashes(ds)
+        assert results["socket"] == results["pipe"]
+
+
+# ---------------------------------------------------------------------------
+class TestHostPartitionQuorum:
+    def test_partitioned_host_declared_as_unit_and_stream_recovers(
+            self, tmp_path):
+        """ChaosProxy silences both hostB workers at once: their
+        heartbeats miss *together*, the per-host quorum declares the host
+        partitioned as one unit, and the stream replays their work on the
+        hostA survivors — exactly-once, no leaks."""
+        before = shm_segments()
+        ds = DataStore(str(tmp_path / "part"), nodes=NODES)
+        interval, miss = 0.05, 3
+        eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                     queue_capacity=8, backend="process",
+                                     transport="socket", node_hosts=HOSTS,
+                                     network_chaos=True,
+                                     heartbeat_interval_s=interval,
+                                     heartbeat_miss=miss)
+        eng.prewarm_executors()
+        state = {}
+
+        def hook(rnd, src):
+            if (rnd.epoch >= 1 and HOSTS[src] == "hostB"
+                    and not state.get("fired")):
+                state["fired"] = True
+                for n, h in HOSTS.items():
+                    if h == "hostB":
+                        eng.executor(n).net_partition()
+        eng.shuffle.test_on_manifest = hook
+
+        rep = eng.run_stream(narrow_plan(ds), shard_source(16, delay_s=0.01))
+        eng.close()
+        assert state.get("fired")
+        ids = rep.committed_epoch_ids()
+        assert ids == list(range(len(ids))) and len(ids) == 4
+        # the quorum saw the host go down as a unit, not two point deaths
+        assert rep.host_partitions, "no host-level partition was declared"
+        host, members, age = rep.host_partitions[0]
+        assert host == "hostB" and sorted(members) == ["n2", "n3"]
+        assert age > interval * miss
+        # both members were declared dead together; which of them a later
+        # dispatch trips over first (surfacing in node_failures) is timing
+        assert {d[0] for d in rep.liveness_deaths} == {"n2", "n3"}
+        assert rep.node_failures
+        assert set(rep.node_failures) <= {"n2", "n3"}
+        assert read_rows(ds) == 16 * ROWS
+        assert_clean(ds, before)
+
+
+# ---------------------------------------------------------------------------
+class TestDegradedExchange:
+    def test_cross_host_shuffle_streams_and_matches_pipe_oracle(
+            self, tmp_path):
+        """Producer and consumer on different simulated hosts: the shuffle
+        partition rides the streamed peer-fetch path (kind="stream",
+        consume-on-read) instead of assuming a shared /dev/shm — and the
+        committed bytes still equal the pipe oracle's."""
+        before = shm_segments()
+        results = {}
+        for mode in ("pipe", "socket"):
+            ds = DataStore(str(tmp_path / f"dx-{mode}"), nodes=NODES)
+            kw = {}
+            if mode == "socket":
+                kw = dict(transport="socket", node_hosts=HOSTS)
+            eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                         queue_capacity=8, backend="process",
+                                         **kw)
+            rep = eng.run_stream(shuffled_plan(ds), shard_source(8))
+            eng.close()
+            assert rep.committed_epoch_ids() == [0, 1]
+            assert read_rows(ds) == 8 * ROWS
+            if mode == "socket":
+                assert rep.degraded_exchange_rounds() >= 1, \
+                    "cross-host shuffle never took the streamed path"
+                assert rep.degraded_peer_bytes() > 0
+            results[mode] = payload_hashes(ds)
+            assert_clean(ds, before)
+        assert results["socket"] == results["pipe"]
+
+
+# ---------------------------------------------------------------------------
+class TestLivenessUnderLoad:
+    def test_saturated_worker_outlives_the_miss_window(self, tmp_path):
+        """Satellite (a): a worker too busy to answer pings — but still
+        issuing store RPCs — must NOT be declared dead.  The stall runs
+        ~3x the miss window while store traffic keeps the beat fresh."""
+        ds = DataStore(str(tmp_path / "busy"), nodes=NODES)
+        interval, miss = 0.05, 3
+        eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                     queue_capacity=8, backend="process",
+                                     heartbeat_interval_s=interval,
+                                     heartbeat_miss=miss)
+        eng.prewarm_executors()
+        state = {}
+
+        def hook(rnd, src):
+            if rnd.epoch == 0 and not state.get("stalled"):
+                state["stalled"] = src
+                eng.executor(src).stall_recv(3 * interval * miss,
+                                             rpc_every=interval / 2)
+        eng.shuffle.test_on_manifest = hook
+
+        rep = eng.run_stream(narrow_plan(ds), shard_source(8))
+        eng.close()
+        assert state.get("stalled")
+        assert rep.committed_epoch_ids() == [0, 1]
+        assert rep.liveness_deaths == []        # the fix under test
+        assert not rep.node_failures
+        assert read_rows(ds) == 8 * ROWS
+
+
+# ---------------------------------------------------------------------------
+class TestRemoteSweepScoping:
+    def test_remote_executor_skips_local_shm_sweep(self, store):
+        """Satellite (b): a pid-prefix sweep on THIS host can only ever
+        name local segments — for a remote worker it must skip (and
+        count) instead of silently no-opping."""
+        ex = ProcessNodeExecutor("n0", store, host="far-host",
+                                 local_worker=False)
+        try:
+            assert ex.host == "far-host"
+        finally:
+            ex.shutdown()
+        assert ex.sweep_skips >= 1
+
+    def test_local_executor_sweeps(self, store):
+        ex = ProcessNodeExecutor("n0", store)
+        ex.shutdown()
+        assert ex.sweep_skips == 0
+
+    def test_sweep_pid_segments_counts_unlinked(self):
+        assert sweep_pid_segments(os.getpid()) == 0   # nothing to sweep
+
+    def test_run_report_counts_skips(self, tmp_path):
+        ds = DataStore(str(tmp_path / "rr"), nodes=NODES)
+        eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                     queue_capacity=8, backend="process",
+                                     transport="socket", node_hosts=HOSTS)
+        rep = eng.run_stream(narrow_plan(ds), shard_source(8))
+        eng.close()
+        # simulated hosts fork locally, so every sweep is real — the soak's
+        # leak audit depends on this staying 0
+        assert rep.sweep_skipped_remote == 0
+
+
+# ---------------------------------------------------------------------------
+class TestChaosNetPlan:
+    def test_partition_event_requires_host(self):
+        with pytest.raises(ValueError):
+            ChaosEvent("partition", 0, "a", "")
+        ev = ChaosEvent("partition", 0, "a", "", host="hostA")
+        assert ev.host == "hostA"
+
+    def test_partition_consumes_member_count_from_budget(self):
+        p = ChaosPlan.generate(9, epochs=10, nodes=NODES, stages=["a", "b"],
+                               kills=2, hangs=1, drops=1, partitions=1,
+                               hosts=HOSTS)
+        parts = [e for e in p.events if e.kind == "partition"]
+        lethal = [e for e in p.events
+                  if e.kind in ("kill", "hang", "drop")]
+        assert len(parts) == 1
+        # budget = len(NODES) - 2 = 2; the host's 2 members consume it all
+        assert lethal == []
+
+    def test_lethal_victims_avoid_partitioned_hosts(self):
+        nodes = [f"n{i}" for i in range(8)]
+        hosts = {n: ("hostA" if i < 2 else "hostB")
+                 for i, n in enumerate(nodes)}
+        p = ChaosPlan.generate(3, epochs=10, nodes=nodes, stages=["a"],
+                               kills=2, drops=1, partitions=1, hosts=hosts)
+        parts = [e for e in p.events if e.kind == "partition"]
+        assert len(parts) == 1
+        parted = parts[0].host
+        for e in p.events:
+            if e.kind in ("kill", "hang", "drop"):
+                assert hosts[e.node] != parted
+
+    def test_signal_events_gated_by_transport(self):
+        p = ChaosPlan([ChaosEvent("partition", 0, "a", "", host="hostA"),
+                       ChaosEvent("drop", 1, "a", "n0"),
+                       ChaosEvent("delay_conn", 1, "b", "n1", seconds=0.01),
+                       ChaosEvent("hang", 2, "a", "n2"),
+                       ChaosEvent("delay", 2, "b", "n3", seconds=0.0)])
+        assert [e.kind for e in p.signal_events("thread")] == ["delay"]
+        assert sorted(e.kind for e in p.signal_events("process")) \
+            == ["delay", "hang"]
+        assert sorted(e.kind for e in p.signal_events("process", "socket")) \
+            == ["delay", "delay_conn", "drop", "hang", "partition"]
+
+    def test_generation_with_net_events_is_deterministic(self):
+        kw = dict(epochs=10, nodes=NODES, stages=["a", "b"], kills=1,
+                  partitions=1, drops=1, conn_delays=1, hosts=HOSTS)
+        assert (ChaosPlan.generate(5, **kw).events
+                == ChaosPlan.generate(5, **kw).events)
+
+
+# ---------------------------------------------------------------------------
+class TestSocketChaosSoak:
+    def test_socket_soak_with_partition_passes_audit(self):
+        """The acceptance soak: chaotic epochs on the socket fabric with a
+        scheduled whole-host partition — exactly-once commits, the quorum
+        declared the host, zero leaked segments / spool / spills."""
+        res = chaos_soak(backend="process", transport="socket", epochs=12,
+                         partitions=1)
+        assert res.ok, res.errors
+        assert res.transport == "socket"
+        assert res.partitions_fired >= 1
+        assert res.host_partitions >= 1
+        assert res.rows_in == res.rows_out
+        assert res.orphans == [] and res.shm_leaked == []
+        assert res.spill_leaked == []
+
+    def test_socket_soak_rejects_thread_backend(self):
+        with pytest.raises(ValueError):
+            chaos_soak(backend="thread", transport="socket")
+
+    @pytest.mark.slow
+    def test_socket_soak_full_scale_with_drops(self):
+        res = chaos_soak(backend="process", transport="socket", epochs=20,
+                         partitions=1, drops=1, conn_delays=1, nodes=6)
+        assert res.ok, res.errors
+        assert res.partitions_fired >= 1
