@@ -238,24 +238,54 @@ def _fresh_shards(shards, delay_s: float = 0.0):
     return gen()
 
 
-def _run_shuffle_backend(shards, backend: str, transport: str = "pipe"):
+def _run_shuffle_backend(shards, backend: str, transport: str = "pipe",
+                         columnar: bool = False):
     """One streaming run of the shuffle-stage plan with the worker-side
     partition exchange (ISSUE 4), on the given node backend.  Returns
     (seconds, report) — the report carries the coordinator-vs-peer byte
     counters the trajectory records.  ``transport="socket"`` (ISSUE 9)
     runs the same plan over the framed loopback TCP fabric instead of
-    multiprocessing pipes — the gated cost of the multi-host transport."""
+    multiprocessing pipes — the gated cost of the multi-host transport.
+    ``columnar`` is pinned OFF by default so the pre-ISSUE-10 legs stay
+    item-at-a-time baselines; the columnar leg flips it on."""
     import tempfile
     n_nodes = min(os.cpu_count() or 2, 4)
     ds = DataStore(tempfile.mkdtemp(prefix="ibench_shuf_"),
                    nodes=NODES[:n_nodes])
     eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
                                  queue_capacity=2 * EPOCH_ITEMS,
-                                 backend=backend, transport=transport)
+                                 backend=backend, transport=transport,
+                                 columnar=columnar)
     if backend == "process":
         eng.prewarm_executors()   # worker spawn is setup, not throughput
     t0 = time.perf_counter()
     rep = eng.run_stream(_shuffled_plan(ds), _fresh_shards(shards))
+    secs = time.perf_counter() - t0
+    eng.close()
+    cleanup(ds)
+    return secs, rep
+
+
+def _run_columnar(scale: int, columnar: bool):
+    """One streaming run of the shuffle-stage plan on the process backend
+    with a worker-pull descriptor source (ISSUE 6) and the columnar data
+    plane (ISSUE 10) on or off.  The pulled source keeps the third
+    coordinator-byte counter at zero, so the columnar leg can assert the
+    complete invariant: NO item bytes through the coordinator on any of
+    the source, stage, or shuffle paths while column buffers cross every
+    eligible edge.  Returns (seconds, report)."""
+    import tempfile
+    n_nodes = min(os.cpu_count() or 2, 4)
+    ds = DataStore(tempfile.mkdtemp(prefix="ibench_col_"),
+                   nodes=NODES[:n_nodes])
+    eng = StreamingRuntimeEngine(ds, epoch_items=EPOCH_ITEMS,
+                                 queue_capacity=2 * EPOCH_ITEMS,
+                                 backend="process", columnar=columnar)
+    eng.prewarm_executors()   # worker spawn is setup, not throughput
+    src = GeneratorSpecSource("repro.data.generators:gen_lineitem",
+                              shards=SHARDS, rows=scale // SHARDS)
+    t0 = time.perf_counter()
+    rep = eng.run_stream(_shuffled_plan(ds), src)
     secs = time.perf_counter() - t0
     eng.close()
     cleanup(ds)
@@ -415,6 +445,39 @@ def run(scale: int) -> List[Row]:
                  f"({sock_s / shuf_proc_s:.2f}x pipe transport; framed "
                  f"TCP loopback)"))
 
+    # ---- columnar data plane (ISSUE 10): the SAME shuffle plan + process
+    # backend + worker-pull source, item-at-a-time vs column buffers across
+    # every eligible stage edge.  The columnar run must hold the complete
+    # zero-coordinator-bytes story — source, stage, AND shuffle counters all
+    # zero — while columnar_rounds proves the plane was actually engaged and
+    # columnar_fallbacks stays 0 (no silent scalar retreat).
+    # columnar_rows_per_s is the nightly-gated metric.
+    item_s, item_rep = min((_run_columnar(scale, columnar=False)
+                            for _ in range(REPEATS)), key=lambda t: t[0])
+    col_s, col_rep = min((_run_columnar(scale, columnar=True)
+                          for _ in range(REPEATS)), key=lambda t: t[0])
+    assert col_rep.columnar_rounds() > 0, (
+        "columnar leg ran zero columnar exchange rounds — the edge "
+        "annotation or round gating is broken")
+    assert col_rep.columnar_fallbacks() == 0, (
+        f"columnar leg fell back to items {col_rep.columnar_fallbacks()} "
+        f"times on a uniform columnar plan")
+    for counter in ("source_coordinator_bytes", "stage_coordinator_bytes",
+                    "shuffle_coordinator_bytes"):
+        leaked = _sum_runs(col_rep, counter)
+        assert leaked == 0, (
+            f"columnar leg leaked {leaked} B through the coordinator "
+            f"({counter})")
+    columnar_speedup = item_s / col_s
+    rows.append(("streaming/columnar_item_at_a_time", item_s,
+                 f"{scale / item_s:,.0f} rows/s (pulled source, scalar "
+                 f"exchange baseline)"))
+    rows.append(("streaming/columnar_plane", col_s,
+                 f"{scale / col_s:,.0f} rows/s ({columnar_speedup:.2f}x "
+                 f"item-at-a-time; {col_rep.columnar_rounds()} columnar "
+                 f"rounds, {col_rep.columnar_bytes():,} B as columns, "
+                 f"0 fallbacks, 0 coordinator bytes)"))
+
     # ---- thread vs process node backend on the CPU-heavy plan (ISSUE 3):
     # regex parse is interpreter-bound (GIL-held), so thread-backend nodes
     # serialize on one core while process-backend workers use them all.
@@ -542,6 +605,18 @@ def run(scale: int) -> List[Row]:
         "socket_s": sock_s,
         "socket_rows_per_s": scale / sock_s,
         "socket_vs_pipe": sock_s / shuf_proc_s,
+        # ISSUE 10: the columnar data plane — columnar_rows_per_s is gated;
+        # the item-at-a-time leg (same plan, same pulled source, columnar
+        # pinned off) rides along as the in-record baseline, and the round/
+        # byte counters keep the engagement observable in the trajectory.
+        "columnar_item_s": item_s,
+        "columnar_s": col_s,
+        "columnar_rows_per_s": scale / col_s,
+        "columnar_item_rows_per_s": scale / item_s,
+        "columnar_speedup": columnar_speedup,
+        "columnar_rounds": col_rep.columnar_rounds(),
+        "columnar_bytes": col_rep.columnar_bytes(),
+        "columnar_fallbacks": col_rep.columnar_fallbacks(),
         # ISSUE 6: worker-pull sources — pull_rows_per_s is gated; the
         # pushed baseline rides along for the hop-deletion comparison.
         "source_pushed_s": push_s,

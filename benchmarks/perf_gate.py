@@ -42,7 +42,7 @@ DEFAULT_METRIC = "pipelined_rows_per_s"
 DEFAULT_METRICS = (DEFAULT_METRIC, "shuffle_rows_per_s",
                    "resident_rows_per_s", "pull_rows_per_s",
                    "erasure_mb_per_s", "recovery_ms",
-                   "socket_rows_per_s")
+                   "socket_rows_per_s", "columnar_rows_per_s")
 # per-metric trajectory files; metrics not listed read DEFAULT_FILE
 METRIC_FILES = {"erasure_mb_per_s": STORAGE_FILE}
 # latency-style metrics regress by RISING: drop = fresh/base - 1 instead of

@@ -41,16 +41,26 @@ import pickle
 import threading
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
-from .items import IngestItem, ShmLease, _materialize_item, create_segment
+import numpy as np
+
+from .items import (ColumnarBatch, IngestItem, ShmLease, _materialize_item,
+                    create_segment)
 
 #: manifest/file naming shared with DataStore.gc_orphans
 EXCHANGE_PREFIX = "exchange_"
 #: resident-bucket spills (narrow edges: a stage output pinned on its own
 #: node that exceeded the per-edge memory share) — same GC family
 RESIDENT_PREFIX = "resident_"
+#: columnar partition spills (ISSUE 10): a ColumnarBatch written as
+#: header + raw column buffer instead of a per-item pickle stream
+COLUMNAR_PREFIX = "columnar_"
 EXCHANGE_SUFFIX = ".part"
+
+#: file magic of a columnar spill — ``read_partition_file`` sniffs it, so
+#: every scalar call site decodes either format transparently
+COLUMNAR_MAGIC = b"ICOLPART1\n"
 
 
 def stable_group_hash(value: Any) -> int:
@@ -100,6 +110,52 @@ def partition_items(items: Sequence[IngestItem], key: str,
     return parts
 
 
+def _hash_column(col: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`stable_group_hash` over a label value column —
+    must agree with the scalar function bit-for-bit so columnar-on and
+    columnar-off runs partition identically.
+
+    Integer/bool dtypes take the int path in one vector op (two's-complement
+    ``& 0x7FFFFFFF`` equals Python's ``int(v) & 0x7FFFFFFF``); unicode
+    columns hash each *unique* string once; everything else (floats may be
+    integral and object columns may hold anything) goes through the scalar
+    function per value."""
+    if col.dtype.kind in "bui":
+        return col.astype(np.int64) & np.int64(0x7FFFFFFF)
+    if col.dtype.kind == "U":
+        uniq, inv = np.unique(col, return_inverse=True)
+        hu = np.array([stable_group_hash(u.item()) for u in uniq],
+                      dtype=np.int64)
+        return hu[inv]
+    return np.array([stable_group_hash(v.item()
+                                       if isinstance(v, np.generic) else v)
+                     for v in col], dtype=np.int64)
+
+
+def partition_batch(batch: ColumnarBatch, key: str, targets: Sequence[str]
+                    ) -> Dict[str, ColumnarBatch]:
+    """Vectorized twin of :func:`partition_items` over a ColumnarBatch
+    (ISSUE 10): one hash pass over the key label column, then an
+    order-preserving ``select`` per target — ``np.nonzero`` indices are
+    ascending, so each partition keeps the original item order and the
+    resulting manifests are byte-identical to the scalar path's."""
+    n = len(targets)
+    if n == 1:
+        # single-target round: the whole batch maps to targets[0] in its
+        # original order — hand it through rather than gather-copying it.
+        # Callers always build ``batch`` via ``from_items`` (which copies),
+        # so the passthrough still owns its payload like a ``select`` would
+        return {targets[0]: batch}
+    col = batch.label_col(key)
+    if col is None:
+        # scalar path: label_value(key, 0) defaults missing labels to 0
+        pids = np.zeros(len(batch), np.int64)
+    else:
+        pids = _hash_column(col) % n
+    return {t: batch.select(np.nonzero(pids == ti)[0])
+            for ti, t in enumerate(targets)}
+
+
 def build_manifest(out: Sequence[IngestItem], key: Optional[str],
                    targets: Sequence[str],
                    part_fn: Any, self_node: Optional[str] = None
@@ -112,18 +168,27 @@ def build_manifest(out: Sequence[IngestItem], key: Optional[str],
     to ``self_node`` — the producer itself — so it stays node-resident.
     Keeping the iteration and manifest shape here means both backends stay
     wire-compatible with ``ShuffleCoordinator.record_manifest`` /
-    ``finish_round``."""
+    ``finish_round``.
+
+    ``out`` may also be a :class:`ColumnarBatch` (ISSUE 10): partitioning
+    goes through the vectorized :func:`partition_batch` and ``part_fn``
+    receives each partition as a sub-batch — same manifest shape, same
+    byte accounting (``batch.nbytes == sum(it.nbytes())``)."""
     if key is None:
         if self_node is None:
             raise ValueError("narrow-edge manifest needs the producing node")
-        parts: Dict[str, List[IngestItem]] = {self_node: list(out)}
+        parts: Dict[str, Any] = {
+            self_node: out if isinstance(out, ColumnarBatch) else list(out)}
+    elif isinstance(out, ColumnarBatch):
+        parts = partition_batch(out, key, targets)
     else:
         parts = partition_items(out, key, targets)
     manifest: Dict[str, Any] = {"total_count": len(out), "parts": {}}
     for dst, its in parts.items():
         if not its:
             continue
-        nb = sum(it.nbytes() for it in its)
+        nb = (its.nbytes if isinstance(its, ColumnarBatch)
+              else sum(it.nbytes() for it in its))
         manifest["parts"][dst] = part_fn(dst, its, nb)
     return manifest
 
@@ -161,14 +226,52 @@ def encode_partition(items: Sequence[IngestItem]
     return desc, ShmLease(shm)
 
 
+def encode_columnar_partition(batch: ColumnarBatch
+                              ) -> Tuple[Dict[str, Any], ShmLease]:
+    """Columnar twin of :func:`encode_partition` (ISSUE 10): the batch's one
+    contiguous column buffer is written straight into the segment — no
+    per-item pickling — followed by the pickled batch header.  The
+    descriptor carries ``columnar=True`` so ``decode_partition`` dispatches;
+    everything the coordinator touches (segment name, sizes, counts) keeps
+    the exact shape of the scalar descriptor."""
+    header = pickle.dumps(batch.header(), protocol=5)
+    pay = np.ascontiguousarray(batch.payload)
+    total = pay.nbytes + len(header)
+    shm = create_segment(max(total, 1))
+    shm.buf[:pay.nbytes] = memoryview(pay).cast("B")
+    shm.buf[pay.nbytes:total] = header
+    desc = {"kind": "shm", "columnar": True, "shm": shm.name,
+            "payload_nbytes": pay.nbytes, "meta": (pay.nbytes, len(header)),
+            "nbytes": batch.nbytes, "count": len(batch)}
+    return desc, ShmLease(shm)
+
+
 def decode_partition(desc: Dict[str, Any], copy: bool = False
                      ) -> Tuple[List[IngestItem], Optional[ShmLease]]:
     """Decode a peer partition from its segment descriptor.
 
     ``copy=False`` returns zero-copy views plus the lease the caller must
     hold while the items are in use and ``release()`` afterwards;
-    ``copy=True`` materializes and destroys the segment before returning."""
+    ``copy=True`` materializes and destroys the segment before returning.
+
+    Columnar descriptors (``columnar=True``) dispatch internally: the items
+    come back as views over the batch's column buffer, so every consumer
+    call site handles both formats without change."""
     from multiprocessing import shared_memory
+    if desc.get("columnar"):
+        shm = shared_memory.SharedMemory(name=desc["shm"])
+        lease = ShmLease(shm)
+        moff, mlen = desc["meta"]
+        header = pickle.loads(bytes(shm.buf[moff:moff + mlen]))
+        pay = np.frombuffer(shm.buf, np.uint8, count=desc["payload_nbytes"])
+        items = ColumnarBatch.from_header(header, pay).to_items()
+        if not copy:
+            del pay
+            return items, lease
+        out = [_materialize_item(it) for it in items]
+        del items, pay
+        lease.release()
+        return out, None
     shm = shared_memory.SharedMemory(name=desc["shm"])
     lease = ShmLease(shm)
     base = memoryview(shm.buf)
@@ -214,11 +317,23 @@ def resident_file_name(epoch: Optional[int], xid: int, node: str) -> str:
     return f"{RESIDENT_PREFIX}e{e}_x{xid}_{node}{EXCHANGE_SUFFIX}"
 
 
+def columnar_file_name(epoch: Optional[int], xid: int, src: str,
+                       dst: str) -> str:
+    """Spill name for a columnar partition (ISSUE 10) — a peer partition
+    when ``src != dst``, the node's own resident bucket when ``src == dst``.
+    Same naming family as ``exchange_*``/``resident_*`` so ``gc_orphans``
+    reclaims a crashed epoch's columnar spills too."""
+    e = "B" if epoch is None or epoch < 0 else str(epoch)
+    return f"{COLUMNAR_PREFIX}e{e}_x{xid}_{src}_to_{dst}{EXCHANGE_SUFFIX}"
+
+
 def is_exchange_file(fn: str) -> bool:
     """Spill files — peer partitions (``exchange_*``), resident-bucket spills
-    (``resident_*``), and their torn temp halves (a crash between the temp
-    write and the rename) — all crash garbage the store GC reclaims."""
-    return fn.startswith((EXCHANGE_PREFIX, RESIDENT_PREFIX)) and (
+    (``resident_*``), columnar partitions (``columnar_*``), and their torn
+    temp halves (a crash between the temp write and the rename) — all crash
+    garbage the store GC reclaims."""
+    return fn.startswith((EXCHANGE_PREFIX, RESIDENT_PREFIX,
+                          COLUMNAR_PREFIX)) and (
         fn.endswith(EXCHANGE_SUFFIX) or fn.endswith(EXCHANGE_SUFFIX + ".tmp"))
 
 
@@ -234,11 +349,46 @@ def write_partition_file(path: str, items: Sequence[IngestItem]
             "nbytes": os.path.getsize(path), "count": len(items)}
 
 
+def write_columnar_file(path: str, batch: ColumnarBatch) -> Dict[str, Any]:
+    """Spill a ColumnarBatch: magic + pickled header + raw column buffer,
+    temp-write + rename like :func:`write_partition_file`.  Readers sniff
+    the magic, so the consumer side needs no format knowledge up front."""
+    header = pickle.dumps(batch.header(), protocol=5)
+    pay = np.ascontiguousarray(batch.payload)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(COLUMNAR_MAGIC)
+        f.write(len(header).to_bytes(8, "little"))
+        f.write(header)
+        f.write(memoryview(pay).cast("B"))
+    os.replace(tmp, path)
+    return {"kind": "file", "path": path, "columnar": True,
+            "nbytes": os.path.getsize(path), "count": len(batch)}
+
+
+def decode_columnar_bytes(data: bytes) -> ColumnarBatch:
+    """Rebuild a ColumnarBatch from the byte image of a columnar spill file
+    (a local read or a streamed degraded-mode fetch)."""
+    m = len(COLUMNAR_MAGIC)
+    hlen = int.from_bytes(data[m:m + 8], "little")
+    header = pickle.loads(data[m + 8:m + 8 + hlen])
+    # bytearray copy: downstream operators may mutate the decoded views
+    pay = np.frombuffer(bytearray(data[m + 8 + hlen:]), np.uint8)
+    return ColumnarBatch.from_header(header, pay)
+
+
 def read_partition_file(path: str, remove: bool = True) -> List[IngestItem]:
     """Consume-on-read: a spilled partition is deleted once its (final)
-    consumer has loaded it."""
+    consumer has loaded it.  Dispatches on the columnar magic, so scalar
+    and columnar spills share every call site."""
     with open(path, "rb") as f:
-        items = pickle.load(f)
+        head = f.read(len(COLUMNAR_MAGIC))
+        if head == COLUMNAR_MAGIC:
+            f.seek(0)
+            items = decode_columnar_bytes(f.read()).to_items()
+        else:
+            f.seek(0)
+            items = pickle.load(f)
     if remove:
         try:
             os.remove(path)
@@ -263,6 +413,8 @@ def fetch_stream_partition(ref: Dict[str, Any]) -> List[IngestItem]:
     if endpoint:
         data = fetch_stream_bytes((endpoint[0], int(endpoint[1])), path)
         if data is not None:
+            if data.startswith(COLUMNAR_MAGIC):
+                return decode_columnar_bytes(data).to_items()
             return pickle.loads(data)
     try:
         return read_partition_file(path, remove=True)
@@ -283,6 +435,7 @@ class _Bucket:
     nbytes: int = 0
     leases: List[ShmLease] = field(default_factory=list)
     paths: List[str] = field(default_factory=list)   # unread spill files
+    batches: List[ColumnarBatch] = field(default_factory=list)  # ISSUE 10
 
 
 class PartitionExchange:
@@ -319,6 +472,16 @@ class PartitionExchange:
             if path is not None:
                 b.paths.append(path)
 
+    def deposit_batch(self, xid: int, dst: str, batch: ColumnarBatch) -> None:
+        """Deposit a columnar partition (ISSUE 10): the batch stays packed in
+        the bucket — item materialization happens at first collect, so the
+        producer side never touches per-item objects.  The batch owns its
+        payload (``from_items``/``select`` copy), so no lease rides along."""
+        with self._lock:
+            b = self._buckets.setdefault((xid, dst), _Bucket())
+            b.batches.append(batch)
+            b.nbytes += batch.nbytes
+
     def collect(self, xid: int, node: str, last: bool = True
                 ) -> Tuple[List[IngestItem], List[ShmLease]]:
         """Partitions addressed to ``node`` in round ``xid``.  Spilled files
@@ -330,10 +493,15 @@ class PartitionExchange:
             if b is None:
                 return [], []
             paths, b.paths = list(b.paths), []
+            batches, b.batches = list(b.batches), []
         for p in paths:   # file I/O outside the lock
             loaded = read_partition_file(p, remove=True)
             with self._lock:
                 b.items.extend(loaded)
+        for batch in batches:   # unpack outside the lock too
+            unpacked = batch.to_items()
+            with self._lock:
+                b.items.extend(unpacked)
         with self._lock:
             if last:
                 self._buckets.pop((xid, node), None)

@@ -216,7 +216,10 @@ def items_nbytes(items: Sequence["IngestItem"]) -> int:
     """Total payload bytes of an item batch — the unit every dataflow byte
     counter (`stage_coordinator_bytes`, `shuffle_peer_bytes`,
     `stage_resident_bytes`) accounts in, so thread- and process-backend
-    numbers are comparable."""
+    numbers are comparable.  Accepts a ColumnarBatch (same accounting:
+    payload bytes only)."""
+    if isinstance(items, ColumnarBatch):
+        return items.nbytes
     return sum(it.nbytes() for it in items)
 
 
@@ -320,7 +323,21 @@ def encode_items(items: Sequence["IngestItem"],
     Returns ``(payload, lease)``; ``lease`` is None for the inline-pickle
     fallback, else the producer must ``detach()`` it once the payload has been
     handed to the transport.  ``payload`` is a plain picklable dict.
+
+    Columnar fast path (ISSUE 10): a :class:`ColumnarBatch` writes its one
+    contiguous column buffer straight into the segment — no per-item
+    pickling; ``decode_items`` hands back the batch.
     """
+    if isinstance(items, ColumnarBatch):
+        header = pickle.dumps(items.header(), protocol=5)
+        pay = np.ascontiguousarray(items.payload)
+        if pay.nbytes < shm_min_bytes:
+            return {"kind": "pickle", "columnar": True, "meta": header,
+                    "buffers": [bytearray(memoryview(pay).cast("B"))]}, None
+        shm = create_segment(max(pay.nbytes, 1))
+        shm.buf[:pay.nbytes] = memoryview(pay).cast("B")
+        return {"kind": "shm", "columnar": True, "meta": header,
+                "shm": shm.name, "payload_nbytes": pay.nbytes}, ShmLease(shm)
     buffers: List[pickle.PickleBuffer] = []
     meta = pickle.dumps(list(items), protocol=5,
                         buffer_callback=buffers.append)
@@ -356,7 +373,28 @@ def decode_items(payload: Dict[str, Any], copy: bool = False
     are in use and ``release()`` it afterwards.  With ``copy=True`` the
     arrays are materialized and the segment is released (and unlinked)
     before returning — the safe mode when decoded items outlive the call.
+
+    A payload carrying ``columnar=True`` (see the ``encode_items`` fast
+    path) decodes to the :class:`ColumnarBatch` itself instead of an item
+    list — same ``(value, lease)`` contract.
     """
+    if payload.get("columnar"):
+        header = pickle.loads(payload["meta"])
+        if payload["kind"] == "pickle":
+            pay = np.frombuffer(payload["buffers"][0], np.uint8)
+            return ColumnarBatch.from_header(header, pay), None
+        from multiprocessing import shared_memory
+        shm = shared_memory.SharedMemory(name=payload["shm"])
+        lease = ShmLease(shm)
+        pay = np.frombuffer(shm.buf, np.uint8,
+                            count=payload["payload_nbytes"])
+        batch = ColumnarBatch.from_header(header, pay)
+        if not copy:
+            return batch, lease
+        batch.payload = pay.copy()
+        del pay
+        lease.release()
+        return batch, None
     if payload["kind"] == "pickle":
         return pickle.loads(payload["meta"],
                             buffers=payload.get("buffers") or ()), None
@@ -387,6 +425,351 @@ def _materialize_item(item: "IngestItem") -> "IngestItem":
     else:
         return item
     return replace(item, data=d)
+
+
+# ---------------------------------------------------------------------------
+# Columnar batch plane (ISSUE 10): the unit that crosses stage edges
+# ---------------------------------------------------------------------------
+# A ColumnarBatch is one contiguous uint8 payload buffer + an int64 offsets
+# vector + struct-of-arrays label/meta columns.  It represents a batch of
+# IngestItems whose payload type and label shape are uniform — the common case
+# between two batch-mode pipeline blocks — without any per-item pickling.
+# ``from_items`` returns None for anything non-uniform: the scalar
+# item-at-a-time path stays the fallback and correctness oracle everywhere.
+#
+# Payload kinds:
+#   "bytes"   — raw byte payloads; ``offsets`` are byte offsets per item
+#   "array"   — same-dtype ndarrays; byte offsets + per-item shapes in aux
+#   "columns" — dict-of-arrays chunks sharing a schema; payload is
+#               column-major (one region per field, regions in schema order)
+#               and ``offsets`` are ROW offsets per item
+#   "block"   — SerializedBlock payload bytes; layouts/headers in aux
+
+
+def _label_column(vals: List[Any]) -> np.ndarray:
+    """One label position across the batch as a column.  Tight numpy dtypes
+    only when every value is exactly the same scalar type (``np.asarray``
+    would silently stringify mixed lists and overflow huge ints); everything
+    else rides an object column and round-trips through pickle faithfully."""
+    t0 = type(vals[0])
+    if t0 in (int, bool, float, str) and all(type(v) is t0 for v in vals):
+        try:
+            col = np.asarray(vals)
+            if col.shape == (len(vals),) and col.dtype.kind in "biufU":
+                return col
+        except (OverflowError, ValueError):
+            pass
+    col = np.empty(len(vals), dtype=object)
+    col[:] = vals
+    return col
+
+
+def _label_at(col: np.ndarray, i: int) -> Any:
+    v = col[i]
+    return v.item() if isinstance(v, np.generic) else v
+
+
+class ColumnarBatch:
+    """A batch of uniform IngestItems as column buffers (ISSUE 10)."""
+
+    __slots__ = ("payload", "offsets", "kind", "aux",
+                 "label_ops", "label_cols", "grans", "metas")
+
+    def __init__(self, payload: np.ndarray, offsets: np.ndarray, kind: str,
+                 aux: Dict[str, Any], label_ops: Tuple[str, ...],
+                 label_cols: Tuple[np.ndarray, ...], grans: np.ndarray,
+                 metas: Optional[List[Dict[str, Any]]]) -> None:
+        self.payload = payload        # 1-D uint8, may view a shm segment
+        self.offsets = offsets        # int64, len == count + 1
+        self.kind = kind
+        self.aux = aux
+        self.label_ops = label_ops    # uniform per-item label op sequence
+        self.label_cols = label_cols  # one value column per label position
+        self.grans = grans            # int8 Granularity codes
+        self.metas = metas            # None == every item's meta was empty
+
+    def __len__(self) -> int:
+        return len(self.grans)
+
+    @property
+    def nbytes(self) -> int:
+        """Payload bytes only — exactly ``sum(it.nbytes())`` of the items, so
+        manifest byte accounting is identical columnar on/off."""
+        return int(self.payload.nbytes)
+
+    # -------------------------------------------------------------- building
+    @classmethod
+    def from_items(cls, items: Sequence["IngestItem"]
+                   ) -> Optional["ColumnarBatch"]:
+        """Column-pack a batch; None when the batch is not uniform enough
+        (mixed payload types/dtypes/schemas or divergent label shapes) — the
+        caller falls back to the scalar path silently."""
+        items = list(items)
+        n = len(items)
+        if n == 0:
+            return cls(np.empty(0, np.uint8), np.zeros(1, np.int64), "bytes",
+                       {}, (), (), np.empty(0, np.int8), None)
+        try:
+            ops0 = tuple(l.op for l in items[0].labels)
+            for it in items[1:]:
+                if tuple(l.op for l in it.labels) != ops0:
+                    return None
+            d0 = items[0].data
+            if type(d0) is bytes:
+                packed = cls._pack_bytes(items)
+            elif type(d0) is np.ndarray:
+                packed = cls._pack_arrays(items)
+            elif type(d0) is dict:
+                packed = cls._pack_columns(items)
+            else:
+                from ..layouts.blocks import SerializedBlock
+                if type(d0) is SerializedBlock:
+                    packed = cls._pack_blocks(items)
+                else:
+                    return None
+            if packed is None:
+                return None
+            kind, payload, offsets, aux = packed
+            label_cols = tuple(
+                _label_column([it.labels[j].value for it in items])
+                for j in range(len(ops0)))
+            grans = np.fromiter((int(it.granularity) for it in items),
+                                np.int8, n)
+            metas = (None if all(not it.meta for it in items)
+                     else [dict(it.meta) for it in items])
+            return cls(payload, offsets, kind, aux, ops0, label_cols,
+                       grans, metas)
+        except Exception:
+            return None   # fallback is sacred: never fail a uniformity probe
+
+    @staticmethod
+    def _byte_offsets(lens: List[int]) -> np.ndarray:
+        offsets = np.zeros(len(lens) + 1, np.int64)
+        np.cumsum(np.asarray(lens, np.int64), out=offsets[1:])
+        return offsets
+
+    @classmethod
+    def _pack_bytes(cls, items):
+        for it in items:
+            if type(it.data) is not bytes:
+                return None
+        offsets = cls._byte_offsets([len(it.data) for it in items])
+        payload = np.empty(int(offsets[-1]), np.uint8)
+        for it, o in zip(items, offsets[:-1]):
+            if it.data:
+                payload[int(o):int(o) + len(it.data)] = \
+                    np.frombuffer(it.data, np.uint8)
+        return "bytes", payload, offsets, {}
+
+    @classmethod
+    def _pack_arrays(cls, items):
+        d0 = items[0].data
+        if d0.dtype.kind not in "biufSU":
+            return None
+        arrs = []
+        for it in items:
+            if type(it.data) is not np.ndarray or it.data.dtype != d0.dtype:
+                return None
+            arrs.append(np.ascontiguousarray(it.data))
+        offsets = cls._byte_offsets([a.nbytes for a in arrs])
+        payload = np.empty(int(offsets[-1]), np.uint8)
+        for a, o in zip(arrs, offsets[:-1]):
+            if a.nbytes:
+                payload[int(o):int(o) + a.nbytes] = \
+                    a.reshape(-1).view(np.uint8)
+        return "array", payload, offsets, {
+            "dtype": d0.dtype.str, "shapes": tuple(a.shape for a in arrs)}
+
+    @classmethod
+    def _pack_columns(cls, items):
+        d0 = items[0].data
+        keys = tuple(d0.keys())
+        schema = []
+        for k in keys:
+            a0 = d0[k]
+            if type(a0) is not np.ndarray or a0.dtype.kind not in "biufSU":
+                return None
+            schema.append((k, a0.dtype.str, a0.shape[1:]))
+        rows = []
+        for it in items:
+            if type(it.data) is not dict or tuple(it.data.keys()) != keys:
+                return None
+            r = None
+            for k, dstr, ts in schema:
+                a = it.data[k]
+                if (type(a) is not np.ndarray or a.dtype.str != dstr
+                        or a.shape[1:] != ts):
+                    return None
+                if r is None:
+                    r = a.shape[0]
+                elif a.shape[0] != r:
+                    return None
+            rows.append(0 if r is None else r)
+        offsets = cls._byte_offsets(rows)
+        total_rows = int(offsets[-1])
+        sizes = [np.dtype(dstr).itemsize * int(np.prod(ts, dtype=np.int64))
+                 for _, dstr, ts in schema]
+        payload = np.empty(total_rows * sum(sizes), np.uint8)
+        pos = 0
+        for (k, dstr, ts), rowbytes in zip(schema, sizes):
+            size = total_rows * rowbytes
+            region = payload[pos:pos + size].view(np.dtype(dstr)) \
+                .reshape((total_rows,) + ts)
+            r = 0
+            for it in items:
+                a = it.data[k]
+                region[r:r + a.shape[0]] = a
+                r += a.shape[0]
+            pos += size
+        return "columns", payload, offsets, {"schema": tuple(schema)}
+
+    @classmethod
+    def _pack_blocks(cls, items):
+        from ..layouts.blocks import SerializedBlock
+        for it in items:
+            if type(it.data) is not SerializedBlock:
+                return None
+        offsets = cls._byte_offsets([len(it.data.payload) for it in items])
+        payload = np.empty(int(offsets[-1]), np.uint8)
+        for it, o in zip(items, offsets[:-1]):
+            if it.data.payload:
+                payload[int(o):int(o) + len(it.data.payload)] = \
+                    np.frombuffer(it.data.payload, np.uint8)
+        return "block", payload, offsets, {
+            "layouts": tuple(it.data.layout for it in items),
+            "headers": tuple(dict(it.data.header) for it in items)}
+
+    # ------------------------------------------------------------- accessors
+    def columns(self) -> Columns:
+        """The whole batch's fields as full-length column views over the
+        payload buffer — zero-copy, and the direct feed for
+        :func:`as_device_columns` (ingest -> accelerator without a gather)."""
+        if self.kind != "columns":
+            raise ValueError(f"columns() on kind {self.kind!r}")
+        total_rows = int(self.offsets[-1])
+        out: Columns = {}
+        pos = 0
+        for k, dstr, ts in self.aux["schema"]:
+            dt = np.dtype(dstr)
+            size = total_rows * dt.itemsize * int(np.prod(ts, dtype=np.int64))
+            out[k] = self.payload[pos:pos + size].view(dt) \
+                .reshape((total_rows,) + tuple(ts))
+            pos += size
+        return out
+
+    def device_columns(self) -> Dict[str, Any]:
+        """Device arrays straight from the (possibly shm-backed) column
+        buffers — :func:`as_device_array` DLPack-imports each field view."""
+        return as_device_columns(self.columns())
+
+    def label_col(self, op: str) -> Optional[np.ndarray]:
+        """Value column of the LAST label written by ``op`` (mirrors
+        ``IngestItem.label_value``'s last-wins scan), or None."""
+        for j in range(len(self.label_ops) - 1, -1, -1):
+            if self.label_ops[j] == op:
+                return self.label_cols[j]
+        return None
+
+    # ----------------------------------------------------------- round trips
+    def to_items(self) -> List["IngestItem"]:
+        """Rebuild the IngestItems.  Array/columns payloads come back as
+        views over the batch payload — the caller keeps the batch (or its
+        shm lease) alive while the items are in use, exactly the
+        ``decode_items(copy=False)`` contract."""
+        n = len(self)
+        labels = [tuple(Label(op, _label_at(col, i))
+                        for op, col in zip(self.label_ops, self.label_cols))
+                  for i in range(n)]
+        metas = self.metas or [{} for _ in range(n)]
+        pay, off = self.payload, self.offsets
+        datas: List[Any]
+        if self.kind == "bytes":
+            datas = [pay[int(off[i]):int(off[i + 1])].tobytes()
+                     for i in range(n)]
+        elif self.kind == "array":
+            dt = np.dtype(self.aux["dtype"])
+            datas = [pay[int(off[i]):int(off[i + 1])].view(dt)
+                     .reshape(self.aux["shapes"][i]) for i in range(n)]
+        elif self.kind == "columns":
+            cols = self.columns()
+            datas = [{k: v[int(off[i]):int(off[i + 1])]
+                      for k, v in cols.items()} for i in range(n)]
+        else:
+            from ..layouts.blocks import SerializedBlock
+            datas = [SerializedBlock(self.aux["layouts"][i],
+                                     pay[int(off[i]):int(off[i + 1])]
+                                     .tobytes(),
+                                     dict(self.aux["headers"][i]))
+                     for i in range(n)]
+        return [IngestItem(datas[i], Granularity(int(self.grans[i])),
+                           labels[i], dict(metas[i])) for i in range(n)]
+
+    def select(self, idx: np.ndarray) -> "ColumnarBatch":
+        """Order-preserving item selection into a fresh, self-owned batch
+        (the vectorized-partition building block)."""
+        idx = np.asarray(idx, np.int64)
+        n2 = len(idx)
+        off = self.offsets
+        lens = off[idx + 1] - off[idx] if n2 else np.empty(0, np.int64)
+        new_off = np.zeros(n2 + 1, np.int64)
+        np.cumsum(lens, out=new_off[1:])
+        label_cols = tuple(col[idx] for col in self.label_cols)
+        grans = self.grans[idx]
+        metas = (None if self.metas is None
+                 else [dict(self.metas[int(i)]) for i in idx])
+        aux = self.aux
+        if self.kind == "columns":
+            if n2:
+                row_idx = np.concatenate(
+                    [np.arange(int(off[i]), int(off[i + 1])) for i in idx])
+            else:
+                row_idx = np.empty(0, np.int64)
+            cols = self.columns()
+            total2 = len(row_idx)
+            sizes = [np.dtype(d).itemsize * int(np.prod(ts, dtype=np.int64))
+                     for _, d, ts in aux["schema"]]
+            payload = np.empty(total2 * sum(sizes), np.uint8)
+            pos = 0
+            for (k, dstr, ts), rowbytes in zip(aux["schema"], sizes):
+                size = total2 * rowbytes
+                region = payload[pos:pos + size].view(np.dtype(dstr)) \
+                    .reshape((total2,) + tuple(ts))
+                region[:] = cols[k][row_idx]
+                pos += size
+        else:
+            if n2:
+                payload = np.concatenate(
+                    [self.payload[int(off[i]):int(off[i + 1])] for i in idx])
+            else:
+                payload = np.empty(0, np.uint8)
+            if self.kind == "array":
+                aux = {"dtype": aux["dtype"],
+                       "shapes": tuple(aux["shapes"][int(i)] for i in idx)}
+            elif self.kind == "block":
+                aux = {"layouts": tuple(aux["layouts"][int(i)] for i in idx),
+                       "headers": tuple(dict(aux["headers"][int(i)])
+                                        for i in idx)}
+        return ColumnarBatch(payload, new_off, self.kind, aux,
+                             self.label_ops, label_cols, grans, metas)
+
+    # ----------------------------------------------------------------- codec
+    def header(self) -> Dict[str, Any]:
+        """Everything but the payload buffer, as one picklable dict."""
+        return {"kind": self.kind, "offsets": self.offsets, "aux": self.aux,
+                "label_ops": self.label_ops, "label_cols": self.label_cols,
+                "grans": self.grans, "metas": self.metas,
+                "nbytes": self.nbytes}
+
+    @classmethod
+    def from_header(cls, header: Dict[str, Any], payload: np.ndarray
+                    ) -> "ColumnarBatch":
+        if payload.nbytes != header["nbytes"]:
+            raise ValueError(
+                f"columnar payload is {payload.nbytes} bytes, header "
+                f"says {header['nbytes']}")
+        return cls(payload, header["offsets"], header["kind"], header["aux"],
+                   header["label_ops"], header["label_cols"],
+                   header["grans"], header["metas"])
 
 
 def matches(item: IngestItem, predicates: Dict[str, Any]) -> bool:

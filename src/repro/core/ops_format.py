@@ -6,6 +6,7 @@ partitioning) or be reordered by the user (global vs per-chunk sort).
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
@@ -29,6 +30,10 @@ class PartitionOp(IngestOp):
     name = "partition"
     granularity_in = Granularity.CHUNK
     granularity_out = Granularity.CHUNK
+    # already numpy-vectorized per chunk; the default scalar-loop
+    # process_batch is identical, and marking it capable lets partition
+    # stages anchor columnar edges (ISSUE 10)
+    batch_capable = True
 
     def __init__(self, key: Optional[str] = None, scheme: str = "hash",
                  num_partitions: int = 8, bounds: Optional[Sequence[float]] = None,
@@ -89,6 +94,7 @@ class ChunkOp(IngestOp):
     name = "chunk"
     granularity_in = Granularity.CHUNK
     granularity_out = Granularity.CHUNK
+    batch_capable = True
 
     def __init__(self, target_bytes: Optional[int] = None, target_rows: Optional[int] = None,
                  **kw: Any) -> None:
@@ -128,6 +134,7 @@ class OrderOp(IngestOp):
     name = "order"
     granularity_in = Granularity.CHUNK
     granularity_out = Granularity.CHUNK
+    batch_capable = True
 
     def __init__(self, key: str, descending: bool = False, **kw: Any) -> None:
         super().__init__(key=key, descending=descending, **kw)
@@ -222,9 +229,15 @@ class PackOp(IngestOp):
     batch_capable = True
 
     def __init__(self, seq_len: int = 2048, rows_per_block: int = 64, pad_id: int = 0,
-                 **kw: Any) -> None:
-        super().__init__(seq_len=seq_len, rows_per_block=rows_per_block, pad_id=pad_id, **kw)
+                 use_pallas: bool = False, **kw: Any) -> None:
+        super().__init__(seq_len=seq_len, rows_per_block=rows_per_block,
+                         pad_id=pad_id, use_pallas=use_pallas, **kw)
         self.seq_len, self.rows_per_block, self.pad_id = seq_len, rows_per_block, pad_id
+        self.use_pallas = use_pallas
+        self._pack_kernel = None
+        if use_pallas:
+            from ..kernels import ops as k_ops  # lazy: jax import
+            self._pack_kernel = k_ops.pack_tokens
         self._block_idx = 0
 
     def _sequences(self, cols: Columns) -> List[np.ndarray]:
@@ -290,18 +303,106 @@ class PackOp(IngestOp):
     def process(self, item: IngestItem) -> Iterable[IngestItem]:
         yield from self._emit_blocks(item, self._pack_rows(item))
 
+    # --------------------------------------------- kernel route (ISSUE 10)
+    def _plan_rows(self, item: IngestItem) -> List[List[np.ndarray]]:
+        """First-fit planning only: the exact walk of ``_pack_rows`` (same
+        split/flush decisions), recording each row's pieces instead of
+        writing row buffers — the host half of the kernel route."""
+        seqs = self._sequences(item.data)
+        S = self.seq_len
+        rows: List[List[np.ndarray]] = []
+        cur: List[np.ndarray] = []
+        fill = 0
+        for s in seqs:
+            for off in range(0, len(s), S):
+                piece = s[off : off + S]
+                if fill + len(piece) > S and fill > 0:
+                    rows.append(cur)
+                    cur, fill = [], 0
+                cur.append(piece)
+                fill += len(piece)
+                if fill == S:
+                    rows.append(cur)
+                    cur, fill = [], 0
+        if fill > 0:
+            rows.append(cur)
+        return rows
+
+    def _kernel_pack(self, items: List[IngestItem]
+                     ) -> List[List[Dict[str, np.ndarray]]]:
+        """Pack every item's rows through ``kernels.pack_tokens`` in ONE
+        launch: the host-side first-fit plan concatenates all pieces into a
+        flat int32 stream (a row's pieces are adjacent by construction), the
+        kernel gathers each row's [start, len) slice into the padded
+        (R, seq_len) token matrix and the valid-mask plane (== loss_mask —
+        a row fills contiguously from 0).  Per-piece ``positions`` /
+        ``segment_ids`` are cheap host-side fills from the plan.  Output
+        rows are byte-identical to ``_pack_rows`` — the scalar path stays
+        the correctness oracle (tests/test_columnar_plane.py)."""
+        plans = [self._plan_rows(it) for it in items]
+        all_rows = [row for plan in plans for row in plan]
+        if not all_rows:
+            return [[] for _ in plans]
+        S = self.seq_len
+        flat_parts: List[np.ndarray] = []
+        starts, lens = [], []
+        off = 0
+        for row in all_rows:
+            n = sum(len(p) for p in row)
+            starts.append(off)
+            lens.append(n)
+            flat_parts.extend(row)
+            off += n
+        flat = np.concatenate(flat_parts).astype(np.int32, copy=False)
+        t0 = time.perf_counter()
+        toks, mask, _ = self._pack_kernel(
+            flat, np.asarray(starts, np.int32), np.asarray(lens, np.int32),
+            S, pad_id=self.pad_id)
+        toks, mask = np.asarray(toks), np.asarray(mask)
+        self.kernel_ms_total += (time.perf_counter() - t0) * 1000.0
+        out_rows: List[Dict[str, np.ndarray]] = []
+        for r, row in enumerate(all_rows):
+            pos = np.zeros(S, np.int32)
+            sid = np.zeros(S, np.int32)
+            fill = 0
+            for pi, piece in enumerate(row):
+                n = len(piece)
+                pos[fill : fill + n] = np.arange(n, dtype=np.int32)
+                sid[fill : fill + n] = pi + 1
+                fill += n
+            out_rows.append({"tokens": toks[r], "loss_mask": mask[r],
+                             "positions": pos, "segment_ids": sid})
+        split: List[List[Dict[str, np.ndarray]]] = []
+        i = 0
+        for plan in plans:
+            split.append(out_rows[i : i + len(plan)])
+            i += len(plan)
+        return split
+
     def process_batch(self, items: Sequence[IngestItem]) -> List[IngestItem]:
         """Batch pack (ISSUE 7): the stateless row packing fans out over the
         shared pool; block labels are assigned serially afterwards, so the
         output (and ``_block_idx`` order) is byte-identical to the serial
         iterator — unlike scalar parallel mode, where threads race on the
-        block counter."""
+        block counter.  With ``use_pallas`` the whole batch routes through
+        the ``pack_tokens`` kernel instead (ISSUE 10), falling back to the
+        scalar packer on any kernel-side failure."""
         items = list(items)
+        if self._pack_kernel is not None and items:
+            try:
+                packed = self._kernel_pack(items)
+            except Exception:
+                packed = None   # scalar oracle fallback
+            if packed is not None:
+                out: List[IngestItem] = []
+                for item, rows in zip(items, packed):
+                    out.extend(self._emit_blocks(item, rows))
+                return out
         if self.mode is OpMode.PARALLEL and len(items) > 1:
             packed = list(self._ensure_pool().map(self._pack_rows, items))
         else:
             packed = [self._pack_rows(it) for it in items]
-        out: List[IngestItem] = []
+        out = []
         for item, rows in zip(items, packed):
             out.extend(self._emit_blocks(item, rows))
         return out

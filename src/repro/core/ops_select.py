@@ -48,6 +48,9 @@ class ParserOp(IngestOp):
     granularity_in = Granularity.FILE
     granularity_out = Granularity.CHUNK
     cpu_heavy = True
+    # per-item work with the default scalar-loop process_batch — safe inside
+    # a batch-mode block, which makes parser-edges columnar-eligible (ISSUE 10)
+    batch_capable = True
 
     def __init__(self, schema: Optional[Dict[str, str]] = None, sep: str = "|",
                  chunk_rows: int = 65536, label_fn: Optional[Callable[[Columns], Any]] = None,
@@ -119,6 +122,7 @@ class RegexParserOp(IngestOp):
     granularity_in = Granularity.FILE
     granularity_out = Granularity.CHUNK
     cpu_heavy = True
+    batch_capable = True
 
     def __init__(self, pattern: str, schema: Optional[Dict[str, str]] = None,
                  chunk_rows: int = 65536, **kw: Any) -> None:
@@ -166,6 +170,7 @@ class FilterOp(IngestOp):
     granularity_in = Granularity.CHUNK
     granularity_out = Granularity.CHUNK
     expansion = 0.5
+    batch_capable = True
 
     def __init__(self, predicate: Callable[[Columns], np.ndarray], fields: Sequence[str] = (),
                  selectivity: float = 0.5, **kw: Any) -> None:
@@ -199,6 +204,7 @@ class ProjectOp(IngestOp):
     granularity_in = Granularity.CHUNK
     granularity_out = Granularity.CHUNK
     expansion = 0.7
+    batch_capable = True
 
     def __init__(self, fields: Sequence[str], **kw: Any) -> None:
         super().__init__(fields=tuple(fields), **kw)
@@ -218,6 +224,7 @@ class MapOp(IngestOp):
     name = "map"
     granularity_in = Granularity.CHUNK
     granularity_out = Granularity.CHUNK
+    batch_capable = True
 
     def __init__(self, fn: Callable[[Columns], Columns], label: Any = 1, **kw: Any) -> None:
         super().__init__(fn=fn, label=label, **kw)
@@ -243,6 +250,7 @@ class ReplicateOp(IngestOp):
 
     name = "replicate"
     expansion = 3.0
+    batch_capable = True
 
     def __init__(self, copies: int = 3, probability: float = 1.0, seed: int = 0,
                  tag: Optional[str] = None, **kw: Any) -> None:

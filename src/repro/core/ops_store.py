@@ -36,6 +36,7 @@ class LocateOp(IngestOp):
     """
 
     name = "locate"
+    batch_capable = True
 
     def __init__(self, scheme: str = "roundrobin", num_locations: int = 4,
                  by: Optional[str] = None, seed: int = 0, **kw: Any) -> None:
@@ -206,6 +207,9 @@ class UploadOp(IngestOp):
     granularity_in = Granularity.BLOCK
     granularity_out = Granularity.BLOCK
     commit_side = True  # publishes into the DataStore -> store-segment stage
+    # store registration is per-item and order-preserving either way; capable
+    # so the store stage's first block anchors columnar edges (ISSUE 10)
+    batch_capable = True
 
     def __init__(self, store: Optional[DataStore] = None,
                  location_map: Optional[Dict[int, str]] = None,
@@ -247,6 +251,43 @@ class UploadOp(IngestOp):
             is_parity=item.meta.get("is_parity", False),
         )
         yield item.with_label(self.name, entry.node)
+
+    def process_batch(self, items: Sequence[IngestItem]) -> List[IngestItem]:
+        """Columnar data plane (ISSUE 10): publish the whole batch through
+        ONE ``put_block_batch`` call.  Replica counting, node mapping, and
+        registration order are exactly the serial iterator's, so the store
+        entries are byte-identical; what changes is the control plane — a
+        worker-side store registers N blocks in one coordinator round trip
+        instead of N synchronous per-block RPCs.  Stores without bulk
+        registration (or with it switched off: the item-at-a-time oracle)
+        keep the per-block protocol."""
+        if self.store is None:
+            raise RuntimeError("UploadOp has no bound DataStore target")
+        if not (getattr(self.store, "bulk_registration", False)
+                and hasattr(self.store, "put_block_batch")):
+            return super().process_batch(items)
+        reqs = []
+        prepped: List[IngestItem] = []
+        for item in items:
+            if isinstance(item.data, dict):  # un-serialized chunk
+                item = IngestItem(
+                    serialize_block(item.data, self.serialize_default),
+                    Granularity.BLOCK, item.labels, dict(item.meta))
+                item = item.with_label("serialize", self.serialize_default)
+            logical = DataStore._logical_id(item)
+            ridx = self._replica_counter.get(logical, 0)
+            self._replica_counter[logical] = ridx + 1
+            prepped.append(item)
+            reqs.append({
+                "item": item, "node": self._node_for(item),
+                "logical_id": logical, "replica_index": ridx,
+                "stripe_id": item.meta.get("stripe_id", ""),
+                "stripe_pos": item.meta.get("stripe_pos", -1),
+                "is_parity": item.meta.get("is_parity", False),
+            })
+        entries = self.store.put_block_batch(reqs)
+        return [it.with_label(self.name, e.node)
+                for it, e in zip(prepped, entries)]
 
     def finalize(self) -> None:
         # while an epoch stages, a manifest flush publishes nothing (staged

@@ -210,9 +210,16 @@ class VectorizeRule:
     substituted into a batch block runs through the default scalar-loop
     ``process_batch``), so batch selection can never change results — the
     scalar path remains the correctness oracle.
+
+    ``columnar`` (ISSUE 10) extends the rule across *stage edges*: an edge
+    whose producer ends and whose consumer starts in a batch-mode block is
+    annotated columnar-capable (``StagePlan.columnar_edges``), so the batch
+    crosses it as a ColumnarBatch with no per-item pickling.  Disabling it
+    (or the rule) keeps every edge on the scalar item-at-a-time path.
     """
 
     enabled: bool = True
+    columnar: bool = True
     name: str = "vectorize"
 
     def rewrite(self, sp: StagePlan) -> StagePlan:
@@ -295,7 +302,23 @@ class IngestionOptimizer:
             out.append(self.vectorize.rewrite(self.pipeline.rewrite(nsp)))
         # rewrites may change shuffle/commit metadata: recompile the
         # per-edge routing taxonomy (narrow / shuffle / cross-segment)
-        return annotate_edges(out)
+        out = annotate_edges(out)
+        # columnar edge eligibility (ISSUE 10): producer's LAST block and the
+        # consumer's FIRST block both batch-mode -> the batch crosses the
+        # edge packed, no item materialization on either side
+        columnar_on = self.vectorize.enabled and getattr(
+            self.vectorize, "columnar", True)
+        by_name = {sp.name: sp for sp in out}
+        for sp in out:
+            sp.columnar_edges = {}
+            if not (columnar_on and sp.batch_blocks and sp.batch_blocks[-1]):
+                continue
+            for consumer in sp.edge_kinds:
+                cs = by_name.get(consumer)
+                sp.columnar_edges[consumer] = bool(
+                    cs is not None and cs.batch_blocks
+                    and cs.batch_blocks[0])
+        return out
 
     def explain(self, before: Sequence[StagePlan], after: Sequence[StagePlan]) -> str:
         lines = []
@@ -314,4 +337,9 @@ class IngestionOptimizer:
                 # cross-segment edges pin their round across slices
                 lines.append("  edges : " + ", ".join(
                     f"->{c} [{k}]" for c, k in a.edge_kinds.items()))
+            cols = [c for c, on in a.columnar_edges.items() if on]
+            if cols:
+                # edges the batch crosses as a packed ColumnarBatch
+                lines.append("  columnar edges : " + ", ".join(
+                    f"->{c}" for c in cols))
         return "\n".join(lines)

@@ -93,6 +93,13 @@ class StagePlan:
     # operators' vectorized ``process_batch`` path; empty = all-scalar (plans
     # that never went through the optimizer are untouched)
     batch_blocks: List[bool] = field(default_factory=list)
+    # columnar-capable edges (ISSUE 10): consumer stage name -> True when the
+    # batch may cross this edge as a ColumnarBatch (producer's last pipeline
+    # block and the consumer's first block are both batch-mode, so neither
+    # side needs per-item materialization).  Annotated by the optimizer after
+    # ``annotate_edges``; empty = scalar item-at-a-time everywhere (hand-built
+    # or unoptimized plans — the correctness oracle).
+    columnar_edges: Dict[str, bool] = field(default_factory=dict)
 
     def block_of(self, op_idx: int) -> int:
         for b, idxs in enumerate(self.pipeline_blocks):
@@ -111,7 +118,8 @@ class StagePlan:
                          shuffle_key=self.shuffle_key,
                          edge_kinds=dict(self.edge_kinds),
                          replay_cone=self.replay_cone,
-                         batch_blocks=list(self.batch_blocks))
+                         batch_blocks=list(self.batch_blocks),
+                         columnar_edges=dict(self.columnar_edges))
 
     def compute_commit_side(self) -> bool:
         """A stage is commit-side iff any of its operators writes the store."""

@@ -61,12 +61,14 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import multiprocessing as mp
 
-from .exchange import (PartitionExchange, build_manifest, decode_partition,
+from .exchange import (PartitionExchange, build_manifest, columnar_file_name,
+                       decode_partition, encode_columnar_partition,
                        encode_partition, exchange_file_name,
                        fetch_stream_partition, read_partition_file,
-                       resident_file_name, write_partition_file)
-from .items import (IngestItem, ShmLease, decode_items, encode_items,
-                    items_nbytes, sweep_pid_segments)
+                       resident_file_name, write_columnar_file,
+                       write_partition_file)
+from .items import (ColumnarBatch, IngestItem, ShmLease, decode_items,
+                    encode_items, items_nbytes, sweep_pid_segments)
 from .liveness import retry_call
 from .transport import (ChaosProxy, FrameListener, PartitionStreamServer,
                         connect_framed)
@@ -150,6 +152,10 @@ class _WorkerStoreClient:
         self.compress = spec["compress"]
         self.compress_level = spec["compress_level"]
         self.journal_commits = spec["journal_commits"]
+        #: columnar data plane (ISSUE 10): UploadOp.process_batch funnels
+        #: the batch through ONE put_batch RPC when this is on; off keeps
+        #: the per-block protocol (the PR-9 item-at-a-time baseline)
+        self.bulk_registration = bool(spec.get("bulk_registration", False))
         self._live: List[str] = list(self.nodes)
         self._epoch = threading.local()
 
@@ -182,12 +188,14 @@ class _WorkerStoreClient:
     def flush_manifest(self) -> None:
         self._rpc("flush")
 
-    def put_block(self, item: IngestItem, node: str, *, logical_id: str = "",
-                  replica_index: int = 0, stripe_id: str = "",
-                  stripe_pos: int = -1, is_parity: bool = False) -> BlockEntry:
+    def _put_record(self, item: IngestItem, node: str, *,
+                    logical_id: str = "", replica_index: int = 0,
+                    stripe_id: str = "", stripe_pos: int = -1,
+                    is_parity: bool = False) -> Dict[str, Any]:
+        """The heavy, local half of a block put: physical payload write (to
+        a name gc never scans) plus the registration record for the RPC."""
         payload, layout, raw_nbytes = prepare_block_payload(
             item.data, self.compress, self.compress_level)
-        # heavy half stays here: the physical write, to a name gc never scans
         tmp = os.path.join(self.root, "nodes", node, f".{uuid.uuid4().hex}.tmp")
         os.makedirs(os.path.dirname(tmp), exist_ok=True)
         with open(tmp, "wb") as f:
@@ -196,7 +204,7 @@ class _WorkerStoreClient:
                 f.flush()
                 os.fsync(f.fileno())
         epoch = getattr(self._epoch, "value", None)
-        rec = self._rpc("put", {
+        return {
             "node": node, "tmp_path": tmp, "base": item.lineage_name(),
             "checksum": item.checksum(), "nbytes": len(payload),
             "raw_nbytes": raw_nbytes, "compressed": self.compress,
@@ -207,8 +215,40 @@ class _WorkerStoreClient:
             "stripe_pos": stripe_pos, "is_parity": is_parity,
             "meta": dict(item.meta),
             "epoch": -1 if epoch is None else epoch,
-        })
+        }
+
+    def put_block(self, item: IngestItem, node: str, *, logical_id: str = "",
+                  replica_index: int = 0, stripe_id: str = "",
+                  stripe_pos: int = -1, is_parity: bool = False) -> BlockEntry:
+        rec = self._rpc("put", self._put_record(
+            item, node, logical_id=logical_id, replica_index=replica_index,
+            stripe_id=stripe_id, stripe_pos=stripe_pos, is_parity=is_parity))
         return BlockEntry(**rec)
+
+    def put_block_batch(self, reqs: Sequence[Dict[str, Any]]
+                        ) -> List[BlockEntry]:
+        """Columnar data plane (ISSUE 10): register a whole block batch in
+        ONE coordinator round trip.  The physical writes happen here first
+        (order-preserving, same tmp-name protocol as ``put_block``); only
+        the registration records cross the pipe.  At the pre-ISSUE-10
+        per-block protocol's ~ms-per-RPC, a 512-block run spends more wall
+        on registration chatter than on the writes themselves."""
+        if not reqs:
+            return []
+        recs = [self._put_record(r["item"], r["node"],
+                                 **{k: v for k, v in r.items()
+                                    if k not in ("item", "node")})
+                for r in reqs]
+        out: List[BlockEntry] = []
+        # slim reply: the coordinator assigns only (block_id, path); the
+        # rest of each entry is the record this client just authored
+        for rec, (block_id, path) in zip(recs, self._rpc("put_batch", recs)):
+            kw = dict(rec)
+            kw.pop("tmp_path")
+            base = kw.pop("base")
+            kw["logical_id"] = kw["logical_id"] or base
+            out.append(BlockEntry(block_id=block_id, path=path, **kw))
+        return out
 
 
 class _WorkerLane:
@@ -372,11 +412,50 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
         that is the *entire* output — each peer slice crosses via its own
         segment or, past the per-edge spill share, a DFS spill file; an
         oversized resident slice spills under the ``resident_*`` naming.
-        Returns the metadata-only manifest."""
+        Returns the metadata-only manifest.
+
+        On a columnar round (ISSUE 10) the output packs into one
+        ColumnarBatch up front: each slice then crosses as a raw column
+        buffer — straight into the shm segment, spill file, or stream
+        source with no per-item pickling.  Sub-batches own their payload
+        (``select`` copies), so resident deposits need no input-lease
+        shares.  An output that doesn't pack falls back to the scalar
+        path and flags the manifest."""
         hosts = xs.get("hosts") or {}
         my_host = hosts.get(node)
 
-        def part_fn(dst: str, its: List[IngestItem], nb: int) -> Dict[str, Any]:
+        def columnar_fn(dst: str, batch: ColumnarBatch, nb: int
+                        ) -> Dict[str, Any]:
+            if dst == node:
+                if nb > xs["spill_share"]:
+                    path = os.path.join(
+                        xs["spill_dir"],
+                        columnar_file_name(xs["epoch"], xs["xid"], node, node))
+                    write_columnar_file(path, batch)
+                    exchange.deposit(xs["xid"], node, None, nb, path=path)
+                    return {"kind": "resident", "count": len(batch),
+                            "nbytes": nb, "spilled": path, "columnar": True}
+                exchange.deposit_batch(xs["xid"], node, batch)
+                return {"kind": "resident", "count": len(batch),
+                        "nbytes": nb, "columnar": True}
+            cross_host = (my_host is not None and hosts.get(dst) is not None
+                          and hosts.get(dst) != my_host)
+            if cross_host or nb > xs["spill_share"]:
+                path = os.path.join(
+                    xs["spill_dir"],
+                    columnar_file_name(xs["epoch"], xs["xid"], node, dst))
+                desc = write_columnar_file(path, batch)
+                if cross_host and stream_server is not None:
+                    desc = {**desc, "kind": "stream",
+                            "endpoint": list(stream_server.endpoint)}
+                return desc
+            desc, pl = encode_columnar_partition(batch)
+            peer_leases.append(pl)
+            return desc
+
+        def part_fn(dst: str, its: Any, nb: int) -> Dict[str, Any]:
+            if isinstance(its, ColumnarBatch):
+                return columnar_fn(dst, its, nb)
             if dst == node:
                 if nb > xs["spill_share"]:
                     path = os.path.join(
@@ -413,8 +492,19 @@ def _worker_main(node: str, conn: Any, store_conn: Any,
             peer_leases.append(pl)
             return desc
 
-        return build_manifest(out, xs["key"], xs["targets"], part_fn,
-                              self_node=node)
+        payload: Any = out
+        fallback = False
+        if xs.get("columnar") and out:
+            batch = ColumnarBatch.from_items(out)
+            if batch is None:
+                fallback = True
+            else:
+                payload = batch
+        manifest = build_manifest(payload, xs["key"], xs["targets"], part_fn,
+                                  self_node=node)
+        if fallback:
+            manifest["columnar_fallback"] = True
+        return manifest
 
     def run_job(jid: int, plan_key: str, si: int, payload: Dict[str, Any],
                 ctx: Dict[str, Any]) -> None:
@@ -635,7 +725,8 @@ class ProcessNodeExecutor:
                  transport: str = "pipe",
                  host: Optional[str] = None,
                  chaos_shim: bool = False,
-                 local_worker: bool = True) -> None:
+                 local_worker: bool = True,
+                 bulk_registration: bool = False) -> None:
         if transport not in ("pipe", "socket"):
             raise ValueError(f"unknown transport {transport!r} "
                              f"(expected 'pipe' or 'socket')")
@@ -663,7 +754,12 @@ class ProcessNodeExecutor:
                 "durable": store.durable, "compress": store.compress,
                 "compress_level": store.compress_level,
                 "journal_commits": store.journal_commits,
-                "dfs_dir": store.dfs_dir}
+                "dfs_dir": store.dfs_dir,
+                # columnar data plane (ISSUE 10): the store stage registers
+                # a whole block batch in ONE put_batch RPC instead of one
+                # synchronous round trip per block; off reproduces the
+                # per-block PR-9 protocol exactly
+                "bulk_registration": bulk_registration}
         attempt_no = itertools.count(1)
 
         def spawn_pipe() -> None:
@@ -1037,6 +1133,17 @@ class ProcessNodeExecutor:
                         entry = self.store.register_block_file(
                             kw.pop("node"), kw.pop("tmp_path"), **kw)
                         reply = ("ok", asdict(entry))
+                    elif kind == "put_batch":
+                        # columnar data plane (ISSUE 10): one round trip
+                        # registers the whole block batch, order preserved —
+                        # each record is exactly a "put" payload, so the
+                        # store-side semantics (and retry story) are the
+                        # per-block path's, minus the per-block latency.
+                        # The reply carries only what the coordinator
+                        # assigned (block id + final path); the worker holds
+                        # everything else in the records it just sent
+                        ents = self.store.register_block_batch(msg[1])
+                        reply = ("ok", [(e.block_id, e.path) for e in ents])
                     elif kind == "staging":
                         reply = ("ok", self.store.staging_epoch_ids())
                     elif kind == "flush":

@@ -40,10 +40,11 @@ from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple, Union
 
-from .exchange import (PartitionExchange, build_manifest, exchange_file_name,
-                       partition_items, resident_file_name, unlink_segment,
+from .exchange import (PartitionExchange, build_manifest, columnar_file_name,
+                       exchange_file_name, partition_items, resident_file_name,
+                       unlink_segment, write_columnar_file,
                        write_partition_file)
-from .items import IngestItem, items_nbytes
+from .items import ColumnarBatch, IngestItem, items_nbytes
 from .operators import (IngestOp, OperatorFailure, PassThroughOp,
                         run_ops_batched)
 from .optimizer import IngestionOptimizer
@@ -137,6 +138,10 @@ class RunReport:
     vectorized_rows: int = 0           # rows that entered batch-mode blocks
     batch_fallbacks: int = 0           # ops that dropped back to the scalar path
     kernel_ms: float = 0.0             # time inside vectorized encode kernels
+    # --- columnar data plane (ISSUE 10): column buffers across stage edges --
+    columnar_rounds: int = 0           # exchange rounds with >=1 columnar part
+    columnar_bytes: int = 0            # partition bytes that crossed columnar
+    columnar_fallbacks: int = 0        # producers that fell back to items
     # --- socket fabric + degraded exchange (ISSUE 9) ------------------------
     degraded_exchange_rounds: int = 0  # rounds with >=1 streamed (cross-host) part
     degraded_peer_bytes: int = 0       # partition bytes that crossed host-to-host
@@ -293,6 +298,15 @@ class ExchangeRound:
     spilled: bool = False
     degraded_parts: int = 0           # cross-host (streamed) partitions
     degraded_bytes: int = 0           # their bytes (subset of total_bytes)
+    # columnar data plane (ISSUE 10): the optimizer proved every consuming
+    # block pair batch-capable, so producers may cross this edge as a
+    # ColumnarBatch (column buffers, no per-item pickling).  A producer whose
+    # output doesn't pack (mixed payload kinds, exotic labels) falls back to
+    # the scalar path per-manifest — counted, never wrong.
+    columnar: bool = False
+    columnar_parts: int = 0           # partitions that crossed as column buffers
+    columnar_bytes: int = 0           # their bytes (subset of total+resident)
+    columnar_fallbacks: int = 0       # producers that fell back to item lists
 
     def worker_ctx(self, spill_dir: str,
                    hosts: Optional[Dict[str, str]] = None) -> Dict[str, Any]:
@@ -305,6 +319,8 @@ class ExchangeRound:
                "spill_share": self.spill_share, "spill_dir": spill_dir}
         if hosts:
             ctx["hosts"] = dict(hosts)
+        if self.columnar:
+            ctx["columnar"] = True
         return ctx
 
 
@@ -371,10 +387,13 @@ class ShuffleCoordinator:
     """
 
     def __init__(self, store: DataStore, spill_bytes: int = 32 << 20,
-                 synchronous: bool = False) -> None:
+                 synchronous: bool = False, columnar: bool = True) -> None:
         self.store = store
         self.spill_bytes = spill_bytes
         self.synchronous = synchronous
+        #: columnar data plane master switch (ISSUE 10): when False every
+        #: round stays item-at-a-time — the byte-identical oracle path
+        self.columnar = columnar
         self._lock = threading.Lock()
         self._stage_locks: Dict[str, threading.Lock] = {}
         self._pending: Dict[str, Future] = {}
@@ -455,7 +474,13 @@ class ShuffleCoordinator:
             epoch=e, targets=list(live),
             consumers=consumers,
             spill_share=max(1, self.spill_bytes // max(1, len(live))),
-            pinned=pinned)
+            pinned=pinned,
+            # the edge goes columnar only when the optimizer proved EVERY
+            # consuming stage's first block batch-capable (ISSUE 10) — a
+            # single scalar consumer keeps the whole round item-at-a-time
+            columnar=bool(self.columnar and consumers and
+                          all(sp.columnar_edges.get(c, False)
+                              for c in consumers)))
         with self._lock:
             self._rounds[rnd.xid] = rnd
             self._epoch_rounds.setdefault(rnd.epoch, set()).add(rnd.xid)
@@ -492,12 +517,19 @@ class ShuffleCoordinator:
                 # a streamed spill file, not a shared-memory segment
                 rnd.degraded_parts += 1
                 rnd.degraded_bytes += int(desc.get("nbytes", 0))
+            if desc.get("columnar"):
+                # ISSUE 10: this partition crossed as a column buffer —
+                # no per-item pickling on either side of the edge
+                rnd.columnar_parts += 1
+                rnd.columnar_bytes += int(desc.get("nbytes", 0))
             if dst != node:
                 rnd.total_bytes += int(desc.get("nbytes", 0))
             else:
                 # the node's own slice: stayed resident (narrow edges keep
                 # the entire output here — zero-coordinator dataflow)
                 rnd.resident_bytes += int(desc.get("nbytes", 0))
+        if manifest.get("columnar_fallback"):
+            rnd.columnar_fallbacks += 1
         prev = rnd.manifests.get(node)
         if prev is not None:
             # a cone replay's patch producer (ISSUE 8) dealt a second time
@@ -759,7 +791,8 @@ class RuntimeEngine:
                  memory_budget_bytes: Optional[int] = None,
                  transport: str = "pipe",
                  node_hosts: Optional[Dict[str, str]] = None,
-                 network_chaos: bool = False) -> None:
+                 network_chaos: bool = False,
+                 columnar: bool = True) -> None:
         """``backend`` selects the node substrate: ``"thread"`` (default —
         in-process ``NodeExecutor`` lanes) or ``"process"`` (one long-lived
         worker process per node, real CPU parallelism; DESIGN.md §6).
@@ -777,7 +810,13 @@ class RuntimeEngine:
         partitions cross in degraded mode (streamed spill files) and the
         liveness monitor applies the per-host partition quorum.
         ``network_chaos`` inserts the ChaosProxy shim on each socket pair
-        so the chaos harness can render partition/drop/delay events."""
+        so the chaos harness can render partition/drop/delay events.
+
+        ``columnar`` (ISSUE 10) enables the columnar data plane: stage
+        edges whose producing AND consuming blocks the optimizer proved
+        batch-capable cross as ColumnarBatch column buffers instead of
+        item lists.  ``columnar=False`` pins every edge to the
+        item-at-a-time path — the byte-identical correctness oracle."""
         if backend not in ("thread", "process"):
             raise ValueError(f"unknown backend {backend!r} (thread|process)")
         if transport not in ("pipe", "socket"):
@@ -791,13 +830,15 @@ class RuntimeEngine:
         self.node_hosts = dict(node_hosts) if node_hosts else {}
         self.network_chaos = network_chaos
         self.memory_budget_bytes = memory_budget_bytes
+        self.columnar = columnar
         self._explicit_spill = shuffle_spill_bytes is not None
         if shuffle_spill_bytes is None:
             shuffle_spill_bytes = (derive_spill_bytes(memory_budget_bytes)
                                    if memory_budget_bytes is not None
                                    else DEFAULT_SPILL_BYTES)
         self.shuffle = ShuffleCoordinator(store, spill_bytes=shuffle_spill_bytes,
-                                          synchronous=shuffle_synchronous)
+                                          synchronous=shuffle_synchronous,
+                                          columnar=columnar)
         # thread-backend data plane: node lanes deposit/collect partitions
         # here directly — the coordinator thread never touches the items
         self._exchange = PartitionExchange()
@@ -830,7 +871,8 @@ class RuntimeEngine:
                     ex = ProcessNodeExecutor(
                         node, self.store, transport=self.transport,
                         host=self.node_hosts.get(node),
-                        chaos_shim=self.network_chaos)
+                        chaos_shim=self.network_chaos,
+                        bulk_registration=self.columnar)
                 else:
                     ex = NodeExecutor(node)
                 self._executors[node] = ex
@@ -895,8 +937,26 @@ class RuntimeEngine:
         bucket, staying resident.  A partition past the per-edge spill share
         crosses as a DFS file instead (``resident_*`` naming for the node's
         own slice).  Runs on the node's executor lane — only the returned
-        manifest (counts, sizes, paths) ever reaches the coordinator."""
-        def part_fn(dst: str, its: List[IngestItem], nb: int) -> Dict[str, Any]:
+        manifest (counts, sizes, paths) ever reaches the coordinator.
+
+        On a columnar round (ISSUE 10) the output packs into a
+        ColumnarBatch first: partitioning is one vectorized hash pass and
+        each partition deposits (or spills) as a column buffer.  A batch
+        that doesn't pack falls back to the scalar path and flags the
+        manifest (``columnar_fallback``) so the coordinator counts it."""
+        def part_fn(dst: str, its: Any, nb: int) -> Dict[str, Any]:
+            if isinstance(its, ColumnarBatch):
+                if nb > rnd.spill_share:
+                    path = os.path.join(
+                        self.store.dfs_dir,
+                        columnar_file_name(rnd.epoch, rnd.xid, node, dst))
+                    write_columnar_file(path, its)
+                    self._exchange.deposit(rnd.xid, dst, None, nb, path=path)
+                    return {"kind": "mem", "count": len(its), "nbytes": nb,
+                            "spilled": path, "columnar": True}
+                self._exchange.deposit_batch(rnd.xid, dst, its)
+                return {"kind": "mem", "count": len(its), "nbytes": nb,
+                        "columnar": True}
             if nb > rnd.spill_share:
                 path = os.path.join(
                     self.store.dfs_dir,
@@ -910,8 +970,18 @@ class RuntimeEngine:
             self._exchange.deposit(rnd.xid, dst, its, nb)
             return {"kind": "mem", "count": len(its), "nbytes": nb}
 
-        manifest = build_manifest(out, rnd.key, rnd.targets, part_fn,
+        payload: Any = out
+        fallback = False
+        if rnd.columnar and out:
+            batch = ColumnarBatch.from_items(out)
+            if batch is None:
+                fallback = True
+            else:
+                payload = batch
+        manifest = build_manifest(payload, rnd.key, rnd.targets, part_fn,
                                   self_node=node)
+        if fallback:
+            manifest["columnar_fallback"] = True
         return {"kind": "xmanifest", "manifest": manifest}
 
     def __enter__(self) -> "RuntimeEngine":
@@ -1384,6 +1454,10 @@ class RuntimeEngine:
                 if produce.degraded_parts:
                     report.degraded_exchange_rounds += 1
                     report.degraded_peer_bytes += produce.degraded_bytes
+                if produce.columnar_parts:
+                    report.columnar_rounds += 1
+                    report.columnar_bytes += produce.columnar_bytes
+                report.columnar_fallbacks += produce.columnar_fallbacks
                 if produce.key is None:        # narrow (identity) round
                     report.stage_exchange_rounds += 1
                     if produce.spilled:

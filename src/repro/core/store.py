@@ -66,6 +66,22 @@ class BlockEntry:
     def logical_nbytes(self) -> int:
         return self.raw_nbytes if self.raw_nbytes >= 0 else self.nbytes
 
+    def to_manifest(self) -> Dict[str, Any]:
+        """The exact dict ``dataclasses.asdict`` would build, minus its
+        recursive deep-copy walk — every field here is already a plain
+        value, and the manifest writer only serializes the result.  At
+        ~30µs per ``asdict`` call a few hundred entries turn every
+        manifest flush into a two-digit-millisecond stall (ISSUE 10)."""
+        return {"block_id": self.block_id, "node": self.node,
+                "path": self.path, "checksum": self.checksum,
+                "nbytes": self.nbytes, "labels": self.labels,
+                "layout": self.layout, "logical_id": self.logical_id,
+                "replica_index": self.replica_index,
+                "stripe_id": self.stripe_id, "stripe_pos": self.stripe_pos,
+                "is_parity": self.is_parity, "epoch": self.epoch,
+                "compressed": self.compressed,
+                "raw_nbytes": self.raw_nbytes, "meta": self.meta}
+
 
 @dataclass
 class EpochEntry:
@@ -207,13 +223,17 @@ class DataStore:
         manifest references — the epoch never half-commits.
         """
         with self._lock:
-            blocks = {k: asdict(v) for k, v in self.entries.items()
+            blocks = {k: v.to_manifest() for k, v in self.entries.items()
                       if v.epoch < 0 or v.epoch in self.epochs}
             payload = {"blocks": blocks,
                        "epochs": {str(k): asdict(v) for k, v in self.epochs.items()}}
             tmp = self.manifest_path + ".tmp"
             with open(tmp, "w") as f:
-                json.dump(payload, f, indent=0)
+                # one buffered write of a compact dump: indent (even 0)
+                # forces json's pure-Python encoder — on a manifest with
+                # hundreds of blocks that is a ~100ms stall per flush,
+                # ~10x the C encoder this way (ISSUE 10)
+                f.write(json.dumps(payload, separators=(",", ":")))
                 if self.durable:
                     f.flush()
                     os.fsync(f.fileno())
@@ -290,7 +310,7 @@ class DataStore:
                 self._commit_cv.wait(timeout=remaining)
             if epoch in self.epochs:      # re-check after waiting
                 raise ValueError(f"epoch {epoch} already committed")
-            blocks = {k: asdict(self.entries[k])
+            blocks = {k: self.entries[k].to_manifest()
                       for k in self._epoch_blocks.pop(epoch, [])
                       if k in self.entries}
             entry = EpochEntry(epoch=epoch, n_blocks=len(blocks),
@@ -409,6 +429,24 @@ class DataStore:
                 os.fsync(f.fileno())
         return entry
 
+    #: columnar data plane (ISSUE 10): direct-call stores take the bulk
+    #: registration path unconditionally — without an RPC boundary it is
+    #: byte-for-byte the per-block loop, so thread-backend runs are
+    #: identical columnar on or off
+    bulk_registration = True
+
+    def put_block_batch(self, reqs: Sequence[Dict[str, Any]]
+                        ) -> List["BlockEntry"]:
+        """Register a whole block batch, order preserved (ISSUE 10).  Each
+        request is a ``put_block`` call as a dict (``item``, ``node``, plus
+        the keyword metadata); on a direct-call store this IS the per-block
+        loop — the worker-side twin (``_WorkerStoreClient``) collapses it
+        into one coordinator round trip."""
+        return [self.put_block(r["item"], r["node"],
+                               **{k: v for k, v in r.items()
+                                  if k not in ("item", "node")})
+                for r in reqs]
+
     def register_block_file(self, node: str, tmp_path: str, *, base: str,
                             checksum: str, nbytes: int, raw_nbytes: int,
                             compressed: bool, labels: List[List[Any]],
@@ -449,6 +487,56 @@ class DataStore:
         os.makedirs(os.path.dirname(full), exist_ok=True)
         os.replace(tmp_path, full)
         return entry
+
+    def register_block_batch(self, records: Sequence[Dict[str, Any]]
+                             ) -> List[BlockEntry]:
+        """Bulk twin of :meth:`register_block_file` (ISSUE 10): adopt a whole
+        worker-written batch under ONE lock acquisition, order preserved.
+        Each record is exactly a ``register_block_file`` call as a dict
+        (``node``, ``tmp_path``, plus the keyword metadata).  Every epoch is
+        validated and every entry recorded before any temp file renames, so
+        entry-before-rename holds batch-wide; the renames share one
+        made-directory memo instead of 512 ``makedirs`` round trips."""
+        entries: List[BlockEntry] = []
+        renames: List[Tuple[str, str]] = []
+        with self._lock:
+            for rec in records:
+                epoch = rec["epoch"]
+                if epoch >= 0 and epoch in self.epochs:
+                    raise ValueError(f"epoch {epoch} already committed")
+            for rec in records:
+                base = rec["base"]
+                block_id = base
+                k = 0
+                while block_id in self.entries:
+                    k += 1
+                    block_id = f"{base}_{k}"
+                rel = os.path.join("nodes", rec["node"], block_id + ".blk")
+                entry = BlockEntry(
+                    block_id=block_id, node=rec["node"], path=rel,
+                    checksum=rec["checksum"], nbytes=rec["nbytes"],
+                    labels=rec["labels"], layout=rec["layout"],
+                    logical_id=rec["logical_id"] or base,
+                    replica_index=rec["replica_index"],
+                    stripe_id=rec["stripe_id"], stripe_pos=rec["stripe_pos"],
+                    is_parity=rec["is_parity"], epoch=rec["epoch"],
+                    compressed=rec["compressed"],
+                    raw_nbytes=rec["raw_nbytes"], meta=dict(rec["meta"]))
+                self.entries[block_id] = entry
+                if entry.epoch >= 0:
+                    self._epoch_blocks.setdefault(entry.epoch,
+                                                  []).append(block_id)
+                entries.append(entry)
+                renames.append((rec["tmp_path"],
+                                os.path.join(self.root, rel)))
+        made = set()
+        for tmp, full in renames:
+            d = os.path.dirname(full)
+            if d not in made:
+                os.makedirs(d, exist_ok=True)
+                made.add(d)
+            os.replace(tmp, full)
+        return entries
 
     @staticmethod
     def _logical_id(item: IngestItem) -> str:

@@ -254,6 +254,21 @@ class StreamReport:
         """Partition bytes that crossed host-to-host over the stream path."""
         return sum(e.run.degraded_peer_bytes for e in self.epochs)
 
+    # ------------------------------------------- columnar plane (ISSUE 10) ---
+    def columnar_rounds(self) -> int:
+        """Exchange rounds that moved at least one partition as a
+        ColumnarBatch column buffer (no per-item pickling on the edge)."""
+        return sum(e.run.columnar_rounds for e in self.epochs)
+
+    def columnar_bytes(self) -> int:
+        """Partition bytes that crossed stage edges in columnar form."""
+        return sum(e.run.columnar_bytes for e in self.epochs)
+
+    def columnar_fallbacks(self) -> int:
+        """Producers on columnar rounds whose output wouldn't pack and fell
+        back to the scalar item path (counted, never wrong)."""
+        return sum(e.run.columnar_fallbacks for e in self.epochs)
+
 
 class IngestQueues:
     """Per-node bounded ingest queues fed from an unbounded source.
@@ -701,14 +716,15 @@ class StreamingRuntimeEngine(RuntimeEngine):
                  heartbeat_miss: int = 4,
                  transport: str = "pipe",
                  node_hosts: Optional[Dict[str, str]] = None,
-                 network_chaos: bool = False) -> None:
+                 network_chaos: bool = False,
+                 columnar: bool = True) -> None:
         super().__init__(store, optimizer, max_retries,
                          shuffle_spill_bytes=shuffle_spill_bytes,
                          shuffle_synchronous=shuffle_synchronous,
                          backend=backend,
                          memory_budget_bytes=memory_budget_bytes,
                          transport=transport, node_hosts=node_hosts,
-                         network_chaos=network_chaos)
+                         network_chaos=network_chaos, columnar=columnar)
         self.epoch_items = epoch_items
         self.epoch_seconds = epoch_seconds
         self.epoch_bytes = epoch_bytes

@@ -211,9 +211,10 @@ class TestVectorizeRule:
     def test_selects_all_capable_blocks_only(self, store):
         plans = IngestionOptimizer().optimize(self._plan(store).compile())
         fmt = next(sp for sp in plans if sp.name == "b")
-        # [chunk, serialize] shares a block (chunk is not batch-capable);
+        # [chunk, serialize] shares a block and vectorizes (chunk gained the
+        # default-loop batch path with the columnar plane, ISSUE 10);
         # [erasure] stands alone and vectorizes
-        assert fmt.batch_blocks == [False, True]
+        assert fmt.batch_blocks == [True, True]
         for sp in plans:
             for blk, on in zip(sp.pipeline_blocks, sp.batch_blocks):
                 if on:

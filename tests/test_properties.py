@@ -164,3 +164,131 @@ class TestLineage:
         assert len(parts) == len(labels)
         for (op, v), part in zip(labels, parts):
             assert part.startswith(op)
+
+
+# ------------------------------------------------- columnar batch (ISSUE 10)
+class TestColumnarBatchRoundTrip:
+    """``ColumnarBatch.from_items -> to_items`` must be the identity on
+    every batch it accepts — including empty batches, zero-length payloads,
+    non-ASCII label/metadata strings, and payload buffers viewed at
+    unaligned offsets (the shm-segment case)."""
+
+    @staticmethod
+    def _assert_items_equal(a, b):
+        from repro.layouts.blocks import SerializedBlock
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            assert x.granularity == y.granularity
+            assert x.labels == y.labels
+            assert x.meta == y.meta
+            if isinstance(x.data, np.ndarray):
+                assert y.data.dtype == x.data.dtype
+                assert y.data.shape == x.data.shape
+                assert (y.data == x.data).all()
+            elif isinstance(x.data, dict):
+                assert tuple(y.data.keys()) == tuple(x.data.keys())
+                for k in x.data:
+                    assert y.data[k].dtype == x.data[k].dtype
+                    assert (y.data[k] == x.data[k]).all()
+            elif isinstance(x.data, SerializedBlock):
+                assert y.data.layout == x.data.layout
+                assert y.data.header == x.data.header
+                assert bytes(y.data.payload) == bytes(x.data.payload)
+            else:
+                assert y.data == x.data
+
+    @staticmethod
+    def _roundtrip(items):
+        from repro.core.items import ColumnarBatch
+        batch = ColumnarBatch.from_items(items)
+        assert batch is not None
+        assert batch.nbytes == sum(it.nbytes() for it in items)
+        return batch
+
+    def test_empty_batch(self):
+        from repro.core.items import ColumnarBatch
+        batch = ColumnarBatch.from_items([])
+        assert batch is not None and len(batch) == 0
+        assert batch.nbytes == 0 and batch.to_items() == []
+
+    @FAST
+    @given(st.lists(st.binary(max_size=48), min_size=1, max_size=8),
+           st.text(min_size=0, max_size=8))
+    def test_bytes_roundtrip(self, blobs, tag):
+        """Raw byte payloads — including b"" — and arbitrary (non-ASCII)
+        label strings survive the column pack."""
+        from repro.core.items import Granularity, IngestItem
+        items = [IngestItem(b, Granularity.FILE,
+                            meta={"tag": tag} if tag else {})
+                 .with_label("parser", tag) for b in blobs]
+        batch = self._roundtrip(items)
+        self._assert_items_equal(items, batch.to_items())
+
+    @FAST
+    @given(st.lists(st.integers(0, 12), min_size=1, max_size=6),
+           st.sampled_from(["<i8", "<f4", "<u2"]),
+           st.integers(0, 2**31 - 1))
+    def test_array_roundtrip(self, lens, dtype, seed):
+        """Same-dtype ndarray payloads, zero-length arrays included."""
+        from repro.core.items import Granularity, IngestItem
+        rng = np.random.default_rng(seed)
+        items = [IngestItem((rng.integers(0, 100, n)).astype(dtype),
+                            Granularity.BLOCK).with_label("locate", i)
+                 for i, n in enumerate(lens)]
+        batch = self._roundtrip(items)
+        self._assert_items_equal(items, batch.to_items())
+
+    @FAST
+    @given(st.lists(st.integers(0, 9), min_size=1, max_size=5),
+           st.lists(st.text(min_size=1, max_size=6), min_size=1, max_size=4,
+                    unique=True),
+           st.integers(0, 2**31 - 1))
+    def test_columns_roundtrip(self, rows, keys, seed):
+        """Dict-of-arrays chunks sharing a schema (row offsets), with
+        non-ASCII field names."""
+        from repro.core.items import Granularity, IngestItem
+        rng = np.random.default_rng(seed)
+        items = [IngestItem({k: rng.integers(0, 50, r).astype(np.int64)
+                             for k in keys}, Granularity.CHUNK)
+                 .with_label("chunk", i) for i, r in enumerate(rows)]
+        batch = self._roundtrip(items)
+        self._assert_items_equal(items, batch.to_items())
+
+    @FAST
+    @given(st.lists(st.binary(max_size=32), min_size=1, max_size=6),
+           st.integers(1, 7))
+    def test_header_roundtrip_from_unaligned_view(self, blobs, pad):
+        """``header()/from_header`` round-trip with the payload living at an
+        arbitrary (unaligned) offset inside a larger buffer — exactly how a
+        decoded shm segment hands the batch its bytes."""
+        from repro.core.items import ColumnarBatch, Granularity, IngestItem
+        items = [IngestItem(b, Granularity.FILE).with_label("parser", i)
+                 for i, b in enumerate(blobs)]
+        batch = self._roundtrip(items)
+        buf = np.zeros(pad + batch.nbytes, np.uint8)
+        buf[pad:] = batch.payload
+        back = ColumnarBatch.from_header(batch.header(), buf[pad:])
+        self._assert_items_equal(items, back.to_items())
+
+    @FAST
+    @given(st.lists(st.integers(1, 8), min_size=2, max_size=6),
+           st.integers(2, 4), st.integers(0, 2**31 - 1))
+    def test_partition_batch_matches_scalar(self, rows, n_targets, seed):
+        """``partition_batch`` over the packed batch must equal
+        ``partition_items`` over the item list — same membership, same
+        order, same per-partition bytes."""
+        from repro.core.exchange import partition_batch, partition_items
+        from repro.core.items import ColumnarBatch, Granularity, IngestItem
+        rng = np.random.default_rng(seed)
+        items = [IngestItem({"x": rng.integers(0, 50, r).astype(np.int64)},
+                            Granularity.CHUNK)
+                 .with_label("partition", int(rng.integers(0, 100)))
+                 for r in rows]
+        targets = [f"n{i}" for i in range(n_targets)]
+        scalar = partition_items(items, "partition", targets)
+        batch = ColumnarBatch.from_items(items)
+        assert batch is not None
+        cols = partition_batch(batch, "partition", targets)
+        for t in targets:
+            self._assert_items_equal(scalar.get(t, []),
+                                     cols[t].to_items())
